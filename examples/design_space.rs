@@ -1,0 +1,60 @@
+//! Domain example: design-space exploration for a new FPGA target.
+//!
+//! A hardware team porting REAP asks: how many pipelines should we
+//! provision, at what bandwidth, for our workload mix? This example sweeps
+//! pipeline count and DRAM bandwidth on a fixed workload, printing
+//! simulated throughput, utilization, the compute/DRAM bound split, and
+//! the area model's frequency/logic cost — the paper's hardware-
+//! scalability analysis (Fig 8 right) turned into a tool.
+//!
+//!     cargo run --release --example design_space [n] [nnz]
+
+use reap::fpga::spgemm_sim::{simulate_spgemm, Style};
+use reap::fpga::{AreaModel, FpgaConfig};
+use reap::rir::schedule::schedule_spgemm;
+use reap::sparse::gen::{self, Family};
+use reap::util::table::{f2, pct, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1500);
+    let nnz: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(n * 20);
+    let a = gen::generate(Family::BandedFem, n, nnz, 99);
+    println!(
+        "== design_space: SpGEMM C=A^2, {}x{} nnz {} ==",
+        a.nrows,
+        a.ncols,
+        a.nnz()
+    );
+
+    let mut t = Table::new(
+        "pipeline / bandwidth sweep (REAP SpGEMM)",
+        &["pipelines", "freq MHz", "logic", "BW GB/s", "time ms", "GFLOP/s", "util", "DRAM-bound"],
+    );
+    for &pipes in &[8usize, 16, 32, 64, 128] {
+        for &bw in &[2.0f64, 6.0, 14.0, 147.0] {
+            let mut cfg = FpgaConfig::reap32_spgemm();
+            cfg.pipelines = pipes;
+            cfg.freq_mhz = AreaModel::freq_mhz(pipes);
+            cfg.dram.read_gbps = bw;
+            cfg.dram.write_gbps = bw / 2.0;
+            let sched = schedule_spgemm(&a, &a, cfg.pipelines, cfg.bundle_size);
+            let sim = simulate_spgemm(&a, &a, &sched, &cfg, Style::HandCoded);
+            t.row(vec![
+                pipes.to_string(),
+                f2(cfg.freq_mhz),
+                pct(AreaModel::logic_utilization(pipes)),
+                format!("{bw:.0}"),
+                f2(sim.stats.seconds(&cfg) * 1e3),
+                f2(sim.stats.gflops(&cfg)),
+                pct(sim.stats.pipeline_utilization()),
+                pct(sim.stats.dram_bound_fraction()),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "reading: scaling pipelines without bandwidth strands them \
+         (the paper's key finding); the knee marks the balanced design."
+    );
+}

@@ -1,0 +1,68 @@
+"""AOT lowering: JAX/Pallas (L2/L1) -> HLO text artifacts for the Rust
+runtime.
+
+HLO *text* is the interchange format, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the published `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage:  python -m compile.aot [--out-dir ../artifacts]
+
+Produces `<name>.hlo.txt` per entry point plus `manifest.json` describing
+the fixed shapes the Rust side must pad to.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import aot_entry_points
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "entries": {}}
+    for name, (fn, args, meta) in aot_entry_points().items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "params": meta,
+            "args": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in args
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: the Cholesky dot-product + div/sqrt PEs over RIR
+bundles (paper Fig 5(c)/(d)), rethought for the TPU.
+
+One call computes one *column step* of the left-looking factorization:
+given the broadcast of row k of L (columns < k) and a batch of P candidate
+rows r (each a nonzero of column k of L), it produces
+
+    L(r, k) = (A(r, k) - L(r, :k) . L(k, :k)) / L(k, k)
+    L(k, k) = sqrt(A(k, k) - L(k, :k) . L(k, :k))
+
+The FPGA matches row indices with per-PE CAMs; here matching is a one-hot
+equality contraction (B x B per row pair) feeding the MXU, and the div/sqrt
+PE is a VPU rsqrt/div over the P-vector — every pipeline computing the
+diagonal redundantly in the paper collapses into one shared rsqrt here
+(the TPU has no independence constraint to buy back).
+
+Padding: column slots are -1 and values 0; -1 == -1 equalities are masked
+so padding never matches padding.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Bundle size (CAM entries) and pipeline batch, both 32 in the paper.
+BUNDLE = 32
+PIPES = 32
+PAD_COL = -1
+
+
+def _kernel(
+    rowk_cols_ref,
+    rowk_vals_ref,
+    rowr_cols_ref,
+    rowr_vals_ref,
+    a_vals_ref,
+    a_diag_ref,
+    out_ref,
+    lkk_ref,
+):
+    kc = rowk_cols_ref[...]  # [B]   i32, -1 padded
+    kv = rowk_vals_ref[...]  # [B]   f32
+    rc = rowr_cols_ref[...]  # [P,B] i32, -1 padded
+    rv = rowr_vals_ref[...]  # [P,B] f32
+    av = a_vals_ref[...]     # [P]   f32  (A(r,k); 0 where absent)
+    ad = a_diag_ref[0]       # scalar    (A(k,k))
+
+    k_valid = kc >= 0
+    kvm = jnp.where(k_valid, kv, 0.0)
+
+    # CAM match as one-hot equality, padding masked on both sides
+    eq = (rc[:, :, None] == kc[None, None, :]) & (rc[:, :, None] >= 0) & k_valid[None, None, :]
+    # matched[r, j] = value of row k at the column that slot j of row r hits
+    matched = jnp.einsum(
+        "pjm,m->pj", eq.astype(jnp.float32), kvm, preferred_element_type=jnp.float32
+    )
+    dots = jnp.sum(rv * matched, axis=1)  # [P]
+
+    diag = ad - jnp.sum(kvm * kvm)
+    lkk = jnp.sqrt(diag)
+    out_ref[...] = (av - dots) / lkk
+    lkk_ref[0] = lkk
+
+
+def _dot_kernel(rowk_cols_ref, rowk_vals_ref, rowr_cols_ref, rowr_vals_ref, dots_ref):
+    kc = rowk_cols_ref[...]
+    kv = rowk_vals_ref[...]
+    rc = rowr_cols_ref[...]
+    rv = rowr_vals_ref[...]
+    k_valid = kc >= 0
+    kvm = jnp.where(k_valid, kv, 0.0)
+    eq = (rc[:, :, None] == kc[None, None, :]) & (rc[:, :, None] >= 0) & k_valid[None, None, :]
+    matched = jnp.einsum(
+        "pjm,m->pj", eq.astype(jnp.float32), kvm, preferred_element_type=jnp.float32
+    )
+    dots_ref[...] = jnp.sum(rv * matched, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bundle", "pipes"))
+def cholesky_dot_chunk(rowk_cols, rowk_vals, rowr_cols, rowr_vals, *, bundle=BUNDLE, pipes=PIPES):
+    """Partial matched dot products for one (row-k chunk, row-r chunk) pair.
+
+    Rows of L longer than one bundle are processed as chunk pairs; the
+    coordinator sums the partials (the merge role it owns) and finalizes
+    via `cholesky_column_step` with an empty row-k broadcast. Returns
+    `dots[P]`.
+    """
+    assert rowk_cols.shape == (bundle,)
+    assert rowr_cols.shape == (pipes, bundle)
+    return pl.pallas_call(
+        _dot_kernel,
+        out_shape=jax.ShapeDtypeStruct((pipes,), jnp.float32),
+        interpret=True,
+    )(rowk_cols, rowk_vals, rowr_cols, rowr_vals)
+
+
+@functools.partial(jax.jit, static_argnames=("bundle", "pipes"))
+def cholesky_column_step(
+    rowk_cols, rowk_vals, rowr_cols, rowr_vals, a_vals, a_diag, *, bundle=BUNDLE, pipes=PIPES
+):
+    """One batched column step. Returns `(l_rk[P], l_kk[1])`.
+
+    Args:
+      rowk_cols: i32[B]   — columns of row k of L (< k), -1 padded.
+      rowk_vals: f32[B]   — matching values.
+      rowr_cols: i32[P,B] — columns of each candidate row r (< k), -1 pad.
+      rowr_vals: f32[P,B] — matching values.
+      a_vals:    f32[P]   — A(r, k) per candidate row (0 where absent).
+      a_diag:    f32[1]   — A(k, k).
+    """
+    assert rowk_cols.shape == (bundle,)
+    assert rowr_cols.shape == (pipes, bundle)
+    assert a_vals.shape == (pipes,)
+    assert a_diag.shape == (1,)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((pipes,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=True,
+    )(rowk_cols, rowk_vals, rowr_cols, rowr_vals, a_vals, a_diag)

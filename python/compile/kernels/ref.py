@@ -1,0 +1,85 @@
+"""Pure-numpy correctness oracles for the Pallas kernels.
+
+Deliberately written as explicit Python loops over gathered indices — the
+*semantics* of the FPGA datapath (match, multiply, merge; dot, div, sqrt) —
+rather than a re-statement of the kernels' vectorized algebra, so index
+errors in the kernels cannot cancel out in the oracle.
+"""
+
+import numpy as np
+
+PAD_COL = -1
+
+
+def spgemm_bundle_wave_ref(tile_start, a_vals, b_cols, b_vals, tile_w):
+    """Loop oracle for `spgemm_bundle.spgemm_bundle_wave`."""
+    tile_start = np.asarray(tile_start)
+    a_vals = np.asarray(a_vals)
+    b_cols = np.asarray(b_cols)
+    b_vals = np.asarray(b_vals)
+    n, bundle = a_vals.shape
+    acc = np.zeros((n, tile_w), dtype=np.float64)
+    for s in range(n):
+        t0 = int(tile_start[s])
+        for i in range(bundle):  # A elements (CAM entries)
+            va = float(a_vals[s, i])
+            for j in range(bundle):  # streamed B bundle slots
+                c = int(b_cols[s, i, j])
+                if c == PAD_COL:
+                    continue
+                w = c - t0
+                if 0 <= w < tile_w:
+                    # match -> multiply -> merge (positional accumulate)
+                    acc[s, w] += va * float(b_vals[s, i, j])
+    return acc.astype(np.float32)
+
+
+def spmv_bundle_wave_ref(tile_start, cols, vals, x_tiles, tile_w):
+    """Loop oracle for `spmv_bundle.spmv_bundle_wave`."""
+    tile_start = np.asarray(tile_start)
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    x_tiles = np.asarray(x_tiles)
+    n, bundle = cols.shape
+    out = np.zeros(n, dtype=np.float64)
+    for s in range(n):
+        t0 = int(tile_start[s])
+        for j in range(bundle):
+            c = int(cols[s, j])
+            if c == PAD_COL:
+                continue
+            w = c - t0
+            if 0 <= w < tile_w:  # gather from the on-chip x tile
+                out[s] += float(vals[s, j]) * float(x_tiles[s, w])
+    return out.astype(np.float32)
+
+
+def cholesky_column_step_ref(rowk_cols, rowk_vals, rowr_cols, rowr_vals, a_vals, a_diag):
+    """Loop oracle for `cholesky_update.cholesky_column_step`."""
+    rowk_cols = np.asarray(rowk_cols)
+    rowk_vals = np.asarray(rowk_vals)
+    rowr_cols = np.asarray(rowr_cols)
+    rowr_vals = np.asarray(rowr_vals)
+    a_vals = np.asarray(a_vals)
+    pipes, bundle = rowr_cols.shape
+
+    # row k as a dict: column -> value (the CAM contents)
+    cam = {
+        int(c): float(v)
+        for c, v in zip(rowk_cols, rowk_vals)
+        if int(c) != PAD_COL
+    }
+    diag = float(a_diag[0]) - sum(v * v for v in cam.values())
+    lkk = np.sqrt(diag)
+
+    out = np.zeros(pipes, dtype=np.float64)
+    for p in range(pipes):
+        dot = 0.0
+        for j in range(bundle):
+            c = int(rowr_cols[p, j])
+            if c == PAD_COL:
+                continue
+            if c in cam:  # CAM hit
+                dot += float(rowr_vals[p, j]) * cam[c]
+        out[p] = (float(a_vals[p]) - dot) / lkk
+    return out.astype(np.float32), np.array([lkk], dtype=np.float32)

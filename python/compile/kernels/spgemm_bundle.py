@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: the SpGEMM match+multiply+merge datapath over RIR
+bundles, rethought for the TPU (DESIGN.md §Hardware-Adaptation).
+
+The FPGA design matches B elements against a 32-entry CAM, multiplies the
+matches, insertion-sorts the partial products and merges equal column
+indices. On a TPU none of those primitives exist; the same *insight* —
+"the CPU has already regularized the data into fixed-size bundles, so the
+datapath runs dense" — maps to:
+
+* CAM match        -> one-hot equality against a column-tile iota,
+* multiply         -> elementwise partial-product tile,
+* sort+merge       -> positional accumulation: `pp_flat @ onehot_flat`,
+                      a single [B*B, W] contraction on the MXU.
+
+Shapes (one grid step): `a_vals[B]` is a row-of-A chunk (the CAM contents),
+`b_cols/b_vals[B, B]` hold, for each A element, the bundle of the B row it
+references (padded with col = -1, val = 0), and the output `acc[W]` is the
+dense accumulator for the column tile starting at `tile_start`.
+
+VMEM per program (B=32, W=256): one-hot f32 [1024, W] = 1 MiB plus
+operands ≈ 1.05 MiB — comfortably under a TPU core's ~16 MiB VMEM with
+double-buffering room. The contraction is [1,1024]x[1024,256] f32 on the
+MXU.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU performance is *estimated* in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's design point: RIR bundle size = CAM size = 32.
+BUNDLE = 32
+# Column-tile width of the positional accumulator (power of two, one MXU
+# pass; 256 keeps the one-hot operand at 1 MiB of VMEM).
+TILE_W = 256
+# Padding sentinel for column indices (never matches a real tile column).
+PAD_COL = -1
+
+
+def _kernel(tile_start_ref, a_vals_ref, b_cols_ref, b_vals_ref, acc_ref, *, tile_w):
+    a_vals = a_vals_ref[...]          # [B]   f32
+    b_cols = b_cols_ref[...]          # [B,B] i32
+    b_vals = b_vals_ref[...]          # [B,B] f32
+    t0 = tile_start_ref[0]            # scalar i32
+
+    # match+multiply: partial products (padding contributes 0)
+    pp = a_vals[:, None] * b_vals     # [B,B]
+
+    # sort+merge as positional accumulation over the column tile
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_w,), 0) + t0
+    onehot = (b_cols[:, :, None] == w_iota[None, None, :]).astype(jnp.float32)
+    b = pp.shape[0] * pp.shape[1]
+    acc = jnp.dot(
+        pp.reshape(1, b),
+        onehot.reshape(b, tile_w),
+        preferred_element_type=jnp.float32,
+    )                                  # [1, W]
+    acc_ref[...] = acc[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bundle", "tile_w"))
+def spgemm_bundle_wave(tile_start, a_vals, b_cols, b_vals, *, bundle=BUNDLE, tile_w=TILE_W):
+    """Process a batch of N bundle-steps: returns `acc[N, tile_w]`.
+
+    Args:
+      tile_start: i32[N]   — first output column of each step's tile.
+      a_vals:     f32[N,B] — A-chunk values (CAM payloads), 0-padded.
+      b_cols:     i32[N,B,B] — per-A-element B-row column bundles, -1 pad.
+      b_vals:     f32[N,B,B] — matching values, 0-padded.
+    """
+    n = a_vals.shape[0]
+    assert a_vals.shape == (n, bundle), a_vals.shape
+    assert b_cols.shape == (n, bundle, bundle), b_cols.shape
+    assert b_vals.shape == b_cols.shape
+    assert tile_start.shape == (n,)
+    return pl.pallas_call(
+        functools.partial(_kernel, tile_w=tile_w),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            # `None` squeezes the grid-indexed leading axis away
+            pl.BlockSpec((None, bundle), lambda i: (i, 0)),
+            pl.BlockSpec((None, bundle, bundle), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, bundle, bundle), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, tile_w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, tile_w), jnp.float32),
+        interpret=True,
+    )(tile_start, a_vals, b_cols, b_vals)

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: REAP SpMV (y = A x) over RIR bundles — the paper's
+future-work extension ("many other sparse linear algebra kernels can be
+accelerated with the same approach", §II), built on the same contract.
+
+One grid step processes a batch of N row chunks against one tile of x:
+for chunk s, `partial[s] = Σ_j vals[s,j] · x[cols[s,j]]` restricted to
+columns inside `[tile_start, tile_start + W)`. The gather that an FPGA
+would do from on-chip x RAM becomes a one-hot contraction on the MXU
+(`onehot[B, W] @ x_tile[W]`), exactly mirroring the SpGEMM kernel's
+CAM-to-matmul adaptation. The coordinator (L3) sums partials across
+chunks/tiles of the same row — its merge role.
+
+Padding: cols = -1, vals = 0 (contributes nothing).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BUNDLE = 32
+TILE_W = 256
+PAD_COL = -1
+
+
+def _kernel(tile_start_ref, cols_ref, vals_ref, x_ref, out_ref, *, tile_w):
+    cols = cols_ref[...]   # [B]  i32
+    vals = vals_ref[...]   # [B]  f32
+    x = x_ref[...]         # [W]  f32 (the tile)
+    t0 = tile_start_ref[0]
+
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_w,), 0) + t0
+    onehot = (cols[:, None] == w_iota[None, :]).astype(jnp.float32)  # [B,W]
+    gathered = jnp.dot(onehot, x, preferred_element_type=jnp.float32)  # [B]
+    out_ref[0] = jnp.sum(vals * gathered)
+
+
+@functools.partial(jax.jit, static_argnames=("bundle", "tile_w"))
+def spmv_bundle_wave(tile_start, cols, vals, x_tiles, *, bundle=BUNDLE, tile_w=TILE_W):
+    """Batch of N row-chunk × x-tile partial dot products.
+
+    Args:
+      tile_start: i32[N]   — first column of each step's x tile.
+      cols:       i32[N,B] — row-chunk column indices, -1 padded.
+      vals:       f32[N,B] — row-chunk values, 0 padded.
+      x_tiles:    f32[N,W] — the x tile each step reads (the coordinator
+                  slices x per step so the artifact shape stays fixed).
+    Returns f32[N] partial products.
+    """
+    n = cols.shape[0]
+    assert cols.shape == (n, bundle)
+    assert vals.shape == (n, bundle)
+    assert x_tiles.shape == (n, tile_w)
+    assert tile_start.shape == (n,)
+    return pl.pallas_call(
+        functools.partial(_kernel, tile_w=tile_w),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((None, bundle), lambda i: (i, 0)),
+            pl.BlockSpec((None, bundle), lambda i: (i, 0)),
+            pl.BlockSpec((None, tile_w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(tile_start, cols, vals, x_tiles)

@@ -1,0 +1,110 @@
+"""L2: the FPGA compute phase as a JAX graph.
+
+The Rust coordinator (L3) performs REAP's CPU role — RIR bundling,
+scheduling, symbolic analysis — and then drives the *compiled form of this
+module* through PJRT for the arithmetic the paper's FPGA performs. Each
+public function here is one AOT entry point; `aot.py` lowers them to HLO
+text with fixed shapes (recorded in `artifacts/manifest.json`).
+
+The hot inner loops are the Pallas kernels in `kernels/`; this layer adds
+the (thin, by design) batching and composition glue. Python never runs at
+request time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.cholesky_update import (
+    BUNDLE,
+    PIPES,
+    cholesky_column_step,
+    cholesky_dot_chunk,
+)
+from .kernels.spgemm_bundle import TILE_W, spgemm_bundle_wave
+from .kernels.spmv_bundle import spmv_bundle_wave
+
+# AOT batch: bundle-steps per SpGEMM artifact invocation. Small enough that
+# padding waste is bounded on short waves, large enough to amortize the
+# PJRT execute overhead.
+SPGEMM_BATCH = 16
+# SpMV steps are much lighter; a larger batch amortizes dispatch.
+SPMV_BATCH = 64
+
+
+def spgemm_wave(tile_start, a_vals, b_cols, b_vals):
+    """Batched SpGEMM bundle-step (see `kernels/spgemm_bundle.py`).
+
+    Shapes: i32[N], f32[N,B], i32[N,B,B], f32[N,B,B] -> f32[N, TILE_W].
+    """
+    return spgemm_bundle_wave(tile_start, a_vals, b_cols, b_vals)
+
+
+def cholesky_column(rowk_cols, rowk_vals, rowr_cols, rowr_vals, a_vals, a_diag):
+    """One Cholesky column step (see `kernels/cholesky_update.py`).
+
+    Shapes: i32[B], f32[B], i32[P,B], f32[P,B], f32[P], f32[1]
+            -> (f32[P], f32[1]).
+    """
+    return cholesky_column_step(rowk_cols, rowk_vals, rowr_cols, rowr_vals, a_vals, a_diag)
+
+
+def spmv_wave(tile_start, cols, vals, x_tiles):
+    """Batched SpMV partial products (see `kernels/spmv_bundle.py`)."""
+    return spmv_bundle_wave(tile_start, cols, vals, x_tiles)
+
+
+def cholesky_dot(rowk_cols, rowk_vals, rowr_cols, rowr_vals):
+    """Partial matched dots for chunked rows (see `cholesky_dot_chunk`)."""
+    return cholesky_dot_chunk(rowk_cols, rowk_vals, rowr_cols, rowr_vals)
+
+
+def aot_entry_points():
+    """The functions `aot.py` lowers, with their example arguments."""
+    import jax
+
+    n, b, w, p = SPGEMM_BATCH, BUNDLE, TILE_W, PIPES
+    f32, i32 = jnp.float32, jnp.int32
+    spec = jax.ShapeDtypeStruct
+    return {
+        "spgemm_bundle": (
+            spgemm_wave,
+            (
+                spec((n,), i32),
+                spec((n, b), f32),
+                spec((n, b, b), i32),
+                spec((n, b, b), f32),
+            ),
+            {"batch": n, "bundle": b, "tile_w": w},
+        ),
+        "spmv_bundle": (
+            spmv_wave,
+            (
+                spec((SPMV_BATCH,), i32),
+                spec((SPMV_BATCH, b), i32),
+                spec((SPMV_BATCH, b), f32),
+                spec((SPMV_BATCH, w), f32),
+            ),
+            {"batch": SPMV_BATCH, "bundle": b, "tile_w": w},
+        ),
+        "cholesky_dot": (
+            cholesky_dot,
+            (
+                spec((b,), i32),
+                spec((b,), f32),
+                spec((p, b), i32),
+                spec((p, b), f32),
+            ),
+            {"bundle": b, "pipes": p},
+        ),
+        "cholesky_update": (
+            cholesky_column,
+            (
+                spec((b,), i32),
+                spec((b,), f32),
+                spec((p, b), i32),
+                spec((p, b), f32),
+                spec((p,), f32),
+                spec((1,), f32),
+            ),
+            {"bundle": b, "pipes": p},
+        ),
+    }

@@ -1,0 +1,166 @@
+"""Pallas Cholesky column-update kernel vs the loop oracle, plus an
+end-to-end factorization driven column-by-column through the kernel."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cholesky_update import cholesky_column_step
+
+
+def run_both(kc, kv, rc, rv, av, ad, bundle, pipes):
+    got_o, got_d = cholesky_column_step(kc, kv, rc, rv, av, ad, bundle=bundle, pipes=pipes)
+    want_o, want_d = ref.cholesky_column_step_ref(kc, kv, rc, rv, av, ad)
+    np.testing.assert_allclose(np.asarray(got_d), want_d, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_o), want_o, rtol=1e-4, atol=1e-4)
+    return np.asarray(got_o), np.asarray(got_d)
+
+
+@st.composite
+def column_case(draw):
+    bundle = draw(st.sampled_from([4, 8, 32]))
+    pipes = draw(st.sampled_from([4, 32]))
+    rng = np.random.default_rng(draw(st.integers(0, 2**32 - 1)))
+    colspace = draw(st.integers(1, 60))
+    kfill = rng.integers(0, min(bundle, colspace) + 1)
+    kc = np.full(bundle, -1, np.int32)
+    if kfill:
+        kc[:kfill] = np.sort(rng.choice(colspace, kfill, replace=False))
+    kv = np.where(kc >= 0, rng.standard_normal(bundle), 0).astype(np.float32)
+    rc = np.full((pipes, bundle), -1, np.int32)
+    for p in range(pipes):
+        f = rng.integers(0, min(bundle, colspace) + 1)
+        if f:
+            rc[p, :f] = np.sort(rng.choice(colspace, f, replace=False))
+    rv = np.where(rc >= 0, rng.standard_normal((pipes, bundle)), 0).astype(np.float32)
+    av = rng.standard_normal(pipes).astype(np.float32)
+    # keep the pivot positive: diag > sum(kv^2)
+    ad = np.array([float(np.sum(kv * kv) + rng.uniform(0.5, 5.0))], np.float32)
+    return kc, kv, rc, rv, av, ad, bundle, pipes
+
+
+@settings(max_examples=25, deadline=None)
+@given(column_case())
+def test_matches_oracle_on_random_columns(case):
+    run_both(*case)
+
+
+def test_empty_rowk_is_pure_scaling():
+    # k = 0: no prior columns; L(r,0) = A(r,0)/sqrt(A(0,0))
+    b, p = 8, 4
+    kc = np.full(b, -1, np.int32)
+    kv = np.zeros(b, np.float32)
+    rc = np.full((p, b), -1, np.int32)
+    rv = np.zeros((p, b), np.float32)
+    av = np.array([2.0, 4.0, -6.0, 0.0], np.float32)
+    ad = np.array([4.0], np.float32)
+    out, lkk = run_both(kc, kv, rc, rv, av, ad, b, p)
+    assert lkk[0] == pytest.approx(2.0)
+    np.testing.assert_allclose(out, av / 2.0, rtol=1e-6)
+
+
+def test_padding_never_matches_padding():
+    # row r all-padding vs row k all-padding: dot must be 0 even though
+    # both store the -1 sentinel in every slot
+    b, p = 4, 4
+    kc = np.full(b, -1, np.int32)
+    kv = np.full(b, 7.0, np.float32)  # garbage values behind padding
+    rc = np.full((p, b), -1, np.int32)
+    rv = np.full((p, b), 9.0, np.float32)
+    av = np.ones(p, np.float32)
+    ad = np.array([1.0], np.float32)
+    out, lkk = run_both(kc, kv, rc, rv, av, ad, b, p)
+    assert lkk[0] == pytest.approx(1.0)
+    np.testing.assert_allclose(out, av, rtol=1e-6)
+
+
+def test_dot_chunk_matches_update_dot():
+    """cholesky_dot_chunk must compute exactly the dot the fused update
+    kernel subtracts — the chunked path's correctness contract."""
+    from compile.kernels.cholesky_update import cholesky_dot_chunk
+
+    rng = np.random.default_rng(9)
+    b, p = 8, 4
+    colspace = 20
+    kc = np.full(b, -1, np.int32)
+    kc[:6] = np.sort(rng.choice(colspace, 6, replace=False))
+    kv = np.where(kc >= 0, rng.standard_normal(b), 0).astype(np.float32)
+    rc = np.full((p, b), -1, np.int32)
+    for i in range(p):
+        f = rng.integers(1, b + 1)
+        rc[i, :f] = np.sort(rng.choice(colspace, f, replace=False))
+    rv = np.where(rc >= 0, rng.standard_normal((p, b)), 0).astype(np.float32)
+
+    dots = np.asarray(cholesky_dot_chunk(kc, kv, rc, rv, bundle=b, pipes=p))
+    # oracle dots from the reference update with lkk == 1 and av == 0:
+    # out = (0 - dot) / 1  =>  dot = -out
+    av = np.zeros(p, np.float32)
+    ad = np.array([float(np.sum(np.where(kc >= 0, kv, 0) ** 2) + 1.0)], np.float32)
+    want_o, want_d = ref.cholesky_column_step_ref(kc, kv, rc, rv, av, ad)
+    np.testing.assert_allclose(dots, -want_o * want_d[0], rtol=1e-4, atol=1e-5)
+
+
+def test_chunk_pairs_sum_to_full_dot():
+    """Splitting both rows into bundle chunks and summing partial dots must
+    reproduce the unchunked dot (the coordinator's merge contract)."""
+    from compile.kernels.cholesky_update import cholesky_dot_chunk
+
+    rng = np.random.default_rng(10)
+    b, p = 4, 2
+    length = 10  # > bundle, forces 3 chunks
+    cols = np.arange(length, dtype=np.int32)
+    kv_full = rng.standard_normal(length).astype(np.float32)
+    rv_full = rng.standard_normal((p, length)).astype(np.float32)
+    expect = rv_full @ kv_full
+
+    total = np.zeros(p, np.float64)
+    nch = -(-length // b)
+    for ck in range(nch):
+        kc = np.full(b, -1, np.int32)
+        kv = np.zeros(b, np.float32)
+        sl = slice(ck * b, min((ck + 1) * b, length))
+        kc[: sl.stop - sl.start] = cols[sl]
+        kv[: sl.stop - sl.start] = kv_full[sl]
+        for cr in range(nch):
+            rc = np.full((p, b), -1, np.int32)
+            rv = np.zeros((p, b), np.float32)
+            sr = slice(cr * b, min((cr + 1) * b, length))
+            rc[:, : sr.stop - sr.start] = cols[sr]
+            rv[:, : sr.stop - sr.start] = rv_full[:, sr]
+            total += np.asarray(cholesky_dot_chunk(kc, kv, rc, rv, bundle=b, pipes=p))
+    np.testing.assert_allclose(total, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_full_factorization_through_kernel():
+    """Drive a complete small LL^T column-by-column through the kernel and
+    compare against numpy's Cholesky — the L1<->algorithm contract."""
+    rng = np.random.default_rng(3)
+    n, b, p = 10, 32, 32
+    m = rng.standard_normal((n, n)).astype(np.float32)
+    a = m @ m.T + n * np.eye(n, dtype=np.float32)  # SPD
+    expect = np.linalg.cholesky(a.astype(np.float64))
+
+    l = np.zeros((n, n), np.float64)
+    for k in range(n):
+        # row k of L, columns < k
+        kc = np.full(b, -1, np.int32)
+        kv = np.zeros(b, np.float32)
+        kc[:k] = np.arange(k)
+        kv[:k] = l[k, :k]
+        # candidate rows: all r > k (dense test matrix)
+        rows = np.arange(k + 1, n)
+        rc = np.full((p, b), -1, np.int32)
+        rv = np.zeros((p, b), np.float32)
+        av = np.zeros(p, np.float32)
+        for i, r in enumerate(rows):
+            rc[i, :k] = np.arange(k)
+            rv[i, :k] = l[r, :k]
+            av[i] = a[r, k]
+        ad = np.array([a[k, k]], np.float32)
+        out, lkk = cholesky_column_step(kc, kv, rc, rv, av, ad)
+        l[k, k] = float(np.asarray(lkk)[0])
+        for i, r in enumerate(rows):
+            l[r, k] = float(np.asarray(out)[i])
+
+    np.testing.assert_allclose(l, expect, rtol=5e-3, atol=5e-3)

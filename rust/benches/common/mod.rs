@@ -1,0 +1,30 @@
+//! Shared plumbing for the custom bench binaries (criterion is not in the
+//! offline cache; these benches print the paper-figure tables directly).
+
+use reap::harness::RunConfig;
+
+/// Bench-run configuration from environment (so `cargo bench` needs no
+/// argument plumbing): `REAP_BENCH_MAX_ROWS` (default 1500),
+/// `REAP_BENCH_BUDGET` seconds (default 0.1), `REAP_BENCH_SEED`.
+pub fn bench_config() -> RunConfig {
+    let env_usize = |k: &str, d: usize| {
+        std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+    let env_f64 = |k: &str, d: f64| {
+        std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+    RunConfig {
+        max_rows: env_usize("REAP_BENCH_MAX_ROWS", 1500),
+        seed: env_usize("REAP_BENCH_SEED", 0x5EA9) as u64,
+        budget_s: env_f64("REAP_BENCH_BUDGET", 0.1),
+        csv_dir: Some(std::path::PathBuf::from("results")),
+    }
+}
+
+/// Print a headline verdict line.
+pub fn verdict(paper_claim: &str, holds: bool) {
+    println!(
+        "paper: {paper_claim} -> headline {}",
+        if holds { "HOLDS" } else { "DIFFERS" }
+    );
+}

@@ -1,0 +1,15 @@
+//! Regenerates Fig 10: sparse Cholesky speedups of REAP-32/64 over the
+//! CHOLMOD-class single-core numeric baseline.
+
+mod common;
+
+fn main() {
+    let cfg = common::bench_config();
+    let (rows, table) = reap::harness::fig10::run(&cfg);
+    print!("{}", table.render());
+    common::verdict(
+        "REAP-32 GM ~1.18x; REAP-64 GM ~1.85x and wins everywhere",
+        reap::harness::fig10::headline_holds(&rows),
+    );
+    cfg.dump_csv("fig10", &table).expect("csv");
+}

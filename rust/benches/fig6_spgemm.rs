@@ -1,0 +1,19 @@
+//! Regenerates Fig 6: SpGEMM speedups of REAP-32/64/128 and CPU-2/CPU-16
+//! over the MKL-class single-core baseline, across the Table-I suite.
+
+mod common;
+
+fn main() {
+    let cfg = common::bench_config();
+    println!(
+        "fig6: suite max_rows={} budget={}s seed={:#x}",
+        cfg.max_rows, cfg.budget_s, cfg.seed
+    );
+    let (rows, table) = reap::harness::fig6::run(&cfg);
+    print!("{}", table.render());
+    common::verdict(
+        "REAP-32 geomean ~3.2x and beats CPU-1 on all matrices",
+        reap::harness::fig6::headline_holds(&rows),
+    );
+    cfg.dump_csv("fig6", &table).expect("csv");
+}

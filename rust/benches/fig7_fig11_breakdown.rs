@@ -1,0 +1,19 @@
+//! Regenerates Fig 7 and Fig 11: the CPU-vs-FPGA time breakdowns for
+//! REAP-32 SpGEMM (preprocessing) and Cholesky (symbolic analysis).
+
+mod common;
+
+fn main() {
+    let cfg = common::bench_config();
+    let (_, t7) = reap::harness::fig7::run(&cfg);
+    print!("{}", t7.render());
+    cfg.dump_csv("fig7", &t7).expect("csv");
+    println!();
+    let (rows11, t11) = reap::harness::fig11::run(&cfg);
+    print!("{}", t11.render());
+    common::verdict(
+        "FPGA dominates the Cholesky breakdown",
+        reap::harness::fig11::headline_holds(&rows11),
+    );
+    cfg.dump_csv("fig11", &t11).expect("csv");
+}

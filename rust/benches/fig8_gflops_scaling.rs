@@ -1,0 +1,17 @@
+//! Regenerates Fig 8: GFLOPS per FP unit (left) and the area/frequency
+//! scaling of the FPGA design (right).
+
+mod common;
+
+fn main() {
+    let cfg = common::bench_config();
+    let (series, left, right) = reap::harness::fig8::run(&cfg);
+    print!("{}", left.render());
+    print!("{}", right.render());
+    common::verdict(
+        "REAP achieves higher GFLOPS per FP unit than the CPU at matched counts",
+        reap::harness::fig8::headline_holds(&series),
+    );
+    cfg.dump_csv("fig8_left", &left).expect("csv");
+    cfg.dump_csv("fig8_right", &right).expect("csv");
+}

@@ -1,0 +1,15 @@
+//! Regenerates Fig 9: REAP speedup vs matrix density (SpGEMM + Cholesky),
+//! the sparsity-sensitivity sweep with the CPU-crossover.
+
+mod common;
+
+fn main() {
+    let cfg = common::bench_config();
+    let (points, table) = reap::harness::fig9::run(&cfg);
+    print!("{}", table.render());
+    common::verdict(
+        "REAP favors sparse matrices (speedup falls as density rises)",
+        reap::harness::fig9::headline_holds(&points),
+    );
+    cfg.dump_csv("fig9", &table).expect("csv");
+}

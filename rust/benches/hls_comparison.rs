@@ -1,0 +1,15 @@
+//! Regenerates §V-C: preprocessing benefit under the OpenCL-HLS variant
+//! (REAP-HLS vs plain HLS) for SpGEMM and Cholesky.
+
+mod common;
+
+fn main() {
+    let cfg = common::bench_config();
+    let (report, table) = reap::harness::hls_cmp::run(&cfg);
+    print!("{}", table.render());
+    common::verdict(
+        "+16% SpGEMM / +35% Cholesky geomean, positive everywhere",
+        reap::harness::hls_cmp::headline_holds(&report),
+    );
+    cfg.dump_csv("hls", &table).expect("csv");
+}

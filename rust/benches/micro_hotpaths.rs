@@ -1,0 +1,74 @@
+//! Micro-benchmarks of the L3 hot paths — the profile targets of the
+//! performance pass (EXPERIMENTS.md §Perf): RIR encoding, scheduling,
+//! symbolic analysis, the CPU baselines, and the simulators.
+
+mod common;
+
+use reap::fpga::spgemm_sim::{simulate_spgemm, Style};
+use reap::fpga::cholesky_sim::simulate_cholesky;
+use reap::fpga::FpgaConfig;
+use reap::kernels::{cholesky, spgemm};
+use reap::rir::{encode, layout, schedule};
+use reap::sparse::gen;
+use reap::symbolic::{symbolic_factor, CholeskySymbolic};
+use reap::util::timer::measure_budgeted;
+
+fn report(name: &str, per_call_s: f64, unit_count: f64, unit: &str) {
+    println!(
+        "{name:<34} {:>10.3} ms/call  {:>9.1} M{unit}/s",
+        per_call_s * 1e3,
+        unit_count / per_call_s / 1e6
+    );
+}
+
+fn main() {
+    let cfg = common::bench_config();
+    let budget = cfg.budget_s;
+    let n = cfg.max_rows;
+    let a = gen::banded_fem(n, n * 16, cfg.seed);
+    let nnz = a.nnz() as f64;
+    println!("micro: n={n} nnz={nnz} budget={budget}s\n");
+
+    let m = measure_budgeted(budget, 3, || encode::csr_to_bundles(&a, 32));
+    report("rir_encode (csr->bundles)", m.min_s, nnz, "elem");
+
+    let bundles = encode::csr_to_bundles(&a, 32);
+    let m = measure_budgeted(budget, 3, || layout::serialize(&bundles));
+    report("rir_serialize (bundles->words)", m.min_s, nnz, "elem");
+
+    let words = layout::serialize(&bundles);
+    let m = measure_budgeted(budget, 3, || layout::deserialize(&words).unwrap());
+    report("rir_deserialize", m.min_s, nnz, "elem");
+
+    let m = measure_budgeted(budget, 3, || schedule::schedule_spgemm(&a, &a, 32, 32));
+    report("spgemm_schedule (CPU pass)", m.min_s, nnz, "elem");
+
+    let m = measure_budgeted(budget, 3, || spgemm(&a, &a));
+    let flops = reap::kernels::spgemm::spgemm_flops(&a, &a) as f64;
+    report("spgemm_cpu_baseline", m.min_s, flops, "flop");
+
+    let sched = schedule::schedule_spgemm(&a, &a, 32, 32);
+    let fc = FpgaConfig::reap32_spgemm();
+    let m = measure_budgeted(budget, 3, || simulate_spgemm(&a, &a, &sched, &fc, Style::HandCoded));
+    report("spgemm_sim (cycle model)", m.min_s, flops, "flop");
+
+    // Cholesky side on an SPD clone
+    let spd = gen::spd(gen::Family::BandedFem, n.min(1200), n.min(1200) * 8, cfg.seed);
+    let lower = spd.lower_triangle();
+    let lnnz = lower.nnz() as f64;
+
+    let m = measure_budgeted(budget, 3, || symbolic_factor(&lower));
+    report("cholesky_symbolic (etree+pattern)", m.min_s, lnnz, "elem");
+
+    let pattern = symbolic_factor(&lower);
+    let m = measure_budgeted(budget, 3, || {
+        cholesky::cholesky_numeric(&lower, &pattern).unwrap()
+    });
+    let cflops = cholesky::cholesky_flops(&pattern) as f64;
+    report("cholesky_cpu_baseline (numeric)", m.min_s, cflops, "flop");
+
+    let sym = CholeskySymbolic::analyze(&lower, 32);
+    let cc = FpgaConfig::reap32_cholesky();
+    let m = measure_budgeted(budget, 3, || simulate_cholesky(&sym, &cc, Style::HandCoded));
+    report("cholesky_sim (cycle model)", m.min_s, cflops, "flop");
+}

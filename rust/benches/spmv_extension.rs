@@ -1,0 +1,63 @@
+//! Extension bench (not a paper figure): the SpMV kernel through the REAP
+//! flow over the Table-I SpGEMM suite — the paper's §II future-work claim
+//! ("many other sparse linear algebra kernels can be accelerated with the
+//! same approach") made measurable.
+//!
+//! SpMV has no data reuse, so the one-shot case is preprocessing-bound
+//! (the CPU pass costs as much as the whole multiply). The honest win is
+//! the *iterative* case every solver lives in: RIR-encode once, stream
+//! every iteration — reported as the amortized column (100 iterations).
+
+mod common;
+
+use reap::coordinator::ReapSpmv;
+use reap::fpga::FpgaConfig;
+use reap::harness::suite::spgemm_suite;
+use reap::kernels::spmv::{spmv, spmv_flops};
+use reap::util::stats::geomean;
+use reap::util::table::{f2, speedup, Table};
+use reap::util::timer::measure_budgeted;
+
+fn main() {
+    let cfg = common::bench_config();
+    let mut table = Table::new(
+        "extension — SpMV (y = A x) speedup vs CPU-1, REAP-32/64",
+        &["id", "matrix", "one-shot-32", "amortized-32", "amortized-64", "sim GFLOP/s (32)"],
+    );
+    let mut s32 = Vec::new();
+    let mut s64 = Vec::new();
+    for spec in spgemm_suite() {
+        let a = spec.instantiate(cfg.max_rows, cfg.seed);
+        let x: Vec<f32> = (0..a.ncols).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let cpu = measure_budgeted(cfg.budget_s, 3, || spmv(&a, &x)).min_s;
+        let r32 = ReapSpmv::new(FpgaConfig::reap32_spgemm()).run(&a, &x).unwrap();
+        let r64 = ReapSpmv::new(FpgaConfig::reap64_spgemm()).run(&a, &x).unwrap();
+        // one-shot: preprocessing + one streamed multiply
+        let one32 = cpu / r32.total_s;
+        // amortized over ITERS solver iterations: encode once, stream many
+        const ITERS: f64 = 100.0;
+        let am32 = (ITERS * cpu) / (r32.cpu_preprocess_s + ITERS * r32.fpga_s);
+        let am64 = (ITERS * cpu) / (r64.cpu_preprocess_s + ITERS * r64.fpga_s);
+        s32.push(am32);
+        s64.push(am64);
+        let gf = spmv_flops(&a) as f64 / r32.fpga_s / 1e9;
+        table.row(vec![
+            spec.spgemm_id.unwrap().into(),
+            spec.name.into(),
+            speedup(one32),
+            speedup(am32),
+            speedup(am64),
+            f2(gf),
+        ]);
+    }
+    table.row(vec![
+        "GM".into(),
+        "geomean".into(),
+        "".into(),
+        speedup(geomean(&s32).unwrap_or(0.0)),
+        speedup(geomean(&s64).unwrap_or(0.0)),
+        "".into(),
+    ]);
+    print!("{}", table.render());
+    cfg.dump_csv("spmv_extension", &table).expect("csv");
+}

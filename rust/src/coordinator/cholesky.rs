@@ -1,0 +1,274 @@
+//! REAP Cholesky orchestration (paper §III-B).
+//!
+//! CPU pass: elimination tree, symbolic pattern of L, RA data bundles and
+//! RL metadata bundles (measured). FPGA pass: left-looking column updates —
+//! through the AOT `cholesky_dot`/`cholesky_update` artifacts, or the
+//! in-process equivalent — plus timing from the cycle simulator. L lives in
+//! row-major storage (the FPGA-memory layout the RL triples address).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::fpga::cholesky_sim::simulate_cholesky;
+use crate::fpga::spgemm_sim::Style;
+use crate::fpga::{FpgaConfig, SimStats};
+use crate::kernels::cholesky::{cholesky_numeric, CholeskyFactor};
+use crate::runtime::{CholeskyStepIo, XlaRuntime};
+use crate::sparse::{Csc, Val};
+use crate::symbolic::CholeskySymbolic;
+use crate::util::Timer;
+
+use super::ExecMode;
+
+/// Cholesky coordinator for one FPGA design point.
+pub struct ReapCholesky<'rt> {
+    pub cfg: FpgaConfig,
+    pub mode: ExecMode,
+    pub runtime: Option<&'rt XlaRuntime>,
+}
+
+/// Outcome of one REAP Cholesky execution.
+#[derive(Clone, Debug)]
+pub struct ReapCholeskyReport {
+    /// The factor L (CSC, diagonal-first columns).
+    pub factor: CholeskyFactor,
+    /// Measured CPU symbolic-analysis seconds (etree + pattern + bundles).
+    pub cpu_symbolic_s: f64,
+    /// Simulated FPGA statistics.
+    pub fpga_sim: SimStats,
+    /// Simulated FPGA seconds.
+    pub fpga_s: f64,
+    /// End-to-end seconds. Symbolic analysis cannot overlap the numeric
+    /// phase (it *produces* the schedule), so the phases are additive —
+    /// matching Fig 11's 100% breakdown.
+    pub total_s: f64,
+}
+
+impl<'rt> ReapCholesky<'rt> {
+    /// Coordinator with the in-process numeric path.
+    pub fn new(cfg: FpgaConfig) -> Self {
+        ReapCholesky { cfg, mode: ExecMode::Rust, runtime: None }
+    }
+
+    /// Coordinator executing numerics through the XLA artifacts.
+    pub fn with_runtime(cfg: FpgaConfig, rt: &'rt XlaRuntime) -> Self {
+        ReapCholesky { cfg, mode: ExecMode::Xla, runtime: Some(rt) }
+    }
+
+    /// Factorize the SPD matrix whose lower triangle is `a_lower`.
+    pub fn run(&self, a_lower: &Csc) -> Result<ReapCholeskyReport> {
+        // ---- CPU pass (measured): symbolic analysis + RIR/RL bundles ----
+        let t = Timer::start();
+        let sym = CholeskySymbolic::analyze(a_lower, self.cfg.bundle_size);
+        let cpu_symbolic_s = t.elapsed_s();
+
+        // ---- numeric phase ----
+        let factor = match self.mode {
+            ExecMode::Rust => cholesky_numeric(a_lower, &sym.pattern)?,
+            ExecMode::Xla => {
+                let rt = self.runtime.context("XLA mode requires a runtime")?;
+                numeric_xla(a_lower, &sym, rt)?
+            }
+        };
+
+        // ---- FPGA timing ----
+        let sim = simulate_cholesky(&sym, &self.cfg, Style::HandCoded);
+        let fpga_s = sim.stats.seconds(&self.cfg);
+        let total_s = cpu_symbolic_s + fpga_s;
+
+        Ok(ReapCholeskyReport {
+            factor,
+            cpu_symbolic_s,
+            fpga_sim: sim.stats,
+            fpga_s,
+            total_s,
+        })
+    }
+}
+
+/// Left-looking factorization through the AOT artifacts.
+///
+/// L is kept in the row-major storage map (as in FPGA memory). For each
+/// column k: dots of every candidate row r against row k accumulate over
+/// bundle-chunk pairs via `cholesky_dot`; the division/sqrt finalize runs
+/// through `cholesky_update` with an empty broadcast (the coordinator owns
+/// only the partial-dot summation — merge work, its L3 role).
+fn numeric_xla(a_lower: &Csc, sym: &CholeskySymbolic, rt: &XlaRuntime) -> Result<CholeskyFactor> {
+    let n = sym.pattern.n;
+    let mut io = CholeskyStepIo::new(rt)?;
+    let bundle = io.bundle;
+    let pipes = io.pipes;
+
+    // L values in row-major storage order
+    let storage = &sym.storage;
+    let mut lvals: Vec<Val> = vec![0.0; storage.len()];
+    // slot of column j within row r = binary search in the row's col list
+    let slot_of = |r: usize, j: usize, storage: &crate::symbolic::LStorageMap| -> usize {
+        let cols = storage.row_cols(r);
+        storage.row_ptr[r] + cols.binary_search(&(j as u32)).expect("pattern slot")
+    };
+
+    for k in 0..n {
+        let col_rows = sym.pattern.col_rows(k); // diag first
+        ensure!(col_rows[0] as usize == k, "pattern must be diagonal-first");
+
+        // row k head: columns < k and their (already computed) values
+        let k_cols_all = storage.row_cols(k);
+        let k_head_len = k_cols_all.len() - 1; // strip diagonal
+        let k_cols = &k_cols_all[..k_head_len];
+        let k_vals: Vec<Val> =
+            (0..k_head_len).map(|i| lvals[storage.row_ptr[k] + i]).collect();
+        let k_chunks = k_head_len.div_ceil(bundle).max(1);
+
+        // diagonal dot: row k against itself
+        let mut diag_dot = 0f64;
+        for ck in 0..k_chunks {
+            let (klo, khi) = (ck * bundle, ((ck + 1) * bundle).min(k_head_len));
+            if klo >= khi {
+                continue;
+            }
+            io.clear();
+            io.set_rowk(&k_cols[klo..khi], &k_vals[klo..khi])?;
+            io.set_rowr(0, &k_cols[klo..khi], &k_vals[klo..khi])?;
+            // exploit orthogonality of distinct chunks of the same sorted
+            // row: cross-chunk intersections are empty, so only the
+            // diagonal chunk pairs contribute
+            let dots = io.execute_dot(rt)?;
+            diag_dot += dots[0] as f64;
+        }
+        let a_kk = a_lower.get(k, k);
+
+        // off-diagonal rows in batches of `pipes`
+        let off_rows = &col_rows[1..];
+        let mut new_offdiag: Vec<(usize, f32)> = Vec::with_capacity(off_rows.len());
+        let mut l_kk: f32 = (a_kk as f64 - diag_dot).max(0.0).sqrt() as f32;
+        let mut first_batch = true;
+        if off_rows.is_empty() {
+            // still need the hardware sqrt for the diagonal
+            io.clear();
+            io.set_a(&[], (a_kk as f64 - diag_dot) as f32)?;
+            let (_, lkk) = io.execute_update(rt)?;
+            l_kk = lkk;
+        }
+        for batch in off_rows.chunks(pipes) {
+            // accumulate dots over chunk pairs
+            let mut dots = vec![0f64; batch.len()];
+            for ck in 0..k_chunks {
+                let (klo, khi) = (ck * bundle, ((ck + 1) * bundle).min(k_head_len));
+                let max_r_chunks = batch
+                    .iter()
+                    .map(|&r| {
+                        let cols = storage.row_cols(r as usize);
+                        let cut = cols.partition_point(|&c| (c as usize) < k);
+                        cut.div_ceil(bundle).max(1)
+                    })
+                    .max()
+                    .unwrap_or(1);
+                for cr in 0..max_r_chunks {
+                    io.clear();
+                    if klo < khi {
+                        io.set_rowk(&k_cols[klo..khi], &k_vals[klo..khi])?;
+                    }
+                    let mut any = false;
+                    for (p, &r) in batch.iter().enumerate() {
+                        let r = r as usize;
+                        let cols = storage.row_cols(r);
+                        let cut = cols.partition_point(|&c| (c as usize) < k);
+                        let (rlo, rhi) = ((cr * bundle).min(cut), ((cr + 1) * bundle).min(cut));
+                        if rlo < rhi {
+                            let vals: Vec<Val> = (rlo..rhi)
+                                .map(|i| lvals[storage.row_ptr[r] + i])
+                                .collect();
+                            io.set_rowr(p, &cols[rlo..rhi], &vals)?;
+                            any = true;
+                        }
+                    }
+                    if any && klo < khi {
+                        let d = io.execute_dot(rt)?;
+                        for (p, dp) in dots.iter_mut().enumerate() {
+                            *dp += d[p] as f64;
+                        }
+                    }
+                }
+            }
+            // finalize on the "div/sqrt PE": av = A(r,k) - dot, ad = d
+            io.clear();
+            let av: Vec<f32> = batch
+                .iter()
+                .zip(&dots)
+                .map(|(&r, &d)| (a_lower.get(r as usize, k) as f64 - d) as f32)
+                .collect();
+            io.set_a(&av, (a_kk as f64 - diag_dot) as f32)?;
+            let (out, lkk) = io.execute_update(rt)?;
+            ensure!(lkk.is_finite() && lkk > 0.0, "non-SPD pivot at column {k}");
+            if first_batch {
+                l_kk = lkk;
+                first_batch = false;
+            }
+            for (p, &r) in batch.iter().enumerate() {
+                new_offdiag.push((r as usize, out[p]));
+            }
+        }
+
+        // write back into row-major L storage
+        lvals[slot_of(k, k, storage)] = l_kk;
+        for (r, v) in new_offdiag {
+            lvals[slot_of(r, k, storage)] = v;
+        }
+    }
+
+    // convert row-major storage to the CSC factor layout
+    let pattern = sym.pattern.clone();
+    let mut vals = vec![0f32; pattern.nnz()];
+    let mut next: Vec<usize> = pattern.col_ptr.clone();
+    for r in 0..n {
+        for (i, &j) in storage.row_cols(r).iter().enumerate() {
+            // rows within a column arrive in ascending r (we scan r in
+            // order), matching the pattern's diagonal-first-then-ascending
+            // layout
+            let dst = &mut next[j as usize];
+            vals[*dst] = lvals[storage.row_ptr[r] + i];
+            *dst += 1;
+        }
+    }
+    let l = Csc {
+        nrows: n,
+        ncols: n,
+        col_ptr: pattern.col_ptr.clone(),
+        rows: pattern.rows.clone(),
+        vals,
+    };
+    Ok(CholeskyFactor { l, pattern })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Dense};
+
+    #[test]
+    fn rust_mode_matches_direct_factorization() {
+        for seed in 0..3u64 {
+            let spd = gen::spd(gen::Family::BandedFem, 40, 250, seed);
+            let lower = spd.lower_triangle();
+            let coord = ReapCholesky::new(FpgaConfig::reap32_cholesky());
+            let rep = coord.run(&lower).unwrap();
+            let expect = Dense::from_csr(&spd.to_csr()).cholesky();
+            let got = Dense::from_csr(&rep.factor.l.to_csr());
+            assert!(got.max_abs_diff(&expect) < 1e-3, "seed {seed}");
+            assert!(rep.fpga_s > 0.0);
+            assert!((rep.total_s - rep.cpu_symbolic_s - rep.fpga_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite_input() {
+        let mut coo = crate::sparse::Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 0, 2.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 1, 1.0);
+        let lower = coo.to_csr().to_csc().lower_triangle();
+        let coord = ReapCholesky::new(FpgaConfig::reap32_cholesky());
+        assert!(coord.run(&lower).is_err());
+    }
+}

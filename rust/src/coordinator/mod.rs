@@ -1,0 +1,40 @@
+//! The REAP coordinator — Layer 3, the paper's CPU role plus overall
+//! orchestration.
+//!
+//! For each kernel the coordinator runs the full synergistic flow:
+//!
+//! 1. **CPU pass** (measured wall-clock): RIR encoding + scheduling for
+//!    SpGEMM ([`spgemm`]), symbolic analysis + RL metadata for Cholesky
+//!    ([`cholesky`]);
+//! 2. **FPGA pass**: the numeric result — through the AOT XLA artifacts
+//!    ([`ExecMode::Xla`], request path identical to the paper's FPGA
+//!    dataflow) or the bit-equivalent in-process path ([`ExecMode::Rust`],
+//!    used for large benchmark sweeps) — and the *timing* from the cycle
+//!    simulator;
+//! 3. **overlap accounting** ([`overlap`]): the paper overlaps CPU
+//!    reformatting with FPGA compute after the first round;
+//! 4. **verification** ([`verify`]): results checked against the measured
+//!    CPU baselines.
+
+pub mod cholesky;
+pub mod overlap;
+pub mod spgemm;
+pub mod spmv;
+pub mod verify;
+
+pub use cholesky::{ReapCholesky, ReapCholeskyReport};
+pub use spgemm::{ReapSpgemm, ReapSpgemmReport};
+pub use spmv::{ReapSpmv, ReapSpmvReport};
+
+/// How the numeric phase executes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Bit-equivalent in-process arithmetic ordered exactly like the
+    /// bundle dataflow (default for large sweeps; the simulator still
+    /// provides the FPGA timing).
+    #[default]
+    Rust,
+    /// Execute the AOT-compiled XLA artifacts via PJRT — the full
+    /// three-layer request path.
+    Xla,
+}

@@ -1,0 +1,68 @@
+//! CPU/FPGA overlap accounting (paper §V-A).
+//!
+//! "REAP overlaps the reformatting on the CPU and the computation on the
+//! FPGA after the initial round. In the initial round, the FPGA is idle
+//! while CPU reformats the data. Figure 6 shows the overall time taking
+//! into account both the CPU and the FPGA time."
+//!
+//! With the CPU pass costing `t_cpu` spread over `rounds` scheduling
+//! rounds and the FPGA costing `t_fpga`, the end-to-end time is the first
+//! (unoverlapped) CPU round plus the longer of the remaining CPU work and
+//! the FPGA work.
+
+/// End-to-end REAP time under round-granular overlap.
+pub fn overlapped_total(t_cpu: f64, t_fpga: f64, rounds: u64) -> f64 {
+    let rounds = rounds.max(1) as f64;
+    let first = t_cpu / rounds;
+    first + (t_cpu - first).max(t_fpga)
+}
+
+/// Fraction of the (non-overlapped) work attributable to the CPU —
+/// the quantity plotted in Figs 7 and 11 ("the sum of the two should add
+/// up to 100%").
+pub fn cpu_fraction(t_cpu: f64, t_fpga: f64) -> f64 {
+    if t_cpu + t_fpga == 0.0 {
+        return 0.0;
+    }
+    t_cpu / (t_cpu + t_fpga)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fpga_dominated_hides_cpu() {
+        // huge FPGA time: total = first CPU round + FPGA
+        let t = overlapped_total(1.0, 100.0, 10);
+        assert!((t - 100.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_dominated_is_cpu_time() {
+        let t = overlapped_total(100.0, 1.0, 10);
+        assert!((t - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_round_is_serial() {
+        let t = overlapped_total(2.0, 3.0, 1);
+        assert!((t - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounded_by_serial_and_by_max() {
+        for &(c, f, r) in &[(1.0, 2.0, 4u64), (5.0, 0.5, 16), (0.0, 1.0, 2)] {
+            let t = overlapped_total(c, f, r);
+            assert!(t <= c + f + 1e-12, "never worse than serial");
+            assert!(t >= c.max(f) - 1e-12, "never better than the max");
+        }
+    }
+
+    #[test]
+    fn cpu_fraction_bounds() {
+        assert_eq!(cpu_fraction(0.0, 0.0), 0.0);
+        assert!((cpu_fraction(1.0, 3.0) - 0.25).abs() < 1e-12);
+        assert_eq!(cpu_fraction(2.0, 0.0), 1.0);
+    }
+}

@@ -1,0 +1,287 @@
+//! REAP SpGEMM orchestration (paper §III-A).
+//!
+//! The coordinator runs the CPU pass (RIR scheduling, timed), obtains the
+//! numeric result by streaming the schedule through the bundle datapath —
+//! either the AOT XLA artifact or the bit-equivalent in-process path — and
+//! obtains the FPGA timing from the cycle simulator. The two execution
+//! modes follow the *same* bundle/wave order, so they produce identical
+//! floating-point results wherever tiles don't reorder additions.
+
+use anyhow::{Context, Result};
+
+use crate::fpga::spgemm_sim::{simulate_spgemm, Style};
+use crate::fpga::{FpgaConfig, SimStats};
+use crate::rir::schedule::{schedule_spgemm, SpgemmSchedule};
+use crate::runtime::{SpgemmWaveIo, XlaRuntime};
+use crate::sparse::{Csr, Idx, Val};
+use crate::util::Timer;
+
+use super::overlap::overlapped_total;
+use super::ExecMode;
+
+/// SpGEMM coordinator for one FPGA design point.
+pub struct ReapSpgemm<'rt> {
+    pub cfg: FpgaConfig,
+    pub mode: ExecMode,
+    pub runtime: Option<&'rt XlaRuntime>,
+}
+
+/// Outcome of one REAP SpGEMM execution.
+#[derive(Clone, Debug)]
+pub struct ReapSpgemmReport {
+    /// The product C = A × B.
+    pub c: Csr,
+    /// Measured CPU preprocessing (RIR encode + schedule) seconds.
+    pub cpu_preprocess_s: f64,
+    /// Simulated FPGA statistics.
+    pub fpga_sim: SimStats,
+    /// Simulated FPGA seconds at the design's clock.
+    pub fpga_s: f64,
+    /// End-to-end seconds with round-granular CPU/FPGA overlap.
+    pub total_s: f64,
+}
+
+impl<'rt> ReapSpgemm<'rt> {
+    /// Coordinator with the in-process numeric path.
+    pub fn new(cfg: FpgaConfig) -> Self {
+        ReapSpgemm { cfg, mode: ExecMode::Rust, runtime: None }
+    }
+
+    /// Coordinator executing numerics through the XLA artifacts.
+    pub fn with_runtime(cfg: FpgaConfig, rt: &'rt XlaRuntime) -> Self {
+        ReapSpgemm { cfg, mode: ExecMode::Xla, runtime: Some(rt) }
+    }
+
+    /// Run the full REAP flow for `C = A × B`.
+    pub fn run(&self, a: &Csr, b: &Csr) -> Result<ReapSpgemmReport> {
+        // ---- CPU pass (measured) ----
+        let t = Timer::start();
+        let schedule = schedule_spgemm(a, b, self.cfg.pipelines, self.cfg.bundle_size);
+        let cpu_preprocess_s = t.elapsed_s();
+
+        // ---- numeric result via the scheduled bundle dataflow ----
+        let c = match self.mode {
+            ExecMode::Rust => numeric_rust(a, b, &schedule),
+            ExecMode::Xla => {
+                let rt = self.runtime.context("XLA mode requires a runtime")?;
+                numeric_xla(a, b, &schedule, rt)?
+            }
+        };
+
+        // ---- FPGA timing from the cycle model ----
+        let sim = simulate_spgemm(a, b, &schedule, &self.cfg, Style::HandCoded);
+        let fpga_s = sim.stats.seconds(&self.cfg);
+        let total_s = overlapped_total(cpu_preprocess_s, fpga_s, sim.stats.waves);
+
+        Ok(ReapSpgemmReport { c, cpu_preprocess_s, fpga_sim: sim.stats, fpga_s, total_s })
+    }
+}
+
+/// In-process numeric path: identical wave/chunk/stream ordering to the
+/// hardware dataflow (and to the XLA path), accumulated with a stamped SPA.
+fn numeric_rust(a: &Csr, b: &Csr, schedule: &SpgemmSchedule) -> Csr {
+    let mut row_ptr = vec![0usize; a.nrows + 1];
+    let mut cols: Vec<Idx> = Vec::new();
+    let mut vals: Vec<Val> = Vec::new();
+    let mut acc: Vec<Val> = vec![0.0; b.ncols];
+    let mut stamp: Vec<u32> = vec![u32::MAX; b.ncols];
+    let mut touched: Vec<Idx> = Vec::new();
+    let mut tick = 0u32;
+    let mut last_done_row = 0usize; // rows < this are final
+
+    for wave in &schedule.waves {
+        for asg in &wave.assignments {
+            for (&ca, &va) in asg.a_cols(a).iter().zip(asg.a_vals(a)) {
+                let r = ca as usize;
+                for (&cb, &vb) in b.row_cols(r).iter().zip(b.row_vals(r)) {
+                    let j = cb as usize;
+                    if stamp[j] != tick {
+                        stamp[j] = tick;
+                        acc[j] = va * vb;
+                        touched.push(cb);
+                    } else {
+                        acc[j] += va * vb;
+                    }
+                }
+            }
+            if asg.last_chunk {
+                // drain the merged row (the merge unit's sorted emission)
+                touched.sort_unstable();
+                for &c in &touched {
+                    cols.push(c);
+                    vals.push(acc[c as usize]);
+                }
+                let row = asg.a_row as usize;
+                // empty rows between the previous emitted row and this one
+                for rr in last_done_row..=row {
+                    row_ptr[rr + 1] = if rr == row { cols.len() } else { row_ptr[rr] };
+                }
+                row_ptr[row + 1] = cols.len();
+                last_done_row = row + 1;
+                touched.clear();
+                tick = tick.wrapping_add(1);
+            }
+        }
+    }
+    for rr in last_done_row..a.nrows {
+        row_ptr[rr + 1] = row_ptr[rr];
+    }
+    Csr { nrows: a.nrows, ncols: b.ncols, row_ptr, cols, vals }
+}
+
+/// XLA numeric path: stream the same schedule through the AOT
+/// `spgemm_bundle` artifact, tiling the output column space.
+fn numeric_xla(a: &Csr, b: &Csr, schedule: &SpgemmSchedule, rt: &XlaRuntime) -> Result<Csr> {
+    let mut io = SpgemmWaveIo::new(rt)?;
+    let tile_w = io.tile_w;
+    let bundle = io.bundle;
+
+    let mut row_ptr = vec![0usize; a.nrows + 1];
+    let mut cols: Vec<Idx> = Vec::new();
+    let mut vals: Vec<Val> = Vec::new();
+
+    // per-row accumulation over active tiles
+    let ntiles = b.ncols.div_ceil(tile_w).max(1);
+    let mut tile_acc: Vec<Vec<f32>> = Vec::new(); // parallel to active_tiles
+    let mut active_tiles: Vec<usize> = Vec::new();
+    let mut tile_stamp = vec![u32::MAX; ntiles];
+    let mut tick = 0u32;
+    let mut last_done_row = 0usize;
+
+    for wave in &schedule.waves {
+        for asg in &wave.assignments {
+            // discover tiles this chunk touches
+            for &ca in asg.a_cols(a) {
+                for &cb in b.row_cols(ca as usize) {
+                    let tile = cb as usize / tile_w;
+                    if tile_stamp[tile] != tick {
+                        tile_stamp[tile] = tick;
+                        active_tiles.push(tile);
+                        tile_acc.push(vec![0.0; tile_w]);
+                    }
+                }
+            }
+            // B rows of this chunk may exceed one bundle: process chunk
+            // pairs; slot i carries the ci-th sub-chunk of its B row
+            let max_chunks = asg
+                .a_cols(a)
+                .iter()
+                .map(|&c| b.row_nnz(c as usize).div_ceil(bundle).max(1))
+                .max()
+                .unwrap_or(1);
+            for (t_idx, &tile) in active_tiles.iter().enumerate() {
+                let tile_start = (tile * tile_w) as u32;
+                io.clear();
+                let mut staged: usize = 0;
+                for ci in 0..max_chunks {
+                    let mut b_rows: Vec<(&[Idx], &[Val])> = Vec::with_capacity(asg.len);
+                    for &ca in asg.a_cols(a) {
+                        let r = ca as usize;
+                        let bc = b.row_cols(r);
+                        let bv = b.row_vals(r);
+                        let lo = (ci * bundle).min(bc.len());
+                        let hi = ((ci + 1) * bundle).min(bc.len());
+                        b_rows.push((&bc[lo..hi], &bv[lo..hi]));
+                    }
+                    io.push_step(tile_start, asg.a_vals(a), &b_rows)?;
+                    staged += 1;
+                    if io.is_full() || ci + 1 == max_chunks {
+                        let outs = io.execute(rt)?;
+                        debug_assert_eq!(outs.len(), staged);
+                        for out in &outs {
+                            for (w, &v) in out.iter().enumerate() {
+                                tile_acc[t_idx][w] += v;
+                            }
+                        }
+                        io.clear();
+                        staged = 0;
+                    }
+                }
+            }
+            if asg.last_chunk {
+                // drain the row: ascending tiles, ascending offsets
+                let mut order: Vec<usize> = (0..active_tiles.len()).collect();
+                order.sort_unstable_by_key(|&i| active_tiles[i]);
+                for i in order {
+                    let base = active_tiles[i] * tile_w;
+                    for (w, &v) in tile_acc[i].iter().enumerate() {
+                        let col = base + w;
+                        if v != 0.0 && col < b.ncols {
+                            cols.push(col as Idx);
+                            vals.push(v);
+                        }
+                    }
+                }
+                let row = asg.a_row as usize;
+                for rr in last_done_row..=row {
+                    row_ptr[rr + 1] = if rr == row { cols.len() } else { row_ptr[rr] };
+                }
+                row_ptr[row + 1] = cols.len();
+                last_done_row = row + 1;
+                active_tiles.clear();
+                tile_acc.clear();
+                tick = tick.wrapping_add(1);
+            }
+        }
+    }
+    for rr in last_done_row..a.nrows {
+        row_ptr[rr + 1] = row_ptr[rr];
+    }
+    Ok(Csr { nrows: a.nrows, ncols: b.ncols, row_ptr, cols, vals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::spgemm;
+    use crate::sparse::gen;
+
+    #[test]
+    fn rust_mode_matches_baseline_exactly() {
+        for seed in 0..4u64 {
+            let a = gen::power_law(80, 1200, seed);
+            let b = gen::random_uniform(80, 80, 900, seed + 10);
+            let coord = ReapSpgemm::new(FpgaConfig::reap32_spgemm());
+            let rep = coord.run(&a, &b).unwrap();
+            rep.c.validate().unwrap();
+            let expect = spgemm(&a, &b);
+            assert_eq!(rep.c, expect, "seed {seed}");
+            assert!(rep.fpga_s > 0.0);
+            assert!(rep.total_s >= rep.fpga_s);
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_singleton_rows() {
+        // row 0 empty, row 1 singleton
+        let mut a = Csr::new(3, 3);
+        a.row_ptr = vec![0, 0, 1, 1];
+        a.cols = vec![2];
+        a.vals = vec![5.0];
+        let b = gen::random_uniform(3, 3, 6, 1);
+        let coord = ReapSpgemm::new(FpgaConfig::reap32_spgemm());
+        let rep = coord.run(&a, &b).unwrap();
+        assert_eq!(rep.c, spgemm(&a, &b));
+    }
+
+    #[test]
+    fn big_rows_split_across_waves_still_correct() {
+        // 100-nnz rows with bundle 32 -> 4 chunks per row
+        let a = gen::random_uniform(6, 300, 600, 2);
+        let b = gen::random_uniform(300, 50, 3000, 3);
+        let coord = ReapSpgemm::new(FpgaConfig::reap32_spgemm());
+        let rep = coord.run(&a, &b).unwrap();
+        assert_eq!(rep.c, spgemm(&a, &b));
+    }
+
+    #[test]
+    fn report_times_are_consistent() {
+        let a = gen::banded_fem(100, 900, 4);
+        let coord = ReapSpgemm::new(FpgaConfig::reap32_spgemm());
+        let rep = coord.run(&a, &a).unwrap();
+        assert!(rep.cpu_preprocess_s >= 0.0);
+        let serial = rep.cpu_preprocess_s + rep.fpga_s;
+        assert!(rep.total_s <= serial + 1e-9);
+        assert!(rep.total_s >= rep.cpu_preprocess_s.max(rep.fpga_s) - 1e-9);
+    }
+}

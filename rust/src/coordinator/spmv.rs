@@ -1,0 +1,171 @@
+//! REAP SpMV orchestration — the future-work extension through the same
+//! synergistic flow: CPU pass (RIR chunking, measured) → FPGA numeric
+//! (XLA artifact or in-process, identical chunk ordering) → cycle-model
+//! timing → overlap accounting.
+
+use anyhow::{Context, Result};
+
+use crate::fpga::spgemm_sim::Style;
+use crate::fpga::spmv_sim::simulate_spmv;
+use crate::fpga::{FpgaConfig, SimStats};
+use crate::rir::schedule::{schedule_spgemm, SpgemmSchedule};
+use crate::runtime::{SpmvWaveIo, XlaRuntime};
+use crate::sparse::{Csr, Val};
+use crate::util::Timer;
+
+use super::overlap::overlapped_total;
+use super::ExecMode;
+
+/// SpMV coordinator for one FPGA design point.
+pub struct ReapSpmv<'rt> {
+    pub cfg: FpgaConfig,
+    pub mode: ExecMode,
+    pub runtime: Option<&'rt XlaRuntime>,
+}
+
+/// Outcome of one REAP SpMV execution.
+#[derive(Clone, Debug)]
+pub struct ReapSpmvReport {
+    pub y: Vec<Val>,
+    pub cpu_preprocess_s: f64,
+    pub fpga_sim: SimStats,
+    pub fpga_s: f64,
+    pub total_s: f64,
+}
+
+impl<'rt> ReapSpmv<'rt> {
+    /// Coordinator with the in-process numeric path.
+    pub fn new(cfg: FpgaConfig) -> Self {
+        ReapSpmv { cfg, mode: ExecMode::Rust, runtime: None }
+    }
+
+    /// Coordinator executing numerics through the XLA artifacts.
+    pub fn with_runtime(cfg: FpgaConfig, rt: &'rt XlaRuntime) -> Self {
+        ReapSpmv { cfg, mode: ExecMode::Xla, runtime: Some(rt) }
+    }
+
+    /// Run y = A x.
+    pub fn run(&self, a: &Csr, x: &[Val]) -> Result<ReapSpmvReport> {
+        // CPU pass: chunk rows into bundles (the SpGEMM scheduler's wave
+        // structure, with an empty B surrogate — x lives on-chip)
+        let t = Timer::start();
+        let b_surrogate = Csr::new(a.ncols, a.ncols);
+        let schedule = schedule_spgemm(a, &b_surrogate, self.cfg.pipelines, self.cfg.bundle_size);
+        let cpu_preprocess_s = t.elapsed_s();
+
+        let y = match self.mode {
+            ExecMode::Rust => numeric_rust(a, x, &schedule),
+            ExecMode::Xla => {
+                let rt = self.runtime.context("XLA mode requires a runtime")?;
+                numeric_xla(a, x, &schedule, rt)?
+            }
+        };
+
+        let sim = simulate_spmv(a, &schedule, &self.cfg, Style::HandCoded);
+        let fpga_s = sim.stats.seconds(&self.cfg);
+        let total_s = overlapped_total(cpu_preprocess_s, fpga_s, sim.stats.waves);
+        Ok(ReapSpmvReport { y, cpu_preprocess_s, fpga_sim: sim.stats, fpga_s, total_s })
+    }
+}
+
+/// In-process numeric path in schedule (chunk) order.
+fn numeric_rust(a: &Csr, x: &[Val], schedule: &SpgemmSchedule) -> Vec<Val> {
+    let mut y = vec![0 as Val; a.nrows];
+    let mut acc = 0f64;
+    for wave in &schedule.waves {
+        for asg in &wave.assignments {
+            for (&c, &v) in asg.a_cols(a).iter().zip(asg.a_vals(a)) {
+                acc += (v as f64) * (x[c as usize] as f64);
+            }
+            if asg.last_chunk {
+                y[asg.a_row as usize] = acc as Val;
+                acc = 0.0;
+            }
+        }
+    }
+    y
+}
+
+/// XLA path: stream the same chunks through the `spmv_bundle` artifact,
+/// tiling x; partial sums accumulate per row (the coordinator's merge
+/// role).
+fn numeric_xla(a: &Csr, x: &[Val], schedule: &SpgemmSchedule, rt: &XlaRuntime) -> Result<Vec<Val>> {
+    let mut io = SpmvWaveIo::new(rt)?;
+    let tile_w = io.tile_w;
+    let mut y = vec![0f64; a.nrows];
+
+    // staged step -> destination row, so batches can span rows/waves
+    let mut dest: Vec<usize> = Vec::with_capacity(io.batch);
+    let mut flush = |io: &mut SpmvWaveIo, dest: &mut Vec<usize>, y: &mut [f64]| -> Result<()> {
+        if io.steps() == 0 {
+            return Ok(());
+        }
+        let parts = io.execute(rt)?;
+        for (p, &row) in parts.iter().zip(dest.iter()) {
+            y[row] += *p as f64;
+        }
+        io.clear();
+        dest.clear();
+        Ok(())
+    };
+
+    for wave in &schedule.waves {
+        for asg in &wave.assignments {
+            // split the chunk by x tile: each (chunk ∩ tile) is one step
+            let cols = asg.a_cols(a);
+            let vals = asg.a_vals(a);
+            let mut lo = 0usize;
+            while lo < cols.len() {
+                let tile = cols[lo] as usize / tile_w;
+                let tile_start = tile * tile_w;
+                let hi = lo + cols[lo..].partition_point(|&c| (c as usize) < tile_start + tile_w);
+                let x_lo = tile_start.min(x.len());
+                let x_hi = (tile_start + tile_w).min(x.len());
+                io.push_step(tile_start as u32, &cols[lo..hi], &vals[lo..hi], &x[x_lo..x_hi])?;
+                dest.push(asg.a_row as usize);
+                if io.is_full() {
+                    flush(&mut io, &mut dest, &mut y)?;
+                }
+                lo = hi;
+            }
+        }
+    }
+    flush(&mut io, &mut dest, &mut y)?;
+    Ok(y.into_iter().map(|v| v as Val).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::spmv::spmv;
+    use crate::sparse::gen;
+
+    #[test]
+    fn rust_mode_matches_baseline() {
+        for seed in 0..4u64 {
+            let a = gen::power_law(150, 2500, seed);
+            let x: Vec<f32> = (0..150).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+            let rep = ReapSpmv::new(FpgaConfig::reap32_spgemm()).run(&a, &x).unwrap();
+            let want = spmv(&a, &x);
+            let err = rep
+                .y
+                .iter()
+                .zip(&want)
+                .map(|(g, w)| (g - w).abs())
+                .fold(0f32, f32::max);
+            assert!(err < 1e-3, "seed {seed}: err {err}");
+            assert!(rep.fpga_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn handles_empty_rows_and_big_rows() {
+        let a = gen::random_uniform(4, 300, 500, 1); // rows of ~125 nnz
+        let x: Vec<f32> = (0..300).map(|i| (i as f32 * 0.01).cos()).collect();
+        let rep = ReapSpmv::new(FpgaConfig::reap32_spgemm()).run(&a, &x).unwrap();
+        let want = spmv(&a, &x);
+        for (g, w) in rep.y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+}

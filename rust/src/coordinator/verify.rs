@@ -1,0 +1,77 @@
+//! Result verification: REAP outputs vs the measured CPU baselines.
+
+use crate::sparse::{Csc, Csr};
+
+/// Outcome of a verification.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Verification {
+    /// Frobenius norm of the difference.
+    pub frob_diff: f64,
+    /// Frobenius norm of the reference (for relative error).
+    pub frob_ref: f64,
+}
+
+impl Verification {
+    /// Relative error (0 when the reference is zero and diff is zero).
+    pub fn relative(&self) -> f64 {
+        if self.frob_ref == 0.0 {
+            return if self.frob_diff == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        self.frob_diff / self.frob_ref
+    }
+
+    /// Accept within a relative tolerance.
+    pub fn ok(&self, rel_tol: f64) -> bool {
+        self.relative() <= rel_tol
+    }
+}
+
+/// Compare two CSR matrices (same shape; patterns may differ).
+pub fn verify_csr(got: &Csr, reference: &Csr) -> Verification {
+    let zero = Csr::new(reference.nrows, reference.ncols);
+    Verification {
+        frob_diff: got.frob_diff(reference),
+        frob_ref: reference.frob_diff(&zero),
+    }
+}
+
+/// Compare two CSC matrices.
+pub fn verify_csc(got: &Csc, reference: &Csc) -> Verification {
+    verify_csr(&got.to_csr(), &reference.to_csr())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn identical_matrices_verify() {
+        let m = gen::random_uniform(20, 20, 80, 1);
+        let v = verify_csr(&m, &m);
+        assert_eq!(v.frob_diff, 0.0);
+        assert!(v.ok(0.0));
+    }
+
+    #[test]
+    fn perturbed_matrices_fail_tight_tolerance() {
+        let m = gen::random_uniform(20, 20, 80, 2);
+        let mut p = m.clone();
+        p.vals[0] += 1.0;
+        let v = verify_csr(&p, &m);
+        assert!(v.frob_diff >= 1.0);
+        assert!(!v.ok(1e-9));
+        assert!(v.ok(1e9));
+    }
+
+    #[test]
+    fn zero_reference_edge() {
+        let z = Csr::new(4, 4);
+        assert_eq!(verify_csr(&z, &z).relative(), 0.0);
+        let mut nz = Csr::new(4, 4);
+        nz.row_ptr = vec![0, 1, 1, 1, 1];
+        nz.cols = vec![0];
+        nz.vals = vec![1.0];
+        assert_eq!(verify_csr(&nz, &z).relative(), f64::INFINITY);
+    }
+}

@@ -1,0 +1,257 @@
+//! FPGA design-point configuration (paper §V, Table II, Fig 8-right).
+
+/// DRAM bandwidth configuration (the paper's queuing-model cap).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DramConfig {
+    /// Sustained read bandwidth, GB/s.
+    pub read_gbps: f64,
+    /// Sustained write bandwidth, GB/s.
+    pub write_gbps: f64,
+}
+
+impl DramConfig {
+    /// REAP-32 cap: "matches that available on a single-core CPU, which is
+    /// 14 GB/s on our machine for both reads and writes" (§V-A).
+    pub fn single_core() -> Self {
+        DramConfig { read_gbps: 14.0, write_gbps: 14.0 }
+    }
+
+    /// REAP-64/128 cap: "the peak measured memory bandwidth (147 GB/s for
+    /// reads and 73 GB/s for writes) for our CPU" (§V-A).
+    pub fn sixteen_core_peak() -> Self {
+        DramConfig { read_gbps: 147.0, write_gbps: 73.0 }
+    }
+}
+
+/// One REAP design point: pipeline count, frequency, sizing, latencies.
+///
+/// Unit latencies reflect Intel Arria-10 single-precision FP IP blocks
+/// (the "dedicated hardware … from the DSP units" of §IV): fully pipelined
+/// (initiation interval 1) with multi-cycle result latency; division and
+/// square root are the long-latency IPs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FpgaConfig {
+    pub name: &'static str,
+    /// Replicated vertical pipelines (Fig 1 / Fig 5).
+    pub pipelines: usize,
+    /// Clock, MHz (paper: 250 MHz @32/64, 220 @128, 238 @ Cholesky-64).
+    pub freq_mhz: f64,
+    /// RIR bundle size = CAM entries (paper design parameter: 32).
+    pub bundle_size: usize,
+    /// Multipliers inside each Cholesky dot-product PE (8 in REAP-32,
+    /// 16 in REAP-64; SpGEMM pipelines have one multiplier each).
+    pub dot_multipliers: usize,
+    pub dram: DramConfig,
+    /// FP multiply pipeline latency, cycles.
+    pub mult_latency: u64,
+    /// FP add (accumulate) latency, cycles.
+    pub add_latency: u64,
+    /// FP divide latency, cycles (Arria-10 FP div IP ≈ 28 stages).
+    pub div_latency: u64,
+    /// FP square-root latency, cycles.
+    pub sqrt_latency: u64,
+}
+
+impl FpgaConfig {
+    /// REAP-32 for SpGEMM: "32 pipelines … 250 MHz … RIR bundle and CAM
+    /// size of 32. The DRAM bandwidth … matches … a single-core CPU".
+    pub fn reap32_spgemm() -> Self {
+        FpgaConfig {
+            name: "REAP-32",
+            pipelines: 32,
+            freq_mhz: 250.0,
+            bundle_size: 32,
+            dot_multipliers: 1,
+            dram: DramConfig::single_core(),
+            mult_latency: 5,
+            add_latency: 4,
+            div_latency: 28,
+            sqrt_latency: 28,
+        }
+    }
+
+    /// REAP-64 for SpGEMM: 64 pipelines, 250 MHz, 16-core DRAM bandwidth.
+    pub fn reap64_spgemm() -> Self {
+        FpgaConfig {
+            pipelines: 64,
+            dram: DramConfig::sixteen_core_peak(),
+            name: "REAP-64",
+            ..Self::reap32_spgemm()
+        }
+    }
+
+    /// REAP-128 for SpGEMM: 128 pipelines, 220 MHz, same bandwidth as -64.
+    pub fn reap128_spgemm() -> Self {
+        FpgaConfig {
+            pipelines: 128,
+            freq_mhz: 220.0,
+            dram: DramConfig::sixteen_core_peak(),
+            name: "REAP-128",
+            ..Self::reap32_spgemm()
+        }
+    }
+
+    /// REAP-32 for Cholesky: 32 pipelines @250 MHz, 8 multipliers per
+    /// dot-product PE, single-core DRAM bandwidth (§V-B).
+    pub fn reap32_cholesky() -> Self {
+        FpgaConfig {
+            dot_multipliers: 8,
+            name: "REAP-32",
+            ..Self::reap32_spgemm()
+        }
+    }
+
+    /// REAP-64 for Cholesky: 64 pipelines @238 MHz, 16 multipliers per PE,
+    /// 16-core DRAM bandwidth (§V-B).
+    pub fn reap64_cholesky() -> Self {
+        FpgaConfig {
+            pipelines: 64,
+            freq_mhz: 238.0,
+            dot_multipliers: 16,
+            dram: DramConfig::sixteen_core_peak(),
+            name: "REAP-64",
+            ..Self::reap32_spgemm()
+        }
+    }
+
+    /// Cycles per second.
+    pub fn hz(&self) -> f64 {
+        self.freq_mhz * 1e6
+    }
+
+    /// DRAM read bytes per cycle at this clock.
+    pub fn read_bytes_per_cycle(&self) -> f64 {
+        self.dram.read_gbps * 1e9 / self.hz()
+    }
+
+    /// DRAM write bytes per cycle at this clock.
+    pub fn write_bytes_per_cycle(&self) -> f64 {
+        self.dram.write_gbps * 1e9 / self.hz()
+    }
+
+    /// FP mult/add unit count — the paper's Fig-8 normalization for REAP
+    /// (each SpGEMM pipeline: 1 multiplier + 1 merge adder counts as one
+    /// multiply/add unit; each Cholesky pipeline: `dot_multipliers`).
+    pub fn fp_units(&self) -> usize {
+        self.pipelines * self.dot_multipliers
+    }
+}
+
+/// FP mult/add units of an n-thread CPU baseline, for the Fig-8
+/// normalization. Xeon 6130 (Table II): 2×AVX-512 FMA ports = 16 f32
+/// multiply/add lanes per core — this is how "CPU-2 effectively has the
+/// same number of floating point multiply/add units as the REAP-32" (§V-A)
+/// comes out: 2 × 16 = 32.
+pub fn cpu_fp_units(threads: usize) -> usize {
+    threads * 16
+}
+
+/// Area/frequency scaling model of Fig 8 (right), calibrated to the
+/// paper's reported endpoints: 280 MHz and small utilization at 2
+/// pipelines → 220 MHz and 8× the logic at 128 pipelines, with 250 MHz at
+/// the 32/64-pipeline design points.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel;
+
+impl AreaModel {
+    /// Predicted clock frequency (MHz) for a pipeline count.
+    ///
+    /// Piecewise linear in log2(pipelines) through the paper's synthesized
+    /// points (2, 280), (32, 250), (64, 250), (128, 220).
+    pub fn freq_mhz(pipelines: usize) -> f64 {
+        let p = (pipelines.max(1)) as f64;
+        let x = p.log2();
+        // anchors in (log2 p, MHz)
+        let pts = [(1.0, 280.0), (5.0, 250.0), (6.0, 250.0), (7.0, 220.0)];
+        if x <= pts[0].0 {
+            return pts[0].1;
+        }
+        for w in pts.windows(2) {
+            let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+            if x <= x1 {
+                return y0 + (y1 - y0) * (x - x0) / (x1 - x0);
+            }
+        }
+        pts[3].1
+    }
+
+    /// Predicted logic utilization (fraction of the Arria-10's 1150K LEs)
+    /// for a pipeline count.
+    ///
+    /// "While the number of pipelines changed from 2 to 128, the logic
+    /// utilization has increased only 8×" — sublinear growth ≈ p^0.5
+    /// (each doubling costs √2×), anchored at 10% for 2 pipelines so 128
+    /// pipelines lands at 80%.
+    pub fn logic_utilization(pipelines: usize) -> f64 {
+        let p = pipelines.max(1) as f64;
+        (0.10 * (p / 2.0).sqrt()).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_design_points() {
+        let c32 = FpgaConfig::reap32_spgemm();
+        assert_eq!(c32.pipelines, 32);
+        assert_eq!(c32.freq_mhz, 250.0);
+        assert_eq!(c32.bundle_size, 32);
+        assert_eq!(c32.dram, DramConfig::single_core());
+
+        let c128 = FpgaConfig::reap128_spgemm();
+        assert_eq!(c128.freq_mhz, 220.0);
+        assert_eq!(c128.dram, DramConfig::sixteen_core_peak());
+
+        let ch64 = FpgaConfig::reap64_cholesky();
+        assert_eq!(ch64.dot_multipliers, 16);
+        assert_eq!(ch64.freq_mhz, 238.0);
+    }
+
+    #[test]
+    fn bandwidth_per_cycle_sane() {
+        let c = FpgaConfig::reap32_spgemm();
+        // 14 GB/s at 250 MHz = 56 bytes/cycle
+        assert!((c.read_bytes_per_cycle() - 56.0).abs() < 1e-9);
+        let c = FpgaConfig::reap64_spgemm();
+        assert!((c.read_bytes_per_cycle() - 588.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp_unit_equivalences_from_the_paper() {
+        // "CPU-2 effectively has the same number of floating point
+        // multiply/add units as the REAP-32"
+        assert_eq!(cpu_fp_units(2), FpgaConfig::reap32_spgemm().fp_units());
+        // "REAP-64 … 1/4 … of the number of floating-point multiply/add
+        // units than CPU-16"
+        assert_eq!(FpgaConfig::reap64_spgemm().fp_units() * 4, cpu_fp_units(16));
+        // "REAP-128 … half of the number of floating-point units compared
+        // to a 16-core CPU"
+        assert_eq!(FpgaConfig::reap128_spgemm().fp_units() * 2, cpu_fp_units(16));
+    }
+
+    #[test]
+    fn area_model_hits_anchors() {
+        assert_eq!(AreaModel::freq_mhz(2), 280.0);
+        assert_eq!(AreaModel::freq_mhz(32), 250.0);
+        assert_eq!(AreaModel::freq_mhz(128), 220.0);
+        let f64p = AreaModel::freq_mhz(64);
+        assert!(f64p <= 250.0 && f64p >= 220.0);
+        // 8x growth from 2 to 128
+        let ratio = AreaModel::logic_utilization(128) / AreaModel::logic_utilization(2);
+        assert!((ratio - 8.0).abs() < 1e-9);
+        assert!(AreaModel::logic_utilization(2) > 0.0);
+        assert!(AreaModel::logic_utilization(128) <= 1.0);
+    }
+
+    #[test]
+    fn freq_monotone_nonincreasing() {
+        let mut prev = f64::INFINITY;
+        for p in [2usize, 4, 8, 16, 32, 64, 128] {
+            let f = AreaModel::freq_mhz(p);
+            assert!(f <= prev, "freq must not increase with pipelines");
+            prev = f;
+        }
+    }
+}

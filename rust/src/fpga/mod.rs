@@ -1,0 +1,31 @@
+//! Transaction-level, cycle-accounted model of the REAP FPGA designs.
+//!
+//! The paper evaluates via "trace-driven simulation with our in-house
+//! cycle-accurate SystemC simulator … cycle counts and FPGA frequencies
+//! extracted from the RTL implementation synthesized by Quartus 16.1" plus
+//! "a queuing model where the data transfers are not allowed to exceed the
+//! bandwidth set in the design" (§V). This module is that simulator,
+//! rebuilt in Rust with the paper's published design points:
+//!
+//! * [`config`] — design-point presets (REAP-32/64/128, Table II DRAM
+//!   bandwidths, unit latencies) and the area/frequency scaling model of
+//!   Fig 8 (right).
+//! * [`dram`] — the bandwidth-capped DRAM queuing model.
+//! * [`spgemm_sim`] — the five-module SpGEMM datapath of Fig 1 (input
+//!   controller → match+multiply (CAM) → sort → merge → output controller).
+//! * [`cholesky_sim`] — the column-parallel Cholesky datapath of Fig 5
+//!   (dot-product PEs with CAMs + div/sqrt PEs), with idle-cycle tracking.
+//! * [`hls`] — the §V-C OpenCL-HLS derating model (with/without CPU
+//!   preprocessing).
+//! * [`stats`] — cycle/traffic/utilization accounting shared by all sims.
+
+pub mod cholesky_sim;
+pub mod config;
+pub mod dram;
+pub mod hls;
+pub mod spgemm_sim;
+pub mod spmv_sim;
+pub mod stats;
+
+pub use config::{cpu_fp_units, AreaModel, DramConfig, FpgaConfig};
+pub use stats::SimStats;

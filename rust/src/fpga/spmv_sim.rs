@@ -1,0 +1,131 @@
+//! Cycle model of the SpMV extension datapath.
+//!
+//! Same organization as the SpGEMM design minus the CAM/sort/merge chain:
+//! x is loaded once into FPGA on-chip memory (the Arria-10's 67 Mbit
+//! easily holds the suite's vectors); row bundles stream from DRAM; each
+//! pipeline's PE gathers x at one element/cycle and accumulates with an
+//! adder tree, so the datapath runs at RIR stream rate — the extension
+//! inherits exactly the property the paper engineered for SpGEMM.
+
+use crate::rir::layout::WORD_BYTES;
+use crate::rir::schedule::SpgemmSchedule;
+use crate::sparse::Csr;
+
+use super::config::FpgaConfig;
+use super::dram::DramModel;
+use super::spgemm_sim::Style;
+use super::stats::SimStats;
+
+/// Result of simulating one SpMV execution.
+#[derive(Clone, Debug)]
+pub struct SpmvSimResult {
+    pub stats: SimStats,
+}
+
+/// Simulate `y = A x` over the chunk schedule (the SpGEMM scheduler's wave
+/// structure is reused — assignments are row chunks; the B-stream list is
+/// ignored because x lives on-chip).
+pub fn simulate_spmv(a: &Csr, schedule: &SpgemmSchedule, cfg: &FpgaConfig, style: Style) -> SpmvSimResult {
+    let p = cfg.pipelines;
+    let mut stats = SimStats::default();
+    let mut dram = DramModel::default();
+
+    // one-time x load into on-chip RAM (overlappable in principle; charged
+    // fully — it is tiny relative to the row stream)
+    let x_bytes = (a.ncols * 4) as u64;
+    let x_cycles = dram.read(cfg, x_bytes);
+    stats.cycles += x_cycles;
+    stats.dram_bound_cycles += x_cycles;
+
+    let fill = cfg.mult_latency + cfg.add_latency * 6; // adder tree drain
+    let indirection = match style {
+        Style::HlsRaw => 6u64,
+        _ => 0,
+    };
+
+    for wave in &schedule.waves {
+        let mut max_pipe: u64 = 0;
+        let mut elems_total: u64 = 0;
+        let mut rows_done: u64 = 0;
+        for asg in &wave.assignments {
+            // stream the chunk; gather+multiply+accumulate at 1 elem/cycle
+            let elems = asg.len as u64;
+            let pipe = if style.pipelined_stages() {
+                2 + elems + indirection
+            } else {
+                2 + 2 * elems + indirection // HLS serializes gather and MAC
+            };
+            max_pipe = max_pipe.max(pipe + fill);
+            elems_total += elems;
+            rows_done += u64::from(asg.last_chunk);
+        }
+        let in_bytes: u64 = wave
+            .assignments
+            .iter()
+            .map(|asg| (2 + 2 * asg.len) as u64 * WORD_BYTES as u64)
+            .sum();
+        let out_bytes = rows_done * 4;
+        let read_cy = dram.read(cfg, in_bytes);
+        let write_cy = dram.write(cfg, out_bytes);
+        let dram_cy = read_cy.max(write_cy);
+        let wave_cy = max_pipe.max(dram_cy).max(1);
+        if max_pipe >= dram_cy {
+            stats.compute_bound_cycles += wave_cy;
+        } else {
+            stats.dram_bound_cycles += wave_cy;
+        }
+        stats.cycles += wave_cy;
+        stats.waves += 1;
+        let active = wave.assignments.len() as u64;
+        stats.busy_pipeline_cycles += active * wave_cy;
+        stats.idle_pipeline_cycles += (p as u64 - active) * wave_cy;
+        stats.flops += 2 * elems_total;
+    }
+
+    stats.bytes_read = dram.bytes_read;
+    stats.bytes_written = dram.bytes_written;
+    SpmvSimResult { stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rir::schedule::schedule_spgemm;
+    use crate::sparse::gen;
+
+    fn sim(n: usize, nnz: usize, style: Style) -> SpmvSimResult {
+        let a = gen::random_uniform(n, n, nnz, 3);
+        let cfg = FpgaConfig::reap32_spgemm();
+        // schedule against an empty B surrogate (b_rows unused by SpMV)
+        let s = schedule_spgemm(&a, &Csr::new(n, n), cfg.pipelines, cfg.bundle_size);
+        simulate_spmv(&a, &s, &cfg, style)
+    }
+
+    #[test]
+    fn produces_consistent_work() {
+        let r = sim(500, 6000, Style::HandCoded);
+        assert_eq!(r.stats.flops, 2 * 6000);
+        assert!(r.stats.cycles > 0);
+        assert_eq!(
+            r.stats.compute_bound_cycles + r.stats.dram_bound_cycles,
+            r.stats.cycles
+        );
+    }
+
+    #[test]
+    fn hls_raw_slower() {
+        let hand = sim(500, 6000, Style::HandCoded);
+        let raw = sim(500, 6000, Style::HlsRaw);
+        assert!(raw.stats.cycles > hand.stats.cycles);
+    }
+
+    #[test]
+    fn empty_matrix_costs_only_x_load() {
+        let a = Csr::new(100, 100);
+        let cfg = FpgaConfig::reap32_spgemm();
+        let s = schedule_spgemm(&a, &Csr::new(100, 100), cfg.pipelines, cfg.bundle_size);
+        let r = simulate_spmv(&a, &s, &cfg, Style::HandCoded);
+        assert_eq!(r.stats.waves, 0);
+        assert_eq!(r.stats.bytes_read, 400);
+    }
+}

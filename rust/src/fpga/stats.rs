@@ -1,0 +1,122 @@
+//! Cycle/traffic/utilization accounting shared by the simulators.
+
+use super::config::FpgaConfig;
+
+/// Aggregate statistics of one simulated execution.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SimStats {
+    /// Total cycles (compute and DRAM overlapped per wave: a wave costs
+    /// `max(compute, dram)` cycles, per the paper's streaming design).
+    pub cycles: u64,
+    /// Cycles where the bound was compute (pipelines), summed over waves.
+    pub compute_bound_cycles: u64,
+    /// Cycles where the bound was the DRAM bandwidth cap.
+    pub dram_bound_cycles: u64,
+    /// Pipeline-cycles spent idle (no assignment or waiting on a wave).
+    pub idle_pipeline_cycles: u64,
+    /// Pipeline-cycles spent busy.
+    pub busy_pipeline_cycles: u64,
+    /// Bytes read from DRAM.
+    pub bytes_read: u64,
+    /// Bytes written to DRAM.
+    pub bytes_written: u64,
+    /// Useful FP operations performed (2 × multiplies for SpGEMM; dot,
+    /// div, sqrt ops for Cholesky).
+    pub flops: u64,
+    /// Scheduling waves executed.
+    pub waves: u64,
+}
+
+impl SimStats {
+    /// Wall-clock seconds at the design's frequency.
+    pub fn seconds(&self, cfg: &FpgaConfig) -> f64 {
+        self.cycles as f64 / cfg.hz()
+    }
+
+    /// Delivered GFLOP/s at the design's frequency.
+    pub fn gflops(&self, cfg: &FpgaConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / self.seconds(cfg) / 1e9
+    }
+
+    /// GFLOP/s per FP unit — the Fig-8 (left) normalization.
+    pub fn gflops_per_fpu(&self, cfg: &FpgaConfig) -> f64 {
+        self.gflops(cfg) / cfg.fp_units() as f64
+    }
+
+    /// Fraction of pipeline-cycles spent busy.
+    pub fn pipeline_utilization(&self) -> f64 {
+        let total = self.busy_pipeline_cycles + self.idle_pipeline_cycles;
+        if total == 0 {
+            return 0.0;
+        }
+        self.busy_pipeline_cycles as f64 / total as f64
+    }
+
+    /// Fraction of waves bounded by DRAM bandwidth rather than compute.
+    pub fn dram_bound_fraction(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.dram_bound_cycles as f64 / self.cycles as f64
+    }
+
+    /// Effective DRAM read bandwidth achieved, GB/s.
+    pub fn achieved_read_gbps(&self, cfg: &FpgaConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.bytes_read as f64 / self.seconds(cfg) / 1e9
+    }
+
+    /// Merge another stats block (e.g. per-phase accumulation).
+    pub fn merge(&mut self, other: &SimStats) {
+        self.cycles += other.cycles;
+        self.compute_bound_cycles += other.compute_bound_cycles;
+        self.dram_bound_cycles += other.dram_bound_cycles;
+        self.idle_pipeline_cycles += other.idle_pipeline_cycles;
+        self.busy_pipeline_cycles += other.busy_pipeline_cycles;
+        self.bytes_read += other.bytes_read;
+        self.bytes_written += other.bytes_written;
+        self.flops += other.flops;
+        self.waves += other.waves;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seconds_and_gflops() {
+        let cfg = FpgaConfig::reap32_spgemm(); // 250 MHz
+        let s = SimStats { cycles: 250_000_000, flops: 1_000_000_000, ..Default::default() };
+        assert!((s.seconds(&cfg) - 1.0).abs() < 1e-12);
+        assert!((s.gflops(&cfg) - 1.0).abs() < 1e-12);
+        assert!((s.gflops_per_fpu(&cfg) - 1.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let s = SimStats {
+            busy_pipeline_cycles: 75,
+            idle_pipeline_cycles: 25,
+            ..Default::default()
+        };
+        assert!((s.pipeline_utilization() - 0.75).abs() < 1e-12);
+        assert_eq!(SimStats::default().pipeline_utilization(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_fields() {
+        let mut a = SimStats { cycles: 10, flops: 5, waves: 1, ..Default::default() };
+        let b = SimStats { cycles: 7, flops: 2, waves: 2, bytes_read: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.cycles, 17);
+        assert_eq!(a.flops, 7);
+        assert_eq!(a.waves, 3);
+        assert_eq!(a.bytes_read, 3);
+    }
+}

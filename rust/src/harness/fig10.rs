@@ -1,0 +1,105 @@
+//! Fig 10: sparse Cholesky speedup of REAP designs vs CHOLMOD (stand-in)
+//! on a single core.
+//!
+//! Paper shapes: REAP-32 wins on all but one benchmark (geomean 1.18×);
+//! REAP-64 wins everywhere (geomean 1.85×). Per the paper's protocol the
+//! elimination-tree build is excluded from both sides and CHOLMOD runs
+//! numeric-only; REAP's side includes its remaining symbolic work (the
+//! Fig-11 breakdown).
+
+use crate::coordinator::ReapCholesky;
+use crate::fpga::FpgaConfig;
+use crate::kernels::cholesky::cholesky_numeric;
+use crate::symbolic::{elimination_tree, symbolic_factor};
+use crate::util::stats::geomean;
+use crate::util::table::{speedup, Table};
+use crate::util::timer::{measure_budgeted, Timer};
+
+use super::report::RunConfig;
+use super::suite::cholesky_suite;
+
+/// One matrix row of the figure.
+#[derive(Clone, Debug)]
+pub struct Fig10Row {
+    pub id: String,
+    pub name: String,
+    pub cholmod_s: f64,
+    pub reap32: f64,
+    pub reap64: f64,
+}
+
+/// Run the figure.
+pub fn run(cfg: &RunConfig) -> (Vec<Fig10Row>, Table) {
+    let mut rows = Vec::new();
+    for spec in cholesky_suite() {
+        let lower = spec.instantiate_spd(cfg.max_rows, cfg.seed);
+        // CHOLMOD stand-in: numeric phase only, over a prebuilt pattern
+        let pattern = symbolic_factor(&lower);
+        let cpu = measure_budgeted(cfg.budget_s, 2, || {
+            cholesky_numeric(&lower, &pattern).expect("suite matrices are SPD")
+        })
+        .min_s;
+        // etree build time is excluded from REAP's symbolic side too
+        let t = Timer::start();
+        let _ = elimination_tree(&lower);
+        let etree_s = t.elapsed_s();
+
+        let speedup_of = |fcfg: FpgaConfig| {
+            let rep = ReapCholesky::new(fcfg).run(&lower).unwrap();
+            let reap_total =
+                (rep.cpu_symbolic_s - etree_s).max(0.0) + rep.fpga_s;
+            cpu / reap_total
+        };
+        let reap32 = speedup_of(FpgaConfig::reap32_cholesky());
+        let reap64 = speedup_of(FpgaConfig::reap64_cholesky());
+        rows.push(Fig10Row {
+            id: spec.cholesky_id.unwrap().to_string(),
+            name: spec.name.to_string(),
+            cholmod_s: cpu,
+            reap32,
+            reap64,
+        });
+    }
+
+    let mut table = Table::new(
+        "Fig 10 — Cholesky speedup vs CHOLMOD-class CPU-1 (numeric phase)",
+        &["id", "matrix", "REAP-32", "REAP-64"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.id.clone(),
+            r.name.clone(),
+            speedup(r.reap32),
+            speedup(r.reap64),
+        ]);
+    }
+    let gm32 = geomean(&rows.iter().map(|r| r.reap32).collect::<Vec<_>>()).unwrap_or(0.0);
+    let gm64 = geomean(&rows.iter().map(|r| r.reap64).collect::<Vec<_>>()).unwrap_or(0.0);
+    table.row(vec!["GM".into(), "geomean".into(), speedup(gm32), speedup(gm64)]);
+    (rows, table)
+}
+
+/// Paper's claims: REAP-64 wins everywhere and improves on REAP-32.
+pub fn headline_holds(rows: &[Fig10Row]) -> bool {
+    let gm32 = geomean(&rows.iter().map(|r| r.reap32).collect::<Vec<_>>()).unwrap_or(0.0);
+    let gm64 = geomean(&rows.iter().map(|r| r.reap64).collect::<Vec<_>>()).unwrap_or(0.0);
+    rows.iter().all(|r| r.reap64 > 1.0) && gm64 > gm32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_covers_suite() {
+        let mut cfg = RunConfig::quick();
+        cfg.max_rows = 300;
+        let (rows, table) = run(&cfg);
+        assert_eq!(rows.len(), 8);
+        assert_eq!(table.len(), 9);
+        for r in &rows {
+            assert!(r.cholmod_s > 0.0);
+            assert!(r.reap32.is_finite() && r.reap64.is_finite());
+        }
+    }
+}

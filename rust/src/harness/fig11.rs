@@ -1,0 +1,68 @@
+//! Fig 11: percentage of time in CPU symbolic analysis vs FPGA computation
+//! for REAP-32 sparse Cholesky.
+//!
+//! Paper shape: "FPGA execution time significantly dominates the CPU
+//! execution time for Cholesky" — all the numeric work is on the FPGA,
+//! the CPU does only (non-FP) symbolic analysis.
+
+use crate::coordinator::{overlap, ReapCholesky};
+use crate::fpga::FpgaConfig;
+use crate::util::table::{pct, Table};
+
+use super::report::RunConfig;
+use super::suite::cholesky_suite;
+
+/// One matrix row of the figure.
+#[derive(Clone, Debug)]
+pub struct Fig11Row {
+    pub id: String,
+    pub name: String,
+    pub cpu_pct: f64,
+    pub fpga_pct: f64,
+}
+
+/// Run the figure.
+pub fn run(cfg: &RunConfig) -> (Vec<Fig11Row>, Table) {
+    let mut rows = Vec::new();
+    for spec in cholesky_suite() {
+        let lower = spec.instantiate_spd(cfg.max_rows, cfg.seed);
+        let rep = ReapCholesky::new(FpgaConfig::reap32_cholesky()).run(&lower).unwrap();
+        let cpu_frac = overlap::cpu_fraction(rep.cpu_symbolic_s, rep.fpga_s);
+        rows.push(Fig11Row {
+            id: spec.cholesky_id.unwrap().to_string(),
+            name: spec.name.to_string(),
+            cpu_pct: cpu_frac,
+            fpga_pct: 1.0 - cpu_frac,
+        });
+    }
+    let mut table = Table::new(
+        "Fig 11 — REAP-32 Cholesky time breakdown (CPU symbolic vs FPGA)",
+        &["id", "matrix", "CPU %", "FPGA %"],
+    );
+    for r in &rows {
+        table.row(vec![r.id.clone(), r.name.clone(), pct(r.cpu_pct), pct(r.fpga_pct)]);
+    }
+    (rows, table)
+}
+
+/// Paper's claim: the FPGA dominates on (at least almost) every matrix.
+pub fn headline_holds(rows: &[Fig11Row]) -> bool {
+    let dominated = rows.iter().filter(|r| r.fpga_pct > 0.5).count();
+    dominated * 10 >= rows.len() * 8 // ≥ 80% of the suite
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        let mut cfg = RunConfig::quick();
+        cfg.max_rows = 300;
+        let (rows, _) = run(&cfg);
+        assert_eq!(rows.len(), 8);
+        for r in &rows {
+            assert!((r.cpu_pct + r.fpga_pct - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Fig 6: SpGEMM speedup of REAP designs and multi-core CPU versions
+//! relative to Intel MKL (stand-in) on a single core.
+//!
+//! Paper's headline shapes: REAP-32 beats CPU-1 on *all* matrices, geomean
+//! ≈ 3.2×; REAP-32 beats CPU-2 on most; REAP-64 beats CPU-16 on about
+//! half; REAP-128 beats CPU-16 on all but ~3.
+
+use crate::coordinator::ReapSpgemm;
+use crate::fpga::FpgaConfig;
+use crate::util::stats::geomean;
+use crate::util::table::{speedup, Table};
+
+use super::report::{measure_spgemm_cpu, RunConfig};
+use super::suite::spgemm_suite;
+
+/// One matrix row of the figure.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub id: String,
+    pub name: String,
+    pub cpu1_s: f64,
+    /// Speedups vs CPU-1, keyed like the paper's series.
+    pub cpu2: f64,
+    pub cpu16: f64,
+    pub reap32: f64,
+    pub reap64: f64,
+    pub reap128: f64,
+}
+
+/// Run the figure; returns rows plus the rendered table.
+pub fn run(cfg: &RunConfig) -> (Vec<Fig6Row>, Table) {
+    let mut rows = Vec::new();
+    for spec in spgemm_suite() {
+        let a = spec.instantiate(cfg.max_rows, cfg.seed);
+        // paper protocol: C = A^2
+        let cpu1 = measure_spgemm_cpu(cfg, &a, &a, 1).min_s;
+        let cpu2 = measure_spgemm_cpu(cfg, &a, &a, 2).min_s;
+        let cpu16 = measure_spgemm_cpu(cfg, &a, &a, 16).min_s;
+        let r32 = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &a).unwrap();
+        let r64 = ReapSpgemm::new(FpgaConfig::reap64_spgemm()).run(&a, &a).unwrap();
+        let r128 = ReapSpgemm::new(FpgaConfig::reap128_spgemm()).run(&a, &a).unwrap();
+        rows.push(Fig6Row {
+            id: spec.spgemm_id.unwrap().to_string(),
+            name: spec.name.to_string(),
+            cpu1_s: cpu1,
+            cpu2: cpu1 / cpu2,
+            cpu16: cpu1 / cpu16,
+            reap32: cpu1 / r32.total_s,
+            reap64: cpu1 / r64.total_s,
+            reap128: cpu1 / r128.total_s,
+        });
+    }
+
+    let mut table = Table::new(
+        "Fig 6 — SpGEMM speedup vs MKL-class CPU-1 (C = A^2)",
+        &["id", "matrix", "CPU-2", "CPU-16", "REAP-32", "REAP-64", "REAP-128"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.id.clone(),
+            r.name.clone(),
+            speedup(r.cpu2),
+            speedup(r.cpu16),
+            speedup(r.reap32),
+            speedup(r.reap64),
+            speedup(r.reap128),
+        ]);
+    }
+    let gm = |f: fn(&Fig6Row) -> f64| {
+        geomean(&rows.iter().map(f).collect::<Vec<_>>()).unwrap_or(0.0)
+    };
+    table.row(vec![
+        "GM".into(),
+        "geomean".into(),
+        speedup(gm(|r| r.cpu2)),
+        speedup(gm(|r| r.cpu16)),
+        speedup(gm(|r| r.reap32)),
+        speedup(gm(|r| r.reap64)),
+        speedup(gm(|r| r.reap128)),
+    ]);
+    (rows, table)
+}
+
+/// Headline checks the paper makes about this figure (used by tests and
+/// EXPERIMENTS.md): REAP-32 > CPU-1 everywhere, and geomeans ordered
+/// REAP-128 > REAP-64 > REAP-32 > 1.
+pub fn headline_holds(rows: &[Fig6Row]) -> bool {
+    let all_beat_cpu1 = rows.iter().all(|r| r.reap32 > 1.0);
+    let gm32 = geomean(&rows.iter().map(|r| r.reap32).collect::<Vec<_>>()).unwrap_or(0.0);
+    let gm64 = geomean(&rows.iter().map(|r| r.reap64).collect::<Vec<_>>()).unwrap_or(0.0);
+    let gm128 = geomean(&rows.iter().map(|r| r.reap128).collect::<Vec<_>>()).unwrap_or(0.0);
+    all_beat_cpu1 && gm32 > 1.0 && gm64 > gm32 && gm128 > gm64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_produces_full_suite() {
+        let cfg = RunConfig::quick();
+        let (rows, table) = run(&cfg);
+        assert_eq!(rows.len(), 20);
+        assert_eq!(table.len(), 21); // + geomean row
+        for r in &rows {
+            assert!(r.cpu1_s > 0.0);
+            assert!(r.reap32.is_finite() && r.reap32 > 0.0);
+        }
+    }
+}

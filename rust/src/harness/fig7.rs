@@ -1,0 +1,70 @@
+//! Fig 7: percentage of time in CPU preprocessing vs FPGA computation for
+//! REAP-32 SpGEMM ("the sum of the two should add up to 100%").
+//!
+//! Paper shape: FPGA dominates for most matrices; CPU preprocessing
+//! exceeds FPGA only on the lowest-density inputs, "where the time spent
+//! to extract and organize the non-zero elements is more than the
+//! computation time".
+
+use crate::coordinator::{overlap, ReapSpgemm};
+use crate::fpga::FpgaConfig;
+use crate::util::table::{pct, Table};
+
+use super::report::RunConfig;
+use super::suite::spgemm_suite;
+
+/// One matrix row of the figure.
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub id: String,
+    pub name: String,
+    pub density: f64,
+    pub cpu_pct: f64,
+    pub fpga_pct: f64,
+}
+
+/// Run the figure.
+pub fn run(cfg: &RunConfig) -> (Vec<Fig7Row>, Table) {
+    let mut rows = Vec::new();
+    for spec in spgemm_suite() {
+        let a = spec.instantiate(cfg.max_rows, cfg.seed);
+        let rep = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &a).unwrap();
+        let cpu_frac = overlap::cpu_fraction(rep.cpu_preprocess_s, rep.fpga_s);
+        rows.push(Fig7Row {
+            id: spec.spgemm_id.unwrap().to_string(),
+            name: spec.name.to_string(),
+            density: a.density(),
+            cpu_pct: cpu_frac,
+            fpga_pct: 1.0 - cpu_frac,
+        });
+    }
+    let mut table = Table::new(
+        "Fig 7 — REAP-32 SpGEMM time breakdown (CPU preprocess vs FPGA)",
+        &["id", "matrix", "density", "CPU %", "FPGA %"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.id.clone(),
+            r.name.clone(),
+            format!("{:.4}%", r.density * 100.0),
+            pct(r.cpu_pct),
+            pct(r.fpga_pct),
+        ]);
+    }
+    (rows, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentages_sum_to_one() {
+        let (rows, _) = run(&RunConfig::quick());
+        assert_eq!(rows.len(), 20);
+        for r in &rows {
+            assert!((r.cpu_pct + r.fpga_pct - 1.0).abs() < 1e-9, "{}", r.id);
+            assert!((0.0..=1.0).contains(&r.cpu_pct));
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Fig 8: (left) GFLOPS normalized per FP unit for REAP vs CPU;
+//! (right) frequency and logic utilization as pipelines scale 2 → 128.
+//!
+//! Paper shapes: per-FPU GFLOPS higher for REAP at every matched unit
+//! count and scaling better with more units; frequency drops only
+//! 280 → 220 MHz while logic grows 8× over the 2 → 128 sweep.
+
+use crate::coordinator::ReapSpgemm;
+use crate::fpga::{cpu_fp_units, AreaModel, FpgaConfig};
+use crate::kernels::spgemm::spgemm_flops;
+use crate::util::stats::{quartet, Quartet};
+use crate::util::table::{f2, pct, Table};
+
+use super::report::{measure_spgemm_cpu, RunConfig};
+use super::suite::spgemm_suite;
+
+/// The left panel: one series per design/thread-count.
+#[derive(Clone, Debug)]
+pub struct GflopsSeries {
+    pub label: String,
+    pub fp_units: usize,
+    /// Per-matrix GFLOPS per FP unit.
+    pub per_fpu: Vec<f64>,
+    pub summary: Quartet,
+}
+
+/// Run both panels.
+pub fn run(cfg: &RunConfig) -> (Vec<GflopsSeries>, Table, Table) {
+    // ---- left: GFLOPS per FP unit across the suite ----
+    let mut reap: Vec<(FpgaConfig, Vec<f64>)> = vec![
+        (FpgaConfig::reap32_spgemm(), Vec::new()),
+        (FpgaConfig::reap64_spgemm(), Vec::new()),
+        (FpgaConfig::reap128_spgemm(), Vec::new()),
+    ];
+    let threads = [1usize, 2, 4, 8, 16];
+    let mut cpu: Vec<(usize, Vec<f64>)> = threads.iter().map(|&t| (t, Vec::new())).collect();
+
+    for spec in spgemm_suite() {
+        let a = spec.instantiate(cfg.max_rows, cfg.seed);
+        let flops = spgemm_flops(&a, &a) as f64;
+        for (fcfg, series) in reap.iter_mut() {
+            let rep = ReapSpgemm::new(fcfg.clone()).run(&a, &a).unwrap();
+            series.push(flops / rep.fpga_s / 1e9 / fcfg.fp_units() as f64);
+        }
+        for (t, series) in cpu.iter_mut() {
+            let m = measure_spgemm_cpu(cfg, &a, &a, *t);
+            series.push(flops / m.min_s / 1e9 / cpu_fp_units(*t) as f64);
+        }
+    }
+
+    let mut series = Vec::new();
+    for (fcfg, per_fpu) in reap {
+        series.push(GflopsSeries {
+            label: fcfg.name.to_string(),
+            fp_units: fcfg.fp_units(),
+            summary: quartet(&per_fpu).unwrap(),
+            per_fpu,
+        });
+    }
+    for (t, per_fpu) in cpu {
+        series.push(GflopsSeries {
+            label: format!("CPU-{t}"),
+            fp_units: cpu_fp_units(t),
+            summary: quartet(&per_fpu).unwrap(),
+            per_fpu,
+        });
+    }
+
+    let mut left = Table::new(
+        "Fig 8 (left) — GFLOPS per FP unit (median/geomean/p25/p75)",
+        &["series", "FP units", "p25", "median", "geomean", "p75"],
+    );
+    for s in &series {
+        left.row(vec![
+            s.label.clone(),
+            s.fp_units.to_string(),
+            f2(s.summary.p25),
+            f2(s.summary.median),
+            f2(s.summary.geomean),
+            f2(s.summary.p75),
+        ]);
+    }
+
+    // ---- right: frequency + logic utilization vs pipeline count ----
+    let mut right = Table::new(
+        "Fig 8 (right) — frequency and logic utilization vs pipelines",
+        &["pipelines", "freq (MHz)", "logic util"],
+    );
+    for p in [2usize, 4, 8, 16, 32, 64, 128] {
+        right.row(vec![
+            p.to_string(),
+            f2(AreaModel::freq_mhz(p)),
+            pct(AreaModel::logic_utilization(p)),
+        ]);
+    }
+
+    (series, left, right)
+}
+
+/// Paper's left-panel claim: for equal FP-unit counts REAP achieves higher
+/// per-unit GFLOPS (REAP-32 ≙ CPU-2: 32 units; REAP-128 vs CPU-16 is the
+/// half-units case and must still win per unit).
+pub fn headline_holds(series: &[GflopsSeries]) -> bool {
+    let get = |label: &str| series.iter().find(|s| s.label == label);
+    match (get("REAP-32"), get("CPU-2"), get("REAP-128"), get("CPU-16")) {
+        (Some(r32), Some(c2), Some(r128), Some(c16)) => {
+            r32.summary.geomean > c2.summary.geomean
+                && r128.summary.geomean > c16.summary.geomean
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_all_series() {
+        let (series, left, right) = run(&RunConfig::quick());
+        assert_eq!(series.len(), 3 + 5);
+        assert_eq!(left.len(), 8);
+        assert_eq!(right.len(), 7);
+        for s in &series {
+            assert_eq!(s.per_fpu.len(), 20);
+            assert!(s.summary.geomean > 0.0, "{}", s.label);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Benchmark harness: one module per table/figure of the paper's
+//! evaluation (§V). Every module exposes `run(&RunConfig)` returning the
+//! raw rows plus a rendered [`crate::util::table::Table`], and a
+//! `headline_holds` predicate encoding the paper's qualitative claim so
+//! tests and EXPERIMENTS.md can assert the reproduced *shape*.
+//!
+//! | module | paper artifact |
+//! |---|---|
+//! | [`tables`] | Table I (suite), Table II (platforms) |
+//! | [`fig6`] | SpGEMM speedups vs CPU |
+//! | [`fig7`] | SpGEMM CPU/FPGA breakdown |
+//! | [`fig8`] | GFLOPS per FP unit + area/frequency scaling |
+//! | [`fig9`] | sensitivity to sparsity |
+//! | [`fig10`] | Cholesky speedups vs CHOLMOD |
+//! | [`fig11`] | Cholesky CPU/FPGA breakdown |
+//! | [`hls_cmp`] | §V-C HLS preprocessing benefit |
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod hls_cmp;
+pub mod report;
+pub mod suite;
+pub mod tables;
+
+pub use report::RunConfig;

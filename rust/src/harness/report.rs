@@ -1,0 +1,125 @@
+//! Shared harness plumbing: run configuration, CSV output, and the
+//! measured-CPU helpers every figure uses.
+
+use std::path::PathBuf;
+
+use crate::sparse::Csr;
+use crate::util::table::Table;
+use crate::util::timer::{measure_budgeted, Measurement};
+
+/// Configuration shared by all figure harnesses.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Cap on instantiated matrix rows (Table-I clones scale down to this;
+    /// `--full` lifts it to the paper's original sizes).
+    pub max_rows: usize,
+    /// Base seed for matrix instantiation.
+    pub seed: u64,
+    /// Per-measurement time budget, seconds.
+    pub budget_s: f64,
+    /// Directory for CSV dumps (`results/` by default; None disables).
+    pub csv_dir: Option<PathBuf>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            max_rows: 2000,
+            seed: 0x5EA9, // "REAP"
+            budget_s: 0.2,
+            csv_dir: Some(PathBuf::from("results")),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Quick configuration for tests.
+    pub fn quick() -> Self {
+        RunConfig { max_rows: 400, budget_s: 0.02, csv_dir: None, ..Default::default() }
+    }
+
+    /// Write a table as `<csv_dir>/<name>.csv` when CSV output is enabled.
+    pub fn dump_csv(&self, name: &str, table: &Table) -> anyhow::Result<()> {
+        if let Some(dir) = &self.csv_dir {
+            table.write_csv(dir.join(format!("{name}.csv")).to_str().unwrap())?;
+        }
+        Ok(())
+    }
+}
+
+/// Parallel-scaling model for the CPU-N baselines when the host has fewer
+/// than N cores (this evaluation image exposes a single core; the paper's
+/// Xeon 6130 has 16).
+///
+/// SpGEMM on multicore is memory-bandwidth-bound: Amdahl with a high
+/// parallel fraction, capped by the DRAM read-bandwidth ratio of Table II
+/// (147 GB/s peak vs 14 GB/s single-core ≈ 10.5×, derated to ~6.5×
+/// sustained — consistent with Fig 6 where CPU-16 lands a single-digit
+/// factor over CPU-1 and REAP-64 splits the suite with it).
+pub fn cpu_scaling_model(threads: usize) -> f64 {
+    let n = threads.max(1) as f64;
+    let p = 0.93; // parallel fraction
+    let amdahl = 1.0 / ((1.0 - p) + p / n);
+    let bw_cap = 6.5;
+    amdahl.min(bw_cap)
+}
+
+/// Measure (or measure + model) the CPU-N SpGEMM baseline.
+///
+/// With enough host cores the multithreaded kernel is measured directly;
+/// otherwise the measured single-thread time is scaled by
+/// [`cpu_scaling_model`] (substitution documented in DESIGN.md §6).
+pub fn measure_spgemm_cpu(cfg: &RunConfig, a: &Csr, b: &Csr, threads: usize) -> Measurement {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if threads <= 1 || host >= threads {
+        return measure_budgeted(cfg.budget_s, 2, || {
+            if threads <= 1 {
+                crate::kernels::spgemm(a, b)
+            } else {
+                crate::kernels::spgemm_parallel(a, b, threads)
+            }
+        });
+    }
+    let m1 = measure_budgeted(cfg.budget_s, 2, || crate::kernels::spgemm(a, b));
+    let s = cpu_scaling_model(threads);
+    Measurement {
+        min_s: m1.min_s / s,
+        median_s: m1.median_s / s,
+        mean_s: m1.mean_s / s,
+        reps: m1.reps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn default_config_sane() {
+        let c = RunConfig::default();
+        assert!(c.max_rows >= 1000);
+        assert!(c.budget_s > 0.0);
+    }
+
+    #[test]
+    fn cpu_measurement_runs() {
+        let cfg = RunConfig::quick();
+        let a = gen::random_uniform(50, 50, 300, 1);
+        let m = measure_spgemm_cpu(&cfg, &a, &a, 1);
+        assert!(m.min_s > 0.0);
+        let m2 = measure_spgemm_cpu(&cfg, &a, &a, 2);
+        assert!(m2.min_s > 0.0);
+    }
+
+    #[test]
+    fn scaling_model_monotone_and_capped() {
+        assert_eq!(cpu_scaling_model(1), 1.0);
+        let s2 = cpu_scaling_model(2);
+        let s16 = cpu_scaling_model(16);
+        assert!(s2 > 1.5 && s2 < 2.0, "S(2)={s2}");
+        assert!(s16 > s2);
+        assert!(s16 <= 6.5, "bandwidth cap: S(16)={s16}");
+        assert!(cpu_scaling_model(64) <= 6.5);
+    }
+}

@@ -1,0 +1,179 @@
+//! The Table-I matrix suite (paper §V), as synthetic clones.
+//!
+//! Each SuiteSparse matrix is matched on row count, nnz and pattern family
+//! (see `sparse::gen`); the clone preserves the mean row degree when
+//! scaled down (`--scale`), which is what drives bundle occupancy, flop
+//! density and pipeline load balance in REAP. The real matrices drop in
+//! via Matrix-Market files when available (`sparse::mm`).
+
+use crate::sparse::gen::{self, Family};
+use crate::sparse::{ops, Csc, Csr};
+
+/// One Table-I row.
+#[derive(Clone, Copy, Debug)]
+pub struct MatrixSpec {
+    /// SuiteSparse name (for reporting).
+    pub name: &'static str,
+    /// SpGEMM benchmark id (S1..S20) if part of the SpGEMM suite.
+    pub spgemm_id: Option<&'static str>,
+    /// Cholesky benchmark id (C1..C8) if part of the Cholesky suite.
+    pub cholesky_id: Option<&'static str>,
+    /// Rows (= cols; all suite matrices are square).
+    pub rows: usize,
+    /// Nonzeros of the original matrix.
+    pub nnz: usize,
+    /// Synthetic pattern family standing in for the original.
+    pub family: Family,
+}
+
+/// Table I, in paper order. Families follow the application domain:
+/// `bcsstk*`/`cant`/`consph`/`offshore`/`filter3D`/`Pre_poisson`/`gyro`/
+/// `cbuckle`/`bcsstk36` are FEM/structural (banded), `cage12`/`m133-b3`/
+/// `poission3Da`/`2cubes_sphere`/`cop20K`/`ns3Da` random-ish scatter,
+/// `mbeacxc`/`descriptor_xingo6u`/`g7jac060sc`/`TSOPF*` economic/power
+/// networks (power-law), `pdb1HYs`/`rma10`/`mario_002` clustered blocks.
+pub const TABLE1: &[MatrixSpec] = &[
+    MatrixSpec { name: "mario_002", spgemm_id: Some("S1"), cholesky_id: None, rows: 389_000, nnz: 2_100_000, family: Family::BlockRandom },
+    MatrixSpec { name: "m133-b3", spgemm_id: Some("S2"), cholesky_id: None, rows: 200_000, nnz: 800_000, family: Family::RandomUniform },
+    MatrixSpec { name: "filter3D", spgemm_id: Some("S3"), cholesky_id: None, rows: 106_000, nnz: 2_700_000, family: Family::BandedFem },
+    MatrixSpec { name: "cop20K", spgemm_id: Some("S4"), cholesky_id: None, rows: 121_000, nnz: 2_600_000, family: Family::RandomUniform },
+    MatrixSpec { name: "offshore", spgemm_id: Some("S5"), cholesky_id: None, rows: 259_000, nnz: 4_200_000, family: Family::BandedFem },
+    MatrixSpec { name: "poission3Da", spgemm_id: Some("S6"), cholesky_id: None, rows: 13_000, nnz: 352_000, family: Family::RandomUniform },
+    MatrixSpec { name: "cage12", spgemm_id: Some("S7"), cholesky_id: None, rows: 130_000, nnz: 2_000_000, family: Family::RandomUniform },
+    MatrixSpec { name: "2cubes_sphere", spgemm_id: Some("S8"), cholesky_id: None, rows: 101_000, nnz: 1_640_000, family: Family::BandedFem },
+    MatrixSpec { name: "bcsstk13", spgemm_id: Some("S9"), cholesky_id: Some("C2"), rows: 2_000, nnz: 83_000, family: Family::BandedFem },
+    MatrixSpec { name: "bcsstk17", spgemm_id: Some("S10"), cholesky_id: Some("C3"), rows: 10_000, nnz: 428_000, family: Family::BandedFem },
+    MatrixSpec { name: "cant", spgemm_id: Some("S11"), cholesky_id: Some("C4"), rows: 62_000, nnz: 4_000_000, family: Family::BandedFem },
+    MatrixSpec { name: "consph", spgemm_id: Some("S12"), cholesky_id: None, rows: 83_000, nnz: 6_000_000, family: Family::BandedFem },
+    MatrixSpec { name: "mbeacxc", spgemm_id: Some("S13"), cholesky_id: None, rows: 496, nnz: 49_000, family: Family::PowerLaw },
+    MatrixSpec { name: "pdb1HYs", spgemm_id: Some("S14"), cholesky_id: None, rows: 36_000, nnz: 4_300_000, family: Family::BlockRandom },
+    MatrixSpec { name: "rma10", spgemm_id: Some("S15"), cholesky_id: None, rows: 46_000, nnz: 2_300_000, family: Family::BlockRandom },
+    MatrixSpec { name: "descriptor_xingo6u", spgemm_id: Some("S16"), cholesky_id: None, rows: 20_000, nnz: 73_000, family: Family::PowerLaw },
+    MatrixSpec { name: "g7jac060sc", spgemm_id: Some("S17"), cholesky_id: None, rows: 17_000, nnz: 203_000, family: Family::PowerLaw },
+    MatrixSpec { name: "ns3Da", spgemm_id: Some("S18"), cholesky_id: None, rows: 20_000, nnz: 1_600_000, family: Family::RandomUniform },
+    MatrixSpec { name: "TSOPF_RS_b162_c3", spgemm_id: Some("S19"), cholesky_id: None, rows: 15_000, nnz: 610_000, family: Family::PowerLaw },
+    MatrixSpec { name: "cbuckle", spgemm_id: Some("S20"), cholesky_id: Some("C6"), rows: 13_000, nnz: 676_000, family: Family::BandedFem },
+    MatrixSpec { name: "Pre_poisson", spgemm_id: None, cholesky_id: Some("C1"), rows: 12_000, nnz: 715_000, family: Family::BandedFem },
+    MatrixSpec { name: "gyro", spgemm_id: None, cholesky_id: Some("C5"), rows: 17_000, nnz: 1_000_000, family: Family::BandedFem },
+    MatrixSpec { name: "bcsstk18", spgemm_id: None, cholesky_id: Some("C7"), rows: 11_000, nnz: 80_000, family: Family::BandedFem },
+    MatrixSpec { name: "bcsstk36", spgemm_id: None, cholesky_id: Some("C8"), rows: 23_000, nnz: 1_100_000, family: Family::BandedFem },
+];
+
+impl MatrixSpec {
+    /// Density of the original matrix.
+    pub fn density(&self) -> f64 {
+        self.nnz as f64 / (self.rows as f64 * self.rows as f64)
+    }
+
+    /// Scaled dimensions: rows capped at `max_rows`, nnz scaled to keep
+    /// the mean row degree (bundle occupancy ≈ invariant).
+    pub fn scaled(&self, max_rows: usize) -> (usize, usize) {
+        if self.rows <= max_rows {
+            return (self.rows, self.nnz);
+        }
+        let s = max_rows as f64 / self.rows as f64;
+        let nnz = ((self.nnz as f64) * s) as usize;
+        (max_rows, nnz.max(max_rows))
+    }
+
+    /// Instantiate the SpGEMM-side clone (general square matrix).
+    pub fn instantiate(&self, max_rows: usize, seed: u64) -> Csr {
+        let (rows, nnz) = self.scaled(max_rows);
+        gen::generate(self.family, rows, nnz, seed ^ fxhash(self.name))
+    }
+
+    /// Instantiate the Cholesky-side clone (SPD, lower triangle).
+    pub fn instantiate_spd(&self, max_rows: usize, seed: u64) -> Csc {
+        let (rows, nnz) = self.scaled(max_rows);
+        let base = gen::generate(self.family, rows, nnz, seed ^ fxhash(self.name));
+        ops::make_spd(&base).lower_triangle()
+    }
+}
+
+/// The SpGEMM subset (S1..S20), in id order.
+pub fn spgemm_suite() -> Vec<&'static MatrixSpec> {
+    let mut v: Vec<_> = TABLE1.iter().filter(|m| m.spgemm_id.is_some()).collect();
+    v.sort_by_key(|m| {
+        m.spgemm_id.unwrap()[1..].parse::<usize>().expect("S-id")
+    });
+    v
+}
+
+/// The Cholesky subset (C1..C8), in id order.
+pub fn cholesky_suite() -> Vec<&'static MatrixSpec> {
+    let mut v: Vec<_> = TABLE1.iter().filter(|m| m.cholesky_id.is_some()).collect();
+    v.sort_by_key(|m| {
+        m.cholesky_id.unwrap()[1..].parse::<usize>().expect("C-id")
+    });
+    v
+}
+
+/// Stable tiny hash for per-matrix seed derivation.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_sizes_match_paper() {
+        assert_eq!(TABLE1.len(), 24);
+        assert_eq!(spgemm_suite().len(), 20);
+        assert_eq!(cholesky_suite().len(), 8);
+    }
+
+    #[test]
+    fn ids_are_in_order_and_unique() {
+        let s: Vec<_> = spgemm_suite().iter().map(|m| m.spgemm_id.unwrap()).collect();
+        for (i, id) in s.iter().enumerate() {
+            assert_eq!(*id, format!("S{}", i + 1));
+        }
+        let c: Vec<_> = cholesky_suite().iter().map(|m| m.cholesky_id.unwrap()).collect();
+        for (i, id) in c.iter().enumerate() {
+            assert_eq!(*id, format!("C{}", i + 1));
+        }
+    }
+
+    #[test]
+    fn scaling_preserves_mean_degree() {
+        let spec = &TABLE1[0]; // mario_002: 389K rows
+        let (rows, nnz) = spec.scaled(4000);
+        assert_eq!(rows, 4000);
+        let degree_orig = spec.nnz as f64 / spec.rows as f64;
+        let degree_scaled = nnz as f64 / rows as f64;
+        assert!((degree_orig - degree_scaled).abs() / degree_orig < 0.05);
+    }
+
+    #[test]
+    fn small_matrices_not_scaled() {
+        let spec = TABLE1.iter().find(|m| m.name == "mbeacxc").unwrap();
+        assert_eq!(spec.scaled(4000), (496, 49_000));
+    }
+
+    #[test]
+    fn instantiation_deterministic_and_plausible() {
+        let spec = TABLE1.iter().find(|m| m.name == "bcsstk13").unwrap();
+        let a = spec.instantiate(4000, 1);
+        let b = spec.instantiate(4000, 1);
+        assert_eq!(a, b);
+        a.validate().unwrap();
+        assert_eq!(a.nrows, 2000);
+        let ratio = a.nnz() as f64 / 83_000.0;
+        assert!((0.4..2.5).contains(&ratio), "nnz {} vs 83k", a.nnz());
+    }
+
+    #[test]
+    fn spd_clones_factorize() {
+        let spec = TABLE1.iter().find(|m| m.name == "bcsstk18").unwrap();
+        let lower = spec.instantiate_spd(300, 2);
+        let f = crate::kernels::cholesky::cholesky(&lower);
+        assert!(f.is_ok());
+    }
+}

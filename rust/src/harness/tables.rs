@@ -1,0 +1,87 @@
+//! Tables I and II of the paper, rendered from this build's registry and
+//! design points.
+
+use crate::fpga::{DramConfig, FpgaConfig};
+use crate::util::table::{count, Table};
+
+use super::report::RunConfig;
+use super::suite::TABLE1;
+
+/// Table I: the matrix suite with this run's instantiated clones.
+pub fn table1(cfg: &RunConfig) -> Table {
+    let mut t = Table::new(
+        "Table I — SuiteSparse matrices and their synthetic clones",
+        &["name", "SpGEMM", "Cholesky", "rows", "NNZ (density)", "family", "clone rows", "clone NNZ"],
+    );
+    for spec in TABLE1 {
+        let (rows, _) = spec.scaled(cfg.max_rows);
+        let clone = spec.instantiate(cfg.max_rows, cfg.seed);
+        t.row(vec![
+            spec.name.into(),
+            spec.spgemm_id.unwrap_or("-").into(),
+            spec.cholesky_id.unwrap_or("-").into(),
+            count(spec.rows),
+            format!("{}({:.3}%)", count(spec.nnz), spec.density() * 100.0),
+            spec.family.to_string(),
+            count(rows),
+            count(clone.nnz()),
+        ]);
+    }
+    t
+}
+
+/// Table II: platform configuration (paper's, plus this build's stand-ins).
+pub fn table2() -> Table {
+    let mut t = Table::new("Table II — platform configuration", &["platform", "configuration"]);
+    t.row(vec![
+        "CPU (paper)".into(),
+        "Intel Xeon 6130, 16 cores, 2.1 GHz, 32 GB DDR4-2666".into(),
+    ]);
+    t.row(vec![
+        "CPU (this run)".into(),
+        format!("{} hardware threads (measured baselines)", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)),
+    ]);
+    t.row(vec![
+        "FPGA (paper)".into(),
+        "DE5net Arria-10: 1150K LEs, 67 Mbit on-chip, 8 GB DDR3-933, 1518 DSPs".into(),
+    ]);
+    for c in [FpgaConfig::reap32_spgemm(), FpgaConfig::reap64_spgemm(), FpgaConfig::reap128_spgemm()] {
+        t.row(vec![
+            format!("{} (sim)", c.name),
+            format!(
+                "{} pipelines @ {} MHz, bundle {}, DRAM {}/{} GB/s r/w",
+                c.pipelines, c.freq_mhz, c.bundle_size, c.dram.read_gbps, c.dram.write_gbps
+            ),
+        ]);
+    }
+    let single = DramConfig::single_core();
+    let peak = DramConfig::sixteen_core_peak();
+    t.row(vec![
+        "DRAM caps".into(),
+        format!(
+            "single-core {} GB/s; 16-core peak {}/{} GB/s r/w (pmbw-measured in the paper)",
+            single.read_gbps, peak.read_gbps, peak.write_gbps
+        ),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_all_rows() {
+        let t = table1(&RunConfig::quick());
+        assert_eq!(t.len(), 24);
+    }
+
+    #[test]
+    fn table2_mentions_design_points() {
+        let t = table2();
+        let s = t.render();
+        assert!(s.contains("REAP-32"));
+        assert!(s.contains("REAP-128"));
+        assert!(s.contains("147"));
+    }
+}

@@ -1,0 +1,25 @@
+//! Measured CPU baselines — the libraries the paper compares against.
+//!
+//! The evaluation image has no MKL or CHOLMOD, so the same algorithmic
+//! classes are implemented here and *measured* (not simulated), exactly as
+//! the paper measures its CPU baselines:
+//!
+//! * [`spgemm()`] — Gustavson/row-by-row sparse GEMM with a dense/hash hybrid
+//!   accumulator (MKL's `mkl_sparse_sp2m` is in this class), serial.
+//! * [`spgemm_parallel()`] — the multithreaded variant behind the paper's
+//!   CPU-2 … CPU-16 series.
+//! * [`cholesky`] — simplicial up-looking sparse LL^T (CHOLMOD's
+//!   `simplicial, LL^T, no-ordering` configuration, numeric phase).
+//! * [`triangular`] — sparse triangular solves (the solver examples'
+//!   forward/backward substitution).
+
+pub mod cholesky;
+pub mod spgemm;
+pub mod spgemm_parallel;
+pub mod spmv;
+pub mod triangular;
+
+pub use cholesky::{cholesky_numeric, CholeskyFactor};
+pub use spgemm::spgemm;
+pub use spgemm_parallel::spgemm_parallel;
+pub use spmv::{spmv, spmv_parallel};

@@ -1,0 +1,159 @@
+//! Multithreaded row-by-row SpGEMM — the paper's CPU-2 … CPU-16 series.
+//!
+//! Row-range parallelism over `std::thread` with per-thread accumulators
+//! (the same decomposition MKL uses under OpenMP). Rows are distributed in
+//! contiguous blocks balanced by *flop count*, not row count — power-law
+//! suites make plain row-splitting badly skewed.
+
+use crate::sparse::{Csr, Idx, Val};
+
+/// C = A × B using `nthreads` worker threads.
+pub fn spgemm_parallel(a: &Csr, b: &Csr, nthreads: usize) -> Csr {
+    assert_eq!(a.ncols, b.nrows, "inner dimensions disagree");
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || a.nrows < 2 * nthreads {
+        return super::spgemm::spgemm(a, b);
+    }
+
+    // Flop-balanced contiguous row ranges.
+    let bounds = flop_balanced_ranges(a, b, nthreads);
+
+    // Each worker computes its row band into its own arrays.
+    struct Band {
+        row_ptr: Vec<usize>, // local, rebased later
+        cols: Vec<Idx>,
+        vals: Vec<Val>,
+    }
+
+    let bands: Vec<Band> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(bounds.len() - 1);
+        for w in 0..bounds.len() - 1 {
+            let (lo, hi) = (bounds[w], bounds[w + 1]);
+            let a_ref = &*a;
+            let b_ref = &*b;
+            handles.push(scope.spawn(move || {
+                let mut row_ptr = vec![0usize; hi - lo + 1];
+                let mut cols: Vec<Idx> = Vec::new();
+                let mut vals: Vec<Val> = Vec::new();
+                let mut acc: Vec<Val> = vec![0.0; b_ref.ncols];
+                let mut stamp: Vec<u32> = vec![u32::MAX; b_ref.ncols];
+                let mut touched: Vec<Idx> = Vec::new();
+                for (li, i) in (lo..hi).enumerate() {
+                    let tick = li as u32;
+                    touched.clear();
+                    for (&ca, &va) in a_ref.row_cols(i).iter().zip(a_ref.row_vals(i)) {
+                        let r = ca as usize;
+                        for (&cb, &vb) in b_ref.row_cols(r).iter().zip(b_ref.row_vals(r)) {
+                            let j = cb as usize;
+                            if stamp[j] != tick {
+                                stamp[j] = tick;
+                                acc[j] = va * vb;
+                                touched.push(cb);
+                            } else {
+                                acc[j] += va * vb;
+                            }
+                        }
+                    }
+                    touched.sort_unstable();
+                    for &c in &touched {
+                        cols.push(c);
+                        vals.push(acc[c as usize]);
+                    }
+                    row_ptr[li + 1] = cols.len();
+                }
+                Band { row_ptr, cols, vals }
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("spgemm worker panicked")).collect()
+    });
+
+    // Stitch bands together.
+    let mut row_ptr = vec![0usize; a.nrows + 1];
+    let total: usize = bands.iter().map(|b| b.cols.len()).sum();
+    let mut cols = Vec::with_capacity(total);
+    let mut vals = Vec::with_capacity(total);
+    for (w, band) in bands.into_iter().enumerate() {
+        let lo = bounds[w];
+        let base = cols.len();
+        for (li, p) in band.row_ptr.iter().enumerate().skip(1) {
+            row_ptr[lo + li] = base + p;
+        }
+        cols.extend_from_slice(&band.cols);
+        vals.extend_from_slice(&band.vals);
+    }
+    Csr { nrows: a.nrows, ncols: b.ncols, row_ptr, cols, vals }
+}
+
+/// Split `0..a.nrows` into ≤ `nthreads` contiguous ranges with roughly
+/// equal multiply counts. Returns range boundaries (len = ranges + 1).
+fn flop_balanced_ranges(a: &Csr, b: &Csr, nthreads: usize) -> Vec<usize> {
+    let mut row_flops = vec![0usize; a.nrows];
+    for i in 0..a.nrows {
+        row_flops[i] = a.row_cols(i).iter().map(|&c| b.row_nnz(c as usize)).sum();
+    }
+    let total: usize = row_flops.iter().sum();
+    let per = total.div_ceil(nthreads).max(1);
+    let mut bounds = vec![0usize];
+    let mut acc = 0usize;
+    for (i, f) in row_flops.iter().enumerate() {
+        acc += f;
+        if acc >= per && bounds.len() < nthreads {
+            bounds.push(i + 1);
+            acc = 0;
+        }
+    }
+    bounds.push(a.nrows);
+    bounds.dedup();
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::spgemm::spgemm;
+    use crate::sparse::gen;
+
+    #[test]
+    fn matches_serial_exactly() {
+        for threads in [2usize, 3, 4, 8] {
+            for seed in 0..3u64 {
+                let a = gen::power_law(120, 2500, seed);
+                let b = gen::random_uniform(120, 120, 2000, seed + 50);
+                let serial = spgemm(&a, &b);
+                let par = spgemm_parallel(&a, &b, threads);
+                assert_eq!(par, serial, "threads={threads} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_delegates() {
+        let a = gen::random_uniform(20, 20, 80, 1);
+        assert_eq!(spgemm_parallel(&a, &a, 1), spgemm(&a, &a));
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let a = gen::random_uniform(4, 4, 8, 2);
+        assert_eq!(spgemm_parallel(&a, &a, 64), spgemm(&a, &a));
+    }
+
+    #[test]
+    fn flop_ranges_cover_and_ascend() {
+        let a = gen::power_law(200, 4000, 3);
+        let b = gen::random_uniform(200, 200, 3000, 4);
+        let bounds = flop_balanced_ranges(&a, &b, 8);
+        assert_eq!(*bounds.first().unwrap(), 0);
+        assert_eq!(*bounds.last().unwrap(), 200);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        assert!(bounds.len() <= 9);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let z = Csr::new(64, 64);
+        let c = spgemm_parallel(&z, &z, 4);
+        assert_eq!(c.nnz(), 0);
+        c.validate().unwrap();
+    }
+}

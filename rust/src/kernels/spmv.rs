@@ -1,0 +1,97 @@
+//! CSR SpMV baselines — the measured CPU side of the SpMV extension
+//! (the paper's §II future-work direction, built through the same REAP
+//! flow as SpGEMM/Cholesky).
+
+use crate::sparse::{Csr, Val};
+
+/// y = A x, serial CSR row dot products (f64 accumulation).
+pub fn spmv(a: &Csr, x: &[Val]) -> Vec<Val> {
+    assert_eq!(x.len(), a.ncols, "x length mismatch");
+    let mut y = vec![0 as Val; a.nrows];
+    for i in 0..a.nrows {
+        let mut acc = 0f64;
+        for (&c, &v) in a.row_cols(i).iter().zip(a.row_vals(i)) {
+            acc += (v as f64) * (x[c as usize] as f64);
+        }
+        y[i] = acc as Val;
+    }
+    y
+}
+
+/// y = A x with row-band threading (the CPU-N series).
+pub fn spmv_parallel(a: &Csr, x: &[Val], nthreads: usize) -> Vec<Val> {
+    assert_eq!(x.len(), a.ncols);
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || a.nrows < 2 * nthreads {
+        return spmv(a, x);
+    }
+    let rows_per = a.nrows.div_ceil(nthreads);
+    let mut y = vec![0 as Val; a.nrows];
+    std::thread::scope(|scope| {
+        for (band, out) in y.chunks_mut(rows_per).enumerate() {
+            let a = &*a;
+            let x = &*x;
+            scope.spawn(move || {
+                let lo = band * rows_per;
+                for (k, yo) in out.iter_mut().enumerate() {
+                    let i = lo + k;
+                    let mut acc = 0f64;
+                    for (&c, &v) in a.row_cols(i).iter().zip(a.row_vals(i)) {
+                        acc += (v as f64) * (x[c as usize] as f64);
+                    }
+                    *yo = acc as Val;
+                }
+            });
+        }
+    });
+    y
+}
+
+/// Flop count (2 per stored element).
+pub fn spmv_flops(a: &Csr) -> usize {
+    2 * a.nnz()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Dense};
+
+    #[test]
+    fn matches_dense_matvec() {
+        for seed in 0..4u64 {
+            let a = gen::random_uniform(40, 30, 300, seed);
+            let x: Vec<f32> = (0..30).map(|i| (i as f32 * 0.3).sin()).collect();
+            let y = spmv(&a, &x);
+            let want = Dense::from_csr(&a).matvec(&x);
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let a = gen::power_law(200, 3000, 1);
+        let x: Vec<f32> = (0..200).map(|i| 1.0 / (i + 1) as f32).collect();
+        let serial = spmv(&a, &x);
+        for t in [2usize, 3, 8] {
+            assert_eq!(spmv_parallel(&a, &x, t), serial, "threads {t}");
+        }
+    }
+
+    #[test]
+    fn empty_and_identity() {
+        let z = Csr::new(5, 5);
+        assert_eq!(spmv(&z, &[1.0; 5]), vec![0.0; 5]);
+        let i = Dense::eye(4).to_csr();
+        let x = vec![3.0, -1.0, 0.5, 2.0];
+        assert_eq!(spmv(&i, &x), x);
+    }
+
+    #[test]
+    fn flops_count() {
+        let a = gen::random_uniform(10, 10, 37, 2);
+        assert_eq!(spmv_flops(&a), 74);
+    }
+}

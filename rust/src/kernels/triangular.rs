@@ -1,0 +1,99 @@
+//! Sparse triangular solves — forward/backward substitution with the
+//! Cholesky factor (the `cholesky_solver` example's back end; CHOLMOD's
+//! `cholmod_solve` counterpart).
+
+use crate::sparse::{Csc, Val};
+
+/// Solve `L x = b` (forward substitution), L lower-triangular CSC with
+/// diagonal-first columns — the layout produced by the factorization.
+pub fn solve_lower(l: &Csc, b: &[Val]) -> Vec<Val> {
+    assert_eq!(l.nrows, l.ncols);
+    assert_eq!(b.len(), l.nrows);
+    let mut x: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+    for j in 0..l.ncols {
+        let rows = l.col_rows(j);
+        let vals = l.col_vals(j);
+        debug_assert_eq!(rows[0] as usize, j, "diagonal must lead column {j}");
+        let xj = x[j] / vals[0] as f64;
+        x[j] = xj;
+        for (r, v) in rows.iter().zip(vals).skip(1) {
+            x[*r as usize] -= (*v as f64) * xj;
+        }
+    }
+    x.into_iter().map(|v| v as Val).collect()
+}
+
+/// Solve `L^T x = b` (backward substitution) without materializing L^T:
+/// column j of L is row j of L^T.
+pub fn solve_lower_transpose(l: &Csc, b: &[Val]) -> Vec<Val> {
+    assert_eq!(l.nrows, l.ncols);
+    assert_eq!(b.len(), l.nrows);
+    let mut x: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+    for j in (0..l.ncols).rev() {
+        let rows = l.col_rows(j);
+        let vals = l.col_vals(j);
+        let mut acc = x[j];
+        for (r, v) in rows.iter().zip(vals).skip(1) {
+            acc -= (*v as f64) * x[*r as usize];
+        }
+        x[j] = acc / vals[0] as f64;
+    }
+    x.into_iter().map(|v| v as Val).collect()
+}
+
+/// Solve `A x = b` given the Cholesky factor L of A (two triangular
+/// solves).
+pub fn solve_spd(l: &Csc, b: &[Val]) -> Vec<Val> {
+    let y = solve_lower(l, b);
+    solve_lower_transpose(l, &y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::cholesky::cholesky;
+    use crate::sparse::{gen, Dense};
+
+    #[test]
+    fn forward_solve_known() {
+        // L = [[2,0],[1,3]]; b = [4, 11] => x = [2, 3]
+        let l = Dense::from_rows(2, 2, &[2.0, 0.0, 1.0, 3.0]).to_csr().to_csc();
+        let x = solve_lower(&l, &[4.0, 11.0]);
+        assert!((x[0] - 2.0).abs() < 1e-6 && (x[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn backward_solve_known() {
+        // L^T = [[2,1],[0,3]]; b = [7, 9] => x = [2, 3]
+        let l = Dense::from_rows(2, 2, &[2.0, 0.0, 1.0, 3.0]).to_csr().to_csc();
+        let x = solve_lower_transpose(&l, &[7.0, 9.0]);
+        assert!((x[0] - 2.0).abs() < 1e-6 && (x[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spd_solve_recovers_rhs() {
+        for seed in 0..4u64 {
+            let spd = gen::spd(gen::Family::BandedFem, 30, 180, seed);
+            let lower = spd.lower_triangle();
+            let f = cholesky(&lower).unwrap();
+            // manufacture solution, compute b = A x
+            let n = spd.nrows;
+            let x_true: Vec<f32> = (0..n).map(|i| ((i % 7) as f32) - 3.0).collect();
+            let b = Dense::from_csr(&spd.to_csr()).matvec(&x_true);
+            let x = solve_spd(&f.l, &b);
+            let err = x
+                .iter()
+                .zip(&x_true)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(err < 1e-2, "seed {seed}: max err {err}");
+        }
+    }
+
+    #[test]
+    fn identity_factor_is_identity_solve() {
+        let l = Dense::eye(5).to_csr().to_csc();
+        let b = vec![1.0, -2.0, 3.0, 0.0, 5.0];
+        assert_eq!(solve_spd(&l, &b), b);
+    }
+}

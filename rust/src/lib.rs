@@ -1,0 +1,35 @@
+//! # REAP — synergistic CPU–FPGA acceleration of sparse linear algebra
+//!
+//! Reproduction of Soltaniyeh, Martin, Nagarakatte, *"Synergistic CPU-FPGA
+//! Acceleration of Sparse Linear Algebra"* (Rutgers DCS-TR-750, 2020).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** plays the role of REAP's CPU: it converts standard
+//!   sparse formats into the RIR intermediate representation
+//!   ([`rir`]), performs the Cholesky symbolic analysis ([`symbolic`]),
+//!   schedules bundles onto pipelines, and hosts the cycle-level model of
+//!   the FPGA ([`fpga`]) plus the measured CPU baselines ([`kernels`]).
+//! * **L2/L1 (build-time Python)** express the FPGA datapath arithmetic as a
+//!   JAX graph whose hot spot is a Pallas kernel; `make artifacts` lowers it
+//!   once to HLO text under `artifacts/`.
+//! * **[`runtime`]** loads those artifacts through the PJRT C API (the `xla`
+//!   crate) and executes them from the coordinator's request path — Python
+//!   never runs at request time.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod fpga;
+pub mod harness;
+pub mod kernels;
+pub mod rir;
+pub mod runtime;
+pub mod sparse;
+pub mod symbolic;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

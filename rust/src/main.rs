@@ -1,0 +1,452 @@
+//! `reap` — the Layer-3 coordinator binary.
+//!
+//! Subcommands:
+//!
+//! * `spgemm`   — run REAP SpGEMM on a synthetic or Matrix-Market matrix.
+//! * `cholesky` — run REAP sparse Cholesky likewise.
+//! * `bench`    — regenerate the paper's tables/figures
+//!                (`table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls all`).
+//! * `gen-matrix` — write a synthetic matrix as Matrix-Market.
+//! * `info`     — platform, artifact and design-point status.
+//!
+//! Run `reap <cmd> --help` for per-command options.
+
+use anyhow::{bail, Context, Result};
+
+use reap::coordinator::{verify, ReapCholesky, ReapSpgemm, ReapSpmv};
+use reap::fpga::FpgaConfig;
+use reap::harness::{self, RunConfig};
+use reap::runtime::{Manifest, XlaRuntime};
+use reap::sparse::gen::Family;
+use reap::sparse::{gen, mm, ops, Csr};
+use reap::util::cli::{usage, Args, OptSpec};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print_help();
+        return;
+    }
+    let cmd = argv.remove(0);
+    let result = match cmd.as_str() {
+        "spgemm" => cmd_spgemm(argv),
+        "spmv" => cmd_spmv(argv),
+        "cholesky" => cmd_cholesky(argv),
+        "bench" => cmd_bench(argv),
+        "gen-matrix" => cmd_gen_matrix(argv),
+        "info" => cmd_info(argv),
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command `{other}`"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "reap — synergistic CPU-FPGA sparse linear algebra (REAP reproduction)\n\n\
+         usage: reap <command> [options]\n\n\
+         commands:\n  \
+           spgemm      run REAP SpGEMM (C = A*B or A^2)\n  \
+           spmv        run REAP SpMV (y = A x, extension kernel)\n  \
+           cholesky    run REAP sparse Cholesky factorization\n  \
+           bench       regenerate paper tables/figures\n  \
+           gen-matrix  write a synthetic matrix (.mtx)\n  \
+           info        platform / artifact status\n"
+    );
+}
+
+fn matrix_opts() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "n", takes_value: true, help: "dimension (synthetic)" },
+        OptSpec { name: "nnz", takes_value: true, help: "nonzeros (synthetic)" },
+        OptSpec { name: "family", takes_value: true, help: "random|fem|powerlaw|block" },
+        OptSpec { name: "seed", takes_value: true, help: "PRNG seed" },
+        OptSpec { name: "mtx", takes_value: true, help: "MatrixMarket file instead" },
+    ]
+}
+
+fn parse_family(s: &str) -> Result<Family> {
+    Ok(match s {
+        "random" => Family::RandomUniform,
+        "fem" => Family::BandedFem,
+        "powerlaw" => Family::PowerLaw,
+        "block" => Family::BlockRandom,
+        other => bail!("unknown family `{other}` (random|fem|powerlaw|block)"),
+    })
+}
+
+fn load_matrix(args: &Args) -> Result<Csr> {
+    if let Some(path) = args.get("mtx") {
+        return mm::read_csr(std::path::Path::new(path));
+    }
+    let n = args.get_parsed::<usize>("n", 1000)?;
+    let nnz = args.get_parsed::<usize>("nnz", n * 8)?;
+    let family = parse_family(args.get("family").unwrap_or("random"))?;
+    let seed = args.get_parsed::<u64>("seed", 42)?;
+    Ok(gen::generate(family, n, nnz, seed))
+}
+
+fn variant_spgemm(name: &str) -> Result<FpgaConfig> {
+    Ok(match name {
+        "reap32" => FpgaConfig::reap32_spgemm(),
+        "reap64" => FpgaConfig::reap64_spgemm(),
+        "reap128" => FpgaConfig::reap128_spgemm(),
+        other => bail!("unknown variant `{other}` (reap32|reap64|reap128)"),
+    })
+}
+
+fn cmd_spgemm(argv: Vec<String>) -> Result<()> {
+    let mut specs = matrix_opts();
+    specs.extend([
+        OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
+        OptSpec { name: "xla", takes_value: false, help: "numerics via AOT XLA artifacts" },
+        OptSpec { name: "verify", takes_value: false, help: "check vs CPU baseline" },
+        OptSpec { name: "help", takes_value: false, help: "show usage" },
+    ]);
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("spgemm", "run REAP SpGEMM (C = A^2)", &specs));
+        return Ok(());
+    }
+    let a = load_matrix(&args)?;
+    let cfg = variant_spgemm(args.get("variant").unwrap_or("reap32"))?;
+    println!(
+        "matrix: {}x{}, nnz {}, density {:.5}%",
+        a.nrows,
+        a.ncols,
+        a.nnz(),
+        a.density() * 100.0
+    );
+
+    let rt;
+    let coord = if args.flag("xla") {
+        rt = XlaRuntime::load_default().context("loading artifacts (run `make artifacts`)")?;
+        println!("numerics: XLA/PJRT ({})", rt.platform());
+        ReapSpgemm::with_runtime(cfg.clone(), &rt)
+    } else {
+        ReapSpgemm::new(cfg.clone())
+    };
+    let rep = coord.run(&a, &a)?;
+    println!(
+        "{}: cpu preprocess {:.3} ms | fpga(sim) {:.3} ms ({} cycles, {} waves) | total {:.3} ms",
+        cfg.name,
+        rep.cpu_preprocess_s * 1e3,
+        rep.fpga_s * 1e3,
+        rep.fpga_sim.cycles,
+        rep.fpga_sim.waves,
+        rep.total_s * 1e3,
+    );
+    println!(
+        "  result nnz {} | {:.2} sim-GFLOP/s | pipeline util {:.1}% | dram-bound {:.1}%",
+        rep.c.nnz(),
+        rep.fpga_sim.gflops(&cfg),
+        rep.fpga_sim.pipeline_utilization() * 100.0,
+        rep.fpga_sim.dram_bound_fraction() * 100.0,
+    );
+    if args.flag("verify") {
+        let reference = reap::kernels::spgemm(&a, &a);
+        let v = verify::verify_csr(&rep.c, &reference);
+        println!("  verify vs CPU baseline: rel err {:.2e} -> {}", v.relative(), if v.ok(1e-5) { "OK" } else { "MISMATCH" });
+        if !v.ok(1e-5) {
+            bail!("verification failed");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_spmv(argv: Vec<String>) -> Result<()> {
+    let mut specs = matrix_opts();
+    specs.extend([
+        OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
+        OptSpec { name: "xla", takes_value: false, help: "numerics via AOT XLA artifacts" },
+        OptSpec { name: "verify", takes_value: false, help: "check vs CPU baseline" },
+        OptSpec { name: "help", takes_value: false, help: "show usage" },
+    ]);
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("spmv", "run REAP SpMV (y = A x, extension)", &specs));
+        return Ok(());
+    }
+    let a = load_matrix(&args)?;
+    let x: Vec<f32> = (0..a.ncols).map(|i| ((i % 17) as f32 - 8.0) * 0.125).collect();
+    let cfg = variant_spgemm(args.get("variant").unwrap_or("reap32"))?;
+    println!(
+        "matrix: {}x{}, nnz {}, density {:.5}%",
+        a.nrows, a.ncols, a.nnz(), a.density() * 100.0
+    );
+    let rt;
+    let coord = if args.flag("xla") {
+        rt = XlaRuntime::load_default().context("loading artifacts (run `make artifacts`)")?;
+        println!("numerics: XLA/PJRT ({})", rt.platform());
+        ReapSpmv::with_runtime(cfg.clone(), &rt)
+    } else {
+        ReapSpmv::new(cfg.clone())
+    };
+    let rep = coord.run(&a, &x)?;
+    println!(
+        "{}: cpu preprocess {:.3} ms | fpga(sim) {:.3} ms ({} cycles) | total {:.3} ms | {:.2} sim-GFLOP/s",
+        cfg.name,
+        rep.cpu_preprocess_s * 1e3,
+        rep.fpga_s * 1e3,
+        rep.fpga_sim.cycles,
+        rep.total_s * 1e3,
+        rep.fpga_sim.gflops(&cfg),
+    );
+    if args.flag("verify") {
+        let want = reap::kernels::spmv(&a, &x);
+        let err = rep.y.iter().zip(&want).map(|(g, w)| (g - w).abs()).fold(0f32, f32::max);
+        println!("  verify vs CPU baseline: max err {err:.2e} -> {}", if err < 1e-3 { "OK" } else { "MISMATCH" });
+        if err >= 1e-3 {
+            bail!("verification failed");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cholesky(argv: Vec<String>) -> Result<()> {
+    let mut specs = matrix_opts();
+    specs.extend([
+        OptSpec { name: "variant", takes_value: true, help: "reap32|reap64" },
+        OptSpec { name: "xla", takes_value: false, help: "numerics via AOT XLA artifacts" },
+        OptSpec { name: "verify", takes_value: false, help: "check LL^T ~= A" },
+        OptSpec { name: "help", takes_value: false, help: "show usage" },
+    ]);
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("cholesky", "run REAP sparse Cholesky (SPD-ified input)", &specs));
+        return Ok(());
+    }
+    let base = load_matrix(&args)?;
+    let spd = ops::make_spd(&base);
+    let lower = spd.lower_triangle();
+    let cfg = match args.get("variant").unwrap_or("reap32") {
+        "reap32" => FpgaConfig::reap32_cholesky(),
+        "reap64" => FpgaConfig::reap64_cholesky(),
+        other => bail!("unknown variant `{other}` (reap32|reap64)"),
+    };
+    println!(
+        "SPD matrix: {}x{}, lower nnz {}",
+        spd.nrows,
+        spd.ncols,
+        lower.nnz()
+    );
+
+    let rt;
+    let coord = if args.flag("xla") {
+        rt = XlaRuntime::load_default().context("loading artifacts (run `make artifacts`)")?;
+        println!("numerics: XLA/PJRT ({})", rt.platform());
+        ReapCholesky::with_runtime(cfg.clone(), &rt)
+    } else {
+        ReapCholesky::new(cfg.clone())
+    };
+    let rep = coord.run(&lower)?;
+    println!(
+        "{}: cpu symbolic {:.3} ms | fpga(sim) {:.3} ms ({} cycles) | total {:.3} ms",
+        cfg.name,
+        rep.cpu_symbolic_s * 1e3,
+        rep.fpga_s * 1e3,
+        rep.fpga_sim.cycles,
+        rep.total_s * 1e3,
+    );
+    println!(
+        "  nnz(L) {} (fill-in {}) | pipeline util {:.1}%",
+        rep.factor.l.nnz(),
+        rep.factor.pattern.fill_in(&lower),
+        rep.fpga_sim.pipeline_utilization() * 100.0,
+    );
+    if args.flag("verify") {
+        let reference = reap::kernels::cholesky::cholesky(&lower)?;
+        let v = verify::verify_csc(&rep.factor.l, &reference.l);
+        println!("  verify vs CPU baseline: rel err {:.2e} -> {}", v.relative(), if v.ok(1e-4) { "OK" } else { "MISMATCH" });
+        if !v.ok(1e-4) {
+            bail!("verification failed");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(argv: Vec<String>) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "max-rows", takes_value: true, help: "matrix scale cap (default 2000)" },
+        OptSpec { name: "full", takes_value: false, help: "paper-scale matrices (slow)" },
+        OptSpec { name: "budget", takes_value: true, help: "seconds per measurement (default 0.2)" },
+        OptSpec { name: "seed", takes_value: true, help: "suite seed" },
+        OptSpec { name: "no-csv", takes_value: false, help: "skip results/*.csv dumps" },
+        OptSpec { name: "help", takes_value: false, help: "show usage" },
+    ];
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") || args.positionals().is_empty() {
+        print!(
+            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls all\n",
+            usage("bench <target>", "regenerate a paper table/figure", &specs)
+        );
+        return Ok(());
+    }
+    let mut cfg = RunConfig {
+        max_rows: args.get_parsed("max-rows", 2000)?,
+        seed: args.get_parsed("seed", 0x5EA9)?,
+        budget_s: args.get_parsed("budget", 0.2)?,
+        ..Default::default()
+    };
+    if args.flag("full") {
+        cfg.max_rows = usize::MAX;
+    }
+    if args.flag("no-csv") {
+        cfg.csv_dir = None;
+    }
+    for target in args.positionals() {
+        run_bench_target(target, &cfg)?;
+    }
+    Ok(())
+}
+
+fn run_bench_target(target: &str, cfg: &RunConfig) -> Result<()> {
+    match target {
+        "table1" => {
+            let t = harness::tables::table1(cfg);
+            print!("{}", t.render());
+            cfg.dump_csv("table1", &t)?;
+        }
+        "table2" => {
+            let t = harness::tables::table2();
+            print!("{}", t.render());
+            cfg.dump_csv("table2", &t)?;
+        }
+        "fig6" => {
+            let (rows, t) = harness::fig6::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "paper: REAP-32 geomean 3.2x, beats CPU-1 everywhere -> headline {}",
+                if harness::fig6::headline_holds(&rows) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("fig6", &t)?;
+        }
+        "fig7" => {
+            let (_, t) = harness::fig7::run(cfg);
+            print!("{}", t.render());
+            cfg.dump_csv("fig7", &t)?;
+        }
+        "fig8" => {
+            let (series, left, right) = harness::fig8::run(cfg);
+            print!("{}", left.render());
+            print!("{}", right.render());
+            println!(
+                "paper: REAP per-FPU GFLOPS above CPU at matched units -> headline {}",
+                if harness::fig8::headline_holds(&series) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("fig8_left", &left)?;
+            cfg.dump_csv("fig8_right", &right)?;
+        }
+        "fig9" => {
+            let (points, t) = harness::fig9::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "paper: REAP favors sparse matrices -> headline {}",
+                if harness::fig9::headline_holds(&points) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("fig9", &t)?;
+        }
+        "fig10" => {
+            let (rows, t) = harness::fig10::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "paper: REAP-32 GM 1.18x, REAP-64 GM 1.85x (all wins) -> headline {}",
+                if harness::fig10::headline_holds(&rows) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("fig10", &t)?;
+        }
+        "fig11" => {
+            let (rows, t) = harness::fig11::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "paper: FPGA dominates the Cholesky breakdown -> headline {}",
+                if harness::fig11::headline_holds(&rows) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("fig11", &t)?;
+        }
+        "hls" => {
+            let (rep, t) = harness::hls_cmp::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "paper: +16% SpGEMM / +35% Cholesky geomean -> headline {}",
+                if harness::hls_cmp::headline_holds(&rep) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("hls", &t)?;
+        }
+        "all" => {
+            for t in ["table1", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "hls"] {
+                run_bench_target(t, cfg)?;
+                println!();
+            }
+        }
+        other => bail!("unknown bench target `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_gen_matrix(argv: Vec<String>) -> Result<()> {
+    let mut specs = matrix_opts();
+    specs.push(OptSpec { name: "out", takes_value: true, help: "output .mtx path (required)" });
+    specs.push(OptSpec { name: "spd", takes_value: false, help: "SPD-ify the pattern" });
+    specs.push(OptSpec { name: "help", takes_value: false, help: "show usage" });
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("gen-matrix", "write a synthetic matrix", &specs));
+        return Ok(());
+    }
+    let out = args.get("out").context("--out is required")?;
+    let mut m = load_matrix(&args)?;
+    if args.flag("spd") {
+        m = ops::make_spd(&m).to_csr();
+    }
+    mm::write_csr(std::path::Path::new(out), &m)?;
+    println!("wrote {out}: {}x{}, nnz {}", m.nrows, m.ncols, m.nnz());
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> Result<()> {
+    let specs = vec![OptSpec { name: "help", takes_value: false, help: "show usage" }];
+    let _ = Args::parse(argv, &specs)?;
+    println!("reap {} — REAP reproduction (DCS-TR-750)", env!("CARGO_PKG_VERSION"));
+    println!(
+        "host threads: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} ({} entries)", dir.display(), m.entries.len());
+            for (name, e) in &m.entries {
+                let shapes: Vec<String> = e
+                    .args
+                    .iter()
+                    .map(|(s, d)| format!("{d}{s:?}"))
+                    .collect();
+                println!("  {name}: {}", shapes.join(", "));
+            }
+            match XlaRuntime::load(&dir) {
+                Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+                Err(e) => println!("PJRT unavailable: {e:#}"),
+            }
+        }
+        Err(e) => println!("artifacts missing: {e:#}"),
+    }
+    for c in [
+        FpgaConfig::reap32_spgemm(),
+        FpgaConfig::reap64_spgemm(),
+        FpgaConfig::reap128_spgemm(),
+        FpgaConfig::reap32_cholesky(),
+        FpgaConfig::reap64_cholesky(),
+    ] {
+        println!(
+            "design {}: {} pipelines @ {} MHz, {} mult/PE, DRAM {}/{} GB/s",
+            c.name, c.pipelines, c.freq_mhz, c.dot_multipliers, c.dram.read_gbps, c.dram.write_gbps
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! The RIR bundle type (paper Fig 2).
+
+use crate::sparse::{Idx, Val};
+
+/// The paper's design point: "In our SpGEMM design, we use an RIR bundle
+/// size of 32" (§III-A, also the CAM size).
+pub const DEFAULT_BUNDLE_SIZE: usize = 32;
+
+/// Bundle metadata flags (carried in the metadata word of the DRAM layout).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BundleFlags(pub u8);
+
+impl BundleFlags {
+    /// Last bundle of a (possibly split) source row/column: "the RIR bundle
+    /// also includes additional metadata to indicate the end of a row".
+    pub const END_OF_ROW: u8 = 0b0000_0001;
+    /// Metadata-only bundle: pure scheduling information, no matrix data
+    /// ("RIR bundles can sometimes carry purely the scheduling
+    /// information").
+    pub const METADATA_ONLY: u8 = 0b0000_0010;
+    /// Final bundle of the whole stream (lets the FPGA input controller
+    /// terminate without a separate length channel).
+    pub const END_OF_STREAM: u8 = 0b0000_0100;
+
+    pub fn end_of_row(self) -> bool {
+        self.0 & Self::END_OF_ROW != 0
+    }
+    pub fn metadata_only(self) -> bool {
+        self.0 & Self::METADATA_ONLY != 0
+    }
+    pub fn end_of_stream(self) -> bool {
+        self.0 & Self::END_OF_STREAM != 0
+    }
+    pub fn with(self, bit: u8) -> Self {
+        BundleFlags(self.0 | bit)
+    }
+}
+
+/// Scheduling triple for Cholesky metadata bundles (paper Fig 4(c)): row
+/// index `r` of a nonzero in column k of L, and the start/end addresses of
+/// row `r` of L in the FPGA's memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RlTriple {
+    pub row: Idx,
+    pub start: u32,
+    pub end: u32,
+}
+
+/// Bundle payload: matrix data or pure scheduling metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// `(distinct feature, value)` pairs — column indices for CSR-derived
+    /// bundles, row indices for CSC-derived bundles.
+    Data { distinct: Vec<Idx>, values: Vec<Val> },
+    /// Metadata-only scheduling payload (Cholesky `RL` bundles).
+    Schedule { triples: Vec<RlTriple> },
+}
+
+/// One RIR bundle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bundle {
+    /// The shared feature all elements of the bundle have in common.
+    pub shared: Idx,
+    pub flags: BundleFlags,
+    pub payload: Payload,
+}
+
+impl Bundle {
+    /// Data bundle from parallel slices.
+    pub fn data(shared: Idx, distinct: Vec<Idx>, values: Vec<Val>, flags: BundleFlags) -> Self {
+        debug_assert_eq!(distinct.len(), values.len());
+        Bundle { shared, flags, payload: Payload::Data { distinct, values } }
+    }
+
+    /// Metadata-only scheduling bundle.
+    pub fn schedule(shared: Idx, triples: Vec<RlTriple>, flags: BundleFlags) -> Self {
+        Bundle {
+            shared,
+            flags: flags.with(BundleFlags::METADATA_ONLY),
+            payload: Payload::Schedule { triples },
+        }
+    }
+
+    /// Number of distinct elements carried.
+    pub fn len(&self) -> usize {
+        match &self.payload {
+            Payload::Data { distinct, .. } => distinct.len(),
+            Payload::Schedule { triples } => triples.len(),
+        }
+    }
+
+    /// True if the bundle carries nothing (legal: an empty row still emits
+    /// one end-of-row bundle so the FPGA's row accounting stays in sync).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Data accessors (panic on metadata bundles — programming error).
+    pub fn distinct(&self) -> &[Idx] {
+        match &self.payload {
+            Payload::Data { distinct, .. } => distinct,
+            Payload::Schedule { .. } => panic!("distinct() on a metadata-only bundle"),
+        }
+    }
+
+    /// Value slice of a data bundle.
+    pub fn values(&self) -> &[Val] {
+        match &self.payload {
+            Payload::Data { values, .. } => values,
+            Payload::Schedule { .. } => panic!("values() on a metadata-only bundle"),
+        }
+    }
+
+    /// Triples of a metadata bundle.
+    pub fn triples(&self) -> &[RlTriple] {
+        match &self.payload {
+            Payload::Schedule { triples } => triples,
+            Payload::Data { .. } => panic!("triples() on a data bundle"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_compose() {
+        let f = BundleFlags::default()
+            .with(BundleFlags::END_OF_ROW)
+            .with(BundleFlags::END_OF_STREAM);
+        assert!(f.end_of_row());
+        assert!(f.end_of_stream());
+        assert!(!f.metadata_only());
+    }
+
+    #[test]
+    fn data_bundle_accessors() {
+        let b = Bundle::data(3, vec![1, 5], vec![0.5, -2.0], BundleFlags::default());
+        assert_eq!(b.shared, 3);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.distinct(), &[1, 5]);
+        assert_eq!(b.values(), &[0.5, -2.0]);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn schedule_bundle_sets_flag() {
+        let b = Bundle::schedule(
+            2,
+            vec![RlTriple { row: 4, start: 10, end: 14 }],
+            BundleFlags::default(),
+        );
+        assert!(b.flags.metadata_only());
+        assert_eq!(b.triples().len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "metadata-only")]
+    fn wrong_accessor_panics() {
+        let b = Bundle::schedule(0, vec![], BundleFlags::default());
+        let _ = b.distinct();
+    }
+}

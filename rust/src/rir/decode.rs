@@ -1,0 +1,148 @@
+//! The paper's `decompress` routine: RIR bundles → CSR.
+//!
+//! "To support any sparse format, one has to provide compress and
+//! decompress routines" (§II). Decoding validates the stream invariants the
+//! FPGA input controller relies on: bundles of one row are contiguous, each
+//! row chain ends with exactly one `END_OF_ROW`, metadata-only bundles
+//! carry no matrix data.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::sparse::{Csr, Idx, Val};
+
+use super::bundle::{Bundle, Payload};
+
+/// Reassemble a CSR matrix from a bundle stream produced by
+/// [`super::encode::csr_to_bundles`].
+///
+/// `nrows`/`ncols` give the target shape (the stream itself is
+/// shape-agnostic, exactly like the hardware). Metadata-only bundles are
+/// skipped (they carry scheduling, not data).
+pub fn bundles_to_csr(bundles: &[Bundle], nrows: usize, ncols: usize) -> Result<Csr> {
+    let mut row_ptr = vec![0usize; nrows + 1];
+    let mut cols: Vec<Idx> = Vec::new();
+    let mut vals: Vec<Val> = Vec::new();
+    let mut current_row: Option<Idx> = None;
+    let mut next_row_fill = 0usize; // rows completed so far
+
+    for b in bundles {
+        if b.flags.metadata_only() {
+            continue;
+        }
+        let (distinct, values) = match &b.payload {
+            Payload::Data { distinct, values } => (distinct, values),
+            Payload::Schedule { .. } => {
+                bail!("schedule payload without METADATA_ONLY flag")
+            }
+        };
+        match current_row {
+            None => current_row = Some(b.shared),
+            Some(r) => ensure!(
+                r == b.shared,
+                "bundle for row {} interleaved into unfinished row {r}",
+                b.shared
+            ),
+        }
+        ensure!((b.shared as usize) < nrows, "row {} out of bounds", b.shared);
+        for (&c, &v) in distinct.iter().zip(values) {
+            ensure!((c as usize) < ncols, "column {c} out of bounds");
+            cols.push(c);
+            vals.push(v);
+        }
+        if b.flags.end_of_row() {
+            let r = b.shared as usize;
+            ensure!(
+                r >= next_row_fill,
+                "row {r} completed twice (or rows out of order)"
+            );
+            // fill row_ptr for any skipped (absent) rows, then this one
+            for rr in next_row_fill..=r {
+                row_ptr[rr + 1] = if rr == r { cols.len() } else { row_ptr[rr] };
+            }
+            // empty rows between bundles have their ptr equal to previous
+            row_ptr[r + 1] = cols.len();
+            next_row_fill = r + 1;
+            current_row = None;
+        }
+    }
+    ensure!(current_row.is_none(), "stream ended mid-row {current_row:?}");
+    for rr in next_row_fill..nrows {
+        row_ptr[rr + 1] = row_ptr[rr];
+    }
+    let m = Csr { nrows, ncols, row_ptr, cols, vals };
+    m.validate()?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rir::bundle::{BundleFlags, RlTriple};
+    use crate::rir::encode::csr_to_bundles;
+    use crate::sparse::gen;
+
+    #[test]
+    fn roundtrip_random() {
+        for seed in 0..5u64 {
+            let m = gen::random_uniform(20, 30, 120, seed);
+            let bundles = csr_to_bundles(&m, 7); // non-default size, forces splits
+            let back = bundles_to_csr(&bundles, 20, 30).unwrap();
+            assert_eq!(back, m, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_empty_rows_and_big_rows() {
+        let mut m = gen::power_law(40, 600, 3);
+        // force a guaranteed-empty row
+        let start = m.row_ptr[10];
+        let end = m.row_ptr[11];
+        m.cols.drain(start..end);
+        m.vals.drain(start..end);
+        for p in m.row_ptr.iter_mut().skip(11) {
+            *p -= end - start;
+        }
+        m.validate().unwrap();
+        let bundles = csr_to_bundles(&m, 32);
+        let back = bundles_to_csr(&bundles, m.nrows, m.ncols).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn metadata_bundles_skipped() {
+        let m = gen::random_uniform(4, 4, 8, 9);
+        let mut bundles = csr_to_bundles(&m, 32);
+        bundles.insert(
+            2,
+            Bundle::schedule(0, vec![RlTriple { row: 1, start: 0, end: 4 }], BundleFlags::default()),
+        );
+        let back = bundles_to_csr(&bundles, 4, 4).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn interleaved_rows_rejected() {
+        let bundles = vec![
+            Bundle::data(0, vec![0], vec![1.0], BundleFlags::default()), // row 0, not finished
+            Bundle::data(1, vec![1], vec![1.0], BundleFlags::default().with(BundleFlags::END_OF_ROW)),
+        ];
+        assert!(bundles_to_csr(&bundles, 2, 2).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_rejected() {
+        let bundles = vec![Bundle::data(0, vec![0], vec![1.0], BundleFlags::default())];
+        assert!(bundles_to_csr(&bundles, 1, 1).is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let bundles = vec![Bundle::data(
+            0,
+            vec![9],
+            vec![1.0],
+            BundleFlags::default().with(BundleFlags::END_OF_ROW),
+        )];
+        assert!(bundles_to_csr(&bundles, 1, 2).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! The paper's `compress` routine: standard sparse formats → RIR bundles.
+//!
+//! "When the number of non-zero elements in a row exceeds the RIR bundle
+//! size, CPU breaks the whole row into multiple bundles" (§III-A). The last
+//! chunk of each row carries `END_OF_ROW`; an empty row still emits one
+//! empty end-of-row bundle so the consumer's row counter stays aligned.
+
+use crate::sparse::{Csc, Csr, Idx};
+
+use super::bundle::{Bundle, BundleFlags};
+
+/// Encode one row's worth of (cols, vals) into ≤`bundle_size` chunks,
+/// appending to `out`. Shared feature is the row index.
+fn encode_row(
+    out: &mut Vec<Bundle>,
+    shared: Idx,
+    cols: &[Idx],
+    vals: &[f32],
+    bundle_size: usize,
+) {
+    assert!(bundle_size > 0, "bundle_size must be positive");
+    if cols.is_empty() {
+        out.push(Bundle::data(
+            shared,
+            Vec::new(),
+            Vec::new(),
+            BundleFlags::default().with(BundleFlags::END_OF_ROW),
+        ));
+        return;
+    }
+    let nchunks = cols.len().div_ceil(bundle_size);
+    for (ci, (cchunk, vchunk)) in cols
+        .chunks(bundle_size)
+        .zip(vals.chunks(bundle_size))
+        .enumerate()
+    {
+        let mut flags = BundleFlags::default();
+        if ci + 1 == nchunks {
+            flags = flags.with(BundleFlags::END_OF_ROW);
+        }
+        out.push(Bundle::data(shared, cchunk.to_vec(), vchunk.to_vec(), flags));
+    }
+}
+
+/// CSR → RIR: one bundle chain per row, shared feature = row index
+/// (paper Fig 2(b), CSR case). The final bundle gets `END_OF_STREAM`.
+pub fn csr_to_bundles(m: &Csr, bundle_size: usize) -> Vec<Bundle> {
+    let mut out = Vec::with_capacity(m.nrows + m.nnz() / bundle_size.max(1));
+    for i in 0..m.nrows {
+        encode_row(&mut out, i as Idx, m.row_cols(i), m.row_vals(i), bundle_size);
+    }
+    if let Some(last) = out.last_mut() {
+        last.flags = last.flags.with(BundleFlags::END_OF_STREAM);
+    }
+    out
+}
+
+/// CSC → RIR: one bundle chain per column, shared feature = column index
+/// (paper Fig 2(b), CSC case; distinct features are row indices).
+pub fn csc_to_bundles(m: &Csc, bundle_size: usize) -> Vec<Bundle> {
+    let mut out = Vec::with_capacity(m.ncols + m.nnz() / bundle_size.max(1));
+    for j in 0..m.ncols {
+        encode_row(&mut out, j as Idx, m.col_rows(j), m.col_vals(j), bundle_size);
+    }
+    if let Some(last) = out.last_mut() {
+        last.flags = last.flags.with(BundleFlags::END_OF_STREAM);
+    }
+    out
+}
+
+/// Encode only the selected rows of a CSR matrix, in the given order —
+/// used by the SpGEMM scheduler to lay out the B-row stream of a wave
+/// (paper Fig 3(d): "rows of B necessary to produce all partial products").
+pub fn csr_rows_to_bundles(m: &Csr, rows: &[Idx], bundle_size: usize) -> Vec<Bundle> {
+    let mut out = Vec::new();
+    for &r in rows {
+        let i = r as usize;
+        encode_row(&mut out, r, m.row_cols(i), m.row_vals(i), bundle_size);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn small_rows_single_bundle() {
+        let m = gen::random_uniform(10, 10, 40, 1);
+        let bundles = csr_to_bundles(&m, 32);
+        assert_eq!(bundles.len(), 10); // every row fits one bundle
+        for (i, b) in bundles.iter().enumerate() {
+            assert_eq!(b.shared as usize, i);
+            assert!(b.flags.end_of_row());
+            assert_eq!(b.distinct(), m.row_cols(i));
+        }
+        assert!(bundles.last().unwrap().flags.end_of_stream());
+        assert!(!bundles[0].flags.end_of_stream());
+    }
+
+    #[test]
+    fn big_row_splits_with_end_marker_on_last() {
+        // one row with 70 nnz -> chunks of 32/32/6
+        let m = gen::random_uniform(1, 100, 70, 2);
+        let bundles = csr_to_bundles(&m, 32);
+        assert_eq!(bundles.len(), 3);
+        assert_eq!(bundles[0].len(), 32);
+        assert_eq!(bundles[1].len(), 32);
+        assert_eq!(bundles[2].len(), 6);
+        assert!(!bundles[0].flags.end_of_row());
+        assert!(!bundles[1].flags.end_of_row());
+        assert!(bundles[2].flags.end_of_row());
+    }
+
+    #[test]
+    fn empty_row_emits_empty_end_of_row_bundle() {
+        let mut m = crate::sparse::Csr::new(3, 3);
+        m.row_ptr = vec![0, 0, 0, 0];
+        let bundles = csr_to_bundles(&m, 32);
+        assert_eq!(bundles.len(), 3);
+        assert!(bundles.iter().all(|b| b.is_empty() && b.flags.end_of_row()));
+    }
+
+    #[test]
+    fn csc_uses_column_as_shared() {
+        let m = gen::random_uniform(6, 6, 12, 3).to_csc();
+        let bundles = csc_to_bundles(&m, 32);
+        assert_eq!(bundles.len(), 6);
+        for (j, b) in bundles.iter().enumerate() {
+            assert_eq!(b.shared as usize, j);
+            assert_eq!(b.distinct(), m.col_rows(j));
+        }
+    }
+
+    #[test]
+    fn selected_rows_in_given_order() {
+        let m = gen::random_uniform(8, 8, 24, 4);
+        let order = [5 as Idx, 1, 5];
+        let bundles = csr_rows_to_bundles(&m, &order, 32);
+        assert_eq!(bundles.len(), 3);
+        assert_eq!(bundles[0].shared, 5);
+        assert_eq!(bundles[1].shared, 1);
+        assert_eq!(bundles[2].shared, 5); // re-streaming the same row is legal
+    }
+
+    #[test]
+    fn bundle_size_one_degenerates_to_elements() {
+        let m = gen::random_uniform(2, 10, 6, 5);
+        let bundles = csr_to_bundles(&m, 1);
+        assert_eq!(bundles.len(), 6);
+        assert!(bundles.iter().all(|b| b.len() == 1));
+    }
+}

@@ -1,0 +1,276 @@
+//! The DRAM word layout of a bundle stream (paper Fig 3(d) / §IV).
+//!
+//! The FPGA's read controller consumes bundles as a flat sequence of 32-bit
+//! words: a metadata word (element count, flags), the shared-feature word,
+//! then the distinct/value pairs. The write controller produces the same
+//! layout in reverse order per §IV ("It reads the metadata first, shared
+//! feature next, and finally the distinct elements").
+//!
+//! This module is both the wire format (serialize/deserialize, used by the
+//! runtime tests and the `gen-stream` CLI) and the **byte accounting** the
+//! DRAM bandwidth model charges for each bundle.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::sparse::{Idx, Val};
+
+use super::bundle::{Bundle, BundleFlags, Payload, RlTriple};
+
+/// Bytes per stream word (the design streams 32-bit index + 32-bit f32).
+pub const WORD_BYTES: usize = 4;
+
+/// Number of 32-bit words a bundle occupies in DRAM.
+///
+/// metadata word + shared word + payload (2 words per data pair, 3 words
+/// per schedule triple).
+pub fn bundle_words(b: &Bundle) -> usize {
+    2 + match &b.payload {
+        Payload::Data { distinct, .. } => 2 * distinct.len(),
+        Payload::Schedule { triples } => 3 * triples.len(),
+    }
+}
+
+/// Bytes a bundle occupies in DRAM.
+pub fn bundle_bytes(b: &Bundle) -> usize {
+    bundle_words(b) * WORD_BYTES
+}
+
+/// Total bytes of a bundle stream.
+pub fn stream_bytes(bundles: &[Bundle]) -> usize {
+    bundles.iter().map(bundle_bytes).sum()
+}
+
+/// Serialize a bundle stream to the flat word layout.
+pub fn serialize(bundles: &[Bundle]) -> Vec<u32> {
+    let mut words = Vec::with_capacity(bundles.iter().map(bundle_words).sum());
+    for b in bundles {
+        let count = b.len() as u32;
+        debug_assert!(count < (1 << 24), "bundle too large for metadata word");
+        let meta = (count << 8) | b.flags.0 as u32;
+        words.push(meta);
+        words.push(b.shared);
+        match &b.payload {
+            Payload::Data { distinct, values } => {
+                for (&d, &v) in distinct.iter().zip(values) {
+                    words.push(d);
+                    words.push(v.to_bits());
+                }
+            }
+            Payload::Schedule { triples } => {
+                for t in triples {
+                    words.push(t.row);
+                    words.push(t.start);
+                    words.push(t.end);
+                }
+            }
+        }
+    }
+    words
+}
+
+/// Streaming writer: encode a CSC matrix's bundle chains directly into the
+/// flat word layout, one chain per column, recording words-per-column.
+///
+/// Functionally identical to `encode::csc_to_bundles` + [`serialize`] but
+/// with no intermediate `Bundle` allocations — this is the actual Fig-3(d)
+/// operation (the CPU writes bundles straight into the FPGA-visible DRAM
+/// region) and it is on REAP's measured critical path (EXPERIMENTS.md
+/// §Perf iteration 3).
+pub fn write_csc_stream(
+    m: &crate::sparse::Csc,
+    bundle_size: usize,
+    words: &mut Vec<u32>,
+    col_words: &mut Vec<u32>,
+) {
+    assert!(bundle_size > 0);
+    col_words.clear();
+    col_words.reserve(m.ncols);
+    for j in 0..m.ncols {
+        let start = words.len();
+        let rows = m.col_rows(j);
+        let vals = m.col_vals(j);
+        if rows.is_empty() {
+            words.push(BundleFlags::END_OF_ROW as u32);
+            words.push(j as u32);
+        } else {
+            let nchunks = rows.len().div_ceil(bundle_size);
+            for ci in 0..nchunks {
+                let lo = ci * bundle_size;
+                let hi = ((ci + 1) * bundle_size).min(rows.len());
+                let mut flags = 0u32;
+                if ci + 1 == nchunks {
+                    flags |= BundleFlags::END_OF_ROW as u32;
+                }
+                words.push((((hi - lo) as u32) << 8) | flags);
+                words.push(j as u32);
+                for k in lo..hi {
+                    words.push(rows[k]);
+                    words.push(vals[k].to_bits());
+                }
+            }
+        }
+        col_words.push((words.len() - start) as u32);
+    }
+    // terminal flag on the very last bundle header of the stream
+    mark_last_header_end_of_stream(words);
+}
+
+/// Streaming writer for Cholesky RL metadata chains (one per column of L):
+/// `(row, start, end)` triples pointing into the row-major L storage map.
+pub fn write_rl_stream(
+    pattern: &crate::symbolic::LPattern,
+    storage: &crate::symbolic::LStorageMap,
+    bundle_size: usize,
+    words: &mut Vec<u32>,
+    col_words: &mut Vec<u32>,
+) {
+    assert!(bundle_size > 0);
+    col_words.clear();
+    col_words.reserve(pattern.n);
+    for k in 0..pattern.n {
+        let start = words.len();
+        let rows = pattern.col_rows(k);
+        let nchunks = rows.len().div_ceil(bundle_size).max(1);
+        for ci in 0..nchunks {
+            let lo = ci * bundle_size;
+            let hi = ((ci + 1) * bundle_size).min(rows.len());
+            let mut flags = BundleFlags::METADATA_ONLY as u32;
+            if ci + 1 == nchunks {
+                flags |= BundleFlags::END_OF_ROW as u32;
+            }
+            words.push((((hi - lo) as u32) << 8) | flags);
+            words.push(k as u32);
+            for &r in &rows[lo..hi] {
+                words.push(r);
+                words.push(storage.row_ptr[r as usize] as u32);
+                words.push(storage.row_ptr[r as usize + 1] as u32);
+            }
+        }
+        col_words.push((words.len() - start) as u32);
+    }
+    mark_last_header_end_of_stream(words);
+}
+
+/// Walk the stream to its last bundle header and set `END_OF_STREAM`.
+fn mark_last_header_end_of_stream(words: &mut Vec<u32>) {
+    let mut p = 0usize;
+    let mut last_header = None;
+    while p < words.len() {
+        last_header = Some(p);
+        let meta = words[p];
+        let count = (meta >> 8) as usize;
+        let flags = BundleFlags((meta & 0xff) as u8);
+        p += 2 + if flags.metadata_only() { 3 * count } else { 2 * count };
+    }
+    if let Some(h) = last_header {
+        words[h] |= BundleFlags::END_OF_STREAM as u32;
+    }
+}
+
+/// Deserialize a flat word stream back into bundles.
+pub fn deserialize(words: &[u32]) -> Result<Vec<Bundle>> {
+    let mut out = Vec::new();
+    let mut p = 0usize;
+    while p < words.len() {
+        ensure!(p + 2 <= words.len(), "truncated bundle header at word {p}");
+        let meta = words[p];
+        let shared = words[p + 1];
+        p += 2;
+        let count = (meta >> 8) as usize;
+        let flags = BundleFlags((meta & 0xff) as u8);
+        if flags.metadata_only() {
+            ensure!(p + 3 * count <= words.len(), "truncated schedule payload");
+            let mut triples = Vec::with_capacity(count);
+            for k in 0..count {
+                triples.push(RlTriple {
+                    row: words[p + 3 * k],
+                    start: words[p + 3 * k + 1],
+                    end: words[p + 3 * k + 2],
+                });
+            }
+            p += 3 * count;
+            // schedule() re-sets METADATA_ONLY; keep other flag bits
+            out.push(Bundle::schedule(shared, triples, flags));
+        } else {
+            ensure!(p + 2 * count <= words.len(), "truncated data payload");
+            let mut distinct: Vec<Idx> = Vec::with_capacity(count);
+            let mut values: Vec<Val> = Vec::with_capacity(count);
+            for k in 0..count {
+                distinct.push(words[p + 2 * k]);
+                values.push(f32::from_bits(words[p + 2 * k + 1]));
+            }
+            p += 2 * count;
+            out.push(Bundle::data(shared, distinct, values, flags));
+        }
+    }
+    if p != words.len() {
+        bail!("trailing garbage after last bundle");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rir::encode::csr_to_bundles;
+    use crate::sparse::gen;
+
+    #[test]
+    fn word_count_matches_serialized_length() {
+        let m = gen::power_law(30, 500, 1);
+        let bundles = csr_to_bundles(&m, 32);
+        let words = serialize(&bundles);
+        assert_eq!(words.len(), bundles.iter().map(bundle_words).sum::<usize>());
+        assert_eq!(stream_bytes(&bundles), words.len() * WORD_BYTES);
+    }
+
+    #[test]
+    fn roundtrip_data_stream() {
+        let m = gen::random_uniform(12, 40, 150, 2);
+        let bundles = csr_to_bundles(&m, 8);
+        let words = serialize(&bundles);
+        let back = deserialize(&words).unwrap();
+        assert_eq!(back, bundles);
+    }
+
+    #[test]
+    fn roundtrip_schedule_bundle() {
+        let b = Bundle::schedule(
+            5,
+            vec![
+                RlTriple { row: 1, start: 0, end: 9 },
+                RlTriple { row: 7, start: 9, end: 12 },
+            ],
+            BundleFlags::default().with(BundleFlags::END_OF_ROW),
+        );
+        let words = serialize(std::slice::from_ref(&b));
+        assert_eq!(words.len(), 2 + 3 * 2);
+        let back = deserialize(&words).unwrap();
+        assert_eq!(back, vec![b]);
+    }
+
+    #[test]
+    fn nan_values_survive_bit_roundtrip() {
+        let b = Bundle::data(
+            0,
+            vec![1],
+            vec![f32::NAN],
+            BundleFlags::default().with(BundleFlags::END_OF_ROW),
+        );
+        let back = deserialize(&serialize(std::slice::from_ref(&b))).unwrap();
+        assert!(back[0].values()[0].is_nan());
+    }
+
+    #[test]
+    fn truncated_stream_rejected() {
+        let m = gen::random_uniform(3, 3, 6, 3);
+        let mut words = serialize(&csr_to_bundles(&m, 32));
+        words.pop();
+        assert!(deserialize(&words).is_err());
+    }
+
+    #[test]
+    fn empty_stream_is_empty() {
+        assert_eq!(deserialize(&[]).unwrap(), Vec::<Bundle>::new());
+    }
+}

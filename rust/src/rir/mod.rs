@@ -1,0 +1,27 @@
+//! RIR — the REAP Intermediate Representation (paper §II, Figs 2–4).
+//!
+//! RIR is the contract between the CPU (Layer 3, this crate) and the FPGA
+//! (simulated datapath + AOT-compiled XLA arithmetic). A **bundle**
+//! co-locates a *shared feature* (row index for CSR sources, column index
+//! for CSC sources) with up to `bundle_size` *(distinct feature, value)*
+//! pairs, plus metadata: the element count, an end-of-row marker for rows
+//! split across bundles, and — for Cholesky — *metadata-only* bundles that
+//! carry pure scheduling information (`RL` triples telling the FPGA where
+//! each needed row of L lives in its memory).
+//!
+//! * [`bundle`] — the bundle type and flags.
+//! * [`encode`] — CSR/CSC → bundles (including big-row splitting).
+//! * [`decode`] — bundles → CSR (the paper's `decompress` routine).
+//! * [`layout`] — the flat DRAM word stream of Fig 3(d) and its byte
+//!   accounting (drives the simulator's bandwidth model).
+//! * [`schedule`] — wave scheduling of bundles onto pipelines (the CPU's
+//!   "scheduling decisions" of Fig 3).
+
+pub mod bundle;
+pub mod decode;
+pub mod encode;
+pub mod layout;
+pub mod schedule;
+
+pub use bundle::{Bundle, BundleFlags, Payload, RlTriple, DEFAULT_BUNDLE_SIZE};
+pub use schedule::{SpgemmSchedule, Wave};

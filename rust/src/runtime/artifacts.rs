@@ -1,0 +1,131 @@
+//! Artifact discovery and the build manifest.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing each
+//! lowered entry point (file, sha256, fixed shapes). The runtime reads it
+//! to locate HLO files and to know the padding geometry the buffers must
+//! match — a shape mismatch is a build-system bug and fails loudly here
+//! rather than inside XLA.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Fixed geometry of one AOT entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EntryGeometry {
+    pub file: PathBuf,
+    /// `(shape, dtype)` per argument, in call order.
+    pub args: Vec<(Vec<usize>, String)>,
+    /// Kernel parameters (bundle, tile_w, batch, pipes — as present).
+    pub params: std::collections::BTreeMap<String, usize>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: std::collections::BTreeMap<String, EntryGeometry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        ensure!(
+            json.at(&["format"])?.as_str() == Some("hlo-text"),
+            "unsupported artifact format"
+        );
+        let mut entries = std::collections::BTreeMap::new();
+        for (name, e) in json.at(&["entries"])?.as_obj().context("entries")? {
+            let file = dir.join(e.at(&["file"])?.as_str().context("file")?);
+            ensure!(file.exists(), "artifact missing: {}", file.display());
+            let mut args = Vec::new();
+            for a in e.at(&["args"])?.as_arr().context("args")? {
+                let shape = a
+                    .at(&["shape"])?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = a.at(&["dtype"])?.as_str().context("dtype")?.to_string();
+                args.push((shape, dtype));
+            }
+            let mut params = std::collections::BTreeMap::new();
+            if let Some(obj) = e.at(&["params"])?.as_obj() {
+                for (k, v) in obj {
+                    if let Some(u) = v.as_usize() {
+                        params.insert(k.clone(), u);
+                    }
+                }
+            }
+            entries.insert(name.clone(), EntryGeometry { file, args, params });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Default artifact directory: `$REAP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("REAP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Geometry of a named entry.
+    pub fn entry(&self, name: &str) -> Result<&EntryGeometry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("entry `{name}` not in manifest (stale artifacts?)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_artifacts() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("reap_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("k.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text", "return_tuple": true, "entries": {
+                "k": {"file": "k.hlo.txt", "sha256": "x",
+                       "params": {"bundle": 32},
+                       "args": [{"shape": [4, 32], "dtype": "float32"}]}}}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let dir = write_fake_artifacts();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.entry("k").unwrap();
+        assert_eq!(e.args[0].0, vec![4, 32]);
+        assert_eq!(e.args[0].1, "float32");
+        assert_eq!(e.params["bundle"], 32);
+        assert!(m.entry("missing").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let dir = write_fake_artifacts();
+        std::fs::remove_file(dir.join("k.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

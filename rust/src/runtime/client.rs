@@ -1,0 +1,77 @@
+//! PJRT client wrapper: HLO text → compiled executables, cached by name.
+//!
+//! Follows the `/opt/xla-example/load_hlo` pattern: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. The
+//! text parser reassigns instruction ids, which is what makes jax ≥ 0.5
+//! output loadable on xla_extension 0.5.1 (see `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::Manifest;
+
+/// A PJRT CPU client plus the compiled executables of every manifest entry.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Create a CPU client and compile all artifacts in `dir`.
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for (name, entry) in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact `{name}`"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(XlaRuntime { client, executables, manifest })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<XlaRuntime> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    /// The manifest the runtime was built from.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute a named entry with literal arguments; returns the elements
+    /// of the result tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("no compiled executable `{name}`"))?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing `{name}`"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("platform", &self.platform())
+            .field("entries", &self.executables.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}

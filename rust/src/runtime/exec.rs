@@ -1,0 +1,385 @@
+//! Padded-buffer marshaling between RIR bundles and the AOT entry points.
+//!
+//! The artifacts have *fixed* shapes (recorded in the manifest); this
+//! module owns the reusable staging buffers, the padding discipline
+//! (column sentinel −1, value 0 — identical to the Python side) and the
+//! literal construction, playing the role of the FPGA's input/output
+//! controllers.
+
+use anyhow::{ensure, Result};
+
+use crate::sparse::{Idx, Val};
+
+use super::client::XlaRuntime;
+
+/// Column padding sentinel (matches `kernels/*.py::PAD_COL`).
+pub const PAD_COL: i32 = -1;
+
+/// Staging buffers for one `spgemm_bundle` invocation batch.
+#[derive(Clone, Debug)]
+pub struct SpgemmWaveIo {
+    pub batch: usize,
+    pub bundle: usize,
+    pub tile_w: usize,
+    tile_start: Vec<i32>,
+    a_vals: Vec<f32>,
+    b_cols: Vec<i32>,
+    b_vals: Vec<f32>,
+    steps: usize,
+}
+
+impl SpgemmWaveIo {
+    /// Allocate from the runtime's manifest geometry.
+    pub fn new(rt: &XlaRuntime) -> Result<Self> {
+        let e = rt.manifest().entry("spgemm_bundle")?;
+        let batch = e.params["batch"];
+        let bundle = e.params["bundle"];
+        let tile_w = e.params["tile_w"];
+        Ok(Self::with_geometry(batch, bundle, tile_w))
+    }
+
+    /// Allocate with explicit geometry (tests).
+    pub fn with_geometry(batch: usize, bundle: usize, tile_w: usize) -> Self {
+        SpgemmWaveIo {
+            batch,
+            bundle,
+            tile_w,
+            tile_start: vec![0; batch],
+            a_vals: vec![0.0; batch * bundle],
+            b_cols: vec![PAD_COL; batch * bundle * bundle],
+            b_vals: vec![0.0; batch * bundle * bundle],
+            steps: 0,
+        }
+    }
+
+    /// Reset to an empty batch (buffers retained).
+    pub fn clear(&mut self) {
+        self.tile_start.iter_mut().for_each(|x| *x = 0);
+        self.a_vals.iter_mut().for_each(|x| *x = 0.0);
+        self.b_cols.iter_mut().for_each(|x| *x = PAD_COL);
+        self.b_vals.iter_mut().for_each(|x| *x = 0.0);
+        self.steps = 0;
+    }
+
+    /// Number of steps currently staged.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// True when another step no longer fits.
+    pub fn is_full(&self) -> bool {
+        self.steps == self.batch
+    }
+
+    /// Stage one bundle-step: an A-chunk (`a_vals[i]` per CAM slot) and,
+    /// per slot, the referenced B-row chunk (cols/vals), for the column
+    /// tile starting at `tile_start`. Returns the step index.
+    ///
+    /// `b_rows[i]` is `(cols, vals)` of the B chunk for A slot `i`; both
+    /// may be shorter than the bundle (padded here). Slots beyond
+    /// `a_chunk.len()` stay padding.
+    pub fn push_step(
+        &mut self,
+        tile_start: u32,
+        a_chunk_vals: &[Val],
+        b_rows: &[(&[Idx], &[Val])],
+    ) -> Result<usize> {
+        ensure!(!self.is_full(), "wave batch full ({} steps)", self.batch);
+        ensure!(a_chunk_vals.len() <= self.bundle, "A chunk exceeds bundle");
+        ensure!(b_rows.len() == a_chunk_vals.len(), "slot arity mismatch");
+        let s = self.steps;
+        self.tile_start[s] = tile_start as i32;
+        let a_base = s * self.bundle;
+        self.a_vals[a_base..a_base + a_chunk_vals.len()].copy_from_slice(a_chunk_vals);
+        for (i, (cols, vals)) in b_rows.iter().enumerate() {
+            ensure!(cols.len() == vals.len(), "B chunk cols/vals mismatch");
+            ensure!(cols.len() <= self.bundle, "B chunk exceeds bundle");
+            let base = (s * self.bundle + i) * self.bundle;
+            for (k, (&c, &v)) in cols.iter().zip(vals.iter()).enumerate() {
+                self.b_cols[base + k] = c as i32;
+                self.b_vals[base + k] = v;
+            }
+        }
+        self.steps += 1;
+        Ok(s)
+    }
+
+    /// Execute the staged batch; returns the dense accumulator tiles
+    /// (`steps` rows of `tile_w` values).
+    pub fn execute(&self, rt: &XlaRuntime) -> Result<Vec<Vec<f32>>> {
+        let (n, b, w) = (self.batch as i64, self.bundle as i64, self.tile_w as i64);
+        let args = [
+            xla::Literal::vec1(&self.tile_start),
+            xla::Literal::vec1(&self.a_vals).reshape(&[n, b])?,
+            xla::Literal::vec1(&self.b_cols).reshape(&[n, b, b])?,
+            xla::Literal::vec1(&self.b_vals).reshape(&[n, b, b])?,
+        ];
+        let out = rt.execute("spgemm_bundle", &args)?;
+        ensure!(out.len() == 1, "spgemm_bundle must return one tuple element");
+        let flat: Vec<f32> = out[0].to_vec()?;
+        ensure!(flat.len() == (n * w) as usize, "unexpected output size");
+        Ok(flat
+            .chunks(self.tile_w)
+            .take(self.steps)
+            .map(|c| c.to_vec())
+            .collect())
+    }
+}
+
+/// Staging buffers for one `spmv_bundle` invocation batch (the SpMV
+/// extension kernel).
+#[derive(Clone, Debug)]
+pub struct SpmvWaveIo {
+    pub batch: usize,
+    pub bundle: usize,
+    pub tile_w: usize,
+    tile_start: Vec<i32>,
+    cols: Vec<i32>,
+    vals: Vec<f32>,
+    x_tiles: Vec<f32>,
+    steps: usize,
+}
+
+impl SpmvWaveIo {
+    /// Allocate from the runtime's manifest geometry.
+    pub fn new(rt: &XlaRuntime) -> Result<Self> {
+        let e = rt.manifest().entry("spmv_bundle")?;
+        Ok(Self::with_geometry(e.params["batch"], e.params["bundle"], e.params["tile_w"]))
+    }
+
+    /// Allocate with explicit geometry (tests).
+    pub fn with_geometry(batch: usize, bundle: usize, tile_w: usize) -> Self {
+        SpmvWaveIo {
+            batch,
+            bundle,
+            tile_w,
+            tile_start: vec![0; batch],
+            cols: vec![PAD_COL; batch * bundle],
+            vals: vec![0.0; batch * bundle],
+            x_tiles: vec![0.0; batch * tile_w],
+            steps: 0,
+        }
+    }
+
+    /// Reset to an empty batch.
+    pub fn clear(&mut self) {
+        self.tile_start.iter_mut().for_each(|x| *x = 0);
+        self.cols.iter_mut().for_each(|x| *x = PAD_COL);
+        self.vals.iter_mut().for_each(|x| *x = 0.0);
+        self.x_tiles.iter_mut().for_each(|x| *x = 0.0);
+        self.steps = 0;
+    }
+
+    /// Number of staged steps.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// True when another step no longer fits.
+    pub fn is_full(&self) -> bool {
+        self.steps == self.batch
+    }
+
+    /// Stage one (row chunk, x tile) step. `x_tile` may be shorter than
+    /// `tile_w` at the vector's tail (zero-padded).
+    pub fn push_step(
+        &mut self,
+        tile_start: u32,
+        chunk_cols: &[Idx],
+        chunk_vals: &[Val],
+        x_tile: &[Val],
+    ) -> Result<usize> {
+        ensure!(!self.is_full(), "spmv batch full ({} steps)", self.batch);
+        ensure!(chunk_cols.len() == chunk_vals.len(), "chunk arity");
+        ensure!(chunk_cols.len() <= self.bundle, "chunk exceeds bundle");
+        ensure!(x_tile.len() <= self.tile_w, "x tile too wide");
+        let s = self.steps;
+        self.tile_start[s] = tile_start as i32;
+        let base = s * self.bundle;
+        for (k, (&c, &v)) in chunk_cols.iter().zip(chunk_vals).enumerate() {
+            self.cols[base + k] = c as i32;
+            self.vals[base + k] = v;
+        }
+        let xbase = s * self.tile_w;
+        self.x_tiles[xbase..xbase + x_tile.len()].copy_from_slice(x_tile);
+        self.steps += 1;
+        Ok(s)
+    }
+
+    /// Execute the staged batch; returns the partial products
+    /// (`steps` values).
+    pub fn execute(&self, rt: &XlaRuntime) -> Result<Vec<f32>> {
+        let (n, b, w) = (self.batch as i64, self.bundle as i64, self.tile_w as i64);
+        let args = [
+            xla::Literal::vec1(&self.tile_start),
+            xla::Literal::vec1(&self.cols).reshape(&[n, b])?,
+            xla::Literal::vec1(&self.vals).reshape(&[n, b])?,
+            xla::Literal::vec1(&self.x_tiles).reshape(&[n, w])?,
+        ];
+        let out = rt.execute("spmv_bundle", &args)?;
+        ensure!(out.len() == 1, "spmv_bundle must return one tuple element");
+        let flat: Vec<f32> = out[0].to_vec()?;
+        Ok(flat[..self.steps].to_vec())
+    }
+}
+
+/// Staging buffers for the Cholesky entry points.
+#[derive(Clone, Debug)]
+pub struct CholeskyStepIo {
+    pub bundle: usize,
+    pub pipes: usize,
+    rowk_cols: Vec<i32>,
+    rowk_vals: Vec<f32>,
+    rowr_cols: Vec<i32>,
+    rowr_vals: Vec<f32>,
+    a_vals: Vec<f32>,
+    a_diag: [f32; 1],
+}
+
+impl CholeskyStepIo {
+    /// Allocate from the runtime's manifest geometry.
+    pub fn new(rt: &XlaRuntime) -> Result<Self> {
+        let e = rt.manifest().entry("cholesky_update")?;
+        Ok(Self::with_geometry(e.params["bundle"], e.params["pipes"]))
+    }
+
+    /// Allocate with explicit geometry (tests).
+    pub fn with_geometry(bundle: usize, pipes: usize) -> Self {
+        CholeskyStepIo {
+            bundle,
+            pipes,
+            rowk_cols: vec![PAD_COL; bundle],
+            rowk_vals: vec![0.0; bundle],
+            rowr_cols: vec![PAD_COL; pipes * bundle],
+            rowr_vals: vec![0.0; pipes * bundle],
+            a_vals: vec![0.0; pipes],
+            a_diag: [0.0],
+        }
+    }
+
+    /// Reset all staging to padding.
+    pub fn clear(&mut self) {
+        self.rowk_cols.iter_mut().for_each(|x| *x = PAD_COL);
+        self.rowk_vals.iter_mut().for_each(|x| *x = 0.0);
+        self.rowr_cols.iter_mut().for_each(|x| *x = PAD_COL);
+        self.rowr_vals.iter_mut().for_each(|x| *x = 0.0);
+        self.a_vals.iter_mut().for_each(|x| *x = 0.0);
+        self.a_diag[0] = 0.0;
+    }
+
+    /// Stage the row-k broadcast chunk.
+    pub fn set_rowk(&mut self, cols: &[Idx], vals: &[Val]) -> Result<()> {
+        ensure!(cols.len() == vals.len() && cols.len() <= self.bundle, "rowk chunk");
+        self.rowk_cols.iter_mut().for_each(|x| *x = PAD_COL);
+        self.rowk_vals.iter_mut().for_each(|x| *x = 0.0);
+        for (k, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+            self.rowk_cols[k] = c as i32;
+            self.rowk_vals[k] = v;
+        }
+        Ok(())
+    }
+
+    /// Stage pipeline `p`'s row-r chunk.
+    pub fn set_rowr(&mut self, p: usize, cols: &[Idx], vals: &[Val]) -> Result<()> {
+        ensure!(p < self.pipes, "pipeline index");
+        ensure!(cols.len() == vals.len() && cols.len() <= self.bundle, "rowr chunk");
+        let base = p * self.bundle;
+        for k in 0..self.bundle {
+            self.rowr_cols[base + k] = PAD_COL;
+            self.rowr_vals[base + k] = 0.0;
+        }
+        for (k, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+            self.rowr_cols[base + k] = c as i32;
+            self.rowr_vals[base + k] = v;
+        }
+        Ok(())
+    }
+
+    /// Stage the A-column values: `a_vals[p] = A(r_p, k)`, `a_diag = A(k,k)`.
+    pub fn set_a(&mut self, a_vals: &[Val], a_diag: Val) -> Result<()> {
+        ensure!(a_vals.len() <= self.pipes, "a_vals length");
+        self.a_vals.iter_mut().for_each(|x| *x = 0.0);
+        self.a_vals[..a_vals.len()].copy_from_slice(a_vals);
+        self.a_diag[0] = a_diag;
+        Ok(())
+    }
+
+    fn common_literals(&self) -> Result<[xla::Literal; 4]> {
+        let (p, b) = (self.pipes as i64, self.bundle as i64);
+        Ok([
+            xla::Literal::vec1(&self.rowk_cols),
+            xla::Literal::vec1(&self.rowk_vals),
+            xla::Literal::vec1(&self.rowr_cols).reshape(&[p, b])?,
+            xla::Literal::vec1(&self.rowr_vals).reshape(&[p, b])?,
+        ])
+    }
+
+    /// Execute `cholesky_dot`: partial matched dots for the staged chunk
+    /// pair (used when rows exceed one bundle).
+    pub fn execute_dot(&self, rt: &XlaRuntime) -> Result<Vec<f32>> {
+        let [kc, kv, rc, rv] = self.common_literals()?;
+        let out = rt.execute("cholesky_dot", &[kc, kv, rc, rv])?;
+        ensure!(out.len() == 1, "cholesky_dot must return one element");
+        Ok(out[0].to_vec()?)
+    }
+
+    /// Execute `cholesky_update`: returns `(l_rk[pipes], l_kk)`.
+    pub fn execute_update(&self, rt: &XlaRuntime) -> Result<(Vec<f32>, f32)> {
+        let [kc, kv, rc, rv] = self.common_literals()?;
+        let av = xla::Literal::vec1(&self.a_vals);
+        let ad = xla::Literal::vec1(&self.a_diag);
+        let out = rt.execute("cholesky_update", &[kc, kv, rc, rv, av, ad])?;
+        ensure!(out.len() == 2, "cholesky_update must return two elements");
+        let l_rk: Vec<f32> = out[0].to_vec()?;
+        let l_kk: Vec<f32> = out[1].to_vec()?;
+        Ok((l_rk, l_kk[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spgemm_staging_pads_and_counts() {
+        let mut io = SpgemmWaveIo::with_geometry(2, 4, 16);
+        assert!(!io.is_full());
+        let cols: &[Idx] = &[3, 5];
+        let vals: &[Val] = &[1.0, 2.0];
+        let s = io.push_step(16, &[0.5, -1.0], &[(cols, vals), (&[], &[])]).unwrap();
+        assert_eq!(s, 0);
+        assert_eq!(io.steps(), 1);
+        assert_eq!(io.tile_start[0], 16);
+        assert_eq!(io.a_vals[0..2], [0.5, -1.0]);
+        assert_eq!(io.b_cols[0], 3);
+        assert_eq!(io.b_cols[2], PAD_COL); // padded suffix
+        io.push_step(0, &[], &[]).unwrap();
+        assert!(io.is_full());
+        assert!(io.push_step(0, &[], &[]).is_err());
+        io.clear();
+        assert_eq!(io.steps(), 0);
+        assert_eq!(io.b_cols[0], PAD_COL);
+    }
+
+    #[test]
+    fn spgemm_staging_rejects_oversize() {
+        let mut io = SpgemmWaveIo::with_geometry(1, 2, 8);
+        let cols: &[Idx] = &[0, 1, 2];
+        let vals: &[Val] = &[1.0, 1.0, 1.0];
+        assert!(io.push_step(0, &[1.0, 1.0, 1.0], &[(cols, vals); 3]).is_err());
+    }
+
+    #[test]
+    fn cholesky_staging_layout() {
+        let mut io = CholeskyStepIo::with_geometry(4, 2);
+        io.set_rowk(&[1, 2], &[0.5, 0.25]).unwrap();
+        io.set_rowr(1, &[2], &[4.0]).unwrap();
+        io.set_a(&[7.0, 8.0], 9.0).unwrap();
+        assert_eq!(io.rowk_cols, vec![1, 2, PAD_COL, PAD_COL]);
+        assert_eq!(io.rowr_cols[4..6], [2, PAD_COL]);
+        assert_eq!(io.a_diag[0], 9.0);
+        assert!(io.set_rowr(5, &[], &[]).is_err());
+        io.clear();
+        assert_eq!(io.rowk_cols, vec![PAD_COL; 4]);
+    }
+}

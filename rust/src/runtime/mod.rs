@@ -1,0 +1,17 @@
+//! The request-path runtime: loads the AOT-compiled HLO artifacts through
+//! the PJRT C API (`xla` crate) and executes them from the coordinator.
+//!
+//! This is the boundary that keeps Python off the request path: `make
+//! artifacts` runs JAX once at build time; afterwards the `reap` binary is
+//! self-contained — [`artifacts`] locates and fingerprints the HLO text,
+//! [`client`] compiles it on the PJRT CPU client, and [`exec`] marshals
+//! RIR-padded buffers in and results out (the role the FPGA's input/output
+//! controllers play in the paper).
+
+pub mod artifacts;
+pub mod client;
+pub mod exec;
+
+pub use artifacts::Manifest;
+pub use client::XlaRuntime;
+pub use exec::{CholeskyStepIo, SpgemmWaveIo, SpmvWaveIo};

@@ -1,0 +1,166 @@
+//! Coordinate (triplet) format — the assembly and interchange format.
+
+use anyhow::{ensure, Result};
+
+use super::{Csr, Idx, Val};
+
+/// A sparse matrix as unordered `(row, col, value)` triplets.
+///
+/// Duplicates are allowed at assembly time and are summed on conversion to
+/// CSR (the standard finite-element assembly semantics, same as
+/// `scipy.sparse.coo_matrix` and CHOLMOD's triplet form).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<Idx>,
+    pub cols: Vec<Idx>,
+    pub vals: Vec<Val>,
+}
+
+impl Coo {
+    /// Empty matrix of the given shape.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Number of stored triplets (including duplicates and explicit zeros).
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append one triplet.
+    pub fn push(&mut self, r: usize, c: usize, v: Val) {
+        debug_assert!(r < self.nrows && c < self.ncols, "({r},{c}) out of bounds");
+        self.rows.push(r as Idx);
+        self.cols.push(c as Idx);
+        self.vals.push(v);
+    }
+
+    /// Validate structural invariants (bounds, parallel array lengths).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.rows.len() == self.cols.len() && self.cols.len() == self.vals.len(),
+            "triplet arrays disagree: {} rows, {} cols, {} vals",
+            self.rows.len(),
+            self.cols.len(),
+            self.vals.len()
+        );
+        for (&r, &c) in self.rows.iter().zip(&self.cols) {
+            ensure!(
+                (r as usize) < self.nrows && (c as usize) < self.ncols,
+                "triplet ({r},{c}) out of bounds for {}x{}",
+                self.nrows,
+                self.ncols
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to CSR, summing duplicate coordinates.
+    ///
+    /// Two-pass counting sort: O(nnz + nrows), no comparison sort involved —
+    /// this is the same strategy CHOLMOD/ SuiteSparse use for triplet→CSC.
+    pub fn to_csr(&self) -> Csr {
+        let nnz = self.nnz();
+        // Pass 1: row counts -> row_ptr.
+        let mut row_ptr = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        // Pass 2: scatter into place.
+        let mut cols = vec![0 as Idx; nnz];
+        let mut vals = vec![0 as Val; nnz];
+        let mut next = row_ptr.clone();
+        for i in 0..nnz {
+            let r = self.rows[i] as usize;
+            let dst = next[r];
+            cols[dst] = self.cols[i];
+            vals[dst] = self.vals[i];
+            next[r] += 1;
+        }
+        let mut csr = Csr { nrows: self.nrows, ncols: self.ncols, row_ptr, cols, vals };
+        csr.sort_rows_and_sum_duplicates();
+        csr
+    }
+
+    /// Transpose (swap row/col arrays; O(1) plus clone).
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            rows: self.cols.clone(),
+            cols: self.rows.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_to_csr() {
+        let coo = Coo::new(3, 4);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nrows, 3);
+        assert_eq!(csr.ncols, 4);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.row_ptr, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 2.0);
+        coo.push(0, 1, 3.0);
+        coo.push(1, 0, 1.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.get(0, 1), 5.0);
+        assert_eq!(csr.get(1, 0), 1.0);
+        assert_eq!(csr.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn unsorted_input_sorted_output() {
+        let mut coo = Coo::new(1, 5);
+        for &c in &[4usize, 0, 3, 1] {
+            coo.push(0, c, c as Val);
+        }
+        let csr = coo.to_csr();
+        assert_eq!(csr.cols, vec![0, 1, 3, 4]);
+        assert_eq!(csr.vals, vec![0.0, 1.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut coo = Coo::new(2, 3);
+        coo.push(0, 2, 7.0);
+        coo.push(1, 0, -1.0);
+        let t = coo.transpose();
+        assert_eq!(t.nrows, 3);
+        assert_eq!(t.ncols, 2);
+        assert_eq!(t.transpose(), coo);
+    }
+
+    #[test]
+    fn validate_catches_out_of_bounds() {
+        let mut coo = Coo::new(2, 2);
+        coo.rows.push(5);
+        coo.cols.push(0);
+        coo.vals.push(1.0);
+        assert!(coo.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_length_mismatch() {
+        let mut coo = Coo::new(2, 2);
+        coo.rows.push(0);
+        assert!(coo.validate().is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Compressed Sparse Column — the Cholesky-side format (CHOLMOD's native
+//! layout; the paper's Fig 2(b) shows its RIR translation).
+
+use anyhow::{ensure, Result};
+
+use super::{Csr, Idx, Val};
+
+/// CSC matrix: `col_ptr[j]..col_ptr[j+1]` indexes the (sorted) row/value
+/// pairs of column `j`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csc {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub col_ptr: Vec<usize>,
+    pub rows: Vec<Idx>,
+    pub vals: Vec<Val>,
+}
+
+impl Csc {
+    /// Empty matrix.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Csc { nrows, ncols, col_ptr: vec![0; ncols + 1], rows: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row indices of column `j`.
+    #[inline]
+    pub fn col_rows(&self, j: usize) -> &[Idx] {
+        &self.rows[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// Values of column `j`.
+    #[inline]
+    pub fn col_vals(&self, j: usize) -> &[Val] {
+        &self.vals[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// Number of nonzeros in column `j`.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Element lookup by binary search within the column.
+    pub fn get(&self, i: usize, j: usize) -> Val {
+        match self.col_rows(j).binary_search(&(i as Idx)) {
+            Ok(k) => self.col_vals(j)[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Validate invariants (mirror of [`Csr::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.col_ptr.len() == self.ncols + 1, "col_ptr length");
+        ensure!(self.col_ptr[0] == 0, "col_ptr[0] != 0");
+        ensure!(*self.col_ptr.last().unwrap() == self.rows.len(), "col_ptr end");
+        ensure!(self.rows.len() == self.vals.len(), "rows/vals length mismatch");
+        for j in 0..self.ncols {
+            ensure!(self.col_ptr[j] <= self.col_ptr[j + 1], "col_ptr not monotone at {j}");
+            let rows = self.col_rows(j);
+            for w in rows.windows(2) {
+                ensure!(w[0] < w[1], "column {j} rows not strictly ascending");
+            }
+            if let Some(&last) = rows.last() {
+                ensure!((last as usize) < self.nrows, "column {j} row out of bounds");
+            }
+        }
+        Ok(())
+    }
+
+    /// Convert to CSR (counting-sort transpose of the storage).
+    pub fn to_csr(&self) -> Csr {
+        let nnz = self.nnz();
+        let mut row_ptr = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut cols = vec![0 as Idx; nnz];
+        let mut vals = vec![0 as Val; nnz];
+        let mut next = row_ptr.clone();
+        for j in 0..self.ncols {
+            for (r, v) in self.col_rows(j).iter().zip(self.col_vals(j)) {
+                let dst = next[*r as usize];
+                cols[dst] = j as Idx;
+                vals[dst] = *v;
+                next[*r as usize] += 1;
+            }
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, row_ptr, cols, vals }
+    }
+
+    /// The strictly-lower-triangular part including the diagonal, as CSC
+    /// (what sparse Cholesky factorizations store for SPD inputs).
+    pub fn lower_triangle(&self) -> Csc {
+        let mut out = Csc::new(self.nrows, self.ncols);
+        let mut col_ptr = vec![0usize; self.ncols + 1];
+        for j in 0..self.ncols {
+            for &r in self.col_rows(j) {
+                if r as usize >= j {
+                    col_ptr[j + 1] += 1;
+                }
+            }
+        }
+        for j in 0..self.ncols {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        let nnz = col_ptr[self.ncols];
+        let mut rows = vec![0 as Idx; nnz];
+        let mut vals = vec![0 as Val; nnz];
+        let mut k = 0usize;
+        for j in 0..self.ncols {
+            for (r, v) in self.col_rows(j).iter().zip(self.col_vals(j)) {
+                if *r as usize >= j {
+                    rows[k] = *r;
+                    vals[k] = *v;
+                    k += 1;
+                }
+            }
+        }
+        out.col_ptr = col_ptr;
+        out.rows = rows;
+        out.vals = vals;
+        out
+    }
+
+    /// Diagonal entries (0 where structurally absent).
+    pub fn diagonal(&self) -> Vec<Val> {
+        (0..self.ncols.min(self.nrows)).map(|j| self.get(j, j)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csc {
+        // [4 1 0]
+        // [1 5 2]
+        // [0 2 6]   (symmetric, SPD-ish)
+        let csr = Csr::from_parts(
+            3,
+            3,
+            vec![0, 2, 5, 7],
+            vec![0, 1, 0, 1, 2, 1, 2],
+            vec![4.0, 1.0, 1.0, 5.0, 2.0, 2.0, 6.0],
+        )
+        .unwrap();
+        csr.to_csc()
+    }
+
+    #[test]
+    fn accessors() {
+        let m = sample();
+        assert_eq!(m.nnz(), 7);
+        assert_eq!(m.col_nnz(1), 3);
+        assert_eq!(m.col_rows(0), &[0, 1]);
+        assert_eq!(m.get(2, 1), 2.0);
+        assert_eq!(m.get(0, 2), 0.0);
+        assert_eq!(m.diagonal(), vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let m = sample();
+        assert_eq!(m.to_csr().to_csc(), m);
+    }
+
+    #[test]
+    fn lower_triangle_keeps_diag_and_below() {
+        let m = sample();
+        let l = m.lower_triangle();
+        assert_eq!(l.nnz(), 5); // 3 diag + 2 below
+        assert_eq!(l.get(1, 0), 1.0);
+        assert_eq!(l.get(0, 1), 0.0);
+        assert_eq!(l.get(1, 1), 5.0);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_unsorted_rows() {
+        let m = Csc {
+            nrows: 3,
+            ncols: 1,
+            col_ptr: vec![0, 2],
+            rows: vec![2, 0],
+            vals: vec![1.0, 1.0],
+        };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn empty_column_handling() {
+        let m = Csc::new(4, 4);
+        m.validate().unwrap();
+        assert_eq!(m.col_nnz(2), 0);
+        assert_eq!(m.to_csr().nnz(), 0);
+    }
+}

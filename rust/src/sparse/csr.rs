@@ -1,0 +1,317 @@
+//! Compressed Sparse Row — the primary input format for SpGEMM (the format
+//! whose indirection pattern the paper's Fig 2/3 walks through).
+
+use anyhow::{ensure, Result};
+
+use super::{Coo, Csc, Idx, Val};
+
+/// CSR matrix: `row_ptr[i]..row_ptr[i+1]` indexes the (sorted) column/value
+/// pairs of row `i`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub row_ptr: Vec<usize>,
+    pub cols: Vec<Idx>,
+    pub vals: Vec<Val>,
+}
+
+impl Csr {
+    /// Empty matrix.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Csr { nrows, ncols, row_ptr: vec![0; nrows + 1], cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Build directly from parts (validated).
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<usize>,
+        cols: Vec<Idx>,
+        vals: Vec<Val>,
+    ) -> Result<Self> {
+        let m = Csr { nrows, ncols, row_ptr, cols, vals };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Density = nnz / (nrows*ncols); 0 for degenerate shapes.
+    pub fn density(&self) -> f64 {
+        if self.nrows == 0 || self.ncols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// Column indices of row `i`.
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[Idx] {
+        &self.cols[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// Values of row `i`.
+    #[inline]
+    pub fn row_vals(&self, i: usize) -> &[Val] {
+        &self.vals[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// Number of nonzeros in row `i`.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Element lookup by binary search (the indirection chain from the
+    /// paper's §II: row_ptr → col scan → value). O(log nnz(row)).
+    pub fn get(&self, i: usize, j: usize) -> Val {
+        let cols = self.row_cols(i);
+        match cols.binary_search(&(j as Idx)) {
+            Ok(k) => self.row_vals(i)[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Validate invariants: monotone `row_ptr`, in-bounds sorted strict
+    /// columns per row, parallel array lengths.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.row_ptr.len() == self.nrows + 1, "row_ptr length");
+        ensure!(self.row_ptr[0] == 0, "row_ptr[0] != 0");
+        ensure!(*self.row_ptr.last().unwrap() == self.cols.len(), "row_ptr end");
+        ensure!(self.cols.len() == self.vals.len(), "cols/vals length mismatch");
+        // check the pointer array fully before any slicing
+        for i in 0..self.nrows {
+            ensure!(self.row_ptr[i] <= self.row_ptr[i + 1], "row_ptr not monotone at {i}");
+            ensure!(self.row_ptr[i + 1] <= self.cols.len(), "row_ptr[{}] exceeds nnz", i + 1);
+        }
+        for i in 0..self.nrows {
+            let cols = self.row_cols(i);
+            for w in cols.windows(2) {
+                ensure!(w[0] < w[1], "row {i} columns not strictly ascending");
+            }
+            if let Some(&last) = cols.last() {
+                ensure!((last as usize) < self.ncols, "row {i} column out of bounds");
+            }
+        }
+        Ok(())
+    }
+
+    /// Sort each row by column and sum duplicate columns, in place.
+    /// Used by the COO conversion; idempotent on valid matrices.
+    pub(crate) fn sort_rows_and_sum_duplicates(&mut self) {
+        let mut new_cols = Vec::with_capacity(self.cols.len());
+        let mut new_vals = Vec::with_capacity(self.vals.len());
+        let mut new_ptr = vec![0usize; self.nrows + 1];
+        let mut scratch: Vec<(Idx, Val)> = Vec::new();
+        for i in 0..self.nrows {
+            scratch.clear();
+            scratch.extend(
+                self.row_cols(i)
+                    .iter()
+                    .copied()
+                    .zip(self.row_vals(i).iter().copied()),
+            );
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut k = 0;
+            while k < scratch.len() {
+                let (c, mut v) = scratch[k];
+                let mut j = k + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                new_cols.push(c);
+                new_vals.push(v);
+                k = j;
+            }
+            new_ptr[i + 1] = new_cols.len();
+        }
+        self.cols = new_cols;
+        self.vals = new_vals;
+        self.row_ptr = new_ptr;
+    }
+
+    /// Convert to COO triplets.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.nrows, self.ncols);
+        for i in 0..self.nrows {
+            for (c, v) in self.row_cols(i).iter().zip(self.row_vals(i)) {
+                coo.rows.push(i as Idx);
+                coo.cols.push(*c);
+                coo.vals.push(*v);
+            }
+        }
+        coo
+    }
+
+    /// Convert to CSC (counting-sort transpose of the storage; O(nnz + n)).
+    pub fn to_csc(&self) -> Csc {
+        let nnz = self.nnz();
+        let mut col_ptr = vec![0usize; self.ncols + 1];
+        for &c in &self.cols {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for j in 0..self.ncols {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        let mut rows = vec![0 as Idx; nnz];
+        let mut vals = vec![0 as Val; nnz];
+        let mut next = col_ptr.clone();
+        for i in 0..self.nrows {
+            for (c, v) in self.row_cols(i).iter().zip(self.row_vals(i)) {
+                let dst = next[*c as usize];
+                rows[dst] = i as Idx;
+                vals[dst] = *v;
+                next[*c as usize] += 1;
+            }
+        }
+        Csc { nrows: self.nrows, ncols: self.ncols, col_ptr, rows, vals }
+    }
+
+    /// Transpose via CSC reinterpretation.
+    pub fn transpose(&self) -> Csr {
+        let csc = self.to_csc();
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            row_ptr: csc.col_ptr,
+            cols: csc.rows,
+            vals: csc.vals,
+        }
+    }
+
+    /// Maximum row nnz (drives RIR bundle splitting and sim occupancy).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.nrows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
+    }
+
+    /// Frobenius-norm difference vs another matrix of the same shape
+    /// (test/verification helper; tolerates different sparsity patterns).
+    pub fn frob_diff(&self, other: &Csr) -> f64 {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        let mut acc = 0f64;
+        for i in 0..self.nrows {
+            // merge-walk the two sorted rows
+            let (ac, av) = (self.row_cols(i), self.row_vals(i));
+            let (bc, bv) = (other.row_cols(i), other.row_vals(i));
+            let (mut p, mut q) = (0usize, 0usize);
+            while p < ac.len() || q < bc.len() {
+                let d = match (ac.get(p), bc.get(q)) {
+                    (Some(&ca), Some(&cb)) if ca == cb => {
+                        let d = (av[p] - bv[q]) as f64;
+                        p += 1;
+                        q += 1;
+                        d
+                    }
+                    (Some(&ca), Some(&cb)) if ca < cb => {
+                        let d = av[p] as f64;
+                        p += 1;
+                        d
+                    }
+                    (Some(_), Some(_)) | (None, Some(_)) => {
+                        let d = bv[q] as f64;
+                        q += 1;
+                        d
+                    }
+                    (Some(_), None) => {
+                        let d = av[p] as f64;
+                        p += 1;
+                        d
+                    }
+                    (None, None) => unreachable!(),
+                };
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [1 0 2]
+        // [0 0 0]
+        // [3 4 0]
+        Csr::from_parts(3, 3, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0])
+            .unwrap()
+    }
+
+    #[test]
+    fn accessors() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+        assert_eq!(m.row_cols(2), &[0, 1]);
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(1, 1), 0.0);
+        assert!((m.density() - 4.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csc_roundtrip() {
+        let m = sample();
+        let csc = m.to_csc();
+        assert_eq!(csc.col_ptr, vec![0, 2, 3, 4]);
+        let back = csc.to_csr();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn transpose_twice_is_identity() {
+        let m = sample();
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_moves_entries() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.get(2, 0), 2.0);
+        assert_eq!(t.get(1, 2), 4.0);
+    }
+
+    #[test]
+    fn validate_rejects_unsorted() {
+        let m = Csr {
+            nrows: 1,
+            ncols: 3,
+            row_ptr: vec![0, 2],
+            cols: vec![2, 0],
+            vals: vec![1.0, 1.0],
+        };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_ptr() {
+        let m = Csr { nrows: 2, ncols: 2, row_ptr: vec![0, 3, 1], cols: vec![0], vals: vec![1.0] };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn frob_diff_zero_on_equal_and_positive_on_diff() {
+        let m = sample();
+        assert_eq!(m.frob_diff(&m), 0.0);
+        let mut n = m.clone();
+        n.vals[0] += 3.0;
+        assert!((m.frob_diff(&n) - 3.0).abs() < 1e-6);
+        // different patterns
+        let z = Csr::new(3, 3);
+        let total: f64 = m.vals.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        assert!((m.frob_diff(&z) - total.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_row_nnz_works() {
+        assert_eq!(sample().max_row_nnz(), 2);
+        assert_eq!(Csr::new(2, 2).max_row_nnz(), 0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Small dense matrices — test oracles only (never on a hot path).
+//!
+//! The unit/property tests check every sparse kernel against the
+//! corresponding dense computation on small instances; this module is that
+//! dense side.
+
+use super::{Csr, Val};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<Val>,
+}
+
+impl Dense {
+    /// Zero matrix.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Dense { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Dense::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major slice.
+    pub fn from_rows(nrows: usize, ncols: usize, data: &[Val]) -> Self {
+        assert_eq!(data.len(), nrows * ncols);
+        Dense { nrows, ncols, data: data.to_vec() }
+    }
+
+    /// Dense × dense (naive; oracle only).
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.ncols, other.nrows);
+        let mut out = Dense::zeros(self.nrows, other.ncols);
+        for i in 0..self.nrows {
+            for k in 0..self.ncols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.ncols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Dense Cholesky (lower), f64 accumulation; panics on non-SPD.
+    pub fn cholesky(&self) -> Dense {
+        assert_eq!(self.nrows, self.ncols);
+        let n = self.nrows;
+        let mut l = vec![0f64; n * n];
+        for j in 0..n {
+            let mut d = self[(j, j)] as f64;
+            for k in 0..j {
+                d -= l[j * n + k] * l[j * n + k];
+            }
+            assert!(d > 0.0, "matrix not positive definite at column {j} (d={d})");
+            let djj = d.sqrt();
+            l[j * n + j] = djj;
+            for i in (j + 1)..n {
+                let mut s = self[(i, j)] as f64;
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                l[i * n + j] = s / djj;
+            }
+        }
+        Dense { nrows: n, ncols: n, data: l.into_iter().map(|x| x as Val).collect() }
+    }
+
+    /// Convert to CSR, dropping exact zeros.
+    pub fn to_csr(&self) -> Csr {
+        let mut row_ptr = vec![0usize; self.nrows + 1];
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..self.nrows {
+            for j in 0..self.ncols {
+                let v = self[(i, j)];
+                if v != 0.0 {
+                    cols.push(j as super::Idx);
+                    vals.push(v);
+                }
+            }
+            row_ptr[i + 1] = cols.len();
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, row_ptr, cols, vals }
+    }
+
+    /// From CSR (densify).
+    pub fn from_csr(m: &Csr) -> Dense {
+        let mut out = Dense::zeros(m.nrows, m.ncols);
+        for i in 0..m.nrows {
+            for (c, v) in m.row_cols(i).iter().zip(m.row_vals(i)) {
+                out[(i, *c as usize)] = *v;
+            }
+        }
+        out
+    }
+
+    /// Max absolute elementwise difference.
+    pub fn max_abs_diff(&self, other: &Dense) -> f64 {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// Matrix–vector product (oracle for triangular-solve tests).
+    pub fn matvec(&self, x: &[Val]) -> Vec<Val> {
+        assert_eq!(x.len(), self.ncols);
+        (0..self.nrows)
+            .map(|i| {
+                (0..self.ncols)
+                    .map(|j| (self[(i, j)] as f64) * (x[j] as f64))
+                    .sum::<f64>() as Val
+            })
+            .collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Dense {
+    type Output = Val;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &Val {
+        &self.data[i * self.ncols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Dense {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut Val {
+        &mut self.data[i * self.ncols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Dense::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.matmul(&Dense::eye(2)), a);
+        assert_eq!(Dense::eye(2).matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Dense::from_rows(2, 3, &[1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        let b = Dense::from_rows(3, 2, &[1.0, 2.0, 0.0, 1.0, 4.0, 0.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Dense::from_rows(2, 2, &[9.0, 2.0, 0.0, 3.0]));
+    }
+
+    #[test]
+    fn cholesky_recovers_known_factor() {
+        // L = [[2,0],[1,3]]; A = L L^T = [[4,2],[2,10]]
+        let a = Dense::from_rows(2, 2, &[4.0, 2.0, 2.0, 10.0]);
+        let l = a.cholesky();
+        assert!(l.max_abs_diff(&Dense::from_rows(2, 2, &[2.0, 0.0, 1.0, 3.0])) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive definite")]
+    fn cholesky_rejects_indefinite() {
+        Dense::from_rows(2, 2, &[1.0, 2.0, 2.0, 1.0]).cholesky();
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let a = Dense::from_rows(2, 3, &[1.0, 0.0, 2.0, 0.0, 0.0, 3.0]);
+        let csr = a.to_csr();
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(Dense::from_csr(&csr), a);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Dense::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+}

@@ -1,0 +1,259 @@
+//! Deterministic synthetic sparse-matrix generators.
+//!
+//! The evaluation image has no network access, so the 24 SuiteSparse
+//! matrices of Table I are replaced by synthetic clones matched on the
+//! properties that actually drive REAP's behaviour: dimension, nnz
+//! (density), row-length distribution and pattern family. Each generator
+//! corresponds to an application domain present in the suite:
+//!
+//! * [`random_uniform`] — Erdős–Rényi-style scatter (e.g. `cage12`, DNA
+//!   electrophoresis; `m133-b3` simplicial complexes).
+//! * [`banded_fem`] — banded + local-stencil patterns of FEM stiffness
+//!   matrices (`bcsstk*`, `cant`, `consph`, `offshore`, `filter3D`, …).
+//! * [`power_law`] — skewed degree distributions of network/economic
+//!   matrices (`mbeacxc`, `descriptor_xingo6u`, circuit matrices). The
+//!   skew stresses REAP's big-row splitting.
+//! * [`block_random`] — clustered blocks (supernodal-ish patterns of
+//!   `pdb1HYs`, `rma10`).
+//!
+//! All generators are seeded ([`Pcg64`]) and allocate exact-size CSR
+//! directly where possible; they are used by tests, examples, and the
+//! Table-I suite in `harness::suite`.
+
+use crate::util::Pcg64;
+
+use super::{ops, Coo, Csc, Csr, Idx, Val};
+
+/// Pattern family — recorded in the Table-I clone registry so the harness
+/// can report which family stood in for which SuiteSparse matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    RandomUniform,
+    BandedFem,
+    PowerLaw,
+    BlockRandom,
+}
+
+impl std::fmt::Display for Family {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Family::RandomUniform => "random-uniform",
+            Family::BandedFem => "banded-fem",
+            Family::PowerLaw => "power-law",
+            Family::BlockRandom => "block-random",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Generate by family with a target nnz.
+pub fn generate(family: Family, n: usize, target_nnz: usize, seed: u64) -> Csr {
+    match family {
+        Family::RandomUniform => random_uniform(n, n, target_nnz, seed),
+        Family::BandedFem => banded_fem(n, target_nnz, seed),
+        Family::PowerLaw => power_law(n, target_nnz, seed),
+        Family::BlockRandom => block_random(n, target_nnz, seed),
+    }
+}
+
+/// Uniform random matrix with exactly `min(target_nnz, nrows*ncols)`
+/// nonzeros, spread evenly across rows (±1).
+pub fn random_uniform(nrows: usize, ncols: usize, target_nnz: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::with_stream(seed, 0x5eed_0001);
+    let total = target_nnz.min(nrows.saturating_mul(ncols));
+    let base = if nrows == 0 { 0 } else { total / nrows };
+    let extra = if nrows == 0 { 0 } else { total % nrows };
+    let mut row_ptr = vec![0usize; nrows + 1];
+    let mut cols: Vec<Idx> = Vec::with_capacity(total);
+    let mut vals: Vec<Val> = Vec::with_capacity(total);
+    for i in 0..nrows {
+        let k = (base + usize::from(i < extra)).min(ncols);
+        for c in rng.sample_distinct(ncols, k) {
+            cols.push(c as Idx);
+            vals.push(rng.signed_unit_f32());
+        }
+        row_ptr[i + 1] = cols.len();
+    }
+    Csr { nrows, ncols, row_ptr, cols, vals }
+}
+
+/// FEM-style banded matrix: a tridiagonal-ish core plus a few local stencil
+/// neighbours within a bandwidth proportional to the target density, plus
+/// sparse long-range couplings (multi-physics links). Symmetric pattern.
+pub fn banded_fem(n: usize, target_nnz: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::with_stream(seed, 0x5eed_0002);
+    let per_row = (target_nnz / n.max(1)).max(1);
+    // Keep ~90% of entries within the band, 10% long-range.
+    let band_per_row = ((per_row as f64 * 0.9) as usize).max(1);
+    let far_per_row = per_row - band_per_row.min(per_row);
+    let half_band = (band_per_row * 2).max(2).min(n.saturating_sub(1).max(1));
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 2.0 + rng.next_f32());
+        let lo = i.saturating_sub(half_band);
+        let hi = (i + half_band + 1).min(n);
+        // sample band neighbours below the diagonal; mirror for symmetry
+        let mut placed = 0usize;
+        let mut guard = 0usize;
+        while placed < band_per_row / 2 + 1 && guard < 8 * band_per_row + 8 {
+            guard += 1;
+            let j = rng.range(lo, hi);
+            if j < i {
+                let v = rng.signed_unit_f32();
+                coo.push(i, j, v);
+                coo.push(j, i, v);
+                placed += 1;
+            }
+        }
+        for _ in 0..far_per_row / 2 {
+            let j = rng.range(0, n);
+            if j != i {
+                let v = rng.signed_unit_f32() * 0.1;
+                coo.push(i, j, v);
+                coo.push(j, i, v);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Power-law (Zipf-ish) row degrees: a few very heavy rows, a long tail of
+/// light rows. Exercises RIR bundle splitting and pipeline load imbalance.
+pub fn power_law(n: usize, target_nnz: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::with_stream(seed, 0x5eed_0003);
+    // degrees ∝ rank^(-alpha), normalized to target_nnz
+    let alpha = 1.2f64;
+    let weights: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-alpha)).collect();
+    let wsum: f64 = weights.iter().sum();
+    // randomize which rows are heavy
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let mut degrees = vec![0usize; n];
+    for (rank, &row) in perm.iter().enumerate() {
+        let d = (weights[rank] / wsum * target_nnz as f64).round() as usize;
+        degrees[row] = d.clamp(1, n);
+    }
+    let mut row_ptr = vec![0usize; n + 1];
+    let mut cols: Vec<Idx> = Vec::new();
+    let mut vals: Vec<Val> = Vec::new();
+    for i in 0..n {
+        for c in rng.sample_distinct(n, degrees[i]) {
+            cols.push(c as Idx);
+            vals.push(rng.signed_unit_f32());
+        }
+        row_ptr[i + 1] = cols.len();
+    }
+    Csr { nrows: n, ncols: n, row_ptr, cols, vals }
+}
+
+/// Clustered blocks: dense-ish square blocks along the diagonal plus random
+/// inter-block couplings (protein / multi-body patterns).
+pub fn block_random(n: usize, target_nnz: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::with_stream(seed, 0x5eed_0004);
+    let block = ((n as f64).sqrt() as usize).clamp(4, 64).min(n.max(1));
+    let nblocks = n.div_ceil(block);
+    // Spend ~70% of nnz inside diagonal blocks, 30% across.
+    let in_block_total = target_nnz * 7 / 10;
+    let cross_total = target_nnz - in_block_total;
+    let per_block = in_block_total / nblocks.max(1);
+    let mut coo = Coo::new(n, n);
+    for b in 0..nblocks {
+        let lo = b * block;
+        let hi = ((b + 1) * block).min(n);
+        let size = hi - lo;
+        let cap = size * size;
+        let k = per_block.min(cap);
+        for idx in rng.sample_distinct(cap, k) {
+            let (r, c) = (lo + idx / size, lo + idx % size);
+            coo.push(r, c, rng.signed_unit_f32());
+        }
+    }
+    for _ in 0..cross_total {
+        let r = rng.range(0, n);
+        let c = rng.range(0, n);
+        coo.push(r, c, rng.signed_unit_f32() * 0.2);
+    }
+    coo.to_csr()
+}
+
+/// An SPD matrix with the pattern of the given family — the Cholesky-side
+/// generator (see `ops::make_spd` for the construction).
+pub fn spd(family: Family, n: usize, target_nnz: usize, seed: u64) -> Csc {
+    let base = generate(family, n, target_nnz, seed);
+    ops::make_spd(&base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_uniform_hits_exact_nnz() {
+        let m = random_uniform(100, 100, 500, 1);
+        assert_eq!(m.nnz(), 500);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn random_uniform_caps_at_dense() {
+        let m = random_uniform(4, 4, 100, 1);
+        assert_eq!(m.nnz(), 16);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        for fam in [Family::RandomUniform, Family::BandedFem, Family::PowerLaw, Family::BlockRandom]
+        {
+            let a = generate(fam, 80, 400, 7);
+            let b = generate(fam, 80, 400, 7);
+            assert_eq!(a, b, "{fam} not deterministic");
+            let c = generate(fam, 80, 400, 8);
+            assert_ne!(a, c, "{fam} ignores seed");
+        }
+    }
+
+    #[test]
+    fn nnz_within_tolerance_of_target() {
+        for fam in [Family::RandomUniform, Family::BandedFem, Family::PowerLaw, Family::BlockRandom]
+        {
+            let target = 2000;
+            let m = generate(fam, 200, target, 3);
+            m.validate().unwrap();
+            let ratio = m.nnz() as f64 / target as f64;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{fam}: nnz {} vs target {target}",
+                m.nnz()
+            );
+        }
+    }
+
+    #[test]
+    fn banded_fem_is_symmetric_pattern() {
+        let m = banded_fem(60, 500, 5);
+        let t = m.transpose();
+        // structural symmetry: same pattern both ways
+        for i in 0..m.nrows {
+            assert_eq!(m.row_cols(i), t.row_cols(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn power_law_has_skew() {
+        let m = power_law(300, 6000, 11);
+        let mut lens: Vec<usize> = (0..m.nrows).map(|i| m.row_nnz(i)).collect();
+        lens.sort_unstable();
+        let max = *lens.last().unwrap();
+        let med = lens[lens.len() / 2];
+        assert!(max >= med * 5, "expected heavy tail: max={max} med={med}");
+    }
+
+    #[test]
+    fn spd_generator_is_factorizable() {
+        use crate::sparse::Dense;
+        let a = spd(Family::BandedFem, 24, 100, 9);
+        let d = Dense::from_csr(&a.to_csr());
+        let _ = d.cholesky(); // panics if not SPD
+    }
+}

@@ -1,0 +1,186 @@
+//! Matrix Market (.mtx) I/O.
+//!
+//! The paper's evaluation uses SuiteSparse matrices, which are distributed
+//! in this format; with network access the real Table-I matrices can be
+//! dropped into `data/` and every harness accepts `--mtx <path>` instead of
+//! a synthetic clone. Supports the `matrix coordinate
+//! real|integer|pattern general|symmetric` subset (what SuiteSparse uses).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{Coo, Csr, Val};
+
+/// Read a Matrix Market coordinate file into COO.
+pub fn read_coo(path: &Path) -> Result<Coo> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read_coo_from(std::io::BufReader::new(f))
+}
+
+/// Read from any buffered reader (unit-testable without touching disk).
+pub fn read_coo_from<R: BufRead>(reader: R) -> Result<Coo> {
+    let mut lines = reader.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if !l.trim().is_empty() {
+                    break l;
+                }
+            }
+            None => bail!("empty MatrixMarket file"),
+        }
+    };
+    let h: Vec<String> = header.split_whitespace().map(|t| t.to_ascii_lowercase()).collect();
+    ensure!(
+        h.len() >= 5 && h[0] == "%%matrixmarket" && h[1] == "matrix",
+        "not a MatrixMarket matrix header: {header}"
+    );
+    ensure!(h[2] == "coordinate", "only coordinate format supported, got {}", h[2]);
+    let field = h[3].as_str();
+    ensure!(
+        matches!(field, "real" | "integer" | "pattern"),
+        "unsupported field type {field}"
+    );
+    let symmetry = h[4].as_str();
+    ensure!(
+        matches!(symmetry, "general" | "symmetric"),
+        "unsupported symmetry {symmetry}"
+    );
+
+    // skip comments, read size line
+    let size_line = loop {
+        let l = lines.next().context("missing size line")??;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        break l;
+    };
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().context("bad size line"))
+        .collect::<Result<_>>()?;
+    ensure!(dims.len() == 3, "size line needs 3 fields: {size_line}");
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::new(nrows, ncols);
+    let mut seen = 0usize;
+    for l in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("missing row")?.parse()?;
+        let c: usize = it.next().context("missing col")?.parse()?;
+        ensure!(r >= 1 && c >= 1 && r <= nrows && c <= ncols, "entry ({r},{c}) out of bounds");
+        let v: Val = match field {
+            "pattern" => 1.0,
+            _ => it.next().context("missing value")?.parse::<f64>()? as Val,
+        };
+        coo.push(r - 1, c - 1, v);
+        if symmetry == "symmetric" && r != c {
+            coo.push(c - 1, r - 1, v);
+        }
+        seen += 1;
+    }
+    ensure!(seen == nnz, "expected {nnz} entries, found {seen}");
+    Ok(coo)
+}
+
+/// Read straight to CSR.
+pub fn read_csr(path: &Path) -> Result<Csr> {
+    Ok(read_coo(path)?.to_csr())
+}
+
+/// Write CSR as a `general real` coordinate file.
+pub fn write_csr(path: &Path, m: &Csr) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by reap (REAP reproduction)")?;
+    writeln!(w, "{} {} {}", m.nrows, m.ncols, m.nnz())?;
+    for i in 0..m.nrows {
+        for (c, v) in m.row_cols(i).iter().zip(m.row_vals(i)) {
+            writeln!(w, "{} {} {}", i + 1, *c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const SAMPLE: &str = "%%MatrixMarket matrix coordinate real general\n\
+        % comment\n\
+        3 3 3\n\
+        1 1 2.5\n\
+        2 3 -1\n\
+        3 1 4\n";
+
+    #[test]
+    fn parses_general_real() {
+        let coo = read_coo_from(Cursor::new(SAMPLE)).unwrap();
+        let csr = coo.to_csr();
+        assert_eq!(csr.nrows, 3);
+        assert_eq!(csr.get(0, 0), 2.5);
+        assert_eq!(csr.get(1, 2), -1.0);
+        assert_eq!(csr.get(2, 0), 4.0);
+    }
+
+    #[test]
+    fn parses_symmetric_mirrors_offdiag() {
+        let s = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 3\n2 1 5\n";
+        let csr = read_coo_from(Cursor::new(s)).unwrap().to_csr();
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.get(0, 1), 5.0);
+        assert_eq!(csr.get(1, 0), 5.0);
+    }
+
+    #[test]
+    fn parses_pattern_as_ones() {
+        let s = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n2 2\n";
+        let csr = read_coo_from(Cursor::new(s)).unwrap().to_csr();
+        assert_eq!(csr.get(1, 1), 1.0);
+    }
+
+    #[test]
+    fn rejects_array_format() {
+        let s = "%%MatrixMarket matrix array real general\n2 2\n1\n2\n3\n4\n";
+        assert!(read_coo_from(Cursor::new(s)).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_count() {
+        let s = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1\n";
+        assert!(read_coo_from(Cursor::new(s)).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_entry() {
+        let s = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1\n";
+        assert!(read_coo_from(Cursor::new(s)).is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let m = crate::sparse::gen::random_uniform(10, 8, 30, 42);
+        let dir = std::env::temp_dir().join("reap_mm_test");
+        let path = dir.join("m.mtx");
+        write_csr(&path, &m).unwrap();
+        let back = read_csr(&path).unwrap();
+        assert_eq!(back, m);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,37 @@
+//! Sparse-matrix substrate: storage formats, conversions, I/O and synthetic
+//! generators.
+//!
+//! REAP consumes matrices in the standard formats (the paper stresses that
+//! keeping CSR/CSC/COO as the external interface aids portability and data
+//! curation); everything downstream — RIR encoding, the CPU baselines, the
+//! FPGA simulator — is built on the types here.
+//!
+//! * [`coo::Coo`] — coordinate triplets (assembly / I/O format).
+//! * [`csr::Csr`] — compressed sparse row (the SpGEMM input format).
+//! * [`csc::Csc`] — compressed sparse column (the Cholesky input format).
+//! * [`dense::Dense`] — small dense matrices, used only as test oracles.
+//! * [`mm`] — Matrix Market (.mtx) read/write, for external matrices.
+//! * [`gen`] — deterministic synthetic generators standing in for the
+//!   SuiteSparse collection (see DESIGN.md §6 Substitutions).
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod dense;
+pub mod gen;
+pub mod mm;
+pub mod ops;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use dense::Dense;
+
+/// Index type used throughout. `u32` halves memory traffic vs `usize` on the
+/// hot paths (matching the 4-byte indices the paper's FPGA streams) while
+/// still covering every matrix in the evaluation suite.
+pub type Idx = u32;
+
+/// Scalar type: single precision, matching the paper's FPGA DSP blocks
+/// (the Arria-10 IP has no double-precision FP units).
+pub type Val = f32;

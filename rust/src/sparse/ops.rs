@@ -1,0 +1,163 @@
+//! Structural operations shared by the generators and the Cholesky path:
+//! symmetrization, SPD construction, pattern utilities.
+
+use super::{Coo, Csc, Csr, Val};
+
+/// Symmetrize a pattern: `B = A + A^T` (values summed where both exist).
+pub fn symmetrize(a: &Csr) -> Csr {
+    assert_eq!(a.nrows, a.ncols, "symmetrize needs a square matrix");
+    let t = a.transpose();
+    add(a, &t)
+}
+
+/// Sparse add `A + B` (same shape), merging sorted rows.
+pub fn add(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!((a.nrows, a.ncols), (b.nrows, b.ncols));
+    let mut row_ptr = vec![0usize; a.nrows + 1];
+    let mut cols = Vec::with_capacity(a.nnz() + b.nnz());
+    let mut vals = Vec::with_capacity(a.nnz() + b.nnz());
+    for i in 0..a.nrows {
+        let (ac, av) = (a.row_cols(i), a.row_vals(i));
+        let (bc, bv) = (b.row_cols(i), b.row_vals(i));
+        let (mut p, mut q) = (0usize, 0usize);
+        while p < ac.len() || q < bc.len() {
+            match (ac.get(p), bc.get(q)) {
+                (Some(&ca), Some(&cb)) if ca == cb => {
+                    cols.push(ca);
+                    vals.push(av[p] + bv[q]);
+                    p += 1;
+                    q += 1;
+                }
+                (Some(&ca), Some(&cb)) if ca < cb => {
+                    cols.push(ca);
+                    vals.push(av[p]);
+                    p += 1;
+                }
+                (Some(_), Some(_)) | (None, Some(_)) => {
+                    cols.push(bc[q]);
+                    vals.push(bv[q]);
+                    q += 1;
+                }
+                (Some(&ca), None) => {
+                    cols.push(ca);
+                    vals.push(av[p]);
+                    p += 1;
+                }
+                (None, None) => unreachable!(),
+            }
+        }
+        row_ptr[i + 1] = cols.len();
+    }
+    Csr { nrows: a.nrows, ncols: a.ncols, row_ptr, cols, vals }
+}
+
+/// Make a symmetric positive-definite matrix from an arbitrary square
+/// pattern: `S = (A + A^T)/2` scaled to unit off-diagonal magnitude, then a
+/// diagonal shift making it strictly diagonally dominant (hence SPD).
+///
+/// This mirrors how SPD test problems are conventionally manufactured and
+/// preserves the sparsity pattern, which is what drives both CHOLMOD's and
+/// REAP's behaviour.
+pub fn make_spd(a: &Csr) -> Csc {
+    assert_eq!(a.nrows, a.ncols);
+    let sym = symmetrize(a);
+    let n = sym.nrows;
+    // Row sums of |off-diagonal| for the dominance shift.
+    let mut coo = Coo::new(n, n);
+    let mut absum = vec![0f64; n];
+    for i in 0..n {
+        for (c, v) in sym.row_cols(i).iter().zip(sym.row_vals(i)) {
+            let j = *c as usize;
+            if j != i {
+                // clamp magnitudes so the shift stays modest
+                let w = (*v).clamp(-1.0, 1.0);
+                let w = if w == 0.0 { 0.5 } else { w };
+                coo.push(i, j, w);
+                absum[i] += w.abs() as f64;
+            }
+        }
+    }
+    for i in 0..n {
+        coo.push(i, i, (absum[i] + 1.0) as Val);
+    }
+    coo.to_csr().to_csc()
+}
+
+/// Drop entries with |v| <= tol (pattern pruning used by tests).
+pub fn drop_tol(a: &Csr, tol: Val) -> Csr {
+    let mut row_ptr = vec![0usize; a.nrows + 1];
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for i in 0..a.nrows {
+        for (c, v) in a.row_cols(i).iter().zip(a.row_vals(i)) {
+            if v.abs() > tol {
+                cols.push(*c);
+                vals.push(*v);
+            }
+        }
+        row_ptr[i + 1] = cols.len();
+    }
+    Csr { nrows: a.nrows, ncols: a.ncols, row_ptr, cols, vals }
+}
+
+/// Is the matrix structurally and numerically symmetric (within tol)?
+pub fn is_symmetric(a: &Csr, tol: Val) -> bool {
+    if a.nrows != a.ncols {
+        return false;
+    }
+    let t = a.transpose();
+    a.frob_diff(&t) <= tol as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Dense;
+
+    fn asym() -> Csr {
+        Dense::from_rows(3, 3, &[0.0, 2.0, 0.0, 0.0, 1.0, 0.0, 4.0, 0.0, 0.0]).to_csr()
+    }
+
+    #[test]
+    fn add_matches_dense() {
+        let a = asym();
+        let b = a.transpose();
+        let s = add(&a, &b);
+        let expect = Dense::from_rows(3, 3, &[0.0, 2.0, 4.0, 2.0, 2.0, 0.0, 4.0, 0.0, 0.0]);
+        assert!(Dense::from_csr(&s).max_abs_diff(&expect) < 1e-6);
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric() {
+        let s = symmetrize(&asym());
+        assert!(is_symmetric(&s, 0.0));
+    }
+
+    #[test]
+    fn make_spd_factorizes() {
+        let spd = make_spd(&asym());
+        let d = Dense::from_csr(&spd.to_csr());
+        let l = d.cholesky(); // panics if not SPD
+        // L L^T == A
+        let mut lt = Dense::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                lt[(i, j)] = l[(j, i)];
+            }
+        }
+        assert!(l.matmul(&lt).max_abs_diff(&d) < 1e-4);
+    }
+
+    #[test]
+    fn drop_tol_prunes() {
+        let a = Dense::from_rows(2, 2, &[0.5, 0.0, 0.05, 2.0]).to_csr();
+        let p = drop_tol(&a, 0.1);
+        assert_eq!(p.nnz(), 2);
+        assert_eq!(p.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn is_symmetric_negative_case() {
+        assert!(!is_symmetric(&asym(), 1e-9));
+    }
+}

@@ -1,0 +1,258 @@
+//! Packaging the symbolic analysis for the FPGA (paper Fig 4(c)/(d)).
+//!
+//! The CPU ships two things per column k of L:
+//!
+//! * the **RA stream** — column k of A in RIR form (data bundles), and
+//! * the **RL stream** — metadata-only bundles with one `(r, start, end)`
+//!   triple per nonzero row of column k of L, telling the FPGA where row r
+//!   of L lives in its own memory ("As L resides in FPGA's memory, the CPU
+//!   also provides information about where a particular row R1 of L starts
+//!   and ends").
+//!
+//! Both are written directly in the flat Fig-3(d) word layout (the
+//! bundle-object path exists for tests/decoding; the streaming writers are
+//! what the measured CPU pass runs — EXPERIMENTS.md §Perf iteration 3).
+//! L is laid out **row-major** in FPGA memory because the dot-product PEs
+//! consume rows of L (`L(r, 0:k-1) · L(k, 0:k-1)`).
+
+use crate::rir::bundle::{Bundle, BundleFlags, RlTriple};
+use crate::rir::layout::{self, WORD_BYTES};
+use crate::sparse::{Csc, Idx};
+
+use super::pattern::{symbolic_factor, LPattern};
+
+/// Row-major storage map of L in FPGA memory: element offsets of each row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LStorageMap {
+    /// `row_ptr[r]..row_ptr[r+1]` = element offsets of row r of L.
+    pub row_ptr: Vec<usize>,
+    /// Column indices within each row (ascending; ends with the diagonal).
+    pub cols: Vec<Idx>,
+}
+
+impl LStorageMap {
+    /// Columns of row r.
+    pub fn row_cols(&self, r: usize) -> &[Idx] {
+        &self.cols[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// Element count of row r.
+    pub fn row_len(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Total stored elements (= nnz(L)).
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// True when the map holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+}
+
+/// Everything the CPU's symbolic pass produces for one factorization.
+#[derive(Clone, Debug)]
+pub struct CholeskySymbolic {
+    /// Column-wise pattern of L (diagonal-first per column).
+    pub pattern: LPattern,
+    /// Row-major storage map of L in FPGA memory.
+    pub storage: LStorageMap,
+    /// RA data stream (flat Fig-3(d) words) and words-per-column.
+    pub ra_words: Vec<u32>,
+    pub ra_col_words: Vec<u32>,
+    /// RL metadata stream and words-per-column.
+    pub rl_words: Vec<u32>,
+    pub rl_col_words: Vec<u32>,
+}
+
+impl CholeskySymbolic {
+    /// Run the full CPU-side symbolic pass on the lower triangle of A.
+    pub fn analyze(a_lower: &Csc, bundle_size: usize) -> Self {
+        let pattern = symbolic_factor(a_lower);
+        let storage = row_storage_map(&pattern);
+        let mut ra_words = Vec::with_capacity(2 * a_lower.nnz() + 2 * a_lower.ncols);
+        let mut ra_col_words = Vec::new();
+        layout::write_csc_stream(a_lower, bundle_size, &mut ra_words, &mut ra_col_words);
+        let mut rl_words = Vec::with_capacity(3 * pattern.nnz() + 2 * pattern.n);
+        let mut rl_col_words = Vec::new();
+        layout::write_rl_stream(&pattern, &storage, bundle_size, &mut rl_words, &mut rl_col_words);
+        CholeskySymbolic { pattern, storage, ra_words, ra_col_words, rl_words, rl_col_words }
+    }
+
+    /// Bytes of metadata+data streamed from CPU to FPGA (the coarse-grained
+    /// communication the paper contrasts with fine-grained PCIe chatter).
+    pub fn stream_bytes(&self) -> usize {
+        (self.ra_words.len() + self.rl_words.len()) * WORD_BYTES
+    }
+
+    /// Bytes of the RA chain of column k.
+    pub fn ra_col_bytes(&self, k: usize) -> u64 {
+        self.ra_col_words[k] as u64 * WORD_BYTES as u64
+    }
+
+    /// Bytes of the RL chain of column k.
+    pub fn rl_col_bytes(&self, k: usize) -> u64 {
+        self.rl_col_words[k] as u64 * WORD_BYTES as u64
+    }
+}
+
+/// Build the row-major storage map from the column-wise pattern.
+///
+/// Row r of L holds every column j ≤ r with L(r,j) != 0; ascending column
+/// order, so the diagonal is last — the dot-product PE streams the row and
+/// the div/sqrt PE consumes the diagonal at the end.
+pub fn row_storage_map(pattern: &LPattern) -> LStorageMap {
+    let n = pattern.n;
+    let mut row_ptr = vec![0usize; n + 1];
+    for j in 0..n {
+        for &r in pattern.col_rows(j) {
+            row_ptr[r as usize + 1] += 1;
+        }
+    }
+    for r in 0..n {
+        row_ptr[r + 1] += row_ptr[r];
+    }
+    let mut cols = vec![0 as Idx; row_ptr[n]];
+    let mut next = row_ptr.clone();
+    // columns ascend ⇒ each row receives its columns in ascending order
+    for j in 0..n {
+        for &r in pattern.col_rows(j) {
+            cols[next[r as usize]] = j as Idx;
+            next[r as usize] += 1;
+        }
+    }
+    LStorageMap { row_ptr, cols }
+}
+
+/// Reference (allocating) builder for the per-column RL metadata bundles —
+/// kept as the specification the streaming writer is tested against.
+pub fn rl_metadata_bundles(
+    pattern: &LPattern,
+    storage: &LStorageMap,
+    bundle_size: usize,
+) -> Vec<Bundle> {
+    assert!(bundle_size > 0);
+    let mut out = Vec::new();
+    for k in 0..pattern.n {
+        let rows = pattern.col_rows(k);
+        let triples: Vec<RlTriple> = rows
+            .iter()
+            .map(|&r| RlTriple {
+                row: r,
+                start: storage.row_ptr[r as usize] as u32,
+                end: storage.row_ptr[r as usize + 1] as u32,
+            })
+            .collect();
+        let nchunks = triples.len().div_ceil(bundle_size).max(1);
+        for (ci, chunk) in triples.chunks(bundle_size.max(1)).enumerate() {
+            let mut flags = BundleFlags::default();
+            if ci + 1 == nchunks {
+                flags = flags.with(BundleFlags::END_OF_ROW);
+            }
+            out.push(Bundle::schedule(k as Idx, chunk.to_vec(), flags));
+        }
+    }
+    if let Some(last) = out.last_mut() {
+        last.flags = last.flags.with(BundleFlags::END_OF_STREAM);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rir::encode::csc_to_bundles;
+    use crate::sparse::{gen, ops};
+
+    fn spd(seed: u64) -> Csc {
+        ops::make_spd(&gen::banded_fem(24, 150, seed))
+    }
+
+    #[test]
+    fn storage_map_is_transpose_of_pattern() {
+        let lower = spd(1).lower_triangle();
+        let sym = CholeskySymbolic::analyze(&lower, 32);
+        assert_eq!(sym.storage.len(), sym.pattern.nnz());
+        // every column entry appears in exactly one row list
+        for j in 0..sym.pattern.n {
+            for &r in sym.pattern.col_rows(j) {
+                assert!(
+                    sym.storage.row_cols(r as usize).contains(&(j as Idx)),
+                    "entry ({r},{j}) missing from row map"
+                );
+            }
+        }
+        // rows ascend and end with the diagonal
+        for r in 0..sym.pattern.n {
+            let cols = sym.storage.row_cols(r);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+            assert_eq!(*cols.last().unwrap() as usize, r);
+        }
+    }
+
+    #[test]
+    fn ra_stream_matches_bundle_reference() {
+        let lower = spd(2).lower_triangle();
+        let sym = CholeskySymbolic::analyze(&lower, 8);
+        let expect = layout::serialize(&csc_to_bundles(&lower, 8));
+        assert_eq!(sym.ra_words, expect);
+        assert_eq!(
+            sym.ra_col_words.iter().map(|&w| w as usize).sum::<usize>(),
+            sym.ra_words.len()
+        );
+    }
+
+    #[test]
+    fn rl_stream_matches_bundle_reference() {
+        let lower = spd(3).lower_triangle();
+        let sym = CholeskySymbolic::analyze(&lower, 8);
+        let reference = rl_metadata_bundles(&sym.pattern, &sym.storage, 8);
+        let expect = layout::serialize(&reference);
+        assert_eq!(sym.rl_words, expect);
+        // triples point at row extents
+        let decoded = layout::deserialize(&sym.rl_words).unwrap();
+        for b in &decoded {
+            assert!(b.flags.metadata_only());
+            for t in b.triples() {
+                let r = t.row as usize;
+                assert_eq!(t.start as usize, sym.storage.row_ptr[r]);
+                assert_eq!(t.end as usize, sym.storage.row_ptr[r + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn rl_bundles_split_like_data_bundles() {
+        // dense-first-column arrow matrix => column 0 of L has n rows
+        let n = 40;
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 4.0);
+            if i > 0 {
+                coo.push(i, 0, 0.5);
+                coo.push(0, i, 0.5);
+            }
+        }
+        let lower = coo.to_csr().to_csc().lower_triangle();
+        let sym = CholeskySymbolic::analyze(&lower, 8);
+        let decoded = layout::deserialize(&sym.rl_words).unwrap();
+        let col0: Vec<_> = decoded.iter().filter(|b| b.shared == 0).collect();
+        assert_eq!(col0.len(), 5); // ceil(40/8)
+        assert!(col0[..4].iter().all(|b| !b.flags.end_of_row()));
+        assert!(col0[4].flags.end_of_row());
+    }
+
+    #[test]
+    fn stream_bytes_positive_and_consistent() {
+        let lower = spd(4).lower_triangle();
+        let sym = CholeskySymbolic::analyze(&lower, 32);
+        let total = sym.stream_bytes();
+        assert!(total > 0);
+        let per_col: usize = (0..sym.pattern.n)
+            .map(|k| (sym.ra_col_bytes(k) + sym.rl_col_bytes(k)) as usize)
+            .sum();
+        assert_eq!(total, per_col);
+    }
+}

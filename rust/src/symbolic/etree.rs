@@ -1,0 +1,175 @@
+//! Elimination tree construction (George/Heath/Ng/Liu; paper refs \[14\],\[15\]).
+//!
+//! `parent[j]` is the parent of column `j` in the elimination tree of the
+//! SPD matrix `A`: the smallest row index `i > j` such that `L(i,j) != 0`.
+//! Implemented with Liu's ancestor path compression — O(nnz · α(n)).
+
+use crate::sparse::Csc;
+
+/// Parent vector of the elimination tree; `None` marks a root.
+///
+/// Input is the **lower triangle** (including diagonal) of A in CSC. Only
+/// the pattern is consulted. The algorithm walks column k's *above-diagonal*
+/// entries (A(i,k), i < k), which with lower-triangular storage live in the
+/// transposed strict-upper view built first (O(nnz)).
+pub fn elimination_tree(a_lower: &Csc) -> Vec<Option<usize>> {
+    let a_upper = super::pattern::strict_upper_from_lower(a_lower);
+    elimination_tree_from_upper(&a_upper)
+}
+
+/// As [`elimination_tree`] but taking the prebuilt strict-upper view —
+/// callers that already hold it (the symbolic factorization) avoid a
+/// second transpose pass.
+pub fn elimination_tree_from_upper(a_upper: &Csc) -> Vec<Option<usize>> {
+    let n = a_upper.ncols;
+    let mut parent: Vec<Option<usize>> = vec![None; n];
+    let mut ancestor: Vec<Option<usize>> = vec![None; n];
+    for k in 0..n {
+        for &r in a_upper.col_rows(k) {
+            // walk from row index up to k, compressing ancestors
+            let mut i = r as usize;
+            while i < k {
+                let next = ancestor[i];
+                ancestor[i] = Some(k);
+                match next {
+                    None => {
+                        parent[i] = Some(k);
+                        break;
+                    }
+                    Some(a) => i = a,
+                }
+            }
+        }
+    }
+    parent
+}
+
+/// Children lists from a parent vector (postorder/analysis helper).
+pub fn children(parent: &[Option<usize>]) -> Vec<Vec<usize>> {
+    let mut ch = vec![Vec::new(); parent.len()];
+    for (j, p) in parent.iter().enumerate() {
+        if let Some(p) = p {
+            ch[*p].push(j);
+        }
+    }
+    ch
+}
+
+/// Depth of each node (root depth 0), memoized along root paths; panics on
+/// cycles (which would indicate a malformed tree).
+pub fn depths(parent: &[Option<usize>]) -> Vec<usize> {
+    let n = parent.len();
+    let mut depth = vec![usize::MAX; n];
+    let mut chain = Vec::new();
+    for start in 0..n {
+        let mut j = start;
+        chain.clear();
+        // climb until a memoized node or a root
+        while depth[j] == usize::MAX {
+            chain.push(j);
+            assert!(chain.len() <= n, "cycle in elimination tree");
+            match parent[j] {
+                None => break,
+                Some(p) => j = p,
+            }
+        }
+        // depth of the node we stopped at (unvisited root => 0)
+        let mut d = if depth[j] == usize::MAX { 0 } else { depth[j] };
+        // unwind the chain: last pushed node is nearest the stop point
+        for &node in chain.iter().rev() {
+            if depth[node] == usize::MAX {
+                if node == j {
+                    depth[node] = 0; // the root itself
+                } else {
+                    d += 1;
+                    depth[node] = d;
+                }
+            }
+        }
+    }
+    depth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, ops, Dense};
+
+    /// Brute-force etree: parent[j] = min{i > j : L(i,j) != 0} from a dense
+    /// symbolic factorization.
+    fn brute_etree(a: &Dense) -> Vec<Option<usize>> {
+        let n = a.nrows;
+        // symbolic dense cholesky: pattern-only elimination
+        let mut pat = vec![vec![false; n]; n];
+        for i in 0..n {
+            for j in 0..=i {
+                if a[(i, j)] != 0.0 {
+                    pat[i][j] = true;
+                }
+            }
+        }
+        for j in 0..n {
+            for i in (j + 1)..n {
+                if pat[i][j] {
+                    // row i gets fill from column j at all k in (j, i]
+                    for k in (j + 1)..=i {
+                        if pat[k][j] {
+                            pat[i][k] = true;
+                        }
+                    }
+                }
+            }
+        }
+        (0..n)
+            .map(|j| ((j + 1)..n).find(|&i| pat[i][j]))
+            .collect()
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_spd() {
+        for seed in 0..6u64 {
+            let base = gen::random_uniform(16, 16, 40, seed);
+            let spd = ops::make_spd(&base);
+            let lower = spd.lower_triangle();
+            let fast = elimination_tree(&lower);
+            let brute = brute_etree(&Dense::from_csr(&spd.to_csr()));
+            assert_eq!(fast, brute, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn tridiagonal_is_a_path() {
+        // tridiagonal SPD: parent[j] = j+1
+        let mut coo = crate::sparse::Coo::new(5, 5);
+        for i in 0..5 {
+            coo.push(i, i, 4.0);
+            if i > 0 {
+                coo.push(i, i - 1, 1.0);
+                coo.push(i - 1, i, 1.0);
+            }
+        }
+        let lower = coo.to_csr().to_csc().lower_triangle();
+        let parent = elimination_tree(&lower);
+        assert_eq!(parent, vec![Some(1), Some(2), Some(3), Some(4), None]);
+    }
+
+    #[test]
+    fn diagonal_matrix_is_forest_of_roots() {
+        let mut coo = crate::sparse::Coo::new(4, 4);
+        for i in 0..4 {
+            coo.push(i, i, 1.0);
+        }
+        let lower = coo.to_csr().to_csc().lower_triangle();
+        assert_eq!(elimination_tree(&lower), vec![None; 4]);
+    }
+
+    #[test]
+    fn children_and_depths_consistent() {
+        let parent = vec![Some(2), Some(2), Some(3), None];
+        let ch = children(&parent);
+        assert_eq!(ch[2], vec![0, 1]);
+        assert_eq!(ch[3], vec![2]);
+        let d = depths(&parent);
+        assert_eq!(d, vec![2, 2, 1, 0]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Elimination-tree level scheduling — quantifying the dependency wall.
+//!
+//! The paper observes that Cholesky's column dependencies cap REAP's
+//! scaling ("as we increase the number of pipelines, the idle cycles
+//! increase almost linearly … adding more resources is not going to help")
+//! and points at dependency-breaking research as orthogonal work. This
+//! module computes the elimination-tree **level sets** — columns whose
+//! subtree dependencies are complete may factor concurrently — giving
+//! (a) the critical-path length (the serial floor any schedule faces) and
+//! (b) the width profile (how much column-level parallelism a
+//! level-scheduled design could actually harvest). The ablation bench
+//! compares the paper's sequential-column model against this bound.
+
+use super::etree::depths;
+use super::pattern::LPattern;
+
+/// Level schedule: columns grouped by elimination-tree height (leaves
+/// first — a column's level is 1 + max level of its children; columns in
+/// the same level are mutually independent).
+#[derive(Clone, Debug)]
+pub struct LevelSchedule {
+    /// `levels[l]` = columns factorable in step `l` (ascending levels).
+    pub levels: Vec<Vec<u32>>,
+}
+
+impl LevelSchedule {
+    /// Build from the symbolic pattern.
+    pub fn build(pattern: &LPattern) -> Self {
+        let n = pattern.n;
+        // height above the leaves = depth measured from each subtree's
+        // deepest leaf; compute as max-over-children + 1 via reverse pass.
+        let mut height = vec![0u32; n];
+        for j in 0..n {
+            // children have smaller indices than parents in an etree
+            if let Some(p) = pattern.parent[j] {
+                let h = height[j] + 1;
+                if height[p] < h {
+                    height[p] = h;
+                }
+            }
+        }
+        let max_h = height.iter().copied().max().unwrap_or(0) as usize;
+        let mut levels = vec![Vec::new(); max_h + 1];
+        for j in 0..n {
+            levels[height[j] as usize].push(j as u32);
+        }
+        LevelSchedule { levels }
+    }
+
+    /// Critical-path length (number of serial steps).
+    pub fn critical_path(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Mean level width (average exploitable column parallelism).
+    pub fn mean_width(&self) -> f64 {
+        if self.levels.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self.levels.iter().map(|l| l.len()).sum();
+        total as f64 / self.levels.len() as f64
+    }
+
+    /// Maximum level width.
+    pub fn max_width(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).max().unwrap_or(0)
+    }
+
+    /// Ideal level-scheduled cycle bound: per level, the widest column's
+    /// sequential cost; levels execute serially. `col_cycles[j]` is the
+    /// per-column cost from the simulator's column log.
+    pub fn level_bound_cycles(&self, col_cycles: &[u64]) -> u64 {
+        self.levels
+            .iter()
+            .map(|level| level.iter().map(|&j| col_cycles[j as usize]).max().unwrap_or(0))
+            .sum()
+    }
+}
+
+/// Consistency check: no column may share a level with its etree parent.
+pub fn validate(schedule: &LevelSchedule, pattern: &LPattern) -> bool {
+    let mut level_of = vec![0usize; pattern.n];
+    for (l, cols) in schedule.levels.iter().enumerate() {
+        for &j in cols {
+            level_of[j as usize] = l;
+        }
+    }
+    (0..pattern.n).all(|j| match pattern.parent[j] {
+        Some(p) => level_of[j] < level_of[p],
+        None => true,
+    })
+}
+
+/// Depth-based alternative view (distance from the root), exposed for
+/// diagnostics parity with [`depths`].
+pub fn depth_histogram(pattern: &LPattern) -> Vec<usize> {
+    let d = depths(&pattern.parent);
+    let max = d.iter().copied().max().unwrap_or(0);
+    let mut hist = vec![0usize; max + 1];
+    for &x in &d {
+        hist[x] += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, ops};
+    use crate::symbolic::symbolic_factor;
+
+    fn pattern(seed: u64) -> LPattern {
+        let spd = ops::make_spd(&gen::banded_fem(60, 400, seed));
+        symbolic_factor(&spd.lower_triangle())
+    }
+
+    #[test]
+    fn levels_partition_columns_and_respect_dependencies() {
+        let lp = pattern(1);
+        let ls = LevelSchedule::build(&lp);
+        let total: usize = ls.levels.iter().map(|l| l.len()).sum();
+        assert_eq!(total, lp.n);
+        assert!(validate(&ls, &lp));
+    }
+
+    #[test]
+    fn tridiagonal_is_fully_serial() {
+        let mut coo = crate::sparse::Coo::new(8, 8);
+        for i in 0..8 {
+            coo.push(i, i, 4.0);
+            if i > 0 {
+                coo.push(i, i - 1, 1.0);
+                coo.push(i - 1, i, 1.0);
+            }
+        }
+        let lp = symbolic_factor(&coo.to_csr().to_csc().lower_triangle());
+        let ls = LevelSchedule::build(&lp);
+        assert_eq!(ls.critical_path(), 8); // a path: zero parallelism
+        assert_eq!(ls.max_width(), 1);
+    }
+
+    #[test]
+    fn diagonal_is_fully_parallel() {
+        let mut coo = crate::sparse::Coo::new(10, 10);
+        for i in 0..10 {
+            coo.push(i, i, 2.0);
+        }
+        let lp = symbolic_factor(&coo.to_csr().to_csc().lower_triangle());
+        let ls = LevelSchedule::build(&lp);
+        assert_eq!(ls.critical_path(), 1);
+        assert_eq!(ls.max_width(), 10);
+    }
+
+    #[test]
+    fn level_bound_never_exceeds_serial_sum() {
+        let lp = pattern(2);
+        let ls = LevelSchedule::build(&lp);
+        let col_cycles: Vec<u64> = (0..lp.n as u64).map(|j| 10 + j % 7).collect();
+        let serial: u64 = col_cycles.iter().sum();
+        let bound = ls.level_bound_cycles(&col_cycles);
+        assert!(bound <= serial);
+        assert!(bound > 0);
+    }
+
+    #[test]
+    fn depth_histogram_counts_all_columns() {
+        let lp = pattern(3);
+        let hist = depth_histogram(&lp);
+        assert_eq!(hist.iter().sum::<usize>(), lp.n);
+    }
+}

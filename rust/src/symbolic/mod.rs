@@ -1,0 +1,22 @@
+//! Cholesky symbolic analysis — the CPU-side pass of REAP's Cholesky design
+//! (paper §III-B, Fig 4).
+//!
+//! "An interesting aspect of Cholesky factorization is that it is possible
+//! to identify the non-zero elements in a column of L from a pure symbolic
+//! analysis … CPU performs the symbolic analysis based on the construction
+//! of the elimination tree."
+//!
+//! * [`etree`] — elimination tree (Liu's ancestor-compression algorithm).
+//! * [`pattern`] — per-row reach (`ereach`) and the full pattern of L.
+//! * [`analysis`] — packaging: per-column RL metadata bundles (Fig 4(c))
+//!   plus the L storage map the FPGA uses.
+
+pub mod analysis;
+pub mod etree;
+pub mod levels;
+pub mod pattern;
+
+pub use analysis::{CholeskySymbolic, LStorageMap};
+pub use levels::LevelSchedule;
+pub use etree::{elimination_tree, elimination_tree_from_upper};
+pub use pattern::{ereach, symbolic_factor, LPattern};

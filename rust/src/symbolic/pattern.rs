@@ -1,0 +1,268 @@
+//! Nonzero pattern of the Cholesky factor L (paper Fig 4(b)).
+//!
+//! `ereach(A, k, parent)` gives the pattern of **row k** of L — the columns
+//! `j < k` with `L(k,j) != 0` — by walking the elimination tree from each
+//! entry of column k of (lower) A toward the root, stopping at marked
+//! nodes (Davis, *Direct Methods for Sparse Linear Systems*, §4).
+//! [`symbolic_factor`] assembles the full column-wise pattern of L that the
+//! CPU ships to the FPGA as metadata.
+
+use crate::sparse::{Csc, Idx};
+
+use super::etree::elimination_tree_from_upper;
+
+/// Column-wise pattern of L (indices only; values come later).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LPattern {
+    pub n: usize,
+    /// `col_ptr[j]..col_ptr[j+1]` indexes `rows` for column j. The first
+    /// entry of every column is the diagonal `j`.
+    pub col_ptr: Vec<usize>,
+    pub rows: Vec<Idx>,
+    /// Elimination-tree parent vector (kept for scheduling/diagnostics).
+    pub parent: Vec<Option<usize>>,
+}
+
+impl LPattern {
+    /// nnz(L) including the diagonal.
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Rows of column j (diagonal first, then ascending).
+    pub fn col_rows(&self, j: usize) -> &[Idx] {
+        &self.rows[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// Number of nonzeros in column j.
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Fill-in: nnz(L) minus nnz(lower triangle of A).
+    pub fn fill_in(&self, a_lower: &Csc) -> usize {
+        self.nnz().saturating_sub(a_lower.nnz())
+    }
+}
+
+/// Pattern of row `k` of L, ascending — the columns `j < k` with
+/// `L(k,j) != 0`.
+///
+/// `a_upper` is the **strictly upper** triangle of A in CSC (so column k
+/// lists exactly the `j < k` with `A(j,k) = A(k,j) != 0`); build it once
+/// with [`strict_upper_from_lower`]. `marked` is caller-provided n-sized
+/// scratch stamped with `stamp`, so the per-row cost is O(|reach| log) —
+/// never O(n).
+pub fn ereach(
+    a_upper: &Csc,
+    k: usize,
+    parent: &[Option<usize>],
+    marked: &mut [u32],
+    stamp: u32,
+    out: &mut Vec<Idx>,
+) {
+    out.clear();
+    marked[k] = stamp;
+    for &j0 in a_upper.col_rows(k) {
+        // climb the etree from j toward k, collecting unmarked nodes
+        let mut j = j0 as usize;
+        while marked[j] != stamp {
+            marked[j] = stamp;
+            out.push(j as Idx);
+            match parent[j] {
+                Some(p) if p < k => j = p,
+                _ => break,
+            }
+        }
+    }
+    // individual tree paths ascend, but distinct paths interleave
+    out.sort_unstable();
+}
+
+/// Full symbolic factorization: the column-wise pattern of L for the SPD
+/// matrix whose **lower triangle** is `a_lower`.
+///
+/// Complexity O(nnz(L)) plus the etree cost — same approach as
+/// CHOLMOD's simplicial symbolic phase (which the paper's CPU runs).
+pub fn symbolic_factor(a_lower: &Csc) -> LPattern {
+    let n = a_lower.ncols;
+    // strictly-upper CSC = transpose of strictly-lower part; built once and
+    // shared with the etree construction (profiling showed the transpose
+    // and per-row reach vectors dominating symbolic time on low-density
+    // inputs — EXPERIMENTS.md §Perf iteration 2).
+    let a_upper = strict_upper_from_lower(a_lower);
+    let parent = elimination_tree_from_upper(&a_upper);
+
+    // Single pass: row reaches into one flat arena (no per-row Vec).
+    let mut marked = vec![u32::MAX; n];
+    let mut reach_flat: Vec<Idx> = Vec::with_capacity(a_lower.nnz() * 2);
+    let mut reach_ptr = vec![0usize; n + 1];
+    let mut col_counts = vec![1usize; n]; // diagonal
+    let mut scratch: Vec<Idx> = Vec::new();
+    for k in 0..n {
+        ereach(&a_upper, k, &parent, &mut marked, k as u32, &mut scratch);
+        for &j in &scratch {
+            col_counts[j as usize] += 1;
+        }
+        reach_flat.extend_from_slice(&scratch);
+        reach_ptr[k + 1] = reach_flat.len();
+    }
+
+    let mut col_ptr = vec![0usize; n + 1];
+    for j in 0..n {
+        col_ptr[j + 1] = col_ptr[j] + col_counts[j];
+    }
+    let mut rows = vec![0 as Idx; col_ptr[n]];
+    let mut next = col_ptr.clone();
+    // diagonal first in every column
+    for j in 0..n {
+        rows[next[j]] = j as Idx;
+        next[j] += 1;
+    }
+    // row k contributes entry (k, j) for each j in its reach; k ascends, so
+    // each column's below-diagonal rows land ascending automatically.
+    for k in 0..n {
+        for &j in &reach_flat[reach_ptr[k]..reach_ptr[k + 1]] {
+            let dst = &mut next[j as usize];
+            rows[*dst] = k as Idx;
+            *dst += 1;
+        }
+    }
+    LPattern { n, col_ptr, rows, parent }
+}
+
+/// Transpose the strictly-lower part of `a_lower` into a strictly-upper CSC
+/// (column k lists j < k with A(j,k) != 0).
+pub fn strict_upper_from_lower(a_lower: &Csc) -> Csc {
+    let n = a_lower.ncols;
+    let mut col_ptr = vec![0usize; n + 1];
+    for j in 0..n {
+        for &r in a_lower.col_rows(j) {
+            if (r as usize) > j {
+                col_ptr[r as usize + 1] += 1;
+            }
+        }
+    }
+    for j in 0..n {
+        col_ptr[j + 1] += col_ptr[j];
+    }
+    let mut rows = vec![0 as Idx; col_ptr[n]];
+    let mut vals = vec![0f32; col_ptr[n]];
+    let mut next = col_ptr.clone();
+    for j in 0..n {
+        for (&r, &v) in a_lower.col_rows(j).iter().zip(a_lower.col_vals(j)) {
+            let r = r as usize;
+            if r > j {
+                rows[next[r]] = j as Idx;
+                vals[next[r]] = v;
+                next[r] += 1;
+            }
+        }
+    }
+    Csc { nrows: n, ncols: n, col_ptr, rows, vals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, ops, Dense};
+
+    /// Dense symbolic factorization oracle: pattern of L via elimination.
+    fn brute_pattern(a: &Dense) -> Vec<Vec<usize>> {
+        let n = a.nrows;
+        let mut pat = vec![vec![false; n]; n];
+        for i in 0..n {
+            for j in 0..=i {
+                if a[(i, j)] != 0.0 {
+                    pat[i][j] = true;
+                }
+            }
+        }
+        for j in 0..n {
+            for i in (j + 1)..n {
+                if pat[i][j] {
+                    for k in (j + 1)..=i {
+                        if pat[k][j] {
+                            pat[i][k] = true;
+                        }
+                    }
+                }
+            }
+        }
+        (0..n)
+            .map(|j| (j..n).filter(|&i| pat[i][j]).collect())
+            .collect()
+    }
+
+    #[test]
+    fn pattern_matches_dense_oracle() {
+        for seed in 0..6u64 {
+            let spd = ops::make_spd(&gen::random_uniform(18, 18, 50, seed));
+            let lower = spd.lower_triangle();
+            let lp = symbolic_factor(&lower);
+            let brute = brute_pattern(&Dense::from_csr(&spd.to_csr()));
+            for j in 0..lp.n {
+                let got: Vec<usize> = lp.col_rows(j).iter().map(|&r| r as usize).collect();
+                assert_eq!(got, brute[j], "seed {seed} column {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_first_and_ascending() {
+        let spd = ops::make_spd(&gen::banded_fem(30, 200, 1));
+        let lp = symbolic_factor(&spd.lower_triangle());
+        for j in 0..lp.n {
+            let rows = lp.col_rows(j);
+            assert_eq!(rows[0] as usize, j);
+            assert!(rows.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn tridiagonal_has_no_fill() {
+        let mut coo = crate::sparse::Coo::new(6, 6);
+        for i in 0..6 {
+            coo.push(i, i, 4.0);
+            if i > 0 {
+                coo.push(i, i - 1, 1.0);
+                coo.push(i - 1, i, 1.0);
+            }
+        }
+        let lower = coo.to_csr().to_csc().lower_triangle();
+        let lp = symbolic_factor(&lower);
+        assert_eq!(lp.fill_in(&lower), 0);
+        assert_eq!(lp.nnz(), lower.nnz());
+    }
+
+    #[test]
+    fn arrow_matrix_fills_last_column_only() {
+        // arrowhead pointing down-right: dense last row/col + diagonal.
+        // No fill-in when the dense row is last.
+        let n = 8;
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 4.0);
+            if i + 1 < n {
+                coo.push(n - 1, i, 1.0);
+                coo.push(i, n - 1, 1.0);
+            }
+        }
+        let lower = coo.to_csr().to_csc().lower_triangle();
+        let lp = symbolic_factor(&lower);
+        assert_eq!(lp.fill_in(&lower), 0);
+        // reversed arrow (dense FIRST row/col) fills everything below
+        let mut coo2 = crate::sparse::Coo::new(n, n);
+        for i in 0..n {
+            coo2.push(i, i, 4.0);
+            if i > 0 {
+                coo2.push(i, 0, 1.0);
+                coo2.push(0, i, 1.0);
+            }
+        }
+        let lower2 = coo2.to_csr().to_csc().lower_triangle();
+        let lp2 = symbolic_factor(&lower2);
+        // L becomes fully dense lower triangular
+        assert_eq!(lp2.nnz(), n * (n + 1) / 2);
+    }
+}

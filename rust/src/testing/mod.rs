@@ -1,0 +1,7 @@
+//! In-tree testing support: a mini property-testing framework
+//! ([`prop`]) used by unit tests and the `prop_invariants` integration
+//! suite (the offline image has no proptest crate).
+
+pub mod prop;
+
+pub use prop::{check, quickcheck, Config, Size};

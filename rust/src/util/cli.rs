@@ -1,0 +1,176 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the subset the `reap` binary needs: positional arguments,
+//! `--flag`, `--key value` / `--key=value`, typed accessors with defaults,
+//! and strict rejection of unknown options so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: positionals + options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+/// Declaration of an accepted option (for usage/validation).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse raw arguments (excluding argv\[0\]) against the accepted specs.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, specs: &[OptSpec]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .with_context(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .with_context(|| format!("--{name} requires a value"))?,
+                    };
+                    args.options.entry(name).or_default().push(val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// All positional arguments.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Positional at index `i`.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// Is the boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Last occurrence of `--name value`, as a string.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences of `--name value`.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.options.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Typed accessor with default.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("invalid value for --{name}: {e}")),
+        }
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, summary: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("usage: reap {cmd} [options]\n  {summary}\n");
+    if !specs.is_empty() {
+        out.push_str("options:\n");
+        for s in specs {
+            let val = if s.takes_value { " <v>" } else { "" };
+            out.push_str(&format!("  --{}{:<12} {}\n", s.name, val, s.help));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", takes_value: true, help: "size" },
+            OptSpec { name: "full", takes_value: false, help: "full scale" },
+            OptSpec { name: "out", takes_value: true, help: "output path" },
+        ]
+    }
+
+    fn parse(toks: &[&str]) -> Result<Args> {
+        Args::parse(toks.iter().map(|s| s.to_string()), &specs())
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["fig6", "--n", "100", "--full", "extra"]).unwrap();
+        assert_eq!(a.positional(0), Some("fig6"));
+        assert_eq!(a.positional(1), Some("extra"));
+        assert_eq!(a.get("n"), Some("100"));
+        assert!(a.flag("full"));
+        assert!(!a.flag("n"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["--n=42"]).unwrap();
+        assert_eq!(a.get_parsed::<usize>("n", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--bogus"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--n"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&["--full=yes"]).is_err());
+    }
+
+    #[test]
+    fn typed_default_and_parse_error() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_parsed::<usize>("n", 7).unwrap(), 7);
+        let b = parse(&["--n", "xyz"]).unwrap();
+        assert!(b.get_parsed::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = parse(&["--out", "a.csv", "--out", "b.csv"]).unwrap();
+        assert_eq!(a.get("out"), Some("b.csv"));
+        assert_eq!(a.get_all("out"), &["a.csv".to_string(), "b.csv".to_string()]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Small self-contained utilities.
+//!
+//! The build image is offline and its crate cache only carries the `xla`
+//! closure, so the conveniences that would normally come from `rand`,
+//! `clap` or `criterion` live here instead: a deterministic PRNG
+//! ([`rng::Pcg64`]), summary statistics ([`stats`]), a wall-clock
+//! measurement helper ([`timer`]), a tiny CLI argument parser ([`cli`]) and
+//! an ASCII/CSV table renderer ([`table`]).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use timer::Timer;

@@ -1,0 +1,123 @@
+//! Summary statistics used by the benchmark harness (geometric mean,
+//! percentiles, simple linear aggregates) — the quantities the paper
+//! reports in Figs 6, 8 and 10.
+
+/// Geometric mean of strictly positive values. Returns `None` on empty input
+/// or any non-positive entry.
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0 || !x.is_finite()) {
+        return None;
+    }
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
+    Some((log_sum / xs.len() as f64).exp())
+}
+
+/// Arithmetic mean; `None` on empty input.
+pub fn mean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    Some(xs.iter().sum::<f64>() / xs.len() as f64)
+}
+
+/// Population standard deviation; `None` on empty input.
+pub fn stddev(xs: &[f64]) -> Option<f64> {
+    let m = mean(xs)?;
+    Some((xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt())
+}
+
+/// Percentile by linear interpolation between order statistics
+/// (`q` in `[0,100]`). `None` on empty input.
+pub fn percentile(xs: &[f64], q: f64) -> Option<f64> {
+    if xs.is_empty() || !(0.0..=100.0).contains(&q) {
+        return None;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        Some(v[lo])
+    } else {
+        let frac = pos - lo as f64;
+        Some(v[lo] * (1.0 - frac) + v[hi] * frac)
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> Option<f64> {
+    percentile(xs, 50.0)
+}
+
+/// The `{p25, median, geomean, p75}` quartet reported in Fig 8 (left).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quartet {
+    pub p25: f64,
+    pub median: f64,
+    pub geomean: f64,
+    pub p75: f64,
+}
+
+/// Compute the Fig-8 quartet; `None` if the input is empty or non-positive.
+pub fn quartet(xs: &[f64]) -> Option<Quartet> {
+    Some(Quartet {
+        p25: percentile(xs, 25.0)?,
+        median: median(xs)?,
+        geomean: geomean(xs)?,
+        p75: percentile(xs, 75.0)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!(geomean(&[]).is_none());
+        assert!(geomean(&[1.0, 0.0]).is_none());
+        assert!(geomean(&[1.0, -2.0]).is_none());
+        let g = geomean(&[2.0, 8.0]).unwrap();
+        assert!((g - 4.0).abs() < 1e-12);
+        let g1 = geomean(&[3.7]).unwrap();
+        assert!((g1 - 3.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_invariant_under_reorder() {
+        let a = geomean(&[1.5, 2.5, 9.0, 0.25]).unwrap();
+        let b = geomean(&[9.0, 0.25, 2.5, 1.5]).unwrap();
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(4.0));
+        assert!((percentile(&xs, 50.0).unwrap() - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0).unwrap() - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), Some(2.0));
+        assert!((median(&[4.0, 1.0, 2.0, 3.0]).unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quartet_ordering() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let q = quartet(&xs).unwrap();
+        assert!(q.p25 < q.median && q.median < q.p75);
+        assert!(q.geomean < q.median); // geomean <= mean; skew pulls it low
+    }
+
+    #[test]
+    fn mean_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert_eq!(mean(&xs), Some(5.0));
+        assert!((stddev(&xs).unwrap() - 2.0).abs() < 1e-12);
+    }
+}

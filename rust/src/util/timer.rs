@@ -1,0 +1,117 @@
+//! Wall-clock measurement for the CPU baselines and the bench harness.
+//!
+//! The paper compares *measured* CPU library time against *simulated* FPGA
+//! time; [`Timer`] provides the measured side, with warmup + repetition
+//! handling that a criterion-style harness would normally supply.
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed duration since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Result of a repeated measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Minimum over repetitions (the conventional "true cost" estimator for
+    /// a deterministic kernel: noise is strictly additive).
+    pub min_s: f64,
+    /// Median over repetitions.
+    pub median_s: f64,
+    /// Mean over repetitions.
+    pub mean_s: f64,
+    /// Number of timed repetitions.
+    pub reps: usize,
+}
+
+/// Measure `f` with `warmup` untimed runs then `reps` timed runs.
+///
+/// `f` must be self-contained (re-create its outputs each call); its result
+/// is returned through a black-box sink so the optimizer cannot elide work.
+pub fn measure<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Measurement {
+    assert!(reps > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        black_box(f());
+        times.push(t.elapsed_s());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement {
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        reps,
+    }
+}
+
+/// Measure, choosing repetitions adaptively so total timed work is roughly
+/// `budget_s` seconds (at least `min_reps`). Good default for benches whose
+/// per-call cost spans microseconds to seconds across the matrix suite.
+pub fn measure_budgeted<T>(budget_s: f64, min_reps: usize, mut f: impl FnMut() -> T) -> Measurement {
+    let t = Timer::start();
+    black_box(f()); // warmup + cost probe
+    let once = t.elapsed_s().max(1e-9);
+    let reps = ((budget_s / once).ceil() as usize).clamp(min_reps.max(1), 10_000);
+    measure(0, reps, f)
+}
+
+/// Optimization barrier (stable-Rust equivalent of `std::hint::black_box`,
+/// kept local so MSRV concerns never bite).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn measure_runs_expected_reps() {
+        let mut calls = 0usize;
+        let m = measure(2, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(m.reps, 5);
+        assert!(m.min_s <= m.median_s && m.median_s <= m.mean_s * 5.0);
+    }
+
+    #[test]
+    fn budgeted_reps_at_least_min() {
+        let m = measure_budgeted(0.0, 3, || 1 + 1);
+        assert!(m.reps >= 3);
+    }
+}

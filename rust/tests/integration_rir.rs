@@ -1,0 +1,121 @@
+//! Integration: the RIR contract end-to-end — the compress/layout/schedule
+//! path the CPU runs, consumed by both the simulator and the decoder, with
+//! malformed-stream failure injection (what a hardened input controller
+//! must reject).
+
+use reap::rir::bundle::{Bundle, BundleFlags};
+use reap::rir::{decode, encode, layout, schedule};
+use reap::sparse::gen::{self, Family};
+use reap::sparse::{Csc, Csr};
+
+#[test]
+fn csr_and_csc_encodings_are_consistent() {
+    let m = gen::random_uniform(40, 40, 500, 1);
+    let csc: Csc = m.to_csc();
+    let row_bundles = encode::csr_to_bundles(&m, 32);
+    let col_bundles = encode::csc_to_bundles(&csc, 32);
+    // same total element count, transposed shared features
+    let row_elems: usize = row_bundles.iter().map(|b| b.len()).sum();
+    let col_elems: usize = col_bundles.iter().map(|b| b.len()).sum();
+    assert_eq!(row_elems, m.nnz());
+    assert_eq!(col_elems, m.nnz());
+}
+
+#[test]
+fn stream_words_match_schedule_accounting() {
+    // the schedule's a_words must equal the actual serialized A stream
+    let a = gen::power_law(60, 900, 2);
+    let b = gen::random_uniform(60, 60, 700, 3);
+    let s = schedule::schedule_spgemm(&a, &b, 8, 32);
+    let a_bundles = encode::csr_to_bundles(&a, 32);
+    let a_stream_words: usize = a_bundles.iter().map(layout::bundle_words).sum();
+    // schedule skips empty rows; csr_to_bundles emits a header for them
+    let empty_rows = (0..a.nrows).filter(|&i| a.row_nnz(i) == 0).count();
+    assert_eq!(s.a_words + 2 * empty_rows, a_stream_words);
+}
+
+#[test]
+fn wave_b_streams_reassemble_to_b_rows() {
+    // decode each wave's B stream and check it delivers exactly the rows
+    // the wave needs, in ascending order
+    let a = gen::random_uniform(30, 30, 250, 4);
+    let b = gen::random_uniform(30, 30, 300, 5);
+    let s = schedule::schedule_spgemm(&a, &b, 4, 16);
+    for w in &s.waves {
+        let bundles = encode::csr_rows_to_bundles(&b, &w.b_rows, 16);
+        // every chain ends with END_OF_ROW; shared features = b_rows order
+        let mut rows_seen = Vec::new();
+        for bu in &bundles {
+            if bu.flags.end_of_row() {
+                rows_seen.push(bu.shared);
+            }
+        }
+        assert_eq!(rows_seen, w.b_rows);
+        // and the elements match the source rows
+        let total: usize = bundles.iter().map(|bu| bu.len()).sum();
+        let expect: usize = w.b_rows.iter().map(|&r| b.row_nnz(r as usize)).sum();
+        assert_eq!(total, expect);
+    }
+}
+
+#[test]
+fn corrupted_streams_rejected() {
+    let m = gen::random_uniform(10, 10, 40, 6);
+    let bundles = encode::csr_to_bundles(&m, 8);
+    let words = layout::serialize(&bundles);
+
+    // truncation
+    assert!(layout::deserialize(&words[..words.len() - 1]).is_err());
+
+    // inflated element count in a header
+    let mut bad = words.clone();
+    bad[0] = bad[0].wrapping_add(200 << 8);
+    assert!(layout::deserialize(&bad).is_err());
+
+    // decode-level: out-of-bounds column index
+    let evil = vec![Bundle::data(
+        0,
+        vec![10_000],
+        vec![1.0],
+        BundleFlags::default().with(BundleFlags::END_OF_ROW),
+    )];
+    assert!(decode::bundles_to_csr(&evil, 10, 10).is_err());
+
+    // decode-level: row index beyond matrix
+    let evil = vec![Bundle::data(
+        99,
+        vec![0],
+        vec![1.0],
+        BundleFlags::default().with(BundleFlags::END_OF_ROW),
+    )];
+    assert!(decode::bundles_to_csr(&evil, 10, 10).is_err());
+}
+
+#[test]
+fn bundle_size_sweep_preserves_roundtrip_and_traffic_monotonicity() {
+    let m = gen::banded_fem(80, 1200, 7);
+    let mut prev_words = usize::MAX;
+    for bundle in [1usize, 2, 4, 8, 16, 32, 64] {
+        let bundles = encode::csr_to_bundles(&m, bundle);
+        let words = layout::serialize(&bundles);
+        let back =
+            decode::bundles_to_csr(&layout::deserialize(&words).unwrap(), m.nrows, m.ncols)
+                .unwrap();
+        assert_eq!(back, m, "bundle {bundle}");
+        // larger bundles amortize headers: stream never grows
+        assert!(words.len() <= prev_words, "bundle {bundle} grew the stream");
+        prev_words = words.len();
+    }
+}
+
+#[test]
+fn empty_matrix_stream_is_headers_only() {
+    let m = Csr::new(5, 5);
+    let bundles = encode::csr_to_bundles(&m, 32);
+    assert_eq!(bundles.len(), 5);
+    assert!(bundles.iter().all(|b| b.is_empty() && b.flags.end_of_row()));
+    let words = layout::serialize(&bundles);
+    assert_eq!(words.len(), 10); // 2 words per empty chain
+    let back = decode::bundles_to_csr(&bundles, 5, 5).unwrap();
+    assert_eq!(back, m);
+}

@@ -1,0 +1,102 @@
+//! Three-layer composition test: JAX/Pallas (L1/L2) → HLO artifacts →
+//! PJRT runtime (L3) — the request path with Python out of the loop.
+//!
+//! Requires `make artifacts` to have produced `artifacts/`; the tests
+//! skip (with a loud message) when artifacts are absent so `cargo test`
+//! stays runnable before the first build.
+
+use reap::coordinator::{verify, ReapCholesky, ReapSpgemm};
+use reap::fpga::FpgaConfig;
+use reap::kernels::spgemm;
+use reap::runtime::{Manifest, XlaRuntime};
+use reap::sparse::{gen, Dense};
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return None;
+    }
+    Some(XlaRuntime::load(&dir).expect("loading artifacts"))
+}
+
+#[test]
+fn manifest_exposes_all_entries() {
+    let Some(rt) = runtime() else { return };
+    for entry in ["spgemm_bundle", "cholesky_dot", "cholesky_update"] {
+        rt.manifest().entry(entry).unwrap();
+    }
+    assert!(!rt.platform().is_empty());
+}
+
+#[test]
+fn spgemm_through_xla_matches_cpu_baseline() {
+    let Some(rt) = runtime() else { return };
+    for seed in 0..2u64 {
+        let a = gen::random_uniform(24, 24, 140, seed);
+        let b = gen::random_uniform(24, 24, 160, seed + 7);
+        let coord = ReapSpgemm::with_runtime(FpgaConfig::reap32_spgemm(), &rt);
+        let rep = coord.run(&a, &b).expect("xla spgemm");
+        rep.c.validate().unwrap();
+        let reference = spgemm(&a, &b);
+        let v = verify::verify_csr(&rep.c, &reference);
+        assert!(v.ok(1e-5), "seed {seed}: rel err {}", v.relative());
+    }
+}
+
+#[test]
+fn spgemm_through_xla_handles_bundle_overflow_rows() {
+    let Some(rt) = runtime() else { return };
+    // rows wider than one bundle (32) force chunk-pair accumulation
+    let a = gen::random_uniform(4, 120, 300, 3);
+    let b = gen::random_uniform(120, 40, 900, 4);
+    let coord = ReapSpgemm::with_runtime(FpgaConfig::reap32_spgemm(), &rt);
+    let rep = coord.run(&a, &b).expect("xla spgemm");
+    let v = verify::verify_csr(&rep.c, &spgemm(&a, &b));
+    assert!(v.ok(1e-5), "rel err {}", v.relative());
+}
+
+#[test]
+fn spmv_through_xla_matches_cpu_baseline() {
+    let Some(rt) = runtime() else { return };
+    use reap::coordinator::ReapSpmv;
+    let a = gen::random_uniform(60, 500, 2000, 8); // wide rows, many tiles
+    let x: Vec<f32> = (0..500).map(|i| (i as f32 * 0.013).sin()).collect();
+    let rep = ReapSpmv::with_runtime(FpgaConfig::reap32_spgemm(), &rt)
+        .run(&a, &x)
+        .expect("xla spmv");
+    let want = reap::kernels::spmv(&a, &x);
+    let err = rep
+        .y
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0f32, f32::max);
+    assert!(err < 1e-3, "max err {err}");
+}
+
+#[test]
+fn cholesky_through_xla_matches_dense_oracle() {
+    let Some(rt) = runtime() else { return };
+    let spd = gen::spd(gen::Family::BandedFem, 24, 120, 5);
+    let lower = spd.lower_triangle();
+    let coord = ReapCholesky::with_runtime(FpgaConfig::reap32_cholesky(), &rt);
+    let rep = coord.run(&lower).expect("xla cholesky");
+    let expect = Dense::from_csr(&spd.to_csr()).cholesky();
+    let got = Dense::from_csr(&rep.factor.l.to_csr());
+    let diff = got.max_abs_diff(&expect);
+    assert!(diff < 1e-3, "max abs diff {diff}");
+}
+
+#[test]
+fn cholesky_xla_and_rust_paths_agree() {
+    let Some(rt) = runtime() else { return };
+    let spd = gen::spd(gen::Family::BlockRandom, 30, 180, 6);
+    let lower = spd.lower_triangle();
+    let xla = ReapCholesky::with_runtime(FpgaConfig::reap32_cholesky(), &rt)
+        .run(&lower)
+        .unwrap();
+    let rust = ReapCholesky::new(FpgaConfig::reap32_cholesky()).run(&lower).unwrap();
+    let v = verify::verify_csc(&xla.factor.l, &rust.factor.l);
+    assert!(v.ok(1e-4), "rel err {}", v.relative());
+}

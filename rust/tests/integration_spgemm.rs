@@ -1,0 +1,104 @@
+//! Integration: the REAP SpGEMM flow across modules (sparse → rir →
+//! coordinator → fpga sim → verify), including edge cases and failure
+//! injection.
+
+use reap::coordinator::{verify, ReapSpgemm};
+use reap::fpga::FpgaConfig;
+use reap::kernels::spgemm;
+use reap::sparse::gen::{self, Family};
+use reap::sparse::{mm, Csr, Dense};
+
+#[test]
+fn full_flow_on_every_family() {
+    for fam in [Family::RandomUniform, Family::BandedFem, Family::PowerLaw, Family::BlockRandom] {
+        let a = gen::generate(fam, 300, 4000, 1);
+        let rep = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &a).unwrap();
+        assert_eq!(rep.c, spgemm(&a, &a), "{fam}");
+        assert!(rep.fpga_sim.cycles > 0);
+        assert!(rep.total_s > 0.0);
+    }
+}
+
+#[test]
+fn all_design_points_agree_numerically() {
+    let a = gen::generate(Family::PowerLaw, 200, 3000, 2);
+    let expect = spgemm(&a, &a);
+    for cfg in [
+        FpgaConfig::reap32_spgemm(),
+        FpgaConfig::reap64_spgemm(),
+        FpgaConfig::reap128_spgemm(),
+    ] {
+        let rep = ReapSpgemm::new(cfg).run(&a, &a).unwrap();
+        assert_eq!(rep.c, expect);
+    }
+}
+
+#[test]
+fn rectangular_chain_through_mm_roundtrip() {
+    // A(40x70) * B(70x25) written+read through MatrixMarket then multiplied
+    let a = gen::random_uniform(40, 70, 600, 3);
+    let b = gen::random_uniform(70, 25, 500, 4);
+    let dir = std::env::temp_dir().join(format!("reap_it_{}", std::process::id()));
+    mm::write_csr(&dir.join("a.mtx"), &a).unwrap();
+    mm::write_csr(&dir.join("b.mtx"), &b).unwrap();
+    let a2 = mm::read_csr(&dir.join("a.mtx")).unwrap();
+    let b2 = mm::read_csr(&dir.join("b.mtx")).unwrap();
+    let rep = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a2, &b2).unwrap();
+    let dense = Dense::from_csr(&a).matmul(&Dense::from_csr(&b));
+    assert!(Dense::from_csr(&rep.c).max_abs_diff(&dense) < 1e-3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pathological_shapes() {
+    // single row, single column, fully dense row, all-empty
+    let cfg = FpgaConfig::reap32_spgemm();
+
+    let dense_row = gen::random_uniform(1, 500, 500, 5); // one 500-nnz row
+    let b = gen::random_uniform(500, 30, 2000, 6);
+    let rep = ReapSpgemm::new(cfg.clone()).run(&dense_row, &b).unwrap();
+    assert_eq!(rep.c, spgemm(&dense_row, &b));
+
+    let col = gen::random_uniform(60, 1, 40, 7);
+    let row = gen::random_uniform(1, 60, 30, 8);
+    let rep = ReapSpgemm::new(cfg.clone()).run(&col, &row).unwrap();
+    assert_eq!(rep.c, spgemm(&col, &row)); // outer product, 60x60
+
+    let empty = Csr::new(50, 50);
+    let rep = ReapSpgemm::new(cfg).run(&empty, &empty).unwrap();
+    assert_eq!(rep.c.nnz(), 0);
+    assert_eq!(rep.fpga_sim.cycles, 0);
+}
+
+#[test]
+#[should_panic(expected = "inner dimensions")]
+fn dimension_mismatch_rejected() {
+    let a = gen::random_uniform(4, 5, 8, 9);
+    let b = gen::random_uniform(6, 4, 8, 10);
+    let _ = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &b);
+}
+
+#[test]
+fn verification_detects_corruption() {
+    let a = gen::random_uniform(50, 50, 400, 11);
+    let good = spgemm(&a, &a);
+    let mut bad = good.clone();
+    let mid = bad.vals.len() / 2;
+    bad.vals[mid] += 0.5;
+    let v = verify::verify_csr(&bad, &good);
+    assert!(!v.ok(1e-9), "corruption must be detected");
+    assert!(verify::verify_csr(&good, &good).ok(0.0));
+}
+
+#[test]
+fn speedup_shape_reap64_beats_reap32_on_big_work() {
+    let a = gen::generate(Family::BandedFem, 800, 16000, 12);
+    let r32 = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &a).unwrap();
+    let r64 = ReapSpgemm::new(FpgaConfig::reap64_spgemm()).run(&a, &a).unwrap();
+    assert!(
+        r64.fpga_s < r32.fpga_s,
+        "REAP-64 must beat REAP-32 on FPGA time: {} vs {}",
+        r64.fpga_s,
+        r32.fpga_s
+    );
+}

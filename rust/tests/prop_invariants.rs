@@ -1,0 +1,238 @@
+//! Property-based invariants over the coordinator substrates (routing,
+//! batching, state) — the randomized counterpart of the unit suites, run
+//! through the in-tree `testing::prop` framework. Replay any failure with
+//! `PROP_SEED=<seed> cargo test --test prop_invariants`.
+
+use reap::coordinator::ReapSpgemm;
+use reap::fpga::spgemm_sim::{simulate_spgemm, Style};
+use reap::fpga::FpgaConfig;
+use reap::kernels::{spgemm, spgemm_parallel};
+use reap::rir::{decode, encode, layout, schedule};
+use reap::sparse::gen::{self, Family};
+use reap::sparse::{Csr, Idx};
+use reap::symbolic::{symbolic_factor, CholeskySymbolic};
+use reap::testing::{check, Config, Size};
+use reap::util::Pcg64;
+
+fn random_family(rng: &mut Pcg64) -> Family {
+    match rng.next_below(4) {
+        0 => Family::RandomUniform,
+        1 => Family::BandedFem,
+        2 => Family::PowerLaw,
+        _ => Family::BlockRandom,
+    }
+}
+
+fn random_matrix(rng: &mut Pcg64, size: Size) -> Csr {
+    let n = 4 + rng.range(0, 4 * size.0 + 4);
+    let nnz = rng.range(0, (n * n / 2).max(2));
+    gen::generate(random_family(rng), n, nnz.max(1), rng.next_u64())
+}
+
+/// RIR compress → DRAM layout → decompress is the identity on CSR.
+#[test]
+fn prop_rir_roundtrip_through_dram_words() {
+    check("rir roundtrip", Config::default(), |rng, size| {
+        let m = random_matrix(rng, size);
+        let bundle = 1 + rng.range(0, 40);
+        let bundles = encode::csr_to_bundles(&m, bundle);
+        let words = layout::serialize(&bundles);
+        let back = decode::bundles_to_csr(&layout::deserialize(&words).unwrap(), m.nrows, m.ncols)
+            .unwrap();
+        assert_eq!(back, m);
+    });
+}
+
+/// Scheduling covers every nonzero exactly once, never overfills a wave,
+/// and every wave's B-stream is exactly the union of its A columns.
+#[test]
+fn prop_schedule_partition_invariants() {
+    check("schedule partition", Config::default(), |rng, size| {
+        let a = random_matrix(rng, size);
+        let b = gen::generate(random_family(rng), a.ncols, (a.ncols * 3).max(1), rng.next_u64());
+        let pipelines = 1 + rng.range(0, 64);
+        let bundle = 1 + rng.range(0, 40);
+        let s = schedule::schedule_spgemm(&a, &b, pipelines, bundle);
+        let mut covered = vec![false; a.nnz()];
+        for w in &s.waves {
+            assert!(!w.assignments.is_empty());
+            assert!(w.assignments.len() <= pipelines);
+            let mut expect: Vec<Idx> = Vec::new();
+            for asg in &w.assignments {
+                assert!(asg.len <= bundle && asg.len > 0);
+                for e in asg.start..asg.start + asg.len {
+                    assert!(!covered[e], "element {e} scheduled twice");
+                    covered[e] = true;
+                }
+                expect.extend_from_slice(asg.a_cols(&a));
+            }
+            expect.sort_unstable();
+            expect.dedup();
+            assert_eq!(w.b_rows, expect, "B stream != union of A cols");
+        }
+        assert!(covered.iter().all(|&c| c), "element never scheduled");
+    });
+}
+
+/// The coordinator's bundle-ordered numeric path equals the Gustavson
+/// baseline bit-for-bit, for every design geometry.
+#[test]
+fn prop_coordinator_matches_baseline() {
+    check("coordinator == baseline", Config { cases: 24, ..Config::default() }, |rng, size| {
+        let a = random_matrix(rng, size);
+        let b = gen::generate(random_family(rng), a.ncols, (a.ncols * 2).max(1), rng.next_u64());
+        let mut cfg = FpgaConfig::reap32_spgemm();
+        cfg.pipelines = 1 + rng.range(0, 48);
+        cfg.bundle_size = 1 + rng.range(0, 33);
+        let rep = ReapSpgemm::new(cfg).run(&a, &b).unwrap();
+        rep.c.validate().unwrap();
+        assert_eq!(rep.c, spgemm(&a, &b));
+    });
+}
+
+/// Parallel SpGEMM equals serial for arbitrary thread counts.
+#[test]
+fn prop_parallel_spgemm_thread_invariance() {
+    check("parallel == serial", Config { cases: 24, ..Config::default() }, |rng, size| {
+        let a = random_matrix(rng, size);
+        let b = gen::generate(random_family(rng), a.ncols, (a.ncols * 2).max(1), rng.next_u64());
+        let threads = 1 + rng.range(0, 9);
+        assert_eq!(spgemm_parallel(&a, &b, threads), spgemm(&a, &b));
+    });
+}
+
+/// Simulator conservation laws: flops equal the analytic count, wave log
+/// sums to total cycles, busy+idle = pipelines × cycles… for any geometry.
+#[test]
+fn prop_sim_conservation() {
+    check("sim conservation", Config { cases: 32, ..Config::default() }, |rng, size| {
+        let a = random_matrix(rng, size);
+        let mut cfg = FpgaConfig::reap32_spgemm();
+        cfg.pipelines = 1 + rng.range(0, 64);
+        cfg.bundle_size = 1 + rng.range(0, 40);
+        let s = schedule::schedule_spgemm(&a, &a, cfg.pipelines, cfg.bundle_size);
+        let r = simulate_spgemm(&a, &a, &s, &cfg, Style::HandCoded);
+        assert_eq!(r.stats.flops as usize, reap::kernels::spgemm::spgemm_flops(&a, &a));
+        assert_eq!(r.stats.cycles, r.wave_cycles.iter().sum::<u64>());
+        assert_eq!(
+            r.stats.busy_pipeline_cycles + r.stats.idle_pipeline_cycles,
+            cfg.pipelines as u64 * r.stats.cycles,
+        );
+        assert_eq!(
+            r.stats.compute_bound_cycles + r.stats.dram_bound_cycles,
+            r.stats.cycles
+        );
+        // DRAM traffic matches the schedule's word accounting on the read
+        // side (A bundles + B streams)
+        assert_eq!(r.stats.bytes_read as usize, s.input_bytes());
+    });
+}
+
+/// SpMV conservation: flops = 2·nnz, coordinator matches the baseline
+/// bitwise on arbitrary geometry.
+#[test]
+fn prop_spmv_conservation_and_equality() {
+    use reap::coordinator::ReapSpmv;
+    use reap::fpga::spmv_sim::simulate_spmv;
+    check("spmv invariants", Config { cases: 24, ..Config::default() }, |rng, size| {
+        let a = random_matrix(rng, size);
+        let x: Vec<f32> = (0..a.ncols).map(|i| ((i % 9) as f32) - 4.0).collect();
+        let mut cfg = FpgaConfig::reap32_spgemm();
+        cfg.pipelines = 1 + rng.range(0, 48);
+        cfg.bundle_size = 1 + rng.range(0, 40);
+        let s = schedule::schedule_spgemm(
+            &a,
+            &Csr::new(a.ncols, a.ncols),
+            cfg.pipelines,
+            cfg.bundle_size,
+        );
+        let r = simulate_spmv(&a, &s, &cfg, Style::HandCoded);
+        assert_eq!(r.stats.flops as usize, 2 * a.nnz());
+        assert_eq!(
+            r.stats.compute_bound_cycles + r.stats.dram_bound_cycles,
+            r.stats.cycles
+        );
+        let rep = ReapSpmv::new(cfg).run(&a, &x).unwrap();
+        let want = reap::kernels::spmv(&a, &x);
+        for (g, w) in rep.y.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-3 * w.abs().max(1.0));
+        }
+    });
+}
+
+/// Cholesky sim conservation: per-column log sums to the total, cycle
+/// attribution partitions, and flops scale with the pattern.
+#[test]
+fn prop_cholesky_sim_conservation() {
+    use reap::fpga::cholesky_sim::simulate_cholesky;
+    check("cholesky sim invariants", Config { cases: 16, ..Config::default() }, |rng, size| {
+        let n = 4 + rng.range(0, 2 * size.0 + 4);
+        let base = gen::generate(random_family(rng), n, (n * 3).max(2), rng.next_u64());
+        let lower = reap::sparse::ops::make_spd(&base).lower_triangle();
+        let sym = CholeskySymbolic::analyze(&lower, 1 + rng.range(0, 40));
+        let mut cfg = FpgaConfig::reap32_cholesky();
+        cfg.pipelines = 1 + rng.range(0, 64);
+        let r = simulate_cholesky(&sym, &cfg, Style::HandCoded);
+        assert_eq!(r.column_cycles.len(), n);
+        assert_eq!(r.stats.cycles, r.column_cycles.iter().sum::<u64>());
+        assert_eq!(
+            r.stats.compute_bound_cycles + r.stats.dram_bound_cycles,
+            r.stats.cycles
+        );
+        assert!(r.stats.flops as usize >= sym.pattern.nnz());
+    });
+}
+
+/// Symbolic pattern invariants: diagonal-first ascending columns, fill-in
+/// only grows the pattern, storage map is an exact transpose.
+#[test]
+fn prop_symbolic_pattern_invariants() {
+    check("symbolic invariants", Config { cases: 24, ..Config::default() }, |rng, size| {
+        let n = 4 + rng.range(0, 2 * size.0 + 4);
+        let base = gen::generate(random_family(rng), n, (n * 3).max(2), rng.next_u64());
+        let lower = reap::sparse::ops::make_spd(&base).lower_triangle();
+        let lp = symbolic_factor(&lower);
+        assert!(lp.nnz() >= lower.nnz(), "symbolic pattern lost entries");
+        for j in 0..lp.n {
+            let rows = lp.col_rows(j);
+            assert_eq!(rows[0] as usize, j, "diagonal must lead column {j}");
+            assert!(rows.windows(2).all(|w| w[0] < w[1]));
+        }
+        // A's lower pattern is contained in L's
+        for j in 0..n {
+            for &r in lower.col_rows(j) {
+                assert!(lp.col_rows(j).contains(&r), "A({r},{j}) missing from L");
+            }
+        }
+        let sym = CholeskySymbolic::analyze(&lower, 1 + rng.range(0, 40));
+        assert_eq!(sym.storage.len(), lp.nnz());
+    });
+}
+
+/// The RL metadata stream is decodable and its triples point at exact row
+/// extents of the storage map (what the FPGA's address generation needs).
+#[test]
+fn prop_rl_stream_addresses_valid() {
+    check("rl stream addresses", Config { cases: 24, ..Config::default() }, |rng, size| {
+        let n = 4 + rng.range(0, 2 * size.0 + 4);
+        let base = gen::generate(random_family(rng), n, (n * 3).max(2), rng.next_u64());
+        let lower = reap::sparse::ops::make_spd(&base).lower_triangle();
+        let bundle = 1 + rng.range(0, 40);
+        let sym = CholeskySymbolic::analyze(&lower, bundle);
+        let decoded = layout::deserialize(&sym.rl_words).unwrap();
+        let mut per_col = vec![0usize; n];
+        for b in &decoded {
+            assert!(b.flags.metadata_only());
+            assert!(b.len() <= bundle);
+            for t in b.triples() {
+                let r = t.row as usize;
+                assert_eq!(t.start as usize, sym.storage.row_ptr[r]);
+                assert_eq!(t.end as usize, sym.storage.row_ptr[r + 1]);
+            }
+            per_col[b.shared as usize] += b.len();
+        }
+        for k in 0..n {
+            assert_eq!(per_col[k], sym.pattern.col_nnz(k), "column {k} triple count");
+        }
+    });
+}

@@ -12,4 +12,5 @@ fn main() {
         reap::harness::fig10::headline_holds(&rows),
     );
     cfg.dump_csv("fig10", &table).expect("csv");
+    println!("perf records: results/BENCH_cholesky.json");
 }

@@ -16,4 +16,5 @@ fn main() {
         reap::harness::fig6::headline_holds(&rows),
     );
     cfg.dump_csv("fig6", &table).expect("csv");
+    println!("perf records: results/BENCH_spgemm.json");
 }

@@ -32,6 +32,14 @@ fn main() {
     let m = measure_budgeted(budget, 3, || encode::csr_to_bundles(&a, 32));
     report("rir_encode (csr->bundles)", m.min_s, nnz, "elem");
 
+    // zero-allocation arena encode: buffers retained across calls
+    let mut arena = encode::BundleStream::new();
+    let m = measure_budgeted(budget, 3, || {
+        arena.encode_csr(&a, 32);
+        arena.n_bundles()
+    });
+    report("rir_encode (SoA arena, reused)", m.min_s, nnz, "elem");
+
     let bundles = encode::csr_to_bundles(&a, 32);
     let m = measure_budgeted(budget, 3, || layout::serialize(&bundles));
     report("rir_serialize (bundles->words)", m.min_s, nnz, "elem");
@@ -71,4 +79,45 @@ fn main() {
     let cc = FpgaConfig::reap32_cholesky();
     let m = measure_budgeted(budget, 3, || simulate_cholesky(&sym, &cc, Style::HandCoded));
     report("cholesky_sim (cycle model)", m.min_s, cflops, "flop");
+
+    // ---- combined CPU pass (schedule + RIR encode) thread scaling ----
+    // The acceptance target of the parallel-preprocessing PR: ≥2x at 4
+    // threads over the single-threaded pass on a large uniform-random
+    // matrix, with zero per-bundle allocations in the encode loop.
+    let big_n = n.max(1500);
+    let big = gen::random_uniform(big_n, big_n, big_n * 16, cfg.seed);
+    let bnnz = big.nnz() as f64;
+    println!(
+        "\ncombined CPU pass (schedule + encode), uniform-random n={big_n} nnz={}:",
+        big.nnz()
+    );
+    let mut arena = encode::BundleStream::new();
+    let mut serial_s = 0.0;
+    for threads in [1usize, 2, 4, 8] {
+        let m = measure_budgeted(budget, 3, || {
+            let s = schedule::schedule_spgemm_with_threads(&big, &big, 32, 32, threads);
+            let st = encode::BundleStream::from_csr_with_threads(&big, 32, threads);
+            (s.n_waves(), st.n_bundles())
+        });
+        if threads == 1 {
+            serial_s = m.min_s;
+        }
+        println!(
+            "  threads={threads}: {:>8.3} ms/pass  {:>8.1} Melem/s  speedup {:.2}x",
+            m.min_s * 1e3,
+            bnnz / m.min_s / 1e6,
+            serial_s / m.min_s
+        );
+    }
+    // allocation-free steady state: the reused arena encodes with no
+    // per-bundle (or per-call, after warmup) heap traffic
+    let m = measure_budgeted(budget, 3, || {
+        arena.encode_csr(&big, 32);
+        arena.n_bundles()
+    });
+    println!(
+        "  encode-only (reused arena, 1 thread): {:.3} ms/pass  {:.1} Melem/s",
+        m.min_s * 1e3,
+        bnnz / m.min_s / 1e6
+    );
 }

@@ -11,8 +11,10 @@
 //!    dataflow) or the bit-equivalent in-process path ([`ExecMode::Rust`],
 //!    used for large benchmark sweeps) — and the *timing* from the cycle
 //!    simulator;
-//! 3. **overlap accounting** ([`overlap`]): the paper overlaps CPU
-//!    reformatting with FPGA compute after the first round;
+//! 3. **overlap accounting** ([`overlap`]): per-wave double-buffered
+//!    pipelining — wave *k*'s CPU reformatting overlaps wave *k−1*'s FPGA
+//!    compute, from measured per-wave CPU timestamps and simulated
+//!    per-wave FPGA cycles;
 //! 4. **verification** ([`verify`]): results checked against the measured
 //!    CPU baselines.
 

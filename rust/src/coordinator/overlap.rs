@@ -5,12 +5,58 @@
 //! while CPU reformats the data. Figure 6 shows the overall time taking
 //! into account both the CPU and the FPGA time."
 //!
-//! With the CPU pass costing `t_cpu` spread over `rounds` scheduling
-//! rounds and the FPGA costing `t_fpga`, the end-to-end time is the first
-//! (unoverlapped) CPU round plus the longer of the remaining CPU work and
-//! the FPGA work.
+//! Two models live here:
+//!
+//! * [`pipelined_total`] — the per-wave double-buffered pipeline the
+//!   coordinators use: wave *k*'s CPU scheduling overlaps wave *k−1*'s
+//!   FPGA compute, driven by measured per-wave CPU costs and simulated
+//!   per-wave FPGA times (EXPERIMENTS.md §Perf).
+//! * [`overlapped_total`] — the legacy scalar approximation (total CPU
+//!   time amortized over `rounds` equal rounds), kept for sensitivity
+//!   studies that have no per-wave trace.
 
-/// End-to-end REAP time under round-granular overlap.
+/// End-to-end time of the per-wave CPU→FPGA pipeline.
+///
+/// The CPU produces waves in order (`cpu_wave_s[k]` each); the FPGA starts
+/// wave *k* once the CPU has finished producing it **and** the FPGA has
+/// finished wave *k−1* (double buffering: one wave in flight on each side).
+/// Equivalently:
+///
+/// ```text
+/// cpu_done[k]  = cpu_done[k-1] + cpu_wave_s[k]
+/// fpga_done[k] = max(fpga_done[k-1], cpu_done[k]) + fpga_wave_s[k]
+/// total        = fpga_done[last]
+/// ```
+///
+/// Boundary behavior, all exercised in the unit tests:
+/// * no waves at all → `0.0` (the caller adds any serial prologue);
+/// * mismatched lengths are tolerated — the shorter side contributes zero
+///   for its missing waves (an FPGA-only or CPU-only tail);
+/// * a single wave degenerates to the serial sum `c₀ + f₀`;
+/// * all-zero CPU costs degenerate to the FPGA total (and vice versa).
+///
+/// The result is bounded below by `max(Σcpu, Σfpga)` and above by
+/// `Σcpu + Σfpga`.
+pub fn pipelined_total(cpu_wave_s: &[f64], fpga_wave_s: &[f64]) -> f64 {
+    let n = cpu_wave_s.len().max(fpga_wave_s.len());
+    let mut cpu_done = 0.0f64;
+    let mut fpga_done = 0.0f64;
+    for k in 0..n {
+        cpu_done += cpu_wave_s.get(k).copied().unwrap_or(0.0);
+        let f = fpga_wave_s.get(k).copied().unwrap_or(0.0);
+        fpga_done = fpga_done.max(cpu_done) + f;
+    }
+    fpga_done
+}
+
+/// End-to-end REAP time under round-granular overlap (legacy scalar model).
+///
+/// `t_cpu` is spread over `rounds` equal rounds; the first round cannot
+/// overlap, the remainder races the FPGA. Conventions at the boundaries:
+/// `rounds == 0` is treated as `rounds == 1` (there is always at least the
+/// initial, unoverlapped round), so 0 and 1 intentionally coincide;
+/// `t_cpu == 0` yields exactly `t_fpga` (nothing to overlap); both zero
+/// yields `0`.
 pub fn overlapped_total(t_cpu: f64, t_fpga: f64, rounds: u64) -> f64 {
     let rounds = rounds.max(1) as f64;
     let first = t_cpu / rounds;
@@ -51,6 +97,18 @@ mod tests {
     }
 
     #[test]
+    fn zero_rounds_treated_as_one() {
+        assert_eq!(overlapped_total(2.0, 3.0, 0), overlapped_total(2.0, 3.0, 1));
+    }
+
+    #[test]
+    fn zero_cpu_is_fpga_only() {
+        assert_eq!(overlapped_total(0.0, 3.0, 4), 3.0);
+        assert_eq!(overlapped_total(0.0, 3.0, 0), 3.0);
+        assert_eq!(overlapped_total(0.0, 0.0, 7), 0.0);
+    }
+
+    #[test]
     fn bounded_by_serial_and_by_max() {
         for &(c, f, r) in &[(1.0, 2.0, 4u64), (5.0, 0.5, 16), (0.0, 1.0, 2)] {
             let t = overlapped_total(c, f, r);
@@ -64,5 +122,72 @@ mod tests {
         assert_eq!(cpu_fraction(0.0, 0.0), 0.0);
         assert!((cpu_fraction(1.0, 3.0) - 0.25).abs() < 1e-12);
         assert_eq!(cpu_fraction(2.0, 0.0), 1.0);
+    }
+
+    // ---- per-wave pipeline ----
+
+    #[test]
+    fn empty_schedule_costs_nothing() {
+        assert_eq!(pipelined_total(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn single_wave_is_serial() {
+        assert!((pipelined_total(&[2.0], &[3.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fpga_dominated_pays_only_first_cpu_wave() {
+        // CPU waves hide entirely behind the (longer) FPGA waves after the
+        // first: total = c0 + sum(f)
+        let c = [0.1, 0.1, 0.1, 0.1];
+        let f = [1.0, 1.0, 1.0, 1.0];
+        assert!((pipelined_total(&c, &f) - 4.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cpu_dominated_pays_only_last_fpga_wave() {
+        // FPGA waves hide behind CPU production: total = sum(c) + f_last
+        let c = [1.0, 1.0, 1.0];
+        let f = [0.2, 0.2, 0.2];
+        assert!((pipelined_total(&c, &f) - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mismatched_lengths_tolerated() {
+        // FPGA trace longer than CPU trace: missing CPU waves cost zero
+        assert!((pipelined_total(&[1.0], &[0.5, 0.5, 0.5]) - 2.5).abs() < 1e-12);
+        // CPU trace longer: trailing CPU work still serializes
+        assert!((pipelined_total(&[1.0, 1.0], &[0.1]) - 2.0).abs() < 1e-12);
+        // degenerate one-sided traces
+        assert_eq!(pipelined_total(&[], &[2.0, 3.0]), 5.0);
+        assert_eq!(pipelined_total(&[2.0, 3.0], &[]), 5.0);
+    }
+
+    #[test]
+    fn bounded_by_sums() {
+        let cases: &[(&[f64], &[f64])] = &[
+            (&[1.0, 0.5, 2.0], &[0.7, 0.7, 0.7]),
+            (&[0.0, 0.0], &[1.0, 1.0]),
+            (&[3.0], &[0.0]),
+            (&[0.2, 0.9, 0.1, 0.4], &[0.5, 0.1, 0.8, 0.2]),
+        ];
+        for (c, f) in cases {
+            let t = pipelined_total(c, f);
+            let (sc, sf) = (c.iter().sum::<f64>(), f.iter().sum::<f64>());
+            assert!(t <= sc + sf + 1e-12, "≤ serial: {t} vs {sc}+{sf}");
+            assert!(t >= sc.max(sf) - 1e-12, "≥ max side: {t}");
+        }
+    }
+
+    #[test]
+    fn pipelining_beats_the_scalar_model_on_skewed_waves() {
+        // one huge FPGA wave first: the scalar model can only amortize,
+        // the per-wave pipeline hides all later CPU work behind it
+        let c = [0.1, 0.4, 0.4, 0.4];
+        let f = [2.0, 0.01, 0.01, 0.01];
+        let per_wave = pipelined_total(&c, &f);
+        let scalar = overlapped_total(c.iter().sum(), f.iter().sum(), c.len() as u64);
+        assert!(per_wave <= scalar + 1e-12);
     }
 }

@@ -20,6 +20,10 @@ use super::stats::SimStats;
 #[derive(Clone, Debug)]
 pub struct SpmvSimResult {
     pub stats: SimStats,
+    /// Cycles of the one-time x-vector load (before the first wave).
+    pub x_load_cycles: u64,
+    /// Cycle count per wave; `x_load_cycles + Σ wave_cycles == cycles`.
+    pub wave_cycles: Vec<u64>,
 }
 
 /// Simulate `y = A x` over the chunk schedule (the SpGEMM scheduler's wave
@@ -36,6 +40,7 @@ pub fn simulate_spmv(a: &Csr, schedule: &SpgemmSchedule, cfg: &FpgaConfig, style
     let x_cycles = dram.read(cfg, x_bytes);
     stats.cycles += x_cycles;
     stats.dram_bound_cycles += x_cycles;
+    let mut wave_cycles_log = Vec::with_capacity(schedule.waves.len());
 
     let fill = cfg.mult_latency + cfg.add_latency * 6; // adder tree drain
     let indirection = match style {
@@ -80,11 +85,12 @@ pub fn simulate_spmv(a: &Csr, schedule: &SpgemmSchedule, cfg: &FpgaConfig, style
         stats.busy_pipeline_cycles += active * wave_cy;
         stats.idle_pipeline_cycles += (p as u64 - active) * wave_cy;
         stats.flops += 2 * elems_total;
+        wave_cycles_log.push(wave_cy);
     }
 
     stats.bytes_read = dram.bytes_read;
     stats.bytes_written = dram.bytes_written;
-    SpmvSimResult { stats }
+    SpmvSimResult { stats, x_load_cycles: x_cycles, wave_cycles: wave_cycles_log }
 }
 
 #[cfg(test)]
@@ -109,6 +115,12 @@ mod tests {
         assert_eq!(
             r.stats.compute_bound_cycles + r.stats.dram_bound_cycles,
             r.stats.cycles
+        );
+        assert_eq!(r.wave_cycles.len() as u64, r.stats.waves);
+        assert_eq!(
+            r.x_load_cycles + r.wave_cycles.iter().sum::<u64>(),
+            r.stats.cycles,
+            "wave log + x load must sum to total"
         );
     }
 

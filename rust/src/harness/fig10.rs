@@ -28,9 +28,11 @@ pub struct Fig10Row {
     pub reap64: f64,
 }
 
-/// Run the figure.
+/// Run the figure; also dumps `BENCH_cholesky.json` when output is
+/// enabled.
 pub fn run(cfg: &RunConfig) -> (Vec<Fig10Row>, Table) {
     let mut rows = Vec::new();
+    let mut records = Vec::new();
     for spec in cholesky_suite() {
         let lower = spec.instantiate_spd(cfg.max_rows, cfg.seed);
         // CHOLMOD stand-in: numeric phase only, over a prebuilt pattern
@@ -44,22 +46,32 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig10Row>, Table) {
         let _ = elimination_tree(&lower);
         let etree_s = t.elapsed_s();
 
-        let speedup_of = |fcfg: FpgaConfig| {
+        let id = spec.cholesky_id.unwrap().to_string();
+        let mut speedup_of = |fcfg: FpgaConfig, config: &str| {
             let rep = ReapCholesky::new(fcfg).run(&lower).unwrap();
+            records.push(super::json::BenchRecord {
+                matrix: format!("{} {}", id, spec.name),
+                config: config.to_string(),
+                cpu_s: rep.cpu_symbolic_s,
+                fpga_s: rep.fpga_s,
+                total_s: rep.total_s,
+                waves: rep.fpga_sim.waves,
+            });
             let reap_total =
                 (rep.cpu_symbolic_s - etree_s).max(0.0) + rep.fpga_s;
             cpu / reap_total
         };
-        let reap32 = speedup_of(FpgaConfig::reap32_cholesky());
-        let reap64 = speedup_of(FpgaConfig::reap64_cholesky());
+        let reap32 = speedup_of(FpgaConfig::reap32_cholesky(), "REAP-32");
+        let reap64 = speedup_of(FpgaConfig::reap64_cholesky(), "REAP-64");
         rows.push(Fig10Row {
-            id: spec.cholesky_id.unwrap().to_string(),
+            id,
             name: spec.name.to_string(),
             cholmod_s: cpu,
             reap32,
             reap64,
         });
     }
+    cfg.dump_bench_json("BENCH_cholesky", &records).expect("BENCH_cholesky.json");
 
     let mut table = Table::new(
         "Fig 10 — Cholesky speedup vs CHOLMOD-class CPU-1 (numeric phase)",

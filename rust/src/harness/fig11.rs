@@ -19,28 +19,53 @@ pub struct Fig11Row {
     pub name: String,
     pub cpu_pct: f64,
     pub fpga_pct: f64,
+    /// End-to-end seconds under per-column pipelined overlap.
+    pub total_s: f64,
+    /// Serial (no-overlap) seconds: cpu symbolic + fpga.
+    pub serial_s: f64,
 }
 
-/// Run the figure.
+/// Run the figure; also dumps `BENCH_cholesky_fig11.json` when output is
+/// enabled.
 pub fn run(cfg: &RunConfig) -> (Vec<Fig11Row>, Table) {
     let mut rows = Vec::new();
+    let mut records = Vec::new();
     for spec in cholesky_suite() {
         let lower = spec.instantiate_spd(cfg.max_rows, cfg.seed);
         let rep = ReapCholesky::new(FpgaConfig::reap32_cholesky()).run(&lower).unwrap();
         let cpu_frac = overlap::cpu_fraction(rep.cpu_symbolic_s, rep.fpga_s);
+        let id = spec.cholesky_id.unwrap().to_string();
+        records.push(super::json::BenchRecord {
+            matrix: format!("{} {}", id, spec.name),
+            config: "REAP-32".to_string(),
+            cpu_s: rep.cpu_symbolic_s,
+            fpga_s: rep.fpga_s,
+            total_s: rep.total_s,
+            waves: rep.fpga_sim.waves,
+        });
         rows.push(Fig11Row {
-            id: spec.cholesky_id.unwrap().to_string(),
+            id,
             name: spec.name.to_string(),
             cpu_pct: cpu_frac,
             fpga_pct: 1.0 - cpu_frac,
+            total_s: rep.total_s,
+            serial_s: rep.cpu_symbolic_s + rep.fpga_s,
         });
     }
+    cfg.dump_bench_json("BENCH_cholesky_fig11", &records).expect("BENCH_cholesky_fig11.json");
     let mut table = Table::new(
         "Fig 11 — REAP-32 Cholesky time breakdown (CPU symbolic vs FPGA)",
-        &["id", "matrix", "CPU %", "FPGA %"],
+        &["id", "matrix", "CPU %", "FPGA %", "overlapped(ms)", "serial(ms)"],
     );
     for r in &rows {
-        table.row(vec![r.id.clone(), r.name.clone(), pct(r.cpu_pct), pct(r.fpga_pct)]);
+        table.row(vec![
+            r.id.clone(),
+            r.name.clone(),
+            pct(r.cpu_pct),
+            pct(r.fpga_pct),
+            format!("{:.3}", r.total_s * 1e3),
+            format!("{:.3}", r.serial_s * 1e3),
+        ]);
     }
     (rows, table)
 }
@@ -63,6 +88,7 @@ mod tests {
         assert_eq!(rows.len(), 8);
         for r in &rows {
             assert!((r.cpu_pct + r.fpga_pct - 1.0).abs() < 1e-9);
+            assert!(r.total_s <= r.serial_s + 1e-9);
         }
     }
 }

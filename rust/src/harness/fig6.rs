@@ -10,6 +10,7 @@ use crate::fpga::FpgaConfig;
 use crate::util::stats::geomean;
 use crate::util::table::{speedup, Table};
 
+use super::json::BenchRecord;
 use super::report::{measure_spgemm_cpu, RunConfig};
 use super::suite::spgemm_suite;
 
@@ -27,9 +28,12 @@ pub struct Fig6Row {
     pub reap128: f64,
 }
 
-/// Run the figure; returns rows plus the rendered table.
+/// Run the figure; returns rows plus the rendered table. Speedups use the
+/// coordinators' per-wave pipelined `total_s`; when output is enabled the
+/// underlying (cpu, fpga, total) triples land in `BENCH_spgemm.json`.
 pub fn run(cfg: &RunConfig) -> (Vec<Fig6Row>, Table) {
     let mut rows = Vec::new();
+    let mut records: Vec<BenchRecord> = Vec::new();
     for spec in spgemm_suite() {
         let a = spec.instantiate(cfg.max_rows, cfg.seed);
         // paper protocol: C = A^2
@@ -39,8 +43,20 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig6Row>, Table) {
         let r32 = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &a).unwrap();
         let r64 = ReapSpgemm::new(FpgaConfig::reap64_spgemm()).run(&a, &a).unwrap();
         let r128 = ReapSpgemm::new(FpgaConfig::reap128_spgemm()).run(&a, &a).unwrap();
+        let id = spec.spgemm_id.unwrap().to_string();
+        let matrix = format!("{} {}", id, spec.name);
+        for (config, rep) in [("REAP-32", &r32), ("REAP-64", &r64), ("REAP-128", &r128)] {
+            records.push(BenchRecord {
+                matrix: matrix.clone(),
+                config: config.to_string(),
+                cpu_s: rep.cpu_preprocess_s,
+                fpga_s: rep.fpga_s,
+                total_s: rep.total_s,
+                waves: rep.fpga_sim.waves,
+            });
+        }
         rows.push(Fig6Row {
-            id: spec.spgemm_id.unwrap().to_string(),
+            id,
             name: spec.name.to_string(),
             cpu1_s: cpu1,
             cpu2: cpu1 / cpu2,
@@ -50,6 +66,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig6Row>, Table) {
             reap128: cpu1 / r128.total_s,
         });
     }
+    cfg.dump_bench_json("BENCH_spgemm", &records).expect("BENCH_spgemm.json");
 
     let mut table = Table::new(
         "Fig 6 — SpGEMM speedup vs MKL-class CPU-1 (C = A^2)",
@@ -97,8 +114,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn quick_run_produces_full_suite() {
-        let cfg = RunConfig::quick();
+    fn quick_run_produces_full_suite_and_bench_json() {
+        let mut cfg = RunConfig::quick();
+        let dir = std::env::temp_dir().join(format!("reap-fig6-{}", std::process::id()));
+        cfg.csv_dir = Some(dir.clone());
         let (rows, table) = run(&cfg);
         assert_eq!(rows.len(), 20);
         assert_eq!(table.len(), 21); // + geomean row
@@ -106,5 +125,9 @@ mod tests {
             assert!(r.cpu1_s > 0.0);
             assert!(r.reap32.is_finite() && r.reap32 > 0.0);
         }
+        let text = std::fs::read_to_string(dir.join("BENCH_spgemm.json")).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 60); // 20 matrices × 3 designs
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,127 @@
+//! Machine-readable perf results: `BENCH_spgemm.json` / `BENCH_cholesky.json`.
+//!
+//! One flat JSON array of per-(matrix, design-point) records so the perf
+//! trajectory is diffable across PRs without parsing ASCII tables. The
+//! format is deliberately tiny — parse it back with [`crate::util::json`].
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// One benchmark record: a matrix × FPGA-design measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Matrix identifier (suite id + name).
+    pub matrix: String,
+    /// Design-point name (e.g. `REAP-32`).
+    pub config: String,
+    /// Measured CPU preprocessing/symbolic seconds.
+    pub cpu_s: f64,
+    /// Simulated FPGA seconds.
+    pub fpga_s: f64,
+    /// End-to-end seconds under per-wave pipelined overlap.
+    pub total_s: f64,
+    /// Scheduling waves (SpGEMM/SpMV) or columns (Cholesky).
+    pub waves: u64,
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render records as a JSON array (stable field order, one record per line).
+pub fn render_bench(records: &[BenchRecord]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"matrix\": \"{}\", \"config\": \"{}\", \"cpu_s\": {:e}, \
+             \"fpga_s\": {:e}, \"total_s\": {:e}, \"waves\": {}}}{}\n",
+            escape(&r.matrix),
+            escape(&r.config),
+            r.cpu_s,
+            r.fpga_s,
+            r.total_s,
+            r.waves,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write records as JSON to `path` (creating parent directories).
+pub fn write_bench(path: &Path, records: &[BenchRecord]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, render_bench(records))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample() -> Vec<BenchRecord> {
+        vec![
+            BenchRecord {
+                matrix: "wb \"edu\"".into(),
+                config: "REAP-32".into(),
+                cpu_s: 1.5e-3,
+                fpga_s: 2.5e-3,
+                total_s: 3.0e-3,
+                waves: 42,
+            },
+            BenchRecord {
+                matrix: "m2".into(),
+                config: "REAP-64".into(),
+                cpu_s: 0.0,
+                fpga_s: 1.0,
+                total_s: 1.0,
+                waves: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn renders_parseable_json() {
+        let text = render_bench(&sample());
+        let j = Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("matrix").unwrap().as_str(), Some("wb \"edu\""));
+        assert_eq!(arr[0].get("config").unwrap().as_str(), Some("REAP-32"));
+        assert!((arr[0].get("cpu_s").unwrap().as_f64().unwrap() - 1.5e-3).abs() < 1e-12);
+        assert_eq!(arr[1].get("waves").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn empty_record_list_is_empty_array() {
+        let j = Json::parse(&render_bench(&[])).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn write_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("reap-json-{}", std::process::id()));
+        let path = dir.join("BENCH_test.json");
+        write_bench(&path, &sample()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

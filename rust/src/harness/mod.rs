@@ -22,8 +22,10 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod hls_cmp;
+pub mod json;
 pub mod report;
 pub mod suite;
 pub mod tables;
 
+pub use json::BenchRecord;
 pub use report::RunConfig;

@@ -45,6 +45,19 @@ impl RunConfig {
         }
         Ok(())
     }
+
+    /// Write benchmark records as `<csv_dir>/<name>.json` when output is
+    /// enabled (the `BENCH_*.json` perf-trajectory files).
+    pub fn dump_bench_json(
+        &self,
+        name: &str,
+        records: &[super::json::BenchRecord],
+    ) -> anyhow::Result<()> {
+        if let Some(dir) = &self.csv_dir {
+            super::json::write_bench(&dir.join(format!("{name}.json")), records)?;
+        }
+        Ok(())
+    }
 }
 
 /// Parallel-scaling model for the CPU-N baselines when the host has fewer

@@ -21,5 +21,7 @@ pub mod triangular;
 
 pub use cholesky::{cholesky_numeric, CholeskyFactor};
 pub use spgemm::spgemm;
-pub use spgemm_parallel::spgemm_parallel;
+pub use spgemm_parallel::{
+    flop_balanced_ranges, spgemm_parallel, spgemm_parallel_with_scratch, SpaScratch,
+};
 pub use spmv::{spmv, spmv_parallel};

@@ -4,71 +4,96 @@
 //! (the same decomposition MKL uses under OpenMP). Rows are distributed in
 //! contiguous blocks balanced by *flop count*, not row count — power-law
 //! suites make plain row-splitting badly skewed.
+//!
+//! Per-worker state lives in a reusable [`SpaScratch`] (stamped sparse
+//! accumulator); callers that invoke the kernel repeatedly (the measured
+//! harness, the coordinator's scheduled numeric path) pass a scratch pool
+//! so steady-state calls perform no accumulator allocations.
 
 use crate::sparse::{Csr, Idx, Val};
 
-/// C = A × B using `nthreads` worker threads.
-pub fn spgemm_parallel(a: &Csr, b: &Csr, nthreads: usize) -> Csr {
-    assert_eq!(a.ncols, b.nrows, "inner dimensions disagree");
-    let nthreads = nthreads.max(1);
-    if nthreads == 1 || a.nrows < 2 * nthreads {
-        return super::spgemm::spgemm(a, b);
+/// Reusable stamped-SPA worker state: dense value + stamp arrays over the
+/// output column space plus the touched-column list. The stamp discipline
+/// makes `clear` O(1) — a row is "reset" by bumping the tick.
+#[derive(Debug, Default)]
+pub struct SpaScratch {
+    acc: Vec<Val>,
+    stamp: Vec<u32>,
+    touched: Vec<Idx>,
+    tick: u32,
+}
+
+impl SpaScratch {
+    /// Fresh, empty scratch (arrays grow on first [`Self::ensure`]).
+    pub fn new() -> Self {
+        SpaScratch { acc: Vec::new(), stamp: Vec::new(), touched: Vec::new(), tick: u32::MAX }
     }
 
-    // Flop-balanced contiguous row ranges.
-    let bounds = flop_balanced_ranges(a, b, nthreads);
-
-    // Each worker computes its row band into its own arrays.
-    struct Band {
-        row_ptr: Vec<usize>, // local, rebased later
-        cols: Vec<Idx>,
-        vals: Vec<Val>,
-    }
-
-    let bands: Vec<Band> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(bounds.len() - 1);
-        for w in 0..bounds.len() - 1 {
-            let (lo, hi) = (bounds[w], bounds[w + 1]);
-            let a_ref = &*a;
-            let b_ref = &*b;
-            handles.push(scope.spawn(move || {
-                let mut row_ptr = vec![0usize; hi - lo + 1];
-                let mut cols: Vec<Idx> = Vec::new();
-                let mut vals: Vec<Val> = Vec::new();
-                let mut acc: Vec<Val> = vec![0.0; b_ref.ncols];
-                let mut stamp: Vec<u32> = vec![u32::MAX; b_ref.ncols];
-                let mut touched: Vec<Idx> = Vec::new();
-                for (li, i) in (lo..hi).enumerate() {
-                    let tick = li as u32;
-                    touched.clear();
-                    for (&ca, &va) in a_ref.row_cols(i).iter().zip(a_ref.row_vals(i)) {
-                        let r = ca as usize;
-                        for (&cb, &vb) in b_ref.row_cols(r).iter().zip(b_ref.row_vals(r)) {
-                            let j = cb as usize;
-                            if stamp[j] != tick {
-                                stamp[j] = tick;
-                                acc[j] = va * vb;
-                                touched.push(cb);
-                            } else {
-                                acc[j] += va * vb;
-                            }
-                        }
-                    }
-                    touched.sort_unstable();
-                    for &c in &touched {
-                        cols.push(c);
-                        vals.push(acc[c as usize]);
-                    }
-                    row_ptr[li + 1] = cols.len();
-                }
-                Band { row_ptr, cols, vals }
-            }));
+    /// Grow the accumulator to cover `ncols` output columns. Existing
+    /// stamps stay valid: ticks are monotone, so stale entries never
+    /// collide with a future tick (the wrap case refreshes every stamp).
+    pub fn ensure(&mut self, ncols: usize) {
+        if self.acc.len() < ncols {
+            self.acc.resize(ncols, 0.0);
+            self.stamp.resize(ncols, u32::MAX);
         }
-        handles.into_iter().map(|h| h.join().expect("spgemm worker panicked")).collect()
-    });
+    }
 
-    // Stitch bands together.
-    let mut row_ptr = vec![0usize; a.nrows + 1];
+    /// Start accumulating a new output row; returns the row's tick.
+    #[inline]
+    pub fn begin_row(&mut self) -> u32 {
+        self.tick = self.tick.wrapping_add(1);
+        if self.tick == u32::MAX {
+            // wrapped into the sentinel: refresh stamps once per 2^32 rows
+            self.stamp.iter_mut().for_each(|s| *s = u32::MAX);
+            self.tick = 0;
+        }
+        self.touched.clear();
+        self.tick
+    }
+
+    /// Accumulate `v` into output column `j` under the current row's tick.
+    #[inline]
+    pub fn add(&mut self, j: Idx, v: Val) {
+        let tick = self.tick;
+        let ji = j as usize;
+        if self.stamp[ji] != tick {
+            self.stamp[ji] = tick;
+            self.acc[ji] = v;
+            self.touched.push(j);
+        } else {
+            self.acc[ji] += v;
+        }
+    }
+
+    /// Sort the touched columns and append the row to `cols`/`vals`.
+    pub fn drain_row(&mut self, cols: &mut Vec<Idx>, vals: &mut Vec<Val>) {
+        self.touched.sort_unstable();
+        cols.reserve(self.touched.len());
+        vals.reserve(self.touched.len());
+        for &c in &self.touched {
+            cols.push(c);
+            vals.push(self.acc[c as usize]);
+        }
+    }
+}
+
+/// One worker's output band, stitched into the final CSR afterwards.
+pub(crate) struct Band {
+    pub row_ptr: Vec<usize>, // local, rebased later
+    pub cols: Vec<Idx>,
+    pub vals: Vec<Val>,
+}
+
+/// Stitch per-band outputs (bands cover `bounds` row ranges in order) into
+/// one CSR. Deterministic: pure concatenation plus pointer rebasing.
+pub(crate) fn stitch_bands(
+    nrows: usize,
+    ncols: usize,
+    bounds: &[usize],
+    bands: Vec<Band>,
+) -> Csr {
+    let mut row_ptr = vec![0usize; nrows + 1];
     let total: usize = bands.iter().map(|b| b.cols.len()).sum();
     let mut cols = Vec::with_capacity(total);
     let mut vals = Vec::with_capacity(total);
@@ -81,12 +106,76 @@ pub fn spgemm_parallel(a: &Csr, b: &Csr, nthreads: usize) -> Csr {
         cols.extend_from_slice(&band.cols);
         vals.extend_from_slice(&band.vals);
     }
-    Csr { nrows: a.nrows, ncols: b.ncols, row_ptr, cols, vals }
+    Csr { nrows, ncols, row_ptr, cols, vals }
+}
+
+/// C = A × B using `nthreads` worker threads.
+pub fn spgemm_parallel(a: &Csr, b: &Csr, nthreads: usize) -> Csr {
+    let mut pool = Vec::new();
+    spgemm_parallel_with_scratch(a, b, nthreads, &mut pool)
+}
+
+/// C = A × B using `nthreads` workers drawing their accumulators from
+/// `pool` (grown to the worker count on first use, reused afterwards —
+/// repeated calls perform no SPA allocations).
+pub fn spgemm_parallel_with_scratch(
+    a: &Csr,
+    b: &Csr,
+    nthreads: usize,
+    pool: &mut Vec<SpaScratch>,
+) -> Csr {
+    assert_eq!(a.ncols, b.nrows, "inner dimensions disagree");
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || a.nrows < 2 * nthreads {
+        return super::spgemm::spgemm(a, b);
+    }
+
+    // Flop-balanced contiguous row ranges.
+    let bounds = flop_balanced_ranges(a, b, nthreads);
+    let nbands = bounds.len() - 1;
+    while pool.len() < nbands {
+        pool.push(SpaScratch::new());
+    }
+    for s in pool.iter_mut().take(nbands) {
+        s.ensure(b.ncols);
+    }
+
+    let bands: Vec<Band> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nbands);
+        for (w, scratch) in pool.iter_mut().take(nbands).enumerate() {
+            let (lo, hi) = (bounds[w], bounds[w + 1]);
+            let a_ref = &*a;
+            let b_ref = &*b;
+            handles.push(scope.spawn(move || spgemm_band(a_ref, b_ref, lo, hi, scratch)));
+        }
+        handles.into_iter().map(|h| h.join().expect("spgemm worker panicked")).collect()
+    });
+
+    stitch_bands(a.nrows, b.ncols, &bounds, bands)
+}
+
+/// Compute rows `[lo, hi)` of C = A × B into a local band.
+fn spgemm_band(a: &Csr, b: &Csr, lo: usize, hi: usize, scratch: &mut SpaScratch) -> Band {
+    let mut row_ptr = vec![0usize; hi - lo + 1];
+    let mut cols: Vec<Idx> = Vec::new();
+    let mut vals: Vec<Val> = Vec::new();
+    for (li, i) in (lo..hi).enumerate() {
+        scratch.begin_row();
+        for (&ca, &va) in a.row_cols(i).iter().zip(a.row_vals(i)) {
+            let r = ca as usize;
+            for (&cb, &vb) in b.row_cols(r).iter().zip(b.row_vals(r)) {
+                scratch.add(cb, va * vb);
+            }
+        }
+        scratch.drain_row(&mut cols, &mut vals);
+        row_ptr[li + 1] = cols.len();
+    }
+    Band { row_ptr, cols, vals }
 }
 
 /// Split `0..a.nrows` into ≤ `nthreads` contiguous ranges with roughly
 /// equal multiply counts. Returns range boundaries (len = ranges + 1).
-fn flop_balanced_ranges(a: &Csr, b: &Csr, nthreads: usize) -> Vec<usize> {
+pub fn flop_balanced_ranges(a: &Csr, b: &Csr, nthreads: usize) -> Vec<usize> {
     let mut row_flops = vec![0usize; a.nrows];
     for i in 0..a.nrows {
         row_flops[i] = a.row_cols(i).iter().map(|&c| b.row_nnz(c as usize)).sum();
@@ -136,6 +225,36 @@ mod tests {
     fn more_threads_than_rows() {
         let a = gen::random_uniform(4, 4, 8, 2);
         assert_eq!(spgemm_parallel(&a, &a, 64), spgemm(&a, &a));
+    }
+
+    #[test]
+    fn scratch_pool_reuse_across_calls() {
+        let a = gen::power_law(100, 2000, 4);
+        let b = gen::random_uniform(100, 100, 1500, 5);
+        let serial = spgemm(&a, &b);
+        let mut pool = Vec::new();
+        for _ in 0..3 {
+            assert_eq!(spgemm_parallel_with_scratch(&a, &b, 4, &mut pool), serial);
+        }
+        assert!(!pool.is_empty());
+        // the pool also survives a differently-shaped product
+        let c = gen::random_uniform(100, 40, 800, 6);
+        assert_eq!(spgemm_parallel_with_scratch(&a, &c, 4, &mut pool), spgemm(&a, &c));
+    }
+
+    #[test]
+    fn scratch_tick_survives_many_rows() {
+        let mut s = SpaScratch::new();
+        s.ensure(8);
+        let mut last = None;
+        for _ in 0..1000 {
+            let t = s.begin_row();
+            if let Some(prev) = last {
+                assert_ne!(t, prev);
+            }
+            assert_ne!(t, u32::MAX);
+            last = Some(t);
+        }
     }
 
     #[test]

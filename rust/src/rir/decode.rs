@@ -10,7 +10,8 @@ use anyhow::{bail, ensure, Result};
 
 use crate::sparse::{Csr, Idx, Val};
 
-use super::bundle::{Bundle, Payload};
+use super::bundle::{Bundle, BundleFlags, Payload};
+use super::encode::BundleStream;
 
 /// Reassemble a CSR matrix from a bundle stream produced by
 /// [`super::encode::csr_to_bundles`].
@@ -19,12 +20,7 @@ use super::bundle::{Bundle, Payload};
 /// shape-agnostic, exactly like the hardware). Metadata-only bundles are
 /// skipped (they carry scheduling, not data).
 pub fn bundles_to_csr(bundles: &[Bundle], nrows: usize, ncols: usize) -> Result<Csr> {
-    let mut row_ptr = vec![0usize; nrows + 1];
-    let mut cols: Vec<Idx> = Vec::new();
-    let mut vals: Vec<Val> = Vec::new();
-    let mut current_row: Option<Idx> = None;
-    let mut next_row_fill = 0usize; // rows completed so far
-
+    let mut asm = RowAssembler::new(nrows, ncols);
     for b in bundles {
         if b.flags.metadata_only() {
             continue;
@@ -35,43 +31,106 @@ pub fn bundles_to_csr(bundles: &[Bundle], nrows: usize, ncols: usize) -> Result<
                 bail!("schedule payload without METADATA_ONLY flag")
             }
         };
-        match current_row {
-            None => current_row = Some(b.shared),
+        asm.push(b.shared, b.flags, distinct, values)?;
+    }
+    asm.finish()
+}
+
+/// Reassemble a CSR matrix from a flat [`BundleStream`] arena — identical
+/// validation to [`bundles_to_csr`] without materializing boxed bundles.
+pub fn stream_to_csr(stream: &BundleStream, nrows: usize, ncols: usize) -> Result<Csr> {
+    let mut asm = RowAssembler::new(nrows, ncols);
+    for b in stream.iter() {
+        if b.flags.metadata_only() {
+            continue;
+        }
+        asm.push(b.shared, b.flags, b.cols, b.vals)?;
+    }
+    asm.finish()
+}
+
+/// Shared row-reassembly state: enforces the stream invariants (row chains
+/// contiguous, one `END_OF_ROW` per chain, rows in ascending order).
+struct RowAssembler {
+    nrows: usize,
+    ncols: usize,
+    row_ptr: Vec<usize>,
+    cols: Vec<Idx>,
+    vals: Vec<Val>,
+    current_row: Option<Idx>,
+    next_row_fill: usize, // rows completed so far
+}
+
+impl RowAssembler {
+    fn new(nrows: usize, ncols: usize) -> Self {
+        RowAssembler {
+            nrows,
+            ncols,
+            row_ptr: vec![0usize; nrows + 1],
+            cols: Vec::new(),
+            vals: Vec::new(),
+            current_row: None,
+            next_row_fill: 0,
+        }
+    }
+
+    fn push(
+        &mut self,
+        shared: Idx,
+        flags: BundleFlags,
+        distinct: &[Idx],
+        values: &[Val],
+    ) -> Result<()> {
+        match self.current_row {
+            None => self.current_row = Some(shared),
             Some(r) => ensure!(
-                r == b.shared,
-                "bundle for row {} interleaved into unfinished row {r}",
-                b.shared
+                r == shared,
+                "bundle for row {shared} interleaved into unfinished row {r}"
             ),
         }
-        ensure!((b.shared as usize) < nrows, "row {} out of bounds", b.shared);
+        ensure!((shared as usize) < self.nrows, "row {shared} out of bounds");
         for (&c, &v) in distinct.iter().zip(values) {
-            ensure!((c as usize) < ncols, "column {c} out of bounds");
-            cols.push(c);
-            vals.push(v);
+            ensure!((c as usize) < self.ncols, "column {c} out of bounds");
+            self.cols.push(c);
+            self.vals.push(v);
         }
-        if b.flags.end_of_row() {
-            let r = b.shared as usize;
+        if flags.end_of_row() {
+            let r = shared as usize;
             ensure!(
-                r >= next_row_fill,
+                r >= self.next_row_fill,
                 "row {r} completed twice (or rows out of order)"
             );
             // fill row_ptr for any skipped (absent) rows, then this one
-            for rr in next_row_fill..=r {
-                row_ptr[rr + 1] = if rr == r { cols.len() } else { row_ptr[rr] };
+            for rr in self.next_row_fill..=r {
+                self.row_ptr[rr + 1] = if rr == r { self.cols.len() } else { self.row_ptr[rr] };
             }
             // empty rows between bundles have their ptr equal to previous
-            row_ptr[r + 1] = cols.len();
-            next_row_fill = r + 1;
-            current_row = None;
+            self.row_ptr[r + 1] = self.cols.len();
+            self.next_row_fill = r + 1;
+            self.current_row = None;
         }
+        Ok(())
     }
-    ensure!(current_row.is_none(), "stream ended mid-row {current_row:?}");
-    for rr in next_row_fill..nrows {
-        row_ptr[rr + 1] = row_ptr[rr];
+
+    fn finish(mut self) -> Result<Csr> {
+        ensure!(
+            self.current_row.is_none(),
+            "stream ended mid-row {:?}",
+            self.current_row
+        );
+        for rr in self.next_row_fill..self.nrows {
+            self.row_ptr[rr + 1] = self.row_ptr[rr];
+        }
+        let m = Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            row_ptr: self.row_ptr,
+            cols: self.cols,
+            vals: self.vals,
+        };
+        m.validate()?;
+        Ok(m)
     }
-    let m = Csr { nrows, ncols, row_ptr, cols, vals };
-    m.validate()?;
-    Ok(m)
 }
 
 #[cfg(test)]
@@ -133,6 +192,26 @@ mod tests {
     fn truncated_stream_rejected() {
         let bundles = vec![Bundle::data(0, vec![0], vec![1.0], BundleFlags::default())];
         assert!(bundles_to_csr(&bundles, 1, 1).is_err());
+    }
+
+    #[test]
+    fn stream_roundtrip_matches_source() {
+        for seed in 0..3u64 {
+            let m = gen::power_law(25, 300, seed);
+            let s = BundleStream::from_csr(&m, 5);
+            assert_eq!(stream_to_csr(&s, m.nrows, m.ncols).unwrap(), m, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn stream_with_empty_rows_roundtrips() {
+        let mut m = crate::sparse::Csr::new(4, 4);
+        m.cols = vec![1, 3];
+        m.vals = vec![2.0, -1.0];
+        m.row_ptr = vec![0, 0, 2, 2, 2];
+        m.validate().unwrap();
+        let s = BundleStream::from_csr(&m, 32);
+        assert_eq!(stream_to_csr(&s, 4, 4).unwrap(), m);
     }
 
     #[test]

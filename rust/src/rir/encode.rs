@@ -4,10 +4,366 @@
 //! size, CPU breaks the whole row into multiple bundles" (§III-A). The last
 //! chunk of each row carries `END_OF_ROW`; an empty row still emits one
 //! empty end-of-row bundle so the consumer's row counter stays aligned.
+//!
+//! The hot encode path produces a [`BundleStream`] — a flat
+//! structure-of-arrays arena where every bundle is an *extent* into shared
+//! `cols`/`vals` buffers. The per-bundle `Vec` clones of the original
+//! [`Bundle`]-based encoder made preprocessing allocation-bound on
+//! low-degree matrices (EXPERIMENTS.md §Perf); the arena performs **zero
+//! per-bundle heap allocations** (buffers are sized once up front and
+//! retained across [`BundleStream::clear`] for steady-state reuse). The
+//! boxed [`Bundle`] API remains as the ergonomic/interchange form and is
+//! produced from the arena via [`BundleStream::to_bundles`].
 
-use crate::sparse::{Csc, Csr, Idx};
+use crate::sparse::{Csc, Csr, Idx, Val};
+use crate::util::preprocess_threads;
 
 use super::bundle::{Bundle, BundleFlags};
+
+/// A flat SoA arena of data bundles: bundle `i` is
+/// `(shared[i], flags[i], cols[off[i]..off[i+1]], vals[off[i]..off[i+1]])`.
+///
+/// For whole-matrix encodes the element arrays are an exact copy of the
+/// source CSR/CSC element arrays (bundling only inserts *boundaries*), so
+/// the arena is as close to zero-copy as a materialized stream can be.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BundleStream {
+    /// Shared feature per bundle (row index for CSR, column for CSC).
+    pub shared: Vec<Idx>,
+    /// Flags per bundle.
+    pub flags: Vec<BundleFlags>,
+    /// Element extents: bundle `i` owns `cols[off[i]..off[i+1]]`.
+    /// Always `n_bundles() + 1` entries, `off[0] == 0`.
+    pub off: Vec<usize>,
+    /// Distinct features of all bundles, concatenated.
+    pub cols: Vec<Idx>,
+    /// Values of all bundles, concatenated.
+    pub vals: Vec<Val>,
+}
+
+/// A borrowed view of one bundle in a [`BundleStream`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BundleRef<'a> {
+    pub shared: Idx,
+    pub flags: BundleFlags,
+    pub cols: &'a [Idx],
+    pub vals: &'a [Val],
+}
+
+impl Default for BundleStream {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BundleStream {
+    /// Empty stream.
+    pub fn new() -> Self {
+        BundleStream {
+            shared: Vec::new(),
+            flags: Vec::new(),
+            off: vec![0],
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Number of bundles.
+    pub fn n_bundles(&self) -> usize {
+        self.shared.len()
+    }
+
+    /// True when the stream carries no bundles.
+    pub fn is_empty(&self) -> bool {
+        self.shared.is_empty()
+    }
+
+    /// Total elements across all bundles.
+    pub fn n_elems(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Borrowed view of bundle `i`.
+    #[inline]
+    pub fn bundle(&self, i: usize) -> BundleRef<'_> {
+        let (lo, hi) = (self.off[i], self.off[i + 1]);
+        BundleRef {
+            shared: self.shared[i],
+            flags: self.flags[i],
+            cols: &self.cols[lo..hi],
+            vals: &self.vals[lo..hi],
+        }
+    }
+
+    /// Iterate bundles in stream order.
+    pub fn iter(&self) -> impl Iterator<Item = BundleRef<'_>> + '_ {
+        (0..self.n_bundles()).map(move |i| self.bundle(i))
+    }
+
+    /// Reset to empty, retaining every buffer's capacity (the reuse hook
+    /// that makes repeated encodes allocation-free in steady state).
+    pub fn clear(&mut self) {
+        self.shared.clear();
+        self.flags.clear();
+        self.off.clear();
+        self.off.push(0);
+        self.cols.clear();
+        self.vals.clear();
+    }
+
+    /// Append one bundle by copying its extent into the arena.
+    #[inline]
+    fn push_bundle(&mut self, shared: Idx, cols: &[Idx], vals: &[Val], flags: BundleFlags) {
+        debug_assert_eq!(cols.len(), vals.len());
+        self.shared.push(shared);
+        self.flags.push(flags);
+        self.cols.extend_from_slice(cols);
+        self.vals.extend_from_slice(vals);
+        self.off.push(self.cols.len());
+    }
+
+    /// Append one row/column chain: ≤`bundle_size` chunks, `END_OF_ROW` on
+    /// the last; an empty chain still emits one empty end-of-row bundle.
+    fn push_chain(&mut self, shared: Idx, cols: &[Idx], vals: &[Val], bundle_size: usize) {
+        if cols.is_empty() {
+            self.push_bundle(
+                shared,
+                &[],
+                &[],
+                BundleFlags::default().with(BundleFlags::END_OF_ROW),
+            );
+            return;
+        }
+        let nchunks = cols.len().div_ceil(bundle_size);
+        for ci in 0..nchunks {
+            let lo = ci * bundle_size;
+            let hi = ((ci + 1) * bundle_size).min(cols.len());
+            let mut flags = BundleFlags::default();
+            if ci + 1 == nchunks {
+                flags = flags.with(BundleFlags::END_OF_ROW);
+            }
+            self.push_bundle(shared, &cols[lo..hi], &vals[lo..hi], flags);
+        }
+    }
+
+    /// Set `END_OF_STREAM` on the final bundle (if any).
+    fn mark_end_of_stream(&mut self) {
+        if let Some(last) = self.flags.last_mut() {
+            *last = last.with(BundleFlags::END_OF_STREAM);
+        }
+    }
+
+    /// Encode a CSR matrix into this stream (cleared first): one chain per
+    /// row, shared feature = row index, `END_OF_STREAM` on the last bundle.
+    pub fn encode_csr(&mut self, m: &Csr, bundle_size: usize) {
+        assert!(bundle_size > 0, "bundle_size must be positive");
+        self.clear();
+        self.reserve_for(chain_bundle_count_csr(m, bundle_size), m.nnz());
+        for i in 0..m.nrows {
+            self.push_chain(i as Idx, m.row_cols(i), m.row_vals(i), bundle_size);
+        }
+        self.mark_end_of_stream();
+    }
+
+    /// Encode a CSC matrix into this stream (cleared first): one chain per
+    /// column, shared feature = column index.
+    pub fn encode_csc(&mut self, m: &Csc, bundle_size: usize) {
+        assert!(bundle_size > 0, "bundle_size must be positive");
+        self.clear();
+        let nb: usize = (0..m.ncols)
+            .map(|j| m.col_nnz(j).div_ceil(bundle_size).max(1))
+            .sum();
+        self.reserve_for(nb, m.nnz());
+        for j in 0..m.ncols {
+            self.push_chain(j as Idx, m.col_rows(j), m.col_vals(j), bundle_size);
+        }
+        self.mark_end_of_stream();
+    }
+
+    /// Encode only the selected rows of a CSR matrix, in the given order
+    /// (cleared first) — the SpGEMM scheduler's B-row stream of a wave
+    /// (paper Fig 3(d)). No `END_OF_STREAM`: wave streams concatenate.
+    pub fn encode_csr_rows(&mut self, m: &Csr, rows: &[Idx], bundle_size: usize) {
+        assert!(bundle_size > 0, "bundle_size must be positive");
+        self.clear();
+        let nb: usize = rows
+            .iter()
+            .map(|&r| m.row_nnz(r as usize).div_ceil(bundle_size).max(1))
+            .sum();
+        let ne: usize = rows.iter().map(|&r| m.row_nnz(r as usize)).sum();
+        self.reserve_for(nb, ne);
+        for &r in rows {
+            let i = r as usize;
+            self.push_chain(r, m.row_cols(i), m.row_vals(i), bundle_size);
+        }
+    }
+
+    fn reserve_for(&mut self, bundles: usize, elems: usize) {
+        self.shared.reserve(bundles);
+        self.flags.reserve(bundles);
+        self.off.reserve(bundles);
+        self.cols.reserve(elems);
+        self.vals.reserve(elems);
+    }
+
+    /// Fresh stream from a CSR matrix (default worker count).
+    pub fn from_csr(m: &Csr, bundle_size: usize) -> Self {
+        Self::from_csr_with_threads(m, bundle_size, preprocess_threads())
+    }
+
+    /// Fresh stream from a CSR matrix, encoded by `nthreads` workers over
+    /// contiguous row bands into pre-split output slices. Bit-identical to
+    /// the serial encode for every thread count.
+    pub fn from_csr_with_threads(m: &Csr, bundle_size: usize, nthreads: usize) -> Self {
+        assert!(bundle_size > 0, "bundle_size must be positive");
+        let nthreads = nthreads.clamp(1, m.nrows.max(1));
+        if nthreads <= 1 || m.nrows < 2 * nthreads {
+            let mut s = BundleStream::new();
+            s.encode_csr(m, bundle_size);
+            return s;
+        }
+
+        // band boundaries balanced by nnz; per-band bundle counts
+        let bounds = nnz_balanced_row_bands(m, nthreads);
+        let band_bundles: Vec<usize> = bounds
+            .windows(2)
+            .map(|w| {
+                (w[0]..w[1])
+                    .map(|i| m.row_nnz(i).div_ceil(bundle_size).max(1))
+                    .sum()
+            })
+            .collect();
+        let nb: usize = band_bundles.iter().sum();
+        let nnz = m.nnz();
+
+        let mut shared = vec![0 as Idx; nb];
+        let mut flags = vec![BundleFlags::default(); nb];
+        let mut off = vec![0usize; nb + 1];
+        let mut cols = vec![0 as Idx; nnz];
+        let mut vals = vec![0 as Val; nnz];
+
+        std::thread::scope(|scope| {
+            let mut sh_rest = shared.as_mut_slice();
+            let mut fl_rest = flags.as_mut_slice();
+            let mut off_rest = &mut off[1..]; // off[0] stays 0
+            let mut cols_rest = cols.as_mut_slice();
+            let mut vals_rest = vals.as_mut_slice();
+            for (w, win) in bounds.windows(2).enumerate() {
+                let (r_lo, r_hi) = (win[0], win[1]);
+                let nb_band = band_bundles[w];
+                let ne_band = m.row_ptr[r_hi] - m.row_ptr[r_lo];
+                let (sh, sh_r) = std::mem::take(&mut sh_rest).split_at_mut(nb_band);
+                let (fl, fl_r) = std::mem::take(&mut fl_rest).split_at_mut(nb_band);
+                let (of, of_r) = std::mem::take(&mut off_rest).split_at_mut(nb_band);
+                let (co, co_r) = std::mem::take(&mut cols_rest).split_at_mut(ne_band);
+                let (va, va_r) = std::mem::take(&mut vals_rest).split_at_mut(ne_band);
+                sh_rest = sh_r;
+                fl_rest = fl_r;
+                off_rest = of_r;
+                cols_rest = co_r;
+                vals_rest = va_r;
+                scope.spawn(move || {
+                    encode_band(m, bundle_size, r_lo, r_hi, sh, fl, of, co, va);
+                });
+            }
+        });
+
+        let mut s = BundleStream { shared, flags, off, cols, vals };
+        s.mark_end_of_stream();
+        s
+    }
+
+    /// Fresh stream from a CSC matrix.
+    pub fn from_csc(m: &Csc, bundle_size: usize) -> Self {
+        let mut s = BundleStream::new();
+        s.encode_csc(m, bundle_size);
+        s
+    }
+
+    /// Convert to the boxed [`Bundle`] interchange form (allocates per
+    /// bundle — convenience/compat, not the hot path).
+    pub fn to_bundles(&self) -> Vec<Bundle> {
+        self.iter()
+            .map(|b| Bundle::data(b.shared, b.cols.to_vec(), b.vals.to_vec(), b.flags))
+            .collect()
+    }
+}
+
+/// Bundle count for the whole-CSR encode (one chain per row, empty rows
+/// still emit one bundle).
+fn chain_bundle_count_csr(m: &Csr, bundle_size: usize) -> usize {
+    (0..m.nrows)
+        .map(|i| m.row_nnz(i).div_ceil(bundle_size).max(1))
+        .sum()
+}
+
+/// Contiguous row bands of roughly equal nnz. Returns boundaries
+/// (first 0, last `m.nrows`, strictly ascending).
+fn nnz_balanced_row_bands(m: &Csr, nthreads: usize) -> Vec<usize> {
+    let total = m.nnz();
+    let mut bounds = vec![0usize];
+    let mut row = 0usize;
+    for k in 1..nthreads {
+        let target = total * k / nthreads;
+        while row < m.nrows && m.row_ptr[row] < target {
+            row += 1;
+        }
+        if row > *bounds.last().unwrap() && row < m.nrows {
+            bounds.push(row);
+        }
+    }
+    bounds.push(m.nrows);
+    bounds
+}
+
+/// Encode rows `[r_lo, r_hi)` into pre-split output slices. `off` holds the
+/// *global* element offsets of the band's bundle ends (`off[j]` = end of the
+/// band's j-th bundle), matching the serial encode exactly.
+#[allow(clippy::too_many_arguments)]
+fn encode_band(
+    m: &Csr,
+    bundle_size: usize,
+    r_lo: usize,
+    r_hi: usize,
+    shared: &mut [Idx],
+    flags: &mut [BundleFlags],
+    off: &mut [usize],
+    cols: &mut [Idx],
+    vals: &mut [Val],
+) {
+    let elem_base = m.row_ptr[r_lo];
+    let mut b = 0usize; // bundle cursor within the band
+    let mut e = 0usize; // element cursor within the band
+    for i in r_lo..r_hi {
+        let rcols = m.row_cols(i);
+        let rvals = m.row_vals(i);
+        if rcols.is_empty() {
+            shared[b] = i as Idx;
+            flags[b] = BundleFlags::default().with(BundleFlags::END_OF_ROW);
+            off[b] = elem_base + e;
+            b += 1;
+            continue;
+        }
+        let nchunks = rcols.len().div_ceil(bundle_size);
+        for ci in 0..nchunks {
+            let lo = ci * bundle_size;
+            let hi = ((ci + 1) * bundle_size).min(rcols.len());
+            shared[b] = i as Idx;
+            flags[b] = if ci + 1 == nchunks {
+                BundleFlags::default().with(BundleFlags::END_OF_ROW)
+            } else {
+                BundleFlags::default()
+            };
+            cols[e..e + hi - lo].copy_from_slice(&rcols[lo..hi]);
+            vals[e..e + hi - lo].copy_from_slice(&rvals[lo..hi]);
+            e += hi - lo;
+            off[b] = elem_base + e;
+            b += 1;
+        }
+    }
+    debug_assert_eq!(b, shared.len());
+    debug_assert_eq!(e, cols.len());
+}
 
 /// Encode one row's worth of (cols, vals) into ≤`bundle_size` chunks,
 /// appending to `out`. Shared feature is the row index.
@@ -150,5 +506,89 @@ mod tests {
         let bundles = csr_to_bundles(&m, 1);
         assert_eq!(bundles.len(), 6);
         assert!(bundles.iter().all(|b| b.len() == 1));
+    }
+
+    // ---- BundleStream arena ----
+
+    #[test]
+    fn stream_matches_boxed_encoder_csr() {
+        for seed in 0..4u64 {
+            let m = gen::power_law(40, 700, seed);
+            for bs in [1usize, 7, 32] {
+                let s = BundleStream::from_csr_with_threads(&m, bs, 1);
+                assert_eq!(s.to_bundles(), csr_to_bundles(&m, bs), "seed {seed} bs {bs}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_matches_boxed_encoder_csc() {
+        let m = gen::random_uniform(15, 25, 140, 6).to_csc();
+        let s = BundleStream::from_csc(&m, 8);
+        assert_eq!(s.to_bundles(), csc_to_bundles(&m, 8));
+    }
+
+    #[test]
+    fn stream_rows_matches_boxed_encoder() {
+        let m = gen::random_uniform(8, 8, 24, 4);
+        let order = [5 as Idx, 1, 5];
+        let mut s = BundleStream::new();
+        s.encode_csr_rows(&m, &order, 32);
+        assert_eq!(s.to_bundles(), csr_rows_to_bundles(&m, &order, 32));
+    }
+
+    #[test]
+    fn parallel_encode_bit_identical() {
+        let m = gen::power_law(200, 4000, 7);
+        let base = BundleStream::from_csr_with_threads(&m, 16, 1);
+        for t in [2usize, 3, 4, 8] {
+            assert_eq!(BundleStream::from_csr_with_threads(&m, 16, t), base, "t={t}");
+        }
+    }
+
+    #[test]
+    fn parallel_encode_handles_empty_and_big_rows() {
+        // rows: empty, 70-nnz (splits), empty, small
+        let mut m = crate::sparse::Csr::new(4, 100);
+        let big: Vec<u32> = (0..70).collect();
+        m.cols = big.iter().copied().chain([3, 9]).collect();
+        m.vals = vec![1.0; 72];
+        m.row_ptr = vec![0, 0, 70, 70, 72];
+        m.validate().unwrap();
+        let base = BundleStream::from_csr_with_threads(&m, 32, 1);
+        for t in [2usize, 4] {
+            assert_eq!(BundleStream::from_csr_with_threads(&m, 32, t), base);
+        }
+        assert_eq!(base.to_bundles(), csr_to_bundles(&m, 32));
+    }
+
+    #[test]
+    fn stream_elements_are_exact_copy_of_csr_arrays() {
+        let m = gen::banded_fem(50, 600, 8);
+        let s = BundleStream::from_csr(&m, 32);
+        assert_eq!(s.cols, m.cols);
+        assert_eq!(s.vals, m.vals);
+        assert_eq!(*s.off.last().unwrap(), m.nnz());
+    }
+
+    #[test]
+    fn clear_retains_capacity_for_reuse() {
+        let m = gen::random_uniform(30, 30, 300, 9);
+        let mut s = BundleStream::new();
+        s.encode_csr(&m, 8);
+        let caps = (s.shared.capacity(), s.cols.capacity());
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.off, vec![0]);
+        s.encode_csr(&m, 8);
+        assert!(s.shared.capacity() >= caps.0 && s.cols.capacity() >= caps.1);
+    }
+
+    #[test]
+    fn empty_matrix_stream() {
+        let m = crate::sparse::Csr::new(0, 0);
+        let s = BundleStream::from_csr(&m, 32);
+        assert!(s.is_empty());
+        assert_eq!(s.to_bundles(), Vec::<Bundle>::new());
     }
 }

@@ -68,6 +68,43 @@ pub fn serialize(bundles: &[Bundle]) -> Vec<u32> {
     words
 }
 
+/// Number of 32-bit words a [`BundleStream`](super::encode::BundleStream)
+/// occupies in DRAM (all bundles are data bundles: 2 header words + 2 per
+/// element).
+pub fn stream_arena_words(s: &super::encode::BundleStream) -> usize {
+    2 * s.n_bundles() + 2 * s.n_elems()
+}
+
+/// Bytes a [`BundleStream`](super::encode::BundleStream) occupies in DRAM.
+pub fn stream_arena_bytes(s: &super::encode::BundleStream) -> usize {
+    stream_arena_words(s) * WORD_BYTES
+}
+
+/// Serialize a flat bundle arena into the DRAM word layout — identical
+/// output to [`serialize`] over the boxed form, with no per-bundle
+/// indirection.
+pub fn serialize_stream(s: &super::encode::BundleStream) -> Vec<u32> {
+    let mut words = Vec::new();
+    write_stream_words(s, &mut words);
+    words
+}
+
+/// Append a flat bundle arena's word layout to `words` (reusable-buffer
+/// variant of [`serialize_stream`]).
+pub fn write_stream_words(s: &super::encode::BundleStream, words: &mut Vec<u32>) {
+    words.reserve(stream_arena_words(s));
+    for b in s.iter() {
+        let count = b.cols.len() as u32;
+        debug_assert!(count < (1 << 24), "bundle too large for metadata word");
+        words.push((count << 8) | b.flags.0 as u32);
+        words.push(b.shared);
+        for (&d, &v) in b.cols.iter().zip(b.vals) {
+            words.push(d);
+            words.push(v.to_bits());
+        }
+    }
+}
+
 /// Streaming writer: encode a CSC matrix's bundle chains directly into the
 /// flat word layout, one chain per column, recording words-per-column.
 ///
@@ -222,6 +259,18 @@ mod tests {
         let words = serialize(&bundles);
         assert_eq!(words.len(), bundles.iter().map(bundle_words).sum::<usize>());
         assert_eq!(stream_bytes(&bundles), words.len() * WORD_BYTES);
+    }
+
+    #[test]
+    fn stream_arena_serializes_identically() {
+        let m = gen::power_law(30, 500, 4);
+        for bs in [1usize, 8, 32] {
+            let boxed = serialize(&csr_to_bundles(&m, bs));
+            let arena = crate::rir::encode::BundleStream::from_csr(&m, bs);
+            assert_eq!(serialize_stream(&arena), boxed, "bs {bs}");
+            assert_eq!(stream_arena_words(&arena), boxed.len());
+            assert_eq!(stream_arena_bytes(&arena), boxed.len() * WORD_BYTES);
+        }
     }
 
     #[test]

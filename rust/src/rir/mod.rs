@@ -10,7 +10,8 @@
 //! each needed row of L lives in its memory).
 //!
 //! * [`bundle`] — the bundle type and flags.
-//! * [`encode`] — CSR/CSC → bundles (including big-row splitting).
+//! * [`encode`] — CSR/CSC → bundles (including big-row splitting); the
+//!   hot path is the allocation-free [`encode::BundleStream`] SoA arena.
 //! * [`decode`] — bundles → CSR (the paper's `decompress` routine).
 //! * [`layout`] — the flat DRAM word stream of Fig 3(d) and its byte
 //!   accounting (drives the simulator's bandwidth model).
@@ -24,4 +25,5 @@ pub mod layout;
 pub mod schedule;
 
 pub use bundle::{Bundle, BundleFlags, Payload, RlTriple, DEFAULT_BUNDLE_SIZE};
+pub use encode::{BundleRef, BundleStream};
 pub use schedule::{SpgemmSchedule, Wave};

@@ -10,8 +10,21 @@
 //! CPU computes the set of B-rows that must be streamed — the union of the
 //! column indices of the wave's A elements, deduplicated and sorted so the
 //! FPGA sees a monotone DRAM address pattern.
+//!
+//! The pass is sharded across a scoped-thread worker pool: chunk
+//! enumeration is a cheap serial prologue, then contiguous *wave bands*
+//! (balanced by element count) are handed to workers, each reusing its own
+//! `mark` scratch across its waves. Because a wave's B-stream depends only
+//! on its own assignments, the banded result is bit-identical to the
+//! serial one for every thread count (property-tested in
+//! `tests/prop_invariants.rs`). Each wave also records its measured CPU
+//! cost, which drives the per-wave CPU/FPGA pipelining model in
+//! [`crate::coordinator::overlap`] (see EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
 
 use crate::sparse::{Csr, Idx, Val};
+use crate::util::preprocess_threads;
 
 use super::layout::WORD_BYTES;
 
@@ -72,6 +85,14 @@ pub struct SpgemmSchedule {
     /// cost, paper §III-A "the B-matrix is streamed into the FPGA for each
     /// row of A").
     pub b_words: usize,
+    /// Measured CPU seconds of the chunk-enumeration prologue (cannot
+    /// overlap FPGA compute — it precedes the first wave).
+    pub prep_cpu_s: f64,
+    /// Measured CPU seconds spent building each wave, normalized so the
+    /// sum equals the wall-clock of the wave-building phase (under the
+    /// worker pool the raw per-wave durations overlap in time). Drives
+    /// [`crate::coordinator::overlap::pipelined_total`].
+    pub wave_cpu_s: Vec<f64>,
 }
 
 impl SpgemmSchedule {
@@ -89,6 +110,11 @@ impl SpgemmSchedule {
     pub fn n_chunks(&self) -> usize {
         self.waves.iter().map(|w| w.assignments.len()).sum()
     }
+
+    /// Total measured CPU seconds of the pass (prologue + all waves).
+    pub fn cpu_total_s(&self) -> f64 {
+        self.prep_cpu_s + self.wave_cpu_s.iter().sum::<f64>()
+    }
 }
 
 /// Words to stream one bundle-chain of a row with `nnz` elements.
@@ -97,21 +123,36 @@ fn row_stream_words(nnz: usize, bundle_size: usize) -> usize {
     2 * chunks + 2 * nnz
 }
 
-/// Build the wave schedule for `C = A × B`.
+/// Build the wave schedule for `C = A × B` with the default worker count
+/// (`REAP_CPU_THREADS` or the host parallelism, capped at 16).
+pub fn schedule_spgemm(a: &Csr, b: &Csr, pipelines: usize, bundle_size: usize) -> SpgemmSchedule {
+    schedule_spgemm_with_threads(a, b, pipelines, bundle_size, preprocess_threads())
+}
+
+/// Build the wave schedule for `C = A × B` on `nthreads` workers.
 ///
 /// Rows of A are processed in order; each row is split into chunks of at
 /// most `bundle_size` nonzeros; empty rows are skipped (they produce no
 /// output and stream no B data). Waves are filled greedily with
-/// `pipelines` chunks each.
-pub fn schedule_spgemm(a: &Csr, b: &Csr, pipelines: usize, bundle_size: usize) -> SpgemmSchedule {
+/// `pipelines` chunks each. The result is identical for every
+/// `nthreads` ≥ 1.
+pub fn schedule_spgemm_with_threads(
+    a: &Csr,
+    b: &Csr,
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+) -> SpgemmSchedule {
     assert!(pipelines > 0 && bundle_size > 0);
     assert_eq!(a.ncols, b.nrows, "inner dimensions disagree");
 
-    // Enumerate chunks in row order (zero-copy extents into `a`).
+    // ---- prologue: enumerate chunks in row order (zero-copy extents) ----
+    let t_prep = Instant::now();
     let total_chunks: usize = (0..a.nrows)
         .map(|i| a.row_nnz(i).div_ceil(bundle_size))
         .sum();
     let mut chunks: Vec<Assignment> = Vec::with_capacity(total_chunks);
+    let mut a_words = 0usize;
     for i in 0..a.nrows {
         let nnz = a.row_nnz(i);
         if nnz == 0 {
@@ -122,6 +163,7 @@ pub fn schedule_spgemm(a: &Csr, b: &Csr, pipelines: usize, bundle_size: usize) -
         for ci in 0..nchunks {
             let lo = ci * bundle_size;
             let hi = ((ci + 1) * bundle_size).min(nnz);
+            a_words += 2 + 2 * (hi - lo);
             chunks.push(Assignment {
                 a_row: i as Idx,
                 chunk: ci as u32,
@@ -131,16 +173,126 @@ pub fn schedule_spgemm(a: &Csr, b: &Csr, pipelines: usize, bundle_size: usize) -
             });
         }
     }
+    let n_waves = chunks.len().div_ceil(pipelines);
+    let prep_cpu_s = t_prep.elapsed().as_secs_f64();
 
-    let mut waves = Vec::with_capacity(chunks.len().div_ceil(pipelines));
-    let mut a_words = 0usize;
+    // ---- wave bands: contiguous wave ranges, balanced by element count ----
+    let t_waves = Instant::now();
+    let nthreads = nthreads.clamp(1, n_waves.max(1));
+    let bounds = wave_band_bounds(&chunks, pipelines, n_waves, nthreads);
+
+    let bands: Vec<(Vec<Wave>, Vec<f64>, usize)> = if bounds.len() <= 2 {
+        vec![build_wave_band(a, b, &chunks, pipelines, bundle_size, 0, n_waves)]
+    } else {
+        std::thread::scope(|scope| {
+            let chunks = &chunks;
+            let handles: Vec<_> = bounds
+                .windows(2)
+                .map(|w| {
+                    let (lo, hi) = (w[0], w[1]);
+                    scope.spawn(move || {
+                        build_wave_band(a, b, chunks, pipelines, bundle_size, lo, hi)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("schedule worker panicked"))
+                .collect()
+        })
+    };
+
+    // ---- deterministic merge: bands are contiguous wave ranges ----
+    let mut waves = Vec::with_capacity(n_waves);
+    let mut wave_cpu_s = Vec::with_capacity(n_waves);
+    let mut b_words = 0usize;
+    for (band_waves, band_times, band_b_words) in bands {
+        waves.extend(band_waves);
+        wave_cpu_s.extend(band_times);
+        b_words += band_b_words;
+    }
+    // normalize per-wave durations to the phase's wall clock: under the
+    // pool the raw durations overlap in time, but the overlap model wants
+    // costs whose sum is what the CPU actually spent end-to-end
+    let waves_wall_s = t_waves.elapsed().as_secs_f64();
+    let raw_sum: f64 = wave_cpu_s.iter().sum();
+    if raw_sum > 0.0 {
+        let scale = waves_wall_s / raw_sum;
+        for t in &mut wave_cpu_s {
+            *t *= scale;
+        }
+    }
+
+    SpgemmSchedule {
+        pipelines,
+        bundle_size,
+        waves,
+        a_words,
+        b_words,
+        prep_cpu_s,
+        wave_cpu_s,
+    }
+}
+
+/// Split `0..n_waves` into ≤ `nthreads` contiguous ranges with roughly
+/// equal A-element totals (wave cost is dominated by the union over the
+/// wave's elements). Returns ascending boundaries, first 0, last `n_waves`.
+fn wave_band_bounds(
+    chunks: &[Assignment],
+    pipelines: usize,
+    n_waves: usize,
+    nthreads: usize,
+) -> Vec<usize> {
+    if n_waves == 0 || nthreads <= 1 {
+        return vec![0, n_waves];
+    }
+    // element count per wave (wave wid covers chunks[wid*p .. (wid+1)*p))
+    let wave_elems = |wid: usize| -> usize {
+        let lo = wid * pipelines;
+        let hi = ((wid + 1) * pipelines).min(chunks.len());
+        chunks[lo..hi].iter().map(|c| c.len).sum()
+    };
+    let total: usize = chunks.iter().map(|c| c.len).sum();
+    let mut bounds = vec![0usize];
+    let mut wid = 0usize;
+    let mut before = 0usize; // elements in waves < wid
+    for k in 1..nthreads {
+        let target = total * k / nthreads;
+        while wid < n_waves && before < target {
+            before += wave_elems(wid);
+            wid += 1;
+        }
+        if wid > *bounds.last().unwrap() && wid < n_waves {
+            bounds.push(wid);
+        }
+    }
+    bounds.push(n_waves);
+    bounds
+}
+
+/// Build waves `[w_lo, w_hi)` with one reusable `mark` scratch; returns the
+/// waves, their raw per-wave durations, and the band's B-word total.
+fn build_wave_band(
+    a: &Csr,
+    b: &Csr,
+    chunks: &[Assignment],
+    pipelines: usize,
+    bundle_size: usize,
+    w_lo: usize,
+    w_hi: usize,
+) -> (Vec<Wave>, Vec<f64>, usize) {
+    let mut waves = Vec::with_capacity(w_hi - w_lo);
+    let mut times = Vec::with_capacity(w_hi - w_lo);
     let mut b_words = 0usize;
     let mut mark = vec![u32::MAX; b.nrows]; // wave id when row last added
     let mut b_rows_cap = 0usize;
-    for (wid, group) in chunks.chunks(pipelines).enumerate() {
+    for wid in w_lo..w_hi {
+        let t0 = Instant::now();
+        let lo = wid * pipelines;
+        let hi = ((wid + 1) * pipelines).min(chunks.len());
+        let group = &chunks[lo..hi];
         let mut b_rows: Vec<Idx> = Vec::with_capacity(b_rows_cap);
         for asg in group {
-            a_words += 2 + 2 * asg.len;
             for &c in asg.a_cols(a) {
                 let r = c as usize;
                 if mark[r] != wid as u32 {
@@ -155,9 +307,9 @@ pub fn schedule_spgemm(a: &Csr, b: &Csr, pipelines: usize, bundle_size: usize) -
         }
         b_rows_cap = b_rows_cap.max(b_rows.len());
         waves.push(Wave { assignments: group.to_vec(), b_rows });
+        times.push(t0.elapsed().as_secs_f64());
     }
-
-    SpgemmSchedule { pipelines, bundle_size, waves, a_words, b_words }
+    (waves, times, b_words)
 }
 
 #[cfg(test)]
@@ -228,6 +380,8 @@ mod tests {
         let s = schedule_spgemm(&a, &b, 2, 32);
         assert_eq!(s.n_waves(), 0);
         assert_eq!(s.input_bytes(), 0);
+        assert!(s.wave_cpu_s.is_empty());
+        assert_eq!(s.cpu_total_s(), s.prep_cpu_s);
     }
 
     #[test]
@@ -247,5 +401,46 @@ mod tests {
         assert_eq!(row_stream_words(0, 32), 2); // empty row: header-only bundle
         assert_eq!(row_stream_words(32, 32), 2 + 64);
         assert_eq!(row_stream_words(33, 32), 4 + 66); // two chunks
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let a = gen::power_law(120, 2600, 10);
+        let b = mk(120, 1800, 11);
+        let base = schedule_spgemm_with_threads(&a, &b, 8, 16, 1);
+        for t in [2usize, 3, 4, 8, 64] {
+            let par = schedule_spgemm_with_threads(&a, &b, 8, 16, t);
+            assert_eq!(par.waves, base.waves, "threads={t}");
+            assert_eq!(par.a_words, base.a_words, "threads={t}");
+            assert_eq!(par.b_words, base.b_words, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn wave_timestamps_cover_every_wave() {
+        let a = mk(80, 1200, 12);
+        let b = mk(80, 1200, 13);
+        for t in [1usize, 4] {
+            let s = schedule_spgemm_with_threads(&a, &b, 4, 16, t);
+            assert_eq!(s.wave_cpu_s.len(), s.n_waves());
+            assert!(s.wave_cpu_s.iter().all(|&x| x >= 0.0));
+            assert!(s.prep_cpu_s >= 0.0);
+            let sum: f64 = s.wave_cpu_s.iter().sum();
+            assert!((s.cpu_total_s() - s.prep_cpu_s - sum).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn band_bounds_partition_waves() {
+        let a = mk(200, 4000, 14);
+        let b = mk(200, 4000, 15);
+        let s = schedule_spgemm_with_threads(&a, &b, 4, 8, 1);
+        let chunks: Vec<Assignment> =
+            s.waves.iter().flat_map(|w| w.assignments.iter().copied()).collect();
+        let bounds = wave_band_bounds(&chunks, 4, s.n_waves(), 5);
+        assert_eq!(*bounds.first().unwrap(), 0);
+        assert_eq!(*bounds.last().unwrap(), s.n_waves());
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        assert!(bounds.len() <= 6);
     }
 }

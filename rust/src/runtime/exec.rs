@@ -10,13 +10,14 @@ use anyhow::{ensure, Result};
 
 use crate::sparse::{Idx, Val};
 
-use super::client::XlaRuntime;
+use super::XlaRuntime;
 
 /// Column padding sentinel (matches `kernels/*.py::PAD_COL`).
 pub const PAD_COL: i32 = -1;
 
 /// Staging buffers for one `spgemm_bundle` invocation batch.
 #[derive(Clone, Debug)]
+#[cfg_attr(not(feature = "xla"), allow(dead_code))] // staging fields are read by the gated execute path
 pub struct SpgemmWaveIo {
     pub batch: usize,
     pub bundle: usize,
@@ -106,6 +107,7 @@ impl SpgemmWaveIo {
 
     /// Execute the staged batch; returns the dense accumulator tiles
     /// (`steps` rows of `tile_w` values).
+    #[cfg(feature = "xla")]
     pub fn execute(&self, rt: &XlaRuntime) -> Result<Vec<Vec<f32>>> {
         let (n, b, w) = (self.batch as i64, self.bundle as i64, self.tile_w as i64);
         let args = [
@@ -124,11 +126,18 @@ impl SpgemmWaveIo {
             .map(|c| c.to_vec())
             .collect())
     }
+
+    /// Built without the `xla` feature: staging works, execution errors.
+    #[cfg(not(feature = "xla"))]
+    pub fn execute(&self, _rt: &XlaRuntime) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("spgemm_bundle execution requires the `xla` feature")
+    }
 }
 
 /// Staging buffers for one `spmv_bundle` invocation batch (the SpMV
 /// extension kernel).
 #[derive(Clone, Debug)]
+#[cfg_attr(not(feature = "xla"), allow(dead_code))] // staging fields are read by the gated execute path
 pub struct SpmvWaveIo {
     pub batch: usize,
     pub bundle: usize,
@@ -208,6 +217,7 @@ impl SpmvWaveIo {
 
     /// Execute the staged batch; returns the partial products
     /// (`steps` values).
+    #[cfg(feature = "xla")]
     pub fn execute(&self, rt: &XlaRuntime) -> Result<Vec<f32>> {
         let (n, b, w) = (self.batch as i64, self.bundle as i64, self.tile_w as i64);
         let args = [
@@ -221,10 +231,17 @@ impl SpmvWaveIo {
         let flat: Vec<f32> = out[0].to_vec()?;
         Ok(flat[..self.steps].to_vec())
     }
+
+    /// Built without the `xla` feature: staging works, execution errors.
+    #[cfg(not(feature = "xla"))]
+    pub fn execute(&self, _rt: &XlaRuntime) -> Result<Vec<f32>> {
+        anyhow::bail!("spmv_bundle execution requires the `xla` feature")
+    }
 }
 
 /// Staging buffers for the Cholesky entry points.
 #[derive(Clone, Debug)]
+#[cfg_attr(not(feature = "xla"), allow(dead_code))] // staging fields are read by the gated execute path
 pub struct CholeskyStepIo {
     pub bundle: usize,
     pub pipes: usize,
@@ -304,6 +321,7 @@ impl CholeskyStepIo {
         Ok(())
     }
 
+    #[cfg(feature = "xla")]
     fn common_literals(&self) -> Result<[xla::Literal; 4]> {
         let (p, b) = (self.pipes as i64, self.bundle as i64);
         Ok([
@@ -316,6 +334,7 @@ impl CholeskyStepIo {
 
     /// Execute `cholesky_dot`: partial matched dots for the staged chunk
     /// pair (used when rows exceed one bundle).
+    #[cfg(feature = "xla")]
     pub fn execute_dot(&self, rt: &XlaRuntime) -> Result<Vec<f32>> {
         let [kc, kv, rc, rv] = self.common_literals()?;
         let out = rt.execute("cholesky_dot", &[kc, kv, rc, rv])?;
@@ -323,7 +342,14 @@ impl CholeskyStepIo {
         Ok(out[0].to_vec()?)
     }
 
+    /// Built without the `xla` feature: staging works, execution errors.
+    #[cfg(not(feature = "xla"))]
+    pub fn execute_dot(&self, _rt: &XlaRuntime) -> Result<Vec<f32>> {
+        anyhow::bail!("cholesky_dot execution requires the `xla` feature")
+    }
+
     /// Execute `cholesky_update`: returns `(l_rk[pipes], l_kk)`.
+    #[cfg(feature = "xla")]
     pub fn execute_update(&self, rt: &XlaRuntime) -> Result<(Vec<f32>, f32)> {
         let [kc, kv, rc, rv] = self.common_literals()?;
         let av = xla::Literal::vec1(&self.a_vals);
@@ -333,6 +359,12 @@ impl CholeskyStepIo {
         let l_rk: Vec<f32> = out[0].to_vec()?;
         let l_kk: Vec<f32> = out[1].to_vec()?;
         Ok((l_rk, l_kk[0]))
+    }
+
+    /// Built without the `xla` feature: staging works, execution errors.
+    #[cfg(not(feature = "xla"))]
+    pub fn execute_update(&self, _rt: &XlaRuntime) -> Result<(Vec<f32>, f32)> {
+        anyhow::bail!("cholesky_update execution requires the `xla` feature")
     }
 }
 

@@ -7,11 +7,25 @@
 //! [`client`] compiles it on the PJRT CPU client, and [`exec`] marshals
 //! RIR-padded buffers in and results out (the role the FPGA's input/output
 //! controllers play in the paper).
+//!
+//! The PJRT path needs the `xla` crate (native `xla_extension` closure),
+//! which only the full offline image carries, so it is gated behind the
+//! `xla` cargo feature. Without the feature the staging/marshaling layer
+//! still compiles (and is tested), but [`XlaRuntime::load`] and the
+//! `execute*` entry points return an error directing the user to rebuild
+//! with `--features xla`; the coordinators' in-process numeric path is
+//! unaffected.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod client;
 pub mod exec;
+#[cfg(not(feature = "xla"))]
+mod stub;
 
 pub use artifacts::Manifest;
+#[cfg(feature = "xla")]
 pub use client::XlaRuntime;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaRuntime;
 pub use exec::{CholeskyStepIo, SpgemmWaveIo, SpmvWaveIo};

@@ -1,0 +1,64 @@
+//! Stand-in for [`super::client`] when the crate is built without the
+//! `xla` feature: the same API surface, every entry point failing with a
+//! clear message instead of reaching PJRT. Keeps the coordinators, CLI and
+//! tests compiling on images whose crate cache lacks the `xla` closure.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::artifacts::Manifest;
+
+/// API-compatible placeholder for the PJRT runtime. Never constructible:
+/// [`XlaRuntime::load`] always errors, so the accessor methods exist only
+/// to satisfy callers that hold an (unreachable) instance.
+pub struct XlaRuntime {
+    manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Always fails: the binary was built without the `xla` feature.
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        bail!(
+            "XLA/PJRT runtime unavailable: built without the `xla` cargo \
+             feature (artifacts dir: {}). On an image that carries the xla \
+             crate closure, add `xla` to [dependencies] in rust/Cargo.toml \
+             (see the [features] note there) and rebuild with `cargo build \
+             --features xla`.",
+            dir.display()
+        )
+    }
+
+    /// Always fails (see [`XlaRuntime::load`]).
+    pub fn load_default() -> Result<XlaRuntime> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    /// The manifest the runtime was built from.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable (built without `xla` feature)".to_string()
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime").field("platform", &self.platform()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = XlaRuntime::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("without the `xla`"));
+        assert!(XlaRuntime::load_default().is_err());
+    }
+}

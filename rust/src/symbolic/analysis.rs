@@ -65,20 +65,60 @@ pub struct CholeskySymbolic {
     /// RL metadata stream and words-per-column.
     pub rl_words: Vec<u32>,
     pub rl_col_words: Vec<u32>,
+    /// Measured seconds of the global analysis phase (etree + pattern +
+    /// storage map) — produces the schedule, so it cannot overlap the
+    /// FPGA's numeric phase.
+    pub analysis_s: f64,
+    /// Measured seconds of the per-column RA/RL stream encoding — the part
+    /// the coordinator pipelines against the FPGA's column processing
+    /// (attributed per column ∝ stream words; see EXPERIMENTS.md §Perf).
+    pub encode_s: f64,
 }
 
 impl CholeskySymbolic {
     /// Run the full CPU-side symbolic pass on the lower triangle of A.
     pub fn analyze(a_lower: &Csc, bundle_size: usize) -> Self {
+        let t_analysis = std::time::Instant::now();
         let pattern = symbolic_factor(a_lower);
         let storage = row_storage_map(&pattern);
+        let analysis_s = t_analysis.elapsed().as_secs_f64();
+        let t_encode = std::time::Instant::now();
         let mut ra_words = Vec::with_capacity(2 * a_lower.nnz() + 2 * a_lower.ncols);
         let mut ra_col_words = Vec::new();
         layout::write_csc_stream(a_lower, bundle_size, &mut ra_words, &mut ra_col_words);
         let mut rl_words = Vec::with_capacity(3 * pattern.nnz() + 2 * pattern.n);
         let mut rl_col_words = Vec::new();
         layout::write_rl_stream(&pattern, &storage, bundle_size, &mut rl_words, &mut rl_col_words);
-        CholeskySymbolic { pattern, storage, ra_words, ra_col_words, rl_words, rl_col_words }
+        let encode_s = t_encode.elapsed().as_secs_f64();
+        CholeskySymbolic {
+            pattern,
+            storage,
+            ra_words,
+            ra_col_words,
+            rl_words,
+            rl_col_words,
+            analysis_s,
+            encode_s,
+        }
+    }
+
+    /// The per-column CPU encode cost: the measured encode wall time
+    /// attributed to each column proportional to its RA+RL stream words.
+    pub fn encode_col_s(&self) -> Vec<f64> {
+        let total_words: u64 = self
+            .ra_col_words
+            .iter()
+            .zip(&self.rl_col_words)
+            .map(|(&a, &l)| a as u64 + l as u64)
+            .sum();
+        if total_words == 0 {
+            return vec![0.0; self.pattern.n];
+        }
+        self.ra_col_words
+            .iter()
+            .zip(&self.rl_col_words)
+            .map(|(&a, &l)| self.encode_s * (a as u64 + l as u64) as f64 / total_words as f64)
+            .collect()
     }
 
     /// Bytes of metadata+data streamed from CPU to FPGA (the coarse-grained

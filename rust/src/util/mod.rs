@@ -16,3 +16,19 @@ pub mod timer;
 
 pub use rng::Pcg64;
 pub use timer::Timer;
+
+/// Worker count for the CPU preprocessing pool (scheduling, RIR encoding,
+/// the scheduled numeric path). `REAP_CPU_THREADS` overrides; otherwise
+/// the host parallelism, capped at 16 (the paper's Xeon 6130 core count —
+/// beyond that the passes are memory-bound and extra workers only add
+/// merge overhead).
+pub fn preprocess_threads() -> usize {
+    std::env::var("REAP_CPU_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .clamp(1, 16)
+}

@@ -89,7 +89,10 @@ fn indefinite_matrix_fails_cleanly() {
 fn breakdown_and_sim_accounting_consistent() {
     let lower = gen::spd(Family::BandedFem, 150, 1100, 3).lower_triangle();
     let rep = ReapCholesky::new(FpgaConfig::reap32_cholesky()).run(&lower).unwrap();
-    assert!((rep.total_s - rep.cpu_symbolic_s - rep.fpga_s).abs() < 1e-12);
+    // per-column pipelined overlap: bounded by the serial sum and by the
+    // larger side (the symbolic analysis prologue cannot overlap)
+    assert!(rep.total_s <= rep.cpu_symbolic_s + rep.fpga_s + 1e-9);
+    assert!(rep.total_s >= rep.cpu_symbolic_s.max(rep.fpga_s) - 1e-9);
     assert_eq!(
         rep.fpga_sim.compute_bound_cycles + rep.fpga_sim.dram_bound_cycles,
         rep.fpga_sim.cycles

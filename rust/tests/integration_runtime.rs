@@ -12,6 +12,10 @@ use reap::runtime::{Manifest, XlaRuntime};
 use reap::sparse::{gen, Dense};
 
 fn runtime() -> Option<XlaRuntime> {
+    if cfg!(not(feature = "xla")) {
+        eprintln!("SKIP: built without the `xla` feature — PJRT path untested");
+        return None;
+    }
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");

@@ -3,6 +3,7 @@
 //! through the in-tree `testing::prop` framework. Replay any failure with
 //! `PROP_SEED=<seed> cargo test --test prop_invariants`.
 
+use reap::coordinator::spgemm::numeric_scheduled;
 use reap::coordinator::ReapSpgemm;
 use reap::fpga::spgemm_sim::{simulate_spgemm, Style};
 use reap::fpga::FpgaConfig;
@@ -87,6 +88,91 @@ fn prop_coordinator_matches_baseline() {
         let rep = ReapSpgemm::new(cfg).run(&a, &b).unwrap();
         rep.c.validate().unwrap();
         assert_eq!(rep.c, spgemm(&a, &b));
+    });
+}
+
+/// The sharded scheduling pass is bit-identical to the serial one for
+/// thread counts 1/2/4/8 — waves, traffic words, everything the FPGA sees.
+#[test]
+fn prop_parallel_schedule_bit_identical() {
+    check("parallel schedule == serial", Config { cases: 24, ..Config::default() }, |rng, size| {
+        let a = random_matrix(rng, size);
+        let b = gen::generate(random_family(rng), a.ncols, (a.ncols * 2).max(1), rng.next_u64());
+        let pipelines = 1 + rng.range(0, 32);
+        let bundle = 1 + rng.range(0, 40);
+        let base = schedule::schedule_spgemm_with_threads(&a, &b, pipelines, bundle, 1);
+        for threads in [2usize, 4, 8] {
+            let par = schedule::schedule_spgemm_with_threads(&a, &b, pipelines, bundle, threads);
+            assert_eq!(par.waves, base.waves, "threads={threads}");
+            assert_eq!(par.a_words, base.a_words, "threads={threads}");
+            assert_eq!(par.b_words, base.b_words, "threads={threads}");
+            assert_eq!(par.wave_cpu_s.len(), par.waves.len());
+        }
+    });
+}
+
+/// The parallel scheduled numeric path is bit-identical to the serial
+/// scheduled path (and to the Gustavson baseline) for thread counts
+/// 1/2/4/8 on random CSR inputs.
+#[test]
+fn prop_parallel_numeric_bit_identical() {
+    check("parallel numeric == serial", Config { cases: 20, ..Config::default() }, |rng, size| {
+        let a = random_matrix(rng, size);
+        let b = gen::generate(random_family(rng), a.ncols, (a.ncols * 2).max(1), rng.next_u64());
+        let pipelines = 1 + rng.range(0, 48);
+        let bundle = 1 + rng.range(0, 33);
+        let s = schedule::schedule_spgemm_with_threads(&a, &b, pipelines, bundle, 1);
+        let serial = numeric_scheduled(&a, &b, &s, 1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(numeric_scheduled(&a, &b, &s, threads), serial, "threads={threads}");
+        }
+        serial.validate().unwrap();
+        assert_eq!(serial, spgemm(&a, &b));
+    });
+}
+
+/// Deterministic edge cases for the parallel pipeline: empty rows (skipped
+/// by the scheduler, present in the output) and oversized rows (split
+/// across many chunks/waves), across thread counts 1/2/4/8.
+#[test]
+fn parallel_paths_handle_empty_and_oversized_rows() {
+    // rows: empty, 100-nnz (≫ bundle), empty, singleton, empty
+    let n = 5usize;
+    let ncols = 120usize;
+    let mut a = Csr::new(n, ncols);
+    a.cols = (0..100).chain([7]).collect();
+    a.vals = (0..101).map(|i| (i as f32) * 0.25 - 3.0).collect();
+    a.row_ptr = vec![0, 0, 100, 100, 101, 101];
+    a.validate().unwrap();
+    let b = gen::generate(Family::PowerLaw, ncols, 900, 77);
+
+    let base_sched = schedule::schedule_spgemm_with_threads(&a, &b, 4, 32, 1);
+    let base_num = numeric_scheduled(&a, &b, &base_sched, 1);
+    assert_eq!(base_num, spgemm(&a, &b));
+    let base_enc = encode::BundleStream::from_csr_with_threads(&a, 32, 1);
+    for threads in [2usize, 4, 8] {
+        let s = schedule::schedule_spgemm_with_threads(&a, &b, 4, 32, threads);
+        assert_eq!(s.waves, base_sched.waves, "threads={threads}");
+        assert_eq!(numeric_scheduled(&a, &b, &base_sched, threads), base_num);
+        assert_eq!(encode::BundleStream::from_csr_with_threads(&a, 32, threads), base_enc);
+    }
+}
+
+/// The parallel SoA encode is bit-identical to the serial encode and to
+/// the boxed-bundle encoder for thread counts 1/2/4/8.
+#[test]
+fn prop_parallel_encode_bit_identical() {
+    check("parallel encode == serial", Config { cases: 24, ..Config::default() }, |rng, size| {
+        let m = random_matrix(rng, size);
+        let bundle = 1 + rng.range(0, 40);
+        let base = encode::BundleStream::from_csr_with_threads(&m, bundle, 1);
+        for threads in [2usize, 4, 8] {
+            let par = encode::BundleStream::from_csr_with_threads(&m, bundle, threads);
+            assert_eq!(par, base, "threads={threads}");
+        }
+        assert_eq!(base.to_bundles(), encode::csr_to_bundles(&m, bundle));
+        let back = decode::stream_to_csr(&base, m.nrows, m.ncols).unwrap();
+        assert_eq!(back, m);
     });
 }
 

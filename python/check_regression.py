@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Perf gate over the BENCH_*.json trajectory files.
+
+Compares the combined CPU pass (sum of every record's ``cpu_s``) between a
+baseline results directory and a fresh one, and fails when the fresh run
+regresses by more than the tolerance. Only files present on *both* sides
+are compared, so a PR that adds a new benchmark is not penalized for it;
+per-file breakdowns are printed for diagnosis.
+
+Either side may be a colon-separated list of directories holding repeated
+runs; the per-file value is then the **minimum** across runs — min-of-N
+is the standard defense against shared-runner scheduling noise (timing
+noise on a deterministic pass is strictly additive).
+
+Usage:
+    python3 python/check_regression.py <baseline_dir[:dir...]> \
+        <fresh_dir[:dir...]> [--tol 0.10] [--min-seconds 0.002]
+
+Exit status: 0 when within tolerance (or nothing comparable / baseline
+below the noise floor), 1 on regression, 2 on usage errors.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def combined_cpu_s(path):
+    """Sum of cpu_s over all records of one BENCH_*.json file."""
+    with open(path) as f:
+        records = json.load(f)
+    return sum(float(r.get("cpu_s", 0.0)) for r in records)
+
+
+def bench_files(dirs_spec):
+    """Map basename -> list of paths across a colon-separated dir list."""
+    out = {}
+    for directory in dirs_spec.split(":"):
+        for p in glob.glob(os.path.join(directory, "BENCH_*.json")):
+            out.setdefault(os.path.basename(p), []).append(p)
+    return out
+
+
+def min_cpu_s(paths):
+    """Minimum combined cpu_s across repeated runs of one file."""
+    return min(combined_cpu_s(p) for p in paths)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline_dir")
+    ap.add_argument("fresh_dir")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="allowed relative regression (default 0.10 = 10%%)")
+    ap.add_argument("--min-seconds", type=float, default=0.002,
+                    help="baseline noise floor: below this combined time "
+                         "the gate passes trivially")
+    args = ap.parse_args()
+
+    base = bench_files(args.baseline_dir)
+    fresh = bench_files(args.fresh_dir)
+    common = sorted(set(base) & set(fresh))
+    if not common:
+        print(f"perf gate: no BENCH_*.json files common to "
+              f"{args.baseline_dir} and {args.fresh_dir}; nothing to compare")
+        return 0
+
+    base_total = 0.0
+    fresh_total = 0.0
+    for name in common:
+        b = min_cpu_s(base[name])
+        f = min_cpu_s(fresh[name])
+        base_total += b
+        fresh_total += f
+        print(f"  {name}: baseline {b:.6f}s (min of {len(base[name])}) "
+              f"fresh {f:.6f}s (min of {len(fresh[name])})")
+
+    if base_total < args.min_seconds:
+        print(f"perf gate: baseline combined CPU pass {base_total:.6f}s is "
+              f"below the {args.min_seconds}s noise floor; passing")
+        return 0
+
+    ratio = fresh_total / base_total
+    print(f"perf gate: combined CPU pass baseline {base_total:.6f}s -> "
+          f"fresh {fresh_total:.6f}s (ratio {ratio:.3f}, tol {1 + args.tol:.2f})")
+    if ratio > 1.0 + args.tol:
+        print(f"perf gate: FAIL — combined CPU pass regressed "
+              f"{(ratio - 1.0) * 100:.1f}% (> {args.tol * 100:.0f}%)")
+        return 1
+    print("perf gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,13 +17,19 @@
 //!    per-wave FPGA cycles;
 //! 4. **verification** ([`verify`]): results checked against the measured
 //!    CPU baselines.
+//!
+//! The multi-tenant path ([`batch`]) runs the same flow over N
+//! independent SpGEMM jobs packed into shared, job-tagged waves — the
+//! many-small-jobs shape of production traffic.
 
+pub mod batch;
 pub mod cholesky;
 pub mod overlap;
 pub mod spgemm;
 pub mod spmv;
 pub mod verify;
 
+pub use batch::{ReapBatch, ReapBatchReport};
 pub use cholesky::{ReapCholesky, ReapCholeskyReport};
 pub use spgemm::{ReapSpgemm, ReapSpgemmReport};
 pub use spmv::{ReapSpmv, ReapSpmvReport};

@@ -30,14 +30,30 @@
 ///
 /// Boundary behavior, all exercised in the unit tests:
 /// * no waves at all → `0.0` (the caller adds any serial prologue);
-/// * mismatched lengths are tolerated — the shorter side contributes zero
-///   for its missing waves (an FPGA-only or CPU-only tail);
+/// * a one-sided trace (the other empty) is a pure CPU-only or FPGA-only
+///   phase and is accepted silently;
+/// * two *non-empty* traces of different lengths mean a coordinator
+///   mis-wired its per-wave instrumentation — every coordinator produces
+///   one CPU cost and one FPGA cost per wave, so the computation proceeds
+///   (the shorter side contributes zero for its missing waves) but a
+///   warning is logged so the skew cannot hide in an aggregate total;
 /// * a single wave degenerates to the serial sum `c₀ + f₀`;
 /// * all-zero CPU costs degenerate to the FPGA total (and vice versa).
 ///
 /// The result is bounded below by `max(Σcpu, Σfpga)` and above by
 /// `Σcpu + Σfpga`.
 pub fn pipelined_total(cpu_wave_s: &[f64], fpga_wave_s: &[f64]) -> f64 {
+    if cpu_wave_s.len() != fpga_wave_s.len()
+        && !cpu_wave_s.is_empty()
+        && !fpga_wave_s.is_empty()
+    {
+        eprintln!(
+            "warning: pipelined_total: mismatched wave traces (cpu {} vs fpga {}) — \
+             a coordinator is mis-wiring its per-wave instrumentation",
+            cpu_wave_s.len(),
+            fpga_wave_s.len()
+        );
+    }
     let n = cpu_wave_s.len().max(fpga_wave_s.len());
     let mut cpu_done = 0.0f64;
     let mut fpga_done = 0.0f64;
@@ -154,12 +170,14 @@ mod tests {
     }
 
     #[test]
-    fn mismatched_lengths_tolerated() {
+    fn mismatched_lengths_tolerated_but_warned() {
         // FPGA trace longer than CPU trace: missing CPU waves cost zero
+        // (the call logs a mis-wiring warning to stderr — the value is
+        // still well-defined so an aggregate run completes)
         assert!((pipelined_total(&[1.0], &[0.5, 0.5, 0.5]) - 2.5).abs() < 1e-12);
         // CPU trace longer: trailing CPU work still serializes
         assert!((pipelined_total(&[1.0, 1.0], &[0.1]) - 2.0).abs() < 1e-12);
-        // degenerate one-sided traces
+        // degenerate one-sided traces are legitimate phases, not skew
         assert_eq!(pipelined_total(&[], &[2.0, 3.0]), 5.0);
         assert_eq!(pipelined_total(&[2.0, 3.0], &[]), 5.0);
     }

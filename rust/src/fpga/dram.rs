@@ -38,12 +38,26 @@ impl DramModel {
     }
 }
 
+/// Fixed-point fractional bits for the bandwidth denominator: bandwidth
+/// is quantized to 1/65536 byte/cycle, far below any model's resolution.
+const BPC_FRAC_BITS: u32 = 16;
+
+/// Integer ceiling division over a fixed-point bytes-per-cycle.
+///
+/// The previous float formulation `(bytes as f64 / bpc).ceil() as u64`
+/// silently lost precision once `bytes` exceeded 2^53 (multi-GB batched
+/// streams summed over a run make that reachable): `2^53 + 1` as f64
+/// rounds to `2^53`, undercounting a cycle. All arithmetic here is exact
+/// in u128 — `bytes << 16` fits comfortably for any u64 byte count.
 fn cycles_for(bytes: u64, bytes_per_cycle: f64) -> u64 {
     if bytes == 0 {
         return 0;
     }
     assert!(bytes_per_cycle > 0.0, "bandwidth must be positive");
-    (bytes as f64 / bytes_per_cycle).ceil() as u64
+    let bpc_fp = (bytes_per_cycle * (1u64 << BPC_FRAC_BITS) as f64).round() as u128;
+    assert!(bpc_fp > 0, "bandwidth underflows the fixed-point resolution");
+    let num = (bytes as u128) << BPC_FRAC_BITS;
+    u64::try_from(num.div_ceil(bpc_fp)).expect("cycle count exceeds u64")
 }
 
 #[cfg(test)]
@@ -65,6 +79,42 @@ mod tests {
         let r = DramModel::read_cycles(&cfg, 1_000_000);
         let w = DramModel::write_cycles(&cfg, 1_000_000);
         assert!(w > r, "write bandwidth is lower, cycles must be higher");
+    }
+
+    #[test]
+    fn precision_boundary_above_2_pow_53() {
+        // 2^53 + 1 is not representable in f64: the old float path
+        // computed ceil((2^53) / 1.0) and dropped a cycle
+        let bytes = (1u64 << 53) + 1;
+        assert_eq!(cycles_for(bytes, 1.0), bytes);
+        // ... and at realistic bandwidth the exact quotient is preserved
+        let bpc = 56.0; // REAP-32 read
+        let expect = ((bytes as u128) * 65536).div_ceil(56 * 65536) as u64;
+        assert_eq!(cycles_for(bytes, bpc), expect);
+        // whole-range sanity: u64::MAX must not overflow or panic
+        let top = cycles_for(u64::MAX, bpc);
+        assert_eq!(top, ((u64::MAX as u128) * 65536).div_ceil(56 * 65536) as u64);
+    }
+
+    #[test]
+    fn matches_float_model_below_the_boundary() {
+        // for exactly-representable bandwidths and small byte counts the
+        // fixed-point result equals the old float ceiling
+        for bpc in [1.0f64, 56.0, 292.0, 588.0] {
+            for bytes in [1u64, 55, 56, 57, 1000, 5600, 123_457, 1 << 30] {
+                let float = (bytes as f64 / bpc).ceil() as u64;
+                assert_eq!(cycles_for(bytes, bpc), float, "bytes {bytes} bpc {bpc}");
+            }
+        }
+    }
+
+    #[test]
+    fn fractional_bandwidth_rounds_up_cycles() {
+        // 668.18… B/cycle (REAP-128 read at 220 MHz): one extra byte past
+        // a cycle boundary must cost a full extra cycle
+        let bpc = 147.0e9 / 220.0e6;
+        assert_eq!(cycles_for(668, bpc), 1);
+        assert_eq!(cycles_for(669, bpc), 2);
     }
 
     #[test]

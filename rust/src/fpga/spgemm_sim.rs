@@ -19,13 +19,21 @@
 //! *serializes* the stages and, without CPU preprocessing, pays an
 //! indirection penalty per B-row gather.
 
-use crate::rir::schedule::SpgemmSchedule;
+use crate::rir::schedule::{BatchSchedule, SpgemmSchedule};
 use crate::rir::layout::WORD_BYTES;
 use crate::sparse::Csr;
 
 use super::config::FpgaConfig;
 use super::dram::DramModel;
 use super::stats::SimStats;
+
+/// Checked widening for wave accounting: a count that cannot be carried
+/// exactly must abort the run, not wrap (oversized batched inputs made
+/// the silent `as` casts reachable).
+#[inline]
+fn acc_u64(v: usize, what: &str) -> u64 {
+    u64::try_from(v).unwrap_or_else(|_| panic!("{what} ({v}) exceeds u64 accounting range"))
+}
 
 /// Datapath style: hand-coded Verilog (the REAP prototype) or the OpenCL
 /// HLS variant of §V-C.
@@ -104,7 +112,7 @@ pub fn simulate_spgemm(
         let mut stream_cycles: u64 = 0;
         let mut b_elems: u64 = 0;
         for &r in &wave.b_rows {
-            let nnz = b.row_nnz(r as usize) as u64;
+            let nnz = acc_u64(b.row_nnz(r as usize), "B-row nnz");
             let chunks = nnz.div_ceil(schedule.bundle_size as u64).max(1);
             stream_cycles += 2 * chunks + nnz; // header + 1 elem/cycle
             b_elems += nnz;
@@ -116,7 +124,7 @@ pub fn simulate_spgemm(
         let mut products_total: u64 = 0;
         let mut merged_total: u64 = 0;
         for asg in &wave.assignments {
-            let cam_load = asg.len as u64;
+            let cam_load = acc_u64(asg.len, "CAM chunk length");
             let mut products: u64 = 0;
             tick = tick.wrapping_add(1);
             let mut merged: u64 = 0;
@@ -124,7 +132,7 @@ pub fn simulate_spgemm(
                 // single fused pass: product count from the row extent,
                 // merged count from the stamp (perf iteration 4)
                 let row = b.row_cols(c as usize);
-                products += row.len() as u64;
+                products += acc_u64(row.len(), "B-row product count");
                 for &bc in row {
                     merged += u64::from(stamp[bc as usize] != tick);
                     stamp[bc as usize] = tick;
@@ -147,11 +155,11 @@ pub fn simulate_spgemm(
         let a_bytes: u64 = wave
             .assignments
             .iter()
-            .map(|asg| (2 + 2 * asg.len) as u64 * WORD_BYTES as u64)
+            .map(|asg| acc_u64(2 + 2 * asg.len, "A bundle words") * WORD_BYTES as u64)
             .sum();
         let mut b_bytes: u64 = 0;
         for &r in &wave.b_rows {
-            let nnz = b.row_nnz(r as usize) as u64;
+            let nnz = acc_u64(b.row_nnz(r as usize), "B-row nnz");
             let chunks = nnz.div_ceil(schedule.bundle_size as u64).max(1);
             b_bytes += (2 * chunks + 2 * nnz) * WORD_BYTES as u64;
         }
@@ -170,9 +178,12 @@ pub fn simulate_spgemm(
         }
         stats.cycles += wave_cy;
         stats.waves += 1;
-        let active = wave.assignments.len() as u64;
+        let active = acc_u64(wave.assignments.len(), "active pipelines");
+        let idle = (p as u64)
+            .checked_sub(active)
+            .expect("wave overfilled: more assignments than pipelines");
         stats.busy_pipeline_cycles += active * wave_cy;
-        stats.idle_pipeline_cycles += (p as u64 - active) * wave_cy;
+        stats.idle_pipeline_cycles += idle * wave_cy;
         stats.flops += 2 * products_total; // multiply + merge-add
         let _ = b_elems;
         wave_cycles_log.push(wave_cy);
@@ -182,6 +193,177 @@ pub fn simulate_spgemm(
     stats.bytes_written = dram.bytes_written;
     let _ = a;
     SpgemmSimResult { stats, wave_cycles: wave_cycles_log }
+}
+
+/// Per-job attribution within a batched simulation: exact integer shares
+/// of the shared-wave accounting (no proportional rounding — every field
+/// is a sum the job's own assignments/segments generated).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JobSimStats {
+    /// Pipeline-cycles the job's assignments occupied.
+    pub busy_pipeline_cycles: u64,
+    /// Shared waves in which the job held at least one pipeline.
+    pub waves: u64,
+    /// Useful FP operations (multiply + merge-add) the job performed.
+    pub flops: u64,
+    /// DRAM bytes read for the job (its A chunks + its B segments).
+    pub bytes_read: u64,
+    /// DRAM bytes written for the job's merged output.
+    pub bytes_written: u64,
+}
+
+/// Result of simulating one batched (multi-tenant) SpGEMM execution.
+#[derive(Clone, Debug)]
+pub struct BatchSimResult {
+    /// Aggregate statistics over the shared waves.
+    pub stats: SimStats,
+    /// Cycle count per shared wave (drives the overlap pipeline).
+    pub wave_cycles: Vec<u64>,
+    /// Per-job attribution, indexed by job id.
+    pub job_stats: Vec<JobSimStats>,
+}
+
+/// Simulate N independent jobs `C_j = A_j × B_j` sharing the design's
+/// pipelines over a prebuilt [`BatchSchedule`].
+///
+/// Per-pipeline occupancy keeps the [`simulate_spgemm`] model —
+/// `cam + max(stream, products) + fill` — but the stream a pipeline races
+/// is its **own tenant's segment**: the job tags let the input controller
+/// keep one stream cursor per job-run and broadcast each segment to just
+/// its pipeline group, concurrently (the single-tenant design's one
+/// broadcast bus consumes 1 elem/cycle and cannot exploit the 64/128
+/// designs' DRAM bandwidth; per-tenant lanes can — the aggregate is still
+/// capped by the wave's `max(compute, dram)` queuing model, which charges
+/// every segment's bytes). A single-job batch degenerates to exactly the
+/// single-tenant model: one segment, one lane, identical numbers.
+///
+/// What batching buys is fewer, fuller waves: a wave costs its *slowest
+/// tenant*, not the sum of tenants, and idle pipeline-cycles collapse
+/// (measured by `stats.pipeline_utilization()`).
+pub fn simulate_spgemm_batch(
+    jobs: &[(Csr, Csr)],
+    schedule: &BatchSchedule,
+    cfg: &FpgaConfig,
+    style: Style,
+) -> BatchSimResult {
+    assert_eq!(jobs.len(), schedule.n_jobs, "job list does not match schedule");
+    let p = cfg.pipelines;
+    let mut stats = SimStats::default();
+    let mut dram = DramModel::default();
+    let mut wave_cycles_log = Vec::with_capacity(schedule.waves.len());
+    let mut job_stats = vec![JobSimStats::default(); jobs.len()];
+
+    // one stamp scratch over the widest output column space; ticks are
+    // unique per assignment, so jobs can never alias each other's stamps
+    let max_ncols = jobs.iter().map(|(_, b)| b.ncols).max().unwrap_or(0);
+    let mut stamp = vec![u32::MAX; max_ncols];
+    let mut tick = 0u32;
+
+    let fill = 2 + cfg.mult_latency + cfg.add_latency;
+
+    for wave in &schedule.waves {
+        // ---- B streams: one concurrent lane per tenant segment ----
+        let mut seg_streams: Vec<u64> = Vec::with_capacity(wave.segments.len());
+        let mut b_bytes: u64 = 0;
+        for seg in &wave.segments {
+            let b = &jobs[seg.job as usize].1;
+            let mut seg_stream: u64 = 0;
+            let mut seg_bytes: u64 = 0;
+            for &r in &seg.b_rows {
+                let nnz = acc_u64(b.row_nnz(r as usize), "B-row nnz");
+                let chunks = nnz.div_ceil(schedule.bundle_size as u64).max(1);
+                seg_stream += 2 * chunks + nnz; // header + 1 elem/cycle
+                seg_stream += style.indirection_cycles_per_row();
+                seg_bytes += (2 * chunks + 2 * nnz) * WORD_BYTES as u64;
+            }
+            seg_streams.push(seg_stream);
+            job_stats[seg.job as usize].bytes_read += seg_bytes;
+            b_bytes += seg_bytes;
+        }
+
+        // ---- per-pipeline occupancy + per-job work; assignments are
+        // job-major, so the run index walks `segments` in lockstep ----
+        let mut max_pipe: u64 = 0;
+        let mut products_total: u64 = 0;
+        let mut merged_total: u64 = 0;
+        let mut a_bytes: u64 = 0;
+        let mut run_counts = vec![0u64; wave.segments.len()];
+        let mut run_idx = 0usize;
+        let mut prev_job: Option<u32> = None;
+        for (j, asg) in wave.assignments.iter() {
+            let ji = *j as usize;
+            if let Some(prev) = prev_job {
+                if prev != *j {
+                    run_idx += 1;
+                }
+            }
+            prev_job = Some(*j);
+            // hard assert (not debug): the fields are pub, and a skewed
+            // wave would silently misattribute tenant stats in release
+            assert_eq!(wave.segments[run_idx].job, *j, "segment/run skew in batch wave");
+            run_counts[run_idx] += 1;
+            let stream_cycles = seg_streams[run_idx];
+            let (a, b) = &jobs[ji];
+            let cam_load = acc_u64(asg.len, "CAM chunk length");
+            let mut products: u64 = 0;
+            tick = tick.wrapping_add(1);
+            let mut merged: u64 = 0;
+            for &c in asg.a_cols(a) {
+                let row = b.row_cols(c as usize);
+                products += acc_u64(row.len(), "B-row product count");
+                for &bc in row {
+                    merged += u64::from(stamp[bc as usize] != tick);
+                    stamp[bc as usize] = tick;
+                }
+            }
+            products_total += products;
+            merged_total += merged;
+            let chunk_bytes = acc_u64(2 + 2 * asg.len, "A bundle words") * WORD_BYTES as u64;
+            a_bytes += chunk_bytes;
+            let js = &mut job_stats[ji];
+            js.flops += 2 * products;
+            js.bytes_read += chunk_bytes;
+            js.bytes_written += merged * 2 * WORD_BYTES as u64;
+            let pipe = if style.pipelined_stages() {
+                cam_load + stream_cycles.max(products) + fill
+            } else {
+                cam_load + stream_cycles + 2 * products + fill
+            };
+            max_pipe = max_pipe.max(pipe);
+        }
+
+        // ---- DRAM + wave cost, exactly the single-job model ----
+        let out_bytes = merged_total * 2 * WORD_BYTES as u64;
+        let read_cycles = dram.read(cfg, a_bytes + b_bytes);
+        let write_cycles = dram.write(cfg, out_bytes);
+        let compute = max_pipe;
+        let dram_cy = read_cycles.max(write_cycles);
+        let wave_cy = compute.max(dram_cy).max(1);
+        if compute >= dram_cy {
+            stats.compute_bound_cycles += wave_cy;
+        } else {
+            stats.dram_bound_cycles += wave_cy;
+        }
+        stats.cycles += wave_cy;
+        stats.waves += 1;
+        let active = acc_u64(wave.assignments.len(), "active pipelines");
+        let idle = (p as u64)
+            .checked_sub(active)
+            .expect("batch wave overfilled: more assignments than pipelines");
+        stats.busy_pipeline_cycles += active * wave_cy;
+        stats.idle_pipeline_cycles += idle * wave_cy;
+        stats.flops += 2 * products_total;
+        for (seg, &n_asg) in wave.segments.iter().zip(&run_counts) {
+            let js = &mut job_stats[seg.job as usize];
+            js.waves += 1;
+            js.busy_pipeline_cycles += n_asg * wave_cy;
+        }
+        wave_cycles_log.push(wave_cy);
+    }
+
+    stats.bytes_read = dram.bytes_read;
+    stats.bytes_written = dram.bytes_written;
+    BatchSimResult { stats, wave_cycles: wave_cycles_log, job_stats }
 }
 
 #[cfg(test)]
@@ -203,7 +385,7 @@ mod tests {
         assert!(r.stats.flops > 0);
         assert!(r.stats.bytes_read > 0);
         assert!(r.stats.bytes_written > 0);
-        assert_eq!(r.stats.waves as usize, r.wave_cycles.len());
+        assert_eq!(usize::try_from(r.stats.waves).unwrap(), r.wave_cycles.len());
         assert_eq!(
             r.stats.cycles,
             r.wave_cycles.iter().sum::<u64>(),
@@ -274,5 +456,109 @@ mod tests {
         let s = schedule_spgemm(&a, &a, cfg.pipelines, cfg.bundle_size);
         let r = simulate_spgemm(&a, &a, &s, &cfg, Style::HandCoded);
         assert_eq!(r.stats.cycles, 0);
+    }
+
+    // ---- batched (multi-tenant) simulation ----
+
+    use crate::rir::schedule::schedule_spgemm_batch;
+
+    fn mk_jobs(n_jobs: usize, n: usize, nnz: usize, seed: u64) -> Vec<(Csr, Csr)> {
+        (0..n_jobs)
+            .map(|j| {
+                let s = seed + j as u64 * 10;
+                (
+                    gen::random_uniform(n, n, nnz, s),
+                    gen::random_uniform(n, n, nnz, s + 1),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_sim_conservation_laws() {
+        let jobs = mk_jobs(5, 40, 300, 21);
+        let cfg = FpgaConfig::reap64_spgemm();
+        let s = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+        let r = simulate_spgemm_batch(&jobs, &s, &cfg, Style::HandCoded);
+        assert_eq!(r.stats.cycles, r.wave_cycles.iter().sum::<u64>());
+        assert_eq!(usize::try_from(r.stats.waves).unwrap(), s.n_waves());
+        assert_eq!(
+            r.stats.busy_pipeline_cycles + r.stats.idle_pipeline_cycles,
+            cfg.pipelines as u64 * r.stats.cycles
+        );
+        // per-job attribution partitions the aggregate exactly
+        assert_eq!(
+            r.job_stats.iter().map(|j| j.flops).sum::<u64>(),
+            r.stats.flops
+        );
+        assert_eq!(
+            r.job_stats.iter().map(|j| j.busy_pipeline_cycles).sum::<u64>(),
+            r.stats.busy_pipeline_cycles
+        );
+        assert_eq!(
+            r.job_stats.iter().map(|j| j.bytes_read).sum::<u64>(),
+            r.stats.bytes_read
+        );
+        assert_eq!(
+            r.job_stats.iter().map(|j| j.bytes_written).sum::<u64>(),
+            r.stats.bytes_written
+        );
+        // traffic matches the schedule's word accounting on the read side
+        assert_eq!(usize::try_from(r.stats.bytes_read).unwrap(), s.input_bytes());
+        // per-job flops equal each job's analytic count
+        for (j, (a, b)) in jobs.iter().enumerate() {
+            assert_eq!(
+                usize::try_from(r.job_stats[j].flops).unwrap(),
+                crate::kernels::spgemm::spgemm_flops(a, b),
+                "job {j}"
+            );
+        }
+    }
+
+    #[test]
+    fn batching_small_jobs_beats_serial_occupancy() {
+        // many small jobs: alone each underfills a 64-wide design
+        let jobs = mk_jobs(12, 30, 180, 31);
+        let cfg = FpgaConfig::reap64_spgemm();
+        let s = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+        let batch = simulate_spgemm_batch(&jobs, &s, &cfg, Style::HandCoded);
+
+        let mut serial_busy = 0u64;
+        let mut serial_total = 0u64;
+        let mut serial_cycles = 0u64;
+        for (a, b) in &jobs {
+            let solo = schedule_spgemm(a, b, cfg.pipelines, cfg.bundle_size);
+            let r = simulate_spgemm(a, b, &solo, &cfg, Style::HandCoded);
+            serial_busy += r.stats.busy_pipeline_cycles;
+            serial_total += r.stats.busy_pipeline_cycles + r.stats.idle_pipeline_cycles;
+            serial_cycles += r.stats.cycles;
+        }
+        let serial_occ = serial_busy as f64 / serial_total as f64;
+        assert!(
+            batch.stats.pipeline_utilization() > serial_occ,
+            "batched occupancy {:.3} must beat serial {:.3}",
+            batch.stats.pipeline_utilization(),
+            serial_occ
+        );
+        assert!(
+            batch.stats.cycles < serial_cycles,
+            "shared waves must cost fewer cycles: {} vs {}",
+            batch.stats.cycles,
+            serial_cycles
+        );
+    }
+
+    #[test]
+    fn single_job_batch_matches_plain_sim() {
+        let a = gen::random_uniform(60, 60, 700, 41);
+        let b = gen::random_uniform(60, 60, 700, 42);
+        let cfg = FpgaConfig::reap32_spgemm();
+        let jobs = vec![(a.clone(), b.clone())];
+        let bs = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+        let solo = schedule_spgemm(&a, &b, cfg.pipelines, cfg.bundle_size);
+        let rb = simulate_spgemm_batch(&jobs, &bs, &cfg, Style::HandCoded);
+        let rs = simulate_spgemm(&a, &b, &solo, &cfg, Style::HandCoded);
+        assert_eq!(rb.stats, rs.stats);
+        assert_eq!(rb.wave_cycles, rs.wave_cycles);
     }
 }

@@ -1,0 +1,211 @@
+//! Batch throughput: many small SpGEMM jobs, shared waves vs N serial
+//! runs (the multi-tenant scenario of the production north-star — no
+//! paper figure corresponds; EXPERIMENTS.md §Batch-throughput documents
+//! the methodology).
+//!
+//! For each design point the harness runs the same J-job workload twice —
+//! once through [`ReapBatch`] (shared, job-tagged waves) and once as J
+//! independent [`ReapSpgemm`] runs — and reports simulated pipeline
+//! occupancy, cycles and end-to-end time. Batching must win occupancy on
+//! the wide (64/128) designs: that is the headline the CI asserts.
+
+use crate::coordinator::{ReapBatch, ReapSpgemm};
+use crate::fpga::FpgaConfig;
+use crate::sparse::gen::{self, Family};
+use crate::sparse::Csr;
+use crate::util::table::Table;
+
+use super::report::RunConfig;
+
+/// One (design point × execution mode) comparison row.
+#[derive(Clone, Debug)]
+pub struct BatchRow {
+    pub config: String,
+    pub jobs: usize,
+    /// Simulated pipeline occupancy, batched / serial.
+    pub batch_occupancy: f64,
+    pub serial_occupancy: f64,
+    /// Simulated FPGA cycles, batched / summed serial.
+    pub batch_cycles: u64,
+    pub serial_cycles: u64,
+    /// End-to-end seconds under per-wave pipelining.
+    pub batch_total_s: f64,
+    pub serial_total_s: f64,
+    /// Shared waves vs summed single-job waves.
+    pub batch_waves: u64,
+    pub serial_waves: u64,
+    /// Measured CPU preprocessing seconds (batched pass).
+    pub batch_cpu_s: f64,
+    /// Simulated FPGA seconds (batched pass).
+    pub batch_fpga_s: f64,
+}
+
+/// The many-small-jobs workload: J jobs whose individual chunk counts
+/// sit well below the widest design's pipeline count, mixed across
+/// pattern families (tenants are heterogeneous).
+pub fn small_job_suite(cfg: &RunConfig) -> Vec<(Csr, Csr)> {
+    let n_jobs = 24usize;
+    (0..n_jobs)
+        .map(|j| {
+            let n = (28 + (j * 11) % 57).min(cfg.max_rows.max(8));
+            let nnz = n * (4 + j % 4);
+            let family = match j % 3 {
+                0 => Family::RandomUniform,
+                1 => Family::PowerLaw,
+                _ => Family::BandedFem,
+            };
+            let seed = cfg.seed ^ (0xBA7C0 + j as u64);
+            (
+                gen::generate(family, n, nnz, seed),
+                gen::generate(Family::RandomUniform, n, nnz, seed + 1),
+            )
+        })
+        .collect()
+}
+
+/// Run the comparison; returns rows plus the rendered table, and writes
+/// `BENCH_batch.json` when output is enabled.
+pub fn run(cfg: &RunConfig) -> (Vec<BatchRow>, Table) {
+    let jobs = small_job_suite(cfg);
+    let mut rows = Vec::new();
+    for design in [
+        FpgaConfig::reap32_spgemm(),
+        FpgaConfig::reap64_spgemm(),
+        FpgaConfig::reap128_spgemm(),
+    ] {
+        let batch = ReapBatch::new(design.clone()).run(&jobs).expect("batch run");
+        let mut serial_busy = 0u64;
+        let mut serial_slots = 0u64;
+        let mut serial_cycles = 0u64;
+        let mut serial_total_s = 0.0f64;
+        let mut serial_waves = 0u64;
+        for (a, b) in &jobs {
+            let rep = ReapSpgemm::new(design.clone()).run(a, b).expect("serial run");
+            serial_busy += rep.fpga_sim.busy_pipeline_cycles;
+            serial_slots +=
+                rep.fpga_sim.busy_pipeline_cycles + rep.fpga_sim.idle_pipeline_cycles;
+            serial_cycles += rep.fpga_sim.cycles;
+            serial_total_s += rep.total_s;
+            serial_waves += rep.fpga_sim.waves;
+        }
+        rows.push(BatchRow {
+            config: design.name.to_string(),
+            jobs: jobs.len(),
+            batch_occupancy: batch.fpga_sim.pipeline_utilization(),
+            serial_occupancy: if serial_slots == 0 {
+                0.0
+            } else {
+                serial_busy as f64 / serial_slots as f64
+            },
+            batch_cycles: batch.fpga_sim.cycles,
+            serial_cycles,
+            batch_total_s: batch.total_s,
+            serial_total_s,
+            batch_waves: batch.fpga_sim.waves,
+            serial_waves,
+            batch_cpu_s: batch.cpu_preprocess_s,
+            batch_fpga_s: batch.fpga_s,
+        });
+    }
+    write_bench_json(cfg, &rows);
+
+    let mut table = Table::new(
+        "Batch throughput — J small SpGEMMs, shared waves vs serial",
+        &[
+            "config", "jobs", "occ(batch)", "occ(serial)", "cycles(batch)",
+            "cycles(serial)", "waves(batch)", "waves(serial)", "speedup",
+        ],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.config.clone(),
+            r.jobs.to_string(),
+            format!("{:.1}%", r.batch_occupancy * 100.0),
+            format!("{:.1}%", r.serial_occupancy * 100.0),
+            r.batch_cycles.to_string(),
+            r.serial_cycles.to_string(),
+            r.batch_waves.to_string(),
+            r.serial_waves.to_string(),
+            format!("{:.2}x", r.serial_total_s / r.batch_total_s.max(1e-12)),
+        ]);
+    }
+    (rows, table)
+}
+
+/// The multi-tenant headline: on the wide designs (64/128 pipelines) the
+/// shared-wave schedule must raise simulated pipeline occupancy *and*
+/// lower simulated cycles versus running the jobs serially.
+pub fn headline_holds(rows: &[BatchRow]) -> bool {
+    rows.iter()
+        .filter(|r| r.config != "REAP-32")
+        .all(|r| r.batch_occupancy > r.serial_occupancy && r.batch_cycles < r.serial_cycles)
+}
+
+use super::json::{escape, num};
+
+/// Write `BENCH_batch.json`: two records per design point (batched and
+/// serial mode) so the perf trajectory of the multi-tenant path is
+/// diffable across PRs alongside the other `BENCH_*.json` files.
+fn write_bench_json(cfg: &RunConfig, rows: &[BatchRow]) {
+    let Some(dir) = &cfg.csv_dir else {
+        return;
+    };
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"workload\": \"many-small-{}\", \"config\": \"{}\", \"mode\": \"batched\", \
+             \"cpu_s\": {}, \"fpga_s\": {}, \"total_s\": {}, \"waves\": {}, \
+             \"occupancy\": {:.6}}},\n",
+            r.jobs,
+            escape(&r.config),
+            num(r.batch_cpu_s),
+            num(r.batch_fpga_s),
+            num(r.batch_total_s),
+            r.batch_waves,
+            r.batch_occupancy,
+        ));
+        out.push_str(&format!(
+            "  {{\"workload\": \"many-small-{}\", \"config\": \"{}\", \"mode\": \"serial\", \
+             \"cpu_s\": 0, \"fpga_s\": 0, \"total_s\": {}, \"waves\": {}, \
+             \"occupancy\": {:.6}}}{}\n",
+            r.jobs,
+            escape(&r.config),
+            num(r.serial_total_s),
+            r.serial_waves,
+            r.serial_occupancy,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    if let Err(e) = std::fs::create_dir_all(dir)
+        .and_then(|()| std::fs::write(dir.join("BENCH_batch.json"), out))
+    {
+        eprintln!("warning: could not write BENCH_batch.json: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn batching_wins_occupancy_on_wide_designs() {
+        let mut cfg = RunConfig::quick();
+        let dir = std::env::temp_dir().join(format!("reap-batch-{}", std::process::id()));
+        cfg.csv_dir = Some(dir.clone());
+        let (rows, table) = run(&cfg);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(table.len(), 3);
+        assert!(
+            headline_holds(&rows),
+            "shared waves must beat serial occupancy/cycles on 64/128: {rows:?}"
+        );
+        let text = std::fs::read_to_string(dir.join("BENCH_batch.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 6); // 3 designs × 2 modes
+        assert!(arr[0].get("occupancy").unwrap().as_f64().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

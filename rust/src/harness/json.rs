@@ -26,7 +26,8 @@ pub struct BenchRecord {
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars).
-fn escape(s: &str) -> String {
+/// Shared with the other hand-rolled writers in this crate (`batch`).
+pub(crate) fn escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -42,18 +43,28 @@ fn escape(s: &str) -> String {
     out
 }
 
+/// Render one JSON number: `{:e}` for finite values, `0` for non-finite
+/// (JSON has no NaN/inf). Shared by every hand-rolled BENCH writer.
+pub(crate) fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:e}")
+    } else {
+        "0".to_string()
+    }
+}
+
 /// Render records as a JSON array (stable field order, one record per line).
 pub fn render_bench(records: &[BenchRecord]) -> String {
     let mut out = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
         out.push_str(&format!(
-            "  {{\"matrix\": \"{}\", \"config\": \"{}\", \"cpu_s\": {:e}, \
-             \"fpga_s\": {:e}, \"total_s\": {:e}, \"waves\": {}}}{}\n",
+            "  {{\"matrix\": \"{}\", \"config\": \"{}\", \"cpu_s\": {}, \
+             \"fpga_s\": {}, \"total_s\": {}, \"waves\": {}}}{}\n",
             escape(&r.matrix),
             escape(&r.config),
-            r.cpu_s,
-            r.fpga_s,
-            r.total_s,
+            num(r.cpu_s),
+            num(r.fpga_s),
+            num(r.total_s),
             r.waves,
             if i + 1 == records.len() { "" } else { "," }
         ));

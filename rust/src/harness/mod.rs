@@ -14,7 +14,9 @@
 //! | [`fig10`] | Cholesky speedups vs CHOLMOD |
 //! | [`fig11`] | Cholesky CPU/FPGA breakdown |
 //! | [`hls_cmp`] | §V-C HLS preprocessing benefit |
+//! | [`batch`] | multi-tenant batch throughput (no paper figure) |
 
+pub mod batch;
 pub mod fig10;
 pub mod fig11;
 pub mod fig6;

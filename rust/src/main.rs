@@ -282,7 +282,7 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") || args.positionals().is_empty() {
         print!(
-            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls all\n",
+            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch all\n",
             usage("bench <target>", "regenerate a paper table/figure", &specs)
         );
         return Ok(());
@@ -378,8 +378,20 @@ fn run_bench_target(target: &str, cfg: &RunConfig) -> Result<()> {
             );
             cfg.dump_csv("hls", &t)?;
         }
+        "batch" => {
+            let (rows, t) = harness::batch::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "multi-tenant: shared waves beat serial occupancy on 64/128 -> headline {}",
+                if harness::batch::headline_holds(&rows) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("batch", &t)?;
+        }
         "all" => {
-            for t in ["table1", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "hls"] {
+            for t in [
+                "table1", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "hls",
+                "batch",
+            ] {
                 run_bench_target(t, cfg)?;
                 println!();
             }

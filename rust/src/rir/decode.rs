@@ -49,6 +49,33 @@ pub fn stream_to_csr(stream: &BundleStream, nrows: usize, ncols: usize) -> Resul
     asm.finish()
 }
 
+/// Reassemble one tenant's CSR from its bundle segment `[lo, hi)` of a
+/// shared multi-job stream (the boundaries returned by
+/// [`BundleStream::encode_csr_jobs`]). Validation is identical to
+/// [`stream_to_csr`] — the segment must be a self-contained stream.
+pub fn stream_segment_to_csr(
+    stream: &BundleStream,
+    lo: usize,
+    hi: usize,
+    nrows: usize,
+    ncols: usize,
+) -> Result<Csr> {
+    ensure!(
+        lo <= hi && hi <= stream.n_bundles(),
+        "segment [{lo}, {hi}) out of bounds (stream has {} bundles)",
+        stream.n_bundles()
+    );
+    let mut asm = RowAssembler::new(nrows, ncols);
+    for i in lo..hi {
+        let b = stream.bundle(i);
+        if b.flags.metadata_only() {
+            continue;
+        }
+        asm.push(b.shared, b.flags, b.cols, b.vals)?;
+    }
+    asm.finish()
+}
+
 /// Shared row-reassembly state: enforces the stream invariants (row chains
 /// contiguous, one `END_OF_ROW` per chain, rows in ascending order).
 struct RowAssembler {
@@ -212,6 +239,33 @@ mod tests {
         m.validate().unwrap();
         let s = BundleStream::from_csr(&m, 32);
         assert_eq!(stream_to_csr(&s, 4, 4).unwrap(), m);
+    }
+
+    #[test]
+    fn job_segments_extract_each_tenant() {
+        let m0 = gen::power_law(18, 200, 21);
+        let m1 = crate::sparse::Csr::new(0, 6); // empty tenant
+        let m2 = gen::random_uniform(9, 14, 60, 22);
+        let jobs = [&m0, &m1, &m2];
+        let mut s = BundleStream::new();
+        let bounds = s.encode_csr_jobs(&jobs, 8);
+        for (j, m) in jobs.iter().enumerate() {
+            let back =
+                stream_segment_to_csr(&s, bounds[j], bounds[j + 1], m.nrows, m.ncols).unwrap();
+            assert_eq!(&back, *m, "job {j}");
+        }
+        // a segment cut mid-row-chain is rejected, not silently absorbed
+        let mut wide = crate::sparse::Csr::new(1, 30);
+        wide.cols = (0..20).collect();
+        wide.vals = vec![1.0; 20];
+        wide.row_ptr = vec![0, 20];
+        wide.validate().unwrap();
+        let mut s2 = BundleStream::new();
+        let b2 = s2.encode_csr_jobs(&[&wide], 8); // 3-bundle chain
+        assert!(b2[1] >= 3);
+        assert!(stream_segment_to_csr(&s2, 0, b2[1] - 1, 1, 30).is_err());
+        // out-of-bounds segment rejected
+        assert!(stream_segment_to_csr(&s, 0, s.n_bundles() + 1, 5, 5).is_err());
     }
 
     #[test]

@@ -180,6 +180,38 @@ impl BundleStream {
         self.mark_end_of_stream();
     }
 
+    /// Encode N independent CSR jobs into this shared arena (cleared
+    /// first), returning the per-job *bundle boundaries* — `n_jobs + 1`
+    /// ascending indices, first 0, last [`Self::n_bundles`]. Job `j` owns
+    /// bundles `bounds[j]..bounds[j+1]`; its last bundle carries
+    /// `END_OF_STREAM`, so every segment is a self-contained stream and
+    /// [`super::decode::stream_segment_to_csr`] can extract one tenant's
+    /// matrix without touching the others. An empty job (no rows) owns an
+    /// empty bundle range.
+    pub fn encode_csr_jobs(&mut self, jobs: &[&Csr], bundle_size: usize) -> Vec<usize> {
+        assert!(bundle_size > 0, "bundle_size must be positive");
+        self.clear();
+        let nb: usize = jobs
+            .iter()
+            .map(|m| chain_bundle_count_csr(m, bundle_size))
+            .sum();
+        let ne: usize = jobs.iter().map(|m| m.nnz()).sum();
+        self.reserve_for(nb, ne);
+        let mut bounds = Vec::with_capacity(jobs.len() + 1);
+        bounds.push(0usize);
+        for m in jobs {
+            let before = self.n_bundles();
+            for i in 0..m.nrows {
+                self.push_chain(i as Idx, m.row_cols(i), m.row_vals(i), bundle_size);
+            }
+            if self.n_bundles() > before {
+                self.mark_end_of_stream();
+            }
+            bounds.push(self.n_bundles());
+        }
+        bounds
+    }
+
     /// Encode only the selected rows of a CSR matrix, in the given order
     /// (cleared first) — the SpGEMM scheduler's B-row stream of a wave
     /// (paper Fig 3(d)). No `END_OF_STREAM`: wave streams concatenate.
@@ -291,7 +323,7 @@ impl BundleStream {
 
 /// Bundle count for the whole-CSR encode (one chain per row, empty rows
 /// still emit one bundle).
-fn chain_bundle_count_csr(m: &Csr, bundle_size: usize) -> usize {
+pub(crate) fn chain_bundle_count_csr(m: &Csr, bundle_size: usize) -> usize {
     (0..m.nrows)
         .map(|i| m.row_nnz(i).div_ceil(bundle_size).max(1))
         .sum()
@@ -590,5 +622,48 @@ mod tests {
         let s = BundleStream::from_csr(&m, 32);
         assert!(s.is_empty());
         assert_eq!(s.to_bundles(), Vec::<Bundle>::new());
+    }
+
+    // ---- job-segmented (multi-tenant) streams ----
+
+    #[test]
+    fn job_segments_concatenate_per_job_encodes() {
+        let m0 = gen::power_law(20, 200, 11);
+        let m1 = gen::random_uniform(8, 15, 40, 12);
+        let m2 = crate::sparse::Csr::new(0, 5); // empty job
+        let m3 = gen::banded_fem(12, 80, 13);
+        let jobs = [&m0, &m1, &m2, &m3];
+        let mut s = BundleStream::new();
+        let bounds = s.encode_csr_jobs(&jobs, 16);
+        assert_eq!(bounds.len(), 5);
+        assert_eq!(bounds[0], 0);
+        assert_eq!(*bounds.last().unwrap(), s.n_bundles());
+        assert_eq!(bounds[2], bounds[3], "empty job owns an empty range");
+        // each segment is exactly the job's standalone encode
+        for (j, m) in jobs.iter().enumerate() {
+            let solo = csr_to_bundles(m, 16);
+            let seg: Vec<Bundle> = (bounds[j]..bounds[j + 1])
+                .map(|i| {
+                    let b = s.bundle(i);
+                    Bundle::data(b.shared, b.cols.to_vec(), b.vals.to_vec(), b.flags)
+                })
+                .collect();
+            assert_eq!(seg, solo, "job {j}");
+        }
+        // every non-empty segment terminates with END_OF_STREAM
+        for j in 0..jobs.len() {
+            if bounds[j] < bounds[j + 1] {
+                assert!(s.bundle(bounds[j + 1] - 1).flags.end_of_stream(), "job {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn job_segments_of_one_job_match_whole_encode() {
+        let m = gen::power_law(30, 400, 14);
+        let mut s = BundleStream::new();
+        let bounds = s.encode_csr_jobs(&[&m], 8);
+        assert_eq!(bounds, vec![0, s.n_bundles()]);
+        assert_eq!(s, BundleStream::from_csr_with_threads(&m, 8, 1));
     }
 }

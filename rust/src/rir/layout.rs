@@ -80,6 +80,20 @@ pub fn stream_arena_bytes(s: &super::encode::BundleStream) -> usize {
     stream_arena_words(s) * WORD_BYTES
 }
 
+/// Number of 32-bit words bundles `[lo, hi)` of a stream arena occupy in
+/// DRAM — one job's segment of a multi-tenant stream (see
+/// [`super::encode::BundleStream::encode_csr_jobs`]). Summing every job's
+/// segment reproduces [`stream_arena_words`] exactly.
+pub fn segment_arena_words(s: &super::encode::BundleStream, lo: usize, hi: usize) -> usize {
+    assert!(lo <= hi && hi <= s.n_bundles(), "segment [{lo}, {hi}) out of bounds");
+    2 * (hi - lo) + 2 * (s.off[hi] - s.off[lo])
+}
+
+/// Bytes bundles `[lo, hi)` of a stream arena occupy in DRAM.
+pub fn segment_arena_bytes(s: &super::encode::BundleStream, lo: usize, hi: usize) -> usize {
+    segment_arena_words(s, lo, hi) * WORD_BYTES
+}
+
 /// Serialize a flat bundle arena into the DRAM word layout — identical
 /// output to [`serialize`] over the boxed form, with no per-bundle
 /// indirection.
@@ -271,6 +285,27 @@ mod tests {
             assert_eq!(stream_arena_words(&arena), boxed.len());
             assert_eq!(stream_arena_bytes(&arena), boxed.len() * WORD_BYTES);
         }
+    }
+
+    #[test]
+    fn segment_words_partition_the_arena() {
+        let m0 = gen::power_law(25, 300, 7);
+        let m1 = gen::random_uniform(10, 10, 50, 8);
+        let m2 = crate::sparse::Csr::new(0, 4);
+        let mut s = crate::rir::encode::BundleStream::new();
+        let bounds = s.encode_csr_jobs(&[&m0, &m1, &m2], 8);
+        let total: usize = bounds
+            .windows(2)
+            .map(|w| segment_arena_words(&s, w[0], w[1]))
+            .sum();
+        assert_eq!(total, stream_arena_words(&s));
+        assert_eq!(segment_arena_words(&s, bounds[2], bounds[3]), 0);
+        // a segment's bytes equal the standalone encode's bytes
+        let solo = crate::rir::encode::BundleStream::from_csr_with_threads(&m1, 8, 1);
+        assert_eq!(
+            segment_arena_bytes(&s, bounds[1], bounds[2]),
+            stream_arena_bytes(&solo)
+        );
     }
 
     #[test]

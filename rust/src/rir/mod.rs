@@ -26,4 +26,4 @@ pub mod schedule;
 
 pub use bundle::{Bundle, BundleFlags, Payload, RlTriple, DEFAULT_BUNDLE_SIZE};
 pub use encode::{BundleRef, BundleStream};
-pub use schedule::{SpgemmSchedule, Wave};
+pub use schedule::{BatchSchedule, BatchSegment, BatchWave, SpgemmSchedule, Wave};

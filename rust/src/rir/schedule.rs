@@ -123,6 +123,311 @@ fn row_stream_words(nnz: usize, bundle_size: usize) -> usize {
     2 * chunks + 2 * nnz
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant batched scheduling (many small SpGEMMs sharing one design)
+// ---------------------------------------------------------------------------
+
+/// One job's slice of a shared wave's B-side stream: the job id plus the
+/// B-rows streamed for that job's assignments in the wave (ascending,
+/// deduped — the same contract as [`Wave::b_rows`], per job).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchSegment {
+    pub job: u32,
+    pub b_rows: Vec<Idx>,
+}
+
+/// One shared scheduling wave across independent jobs: ≤ `pipelines`
+/// job-tagged assignments plus one B-stream segment per job present.
+///
+/// Assignments are job-major (chunks keep their within-job order), so a
+/// job occupies one contiguous run per wave and `segments` mirrors the
+/// run order exactly.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchWave {
+    /// `(job, assignment)` pairs, ≤ `pipelines` of them.
+    pub assignments: Vec<(u32, Assignment)>,
+    /// Per-job B-row segments, in run (job-ascending) order.
+    pub segments: Vec<BatchSegment>,
+}
+
+/// The complete shared-wave schedule for N independent SpGEMM jobs, plus
+/// DRAM traffic accounting summed across jobs.
+///
+/// Invariant (property-tested): extracting job *j*'s assignments in wave
+/// order yields exactly the chunk sequence of the single-job
+/// [`schedule_spgemm`] for that job — batching changes only the wave
+/// grouping, never the per-job chunk identity or order. That makes a
+/// batched run bit-identical to N independent scheduled runs.
+#[derive(Clone, Debug)]
+pub struct BatchSchedule {
+    pub pipelines: usize,
+    pub bundle_size: usize,
+    pub n_jobs: usize,
+    pub waves: Vec<BatchWave>,
+    /// Words of A-side bundles streamed, summed over jobs.
+    pub a_words: usize,
+    /// Words of B-side bundles streamed, summed over waves and segments.
+    pub b_words: usize,
+    /// Measured CPU seconds of the chunk-enumeration prologue.
+    pub prep_cpu_s: f64,
+    /// Measured CPU seconds per wave, normalized to the phase wall clock
+    /// (same convention as [`SpgemmSchedule::wave_cpu_s`]).
+    pub wave_cpu_s: Vec<f64>,
+}
+
+impl BatchSchedule {
+    /// Bytes of input streamed into the FPGA across all jobs.
+    pub fn input_bytes(&self) -> usize {
+        (self.a_words + self.b_words) * WORD_BYTES
+    }
+
+    /// Number of shared waves.
+    pub fn n_waves(&self) -> usize {
+        self.waves.len()
+    }
+
+    /// Total A chunks scheduled across all jobs.
+    pub fn n_chunks(&self) -> usize {
+        self.waves.iter().map(|w| w.assignments.len()).sum()
+    }
+
+    /// Total measured CPU seconds of the pass.
+    pub fn cpu_total_s(&self) -> f64 {
+        self.prep_cpu_s + self.wave_cpu_s.iter().sum::<f64>()
+    }
+
+    /// Fraction of pipeline slots filled across the schedule — the
+    /// packing quality the batcher exists to maximize (time-weighting
+    /// happens in the simulator; this is the schedule-level view).
+    pub fn slot_occupancy(&self) -> f64 {
+        if self.waves.is_empty() {
+            return 0.0;
+        }
+        self.n_chunks() as f64 / (self.n_waves() * self.pipelines) as f64
+    }
+
+    /// Extract each job's assignment sequence in wave order — by the batch
+    /// invariant this is exactly the job's single-job chunk order. Shared
+    /// by [`Self::decompose`] and the numeric replay
+    /// ([`crate::coordinator::batch::numeric_batch`]).
+    pub fn per_job_assignments(&self) -> Vec<Vec<Assignment>> {
+        let mut per_job: Vec<Vec<Assignment>> = vec![Vec::new(); self.n_jobs];
+        for w in &self.waves {
+            for &(j, asg) in &w.assignments {
+                per_job[j as usize].push(asg);
+            }
+        }
+        per_job
+    }
+
+    /// Reconstruct the N single-job schedules this batch packs: job *j*'s
+    /// assignments are extracted in wave order and regrouped into waves of
+    /// `pipelines` chunks, with per-wave B-streams and traffic recomputed
+    /// from the job's matrices. The result must equal
+    /// [`schedule_spgemm`]`(a_j, b_j, …)` wave-for-wave (timings are
+    /// zeroed — they were spent once, on the shared pass).
+    pub fn decompose(&self, jobs: &[(Csr, Csr)]) -> Vec<SpgemmSchedule> {
+        assert_eq!(jobs.len(), self.n_jobs, "job list does not match schedule");
+        self.per_job_assignments()
+            .into_iter()
+            .zip(jobs)
+            .map(|(chunks, (a, b))| {
+                let a_words: usize = chunks.iter().map(|c| 2 + 2 * c.len).sum();
+                let n_waves = chunks.len().div_ceil(self.pipelines);
+                let mut waves = Vec::with_capacity(n_waves);
+                let mut b_words = 0usize;
+                for wid in 0..n_waves {
+                    let lo = wid * self.pipelines;
+                    let hi = ((wid + 1) * self.pipelines).min(chunks.len());
+                    let mut b_rows: Vec<Idx> = Vec::new();
+                    for asg in &chunks[lo..hi] {
+                        b_rows.extend_from_slice(asg.a_cols(a));
+                    }
+                    b_rows.sort_unstable();
+                    b_rows.dedup();
+                    for &r in &b_rows {
+                        b_words += row_stream_words(b.row_nnz(r as usize), self.bundle_size);
+                    }
+                    waves.push(Wave { assignments: chunks[lo..hi].to_vec(), b_rows });
+                }
+                SpgemmSchedule {
+                    pipelines: self.pipelines,
+                    bundle_size: self.bundle_size,
+                    waves,
+                    a_words,
+                    b_words,
+                    prep_cpu_s: 0.0,
+                    wave_cpu_s: vec![0.0; n_waves],
+                }
+            })
+            .collect()
+    }
+}
+
+/// Build the shared-wave schedule for N independent jobs `C_j = A_j × B_j`
+/// with the default worker count.
+pub fn schedule_spgemm_batch(
+    jobs: &[(Csr, Csr)],
+    pipelines: usize,
+    bundle_size: usize,
+) -> BatchSchedule {
+    schedule_spgemm_batch_with_threads(jobs, pipelines, bundle_size, preprocess_threads())
+}
+
+/// Build the shared-wave schedule for N independent jobs on `nthreads`
+/// workers.
+///
+/// Chunks are enumerated job-major (job 0's rows, then job 1's, …), so
+/// each job's chunk order is exactly the single-job order; shared waves
+/// are then filled greedily with `pipelines` chunks regardless of job
+/// boundaries — that is the packing that keeps wide designs busy on many
+/// small jobs. The result is identical for every `nthreads` ≥ 1.
+pub fn schedule_spgemm_batch_with_threads(
+    jobs: &[(Csr, Csr)],
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+) -> BatchSchedule {
+    assert!(pipelines > 0 && bundle_size > 0);
+
+    // ---- prologue: enumerate chunks job-major, in row order ----
+    let t_prep = Instant::now();
+    let mut chunks: Vec<(u32, Assignment)> = Vec::new();
+    let mut a_words = 0usize;
+    for (j, (a, b)) in jobs.iter().enumerate() {
+        assert_eq!(a.ncols, b.nrows, "job {j}: inner dimensions disagree");
+        let job = u32::try_from(j).expect("job count exceeds u32 tag space");
+        for i in 0..a.nrows {
+            let nnz = a.row_nnz(i);
+            if nnz == 0 {
+                continue;
+            }
+            let base = a.row_ptr[i];
+            let nchunks = nnz.div_ceil(bundle_size);
+            for ci in 0..nchunks {
+                let lo = ci * bundle_size;
+                let hi = ((ci + 1) * bundle_size).min(nnz);
+                a_words += 2 + 2 * (hi - lo);
+                chunks.push((
+                    job,
+                    Assignment {
+                        a_row: i as Idx,
+                        chunk: ci as u32,
+                        last_chunk: ci + 1 == nchunks,
+                        start: base + lo,
+                        len: hi - lo,
+                    },
+                ));
+            }
+        }
+    }
+    let n_waves = chunks.len().div_ceil(pipelines);
+    let prep_cpu_s = t_prep.elapsed().as_secs_f64();
+
+    // ---- shared-wave bands, balanced by element count ----
+    let t_waves = Instant::now();
+    let nthreads = nthreads.clamp(1, n_waves.max(1));
+    let bounds =
+        band_bounds_by_elems(chunks.len(), |i| chunks[i].1.len, pipelines, n_waves, nthreads);
+
+    let bands: Vec<(Vec<BatchWave>, Vec<f64>, usize)> = if bounds.len() <= 2 {
+        vec![build_batch_wave_band(jobs, &chunks, pipelines, bundle_size, 0, n_waves)]
+    } else {
+        std::thread::scope(|scope| {
+            let chunks = &chunks;
+            let handles: Vec<_> = bounds
+                .windows(2)
+                .map(|w| {
+                    let (lo, hi) = (w[0], w[1]);
+                    scope.spawn(move || {
+                        build_batch_wave_band(jobs, chunks, pipelines, bundle_size, lo, hi)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("batch schedule worker panicked"))
+                .collect()
+        })
+    };
+
+    // ---- deterministic merge + wall-clock normalization ----
+    let mut waves = Vec::with_capacity(n_waves);
+    let mut wave_cpu_s = Vec::with_capacity(n_waves);
+    let mut b_words = 0usize;
+    for (band_waves, band_times, band_b_words) in bands {
+        waves.extend(band_waves);
+        wave_cpu_s.extend(band_times);
+        b_words += band_b_words;
+    }
+    let waves_wall_s = t_waves.elapsed().as_secs_f64();
+    let raw_sum: f64 = wave_cpu_s.iter().sum();
+    if raw_sum > 0.0 {
+        let scale = waves_wall_s / raw_sum;
+        for t in &mut wave_cpu_s {
+            *t *= scale;
+        }
+    }
+
+    BatchSchedule {
+        pipelines,
+        bundle_size,
+        n_jobs: jobs.len(),
+        waves,
+        a_words,
+        b_words,
+        prep_cpu_s,
+        wave_cpu_s,
+    }
+}
+
+/// Build shared waves `[w_lo, w_hi)`: split each wave's chunk group into
+/// per-job runs (contiguous by construction — chunks are job-major) and
+/// compute each run's B-row segment as the sorted, deduped union of the
+/// run's A columns against that job's B.
+fn build_batch_wave_band(
+    jobs: &[(Csr, Csr)],
+    chunks: &[(u32, Assignment)],
+    pipelines: usize,
+    bundle_size: usize,
+    w_lo: usize,
+    w_hi: usize,
+) -> (Vec<BatchWave>, Vec<f64>, usize) {
+    let mut waves = Vec::with_capacity(w_hi - w_lo);
+    let mut times = Vec::with_capacity(w_hi - w_lo);
+    let mut b_words = 0usize;
+    for wid in w_lo..w_hi {
+        let t0 = Instant::now();
+        let lo = wid * pipelines;
+        let hi = ((wid + 1) * pipelines).min(chunks.len());
+        let group = &chunks[lo..hi];
+        let mut segments = Vec::new();
+        let mut s = 0usize;
+        while s < group.len() {
+            let job = group[s].0;
+            let mut e = s;
+            while e < group.len() && group[e].0 == job {
+                e += 1;
+            }
+            let (a, b) = &jobs[job as usize];
+            let mut b_rows: Vec<Idx> = Vec::new();
+            for (_, asg) in &group[s..e] {
+                b_rows.extend_from_slice(asg.a_cols(a));
+            }
+            b_rows.sort_unstable();
+            b_rows.dedup();
+            for &r in &b_rows {
+                b_words += row_stream_words(b.row_nnz(r as usize), bundle_size);
+            }
+            segments.push(BatchSegment { job, b_rows });
+            s = e;
+        }
+        waves.push(BatchWave { assignments: group.to_vec(), segments });
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    (waves, times, b_words)
+}
+
 /// Build the wave schedule for `C = A × B` with the default worker count
 /// (`REAP_CPU_THREADS` or the host parallelism, capped at 16).
 pub fn schedule_spgemm(a: &Csr, b: &Csr, pipelines: usize, bundle_size: usize) -> SpgemmSchedule {
@@ -243,16 +548,29 @@ fn wave_band_bounds(
     n_waves: usize,
     nthreads: usize,
 ) -> Vec<usize> {
+    band_bounds_by_elems(chunks.len(), |i| chunks[i].len, pipelines, n_waves, nthreads)
+}
+
+/// Core of [`wave_band_bounds`], shared with the batch scheduler: balance
+/// contiguous wave ranges by per-chunk element counts. Takes a length
+/// accessor instead of a materialized slice so neither caller allocates.
+fn band_bounds_by_elems(
+    n_chunks: usize,
+    chunk_len: impl Fn(usize) -> usize,
+    pipelines: usize,
+    n_waves: usize,
+    nthreads: usize,
+) -> Vec<usize> {
     if n_waves == 0 || nthreads <= 1 {
         return vec![0, n_waves];
     }
     // element count per wave (wave wid covers chunks[wid*p .. (wid+1)*p))
     let wave_elems = |wid: usize| -> usize {
         let lo = wid * pipelines;
-        let hi = ((wid + 1) * pipelines).min(chunks.len());
-        chunks[lo..hi].iter().map(|c| c.len).sum()
+        let hi = ((wid + 1) * pipelines).min(n_chunks);
+        (lo..hi).map(&chunk_len).sum()
     };
-    let total: usize = chunks.iter().map(|c| c.len).sum();
+    let total: usize = (0..n_chunks).map(&chunk_len).sum();
     let mut bounds = vec![0usize];
     let mut wid = 0usize;
     let mut before = 0usize; // elements in waves < wid
@@ -288,6 +606,8 @@ fn build_wave_band(
     let mut b_rows_cap = 0usize;
     for wid in w_lo..w_hi {
         let t0 = Instant::now();
+        // checked: a wave count past u32::MAX would silently alias marks
+        let wid32 = u32::try_from(wid).expect("wave count exceeds u32 mark space");
         let lo = wid * pipelines;
         let hi = ((wid + 1) * pipelines).min(chunks.len());
         let group = &chunks[lo..hi];
@@ -295,8 +615,8 @@ fn build_wave_band(
         for asg in group {
             for &c in asg.a_cols(a) {
                 let r = c as usize;
-                if mark[r] != wid as u32 {
-                    mark[r] = wid as u32;
+                if mark[r] != wid32 {
+                    mark[r] = wid32;
                     b_rows.push(c);
                 }
             }
@@ -428,6 +748,105 @@ mod tests {
             let sum: f64 = s.wave_cpu_s.iter().sum();
             assert!((s.cpu_total_s() - s.prep_cpu_s - sum).abs() < 1e-15);
         }
+    }
+
+    // ---- batch (multi-tenant) scheduling ----
+
+    fn mk_jobs(n_jobs: usize, n: usize, nnz: usize, seed: u64) -> Vec<(Csr, Csr)> {
+        (0..n_jobs)
+            .map(|j| {
+                let s = seed + j as u64 * 10;
+                (mk(n, nnz, s), mk(n, nnz, s + 1))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_packs_small_jobs_into_full_waves() {
+        // 6 jobs × ~40 chunks on 64 pipelines: alone each job underfills
+        // its wave; batched, all waves but the last are full
+        let jobs = mk_jobs(6, 40, 200, 20);
+        let s = schedule_spgemm_batch(&jobs, 64, 32);
+        assert_eq!(s.n_jobs, 6);
+        for (i, w) in s.waves.iter().enumerate() {
+            assert!(w.assignments.len() <= 64);
+            if i + 1 < s.n_waves() {
+                assert_eq!(w.assignments.len(), 64, "interior wave {i} must be full");
+            }
+            // segments mirror the job runs exactly
+            let mut run_jobs: Vec<u32> = w.assignments.iter().map(|&(j, _)| j).collect();
+            run_jobs.dedup();
+            let seg_jobs: Vec<u32> = w.segments.iter().map(|seg| seg.job).collect();
+            assert_eq!(seg_jobs, run_jobs, "wave {i} segment order");
+        }
+        let solo_occ: f64 = {
+            let one = schedule_spgemm(&jobs[0].0, &jobs[0].1, 64, 32);
+            one.n_chunks() as f64 / (one.n_waves() * 64) as f64
+        };
+        assert!(s.slot_occupancy() > solo_occ, "batching must pack tighter");
+    }
+
+    #[test]
+    fn batch_segments_are_per_job_unions() {
+        let jobs = mk_jobs(3, 30, 150, 40);
+        let s = schedule_spgemm_batch(&jobs, 8, 16);
+        for w in &s.waves {
+            for seg in &w.segments {
+                let a = &jobs[seg.job as usize].0;
+                let mut expect: Vec<Idx> = w
+                    .assignments
+                    .iter()
+                    .filter(|&&(j, _)| j == seg.job)
+                    .flat_map(|(_, asg)| asg.a_cols(a).iter().copied())
+                    .collect();
+                expect.sort_unstable();
+                expect.dedup();
+                assert_eq!(seg.b_rows, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_decomposes_into_single_job_schedules() {
+        let mut jobs = mk_jobs(4, 35, 180, 60);
+        jobs.push((Csr::new(5, 7), Csr::new(7, 3))); // empty job
+        for pipelines in [4usize, 32, 128] {
+            let batch = schedule_spgemm_batch(&jobs, pipelines, 16);
+            let singles = batch.decompose(&jobs);
+            assert_eq!(singles.len(), jobs.len());
+            let mut a_words = 0usize;
+            for (j, (a, b)) in jobs.iter().enumerate() {
+                let solo = schedule_spgemm(a, b, pipelines, 16);
+                assert_eq!(singles[j].waves, solo.waves, "job {j} p {pipelines}");
+                assert_eq!(singles[j].a_words, solo.a_words, "job {j}");
+                assert_eq!(singles[j].b_words, solo.b_words, "job {j}");
+                a_words += solo.a_words;
+            }
+            assert_eq!(batch.a_words, a_words, "A traffic sums over jobs");
+        }
+    }
+
+    #[test]
+    fn batch_parallel_matches_serial_bitwise() {
+        let jobs = mk_jobs(5, 45, 400, 80);
+        let base = schedule_spgemm_batch_with_threads(&jobs, 8, 16, 1);
+        for t in [2usize, 3, 4, 8] {
+            let par = schedule_spgemm_batch_with_threads(&jobs, 8, 16, t);
+            assert_eq!(par.waves, base.waves, "threads={t}");
+            assert_eq!(par.a_words, base.a_words, "threads={t}");
+            assert_eq!(par.b_words, base.b_words, "threads={t}");
+            assert_eq!(par.wave_cpu_s.len(), par.n_waves());
+        }
+    }
+
+    #[test]
+    fn batch_of_empty_jobs_is_empty() {
+        let jobs = vec![(Csr::new(4, 4), Csr::new(4, 4)), (Csr::new(0, 3), Csr::new(3, 2))];
+        let s = schedule_spgemm_batch(&jobs, 8, 32);
+        assert_eq!(s.n_waves(), 0);
+        assert_eq!(s.input_bytes(), 0);
+        assert_eq!(s.slot_occupancy(), 0.0);
+        assert!(s.decompose(&jobs).iter().all(|sch| sch.waves.is_empty()));
     }
 
     #[test]

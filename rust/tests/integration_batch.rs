@@ -1,0 +1,123 @@
+//! Integration tests for the multi-tenant batched SpGEMM path, plus the
+//! per-wave trace-wiring contracts every coordinator relies on: the
+//! overlap model ([`reap::coordinator::overlap::pipelined_total`])
+//! tolerates mismatched CPU/FPGA traces with a logged warning, so these
+//! tests pin the invariant that no coordinator actually produces skewed
+//! traces.
+
+use reap::coordinator::batch::numeric_batch;
+use reap::coordinator::{ReapBatch, ReapSpgemm};
+use reap::fpga::spgemm_sim::{simulate_spgemm, simulate_spgemm_batch, Style};
+use reap::fpga::spmv_sim::simulate_spmv;
+use reap::fpga::cholesky_sim::simulate_cholesky;
+use reap::fpga::FpgaConfig;
+use reap::kernels::spgemm;
+use reap::rir::schedule::{schedule_spgemm, schedule_spgemm_batch};
+use reap::sparse::{gen, Csr};
+use reap::symbolic::CholeskySymbolic;
+
+fn small_jobs(n_jobs: usize, seed: u64) -> Vec<(Csr, Csr)> {
+    (0..n_jobs)
+        .map(|j| {
+            let s = seed + j as u64 * 7;
+            let n = 20 + (j * 9) % 40;
+            (
+                gen::power_law(n, n * 5, s),
+                gen::random_uniform(n, n, n * 5, s + 1),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn batched_run_bit_identical_to_independent_runs() {
+    let mut jobs = small_jobs(8, 500);
+    jobs.push((Csr::new(6, 9), Csr::new(9, 4))); // empty tenant
+    for design in [FpgaConfig::reap64_spgemm(), FpgaConfig::reap128_spgemm()] {
+        let batch = ReapBatch::new(design.clone()).run(&jobs).unwrap();
+        for (j, (a, b)) in jobs.iter().enumerate() {
+            let solo = ReapSpgemm::new(design.clone()).run(a, b).unwrap();
+            assert_eq!(batch.outputs[j], solo.c, "{} job {j}", design.name);
+            assert_eq!(batch.outputs[j], spgemm(a, b), "{} job {j} baseline", design.name);
+        }
+    }
+}
+
+#[test]
+fn batched_occupancy_beats_serial_on_wide_designs() {
+    let jobs = small_jobs(12, 900);
+    for design in [FpgaConfig::reap64_spgemm(), FpgaConfig::reap128_spgemm()] {
+        let batch = ReapBatch::new(design.clone()).run(&jobs).unwrap();
+        let mut busy = 0u64;
+        let mut slots = 0u64;
+        let mut cycles = 0u64;
+        for (a, b) in &jobs {
+            let rep = ReapSpgemm::new(design.clone()).run(a, b).unwrap();
+            busy += rep.fpga_sim.busy_pipeline_cycles;
+            slots += rep.fpga_sim.busy_pipeline_cycles + rep.fpga_sim.idle_pipeline_cycles;
+            cycles += rep.fpga_sim.cycles;
+        }
+        let serial_occ = busy as f64 / slots as f64;
+        assert!(
+            batch.fpga_sim.pipeline_utilization() > serial_occ,
+            "{}: batched {:.3} vs serial {:.3}",
+            design.name,
+            batch.fpga_sim.pipeline_utilization(),
+            serial_occ
+        );
+        assert!(batch.fpga_sim.cycles < cycles, "{}: batched cycles must win", design.name);
+    }
+}
+
+#[test]
+fn batch_numeric_thread_invariance_across_counts() {
+    let jobs = small_jobs(6, 1300);
+    let s = schedule_spgemm_batch(&jobs, 64, 32);
+    let base = numeric_batch(&jobs, &s, 1);
+    for t in [2usize, 4, 8] {
+        assert_eq!(numeric_batch(&jobs, &s, t), base, "threads={t}");
+    }
+}
+
+// ---- per-wave trace wiring: every coordinator emits equal-length
+// CPU/FPGA traces (the overlap model warns on skew; these pin it) ----
+
+#[test]
+fn spgemm_coordinator_traces_equal_length() {
+    let a = gen::power_law(120, 2400, 31);
+    let b = gen::random_uniform(120, 120, 1800, 32);
+    let cfg = FpgaConfig::reap32_spgemm();
+    let schedule = schedule_spgemm(&a, &b, cfg.pipelines, cfg.bundle_size);
+    let sim = simulate_spgemm(&a, &b, &schedule, &cfg, Style::HandCoded);
+    assert_eq!(schedule.wave_cpu_s.len(), sim.wave_cycles.len());
+}
+
+#[test]
+fn spmv_coordinator_traces_equal_length() {
+    let a = gen::power_law(150, 2000, 41);
+    let cfg = FpgaConfig::reap32_spgemm();
+    let surrogate = Csr::new(a.ncols, a.ncols);
+    let schedule = schedule_spgemm(&a, &surrogate, cfg.pipelines, cfg.bundle_size);
+    let sim = simulate_spmv(&a, &schedule, &cfg, Style::HandCoded);
+    assert_eq!(schedule.wave_cpu_s.len(), sim.wave_cycles.len());
+}
+
+#[test]
+fn cholesky_coordinator_traces_equal_length() {
+    let spd = gen::spd(gen::Family::BandedFem, 60, 400, 51);
+    let lower = spd.lower_triangle();
+    let cfg = FpgaConfig::reap32_cholesky();
+    let sym = CholeskySymbolic::analyze(&lower, cfg.bundle_size);
+    let sim = simulate_cholesky(&sym, &cfg, Style::HandCoded);
+    assert_eq!(sym.encode_col_s().len(), sim.column_cycles.len());
+}
+
+#[test]
+fn batch_coordinator_traces_equal_length() {
+    let jobs = small_jobs(5, 61);
+    let cfg = FpgaConfig::reap64_spgemm();
+    let schedule = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+    let sim = simulate_spgemm_batch(&jobs, &schedule, &cfg, Style::HandCoded);
+    assert_eq!(schedule.wave_cpu_s.len(), sim.wave_cycles.len());
+    assert_eq!(schedule.n_waves(), sim.wave_cycles.len());
+}

@@ -176,6 +176,58 @@ fn prop_parallel_encode_bit_identical() {
     });
 }
 
+/// The multi-tenant batch schedule of N jobs decomposes bit-identically
+/// into the N single-job schedules (waves, traffic words), is itself
+/// thread-count-invariant (1/2/4/8 workers), and its numeric replay
+/// matches every job's Gustavson baseline — including empty jobs.
+#[test]
+fn prop_batch_schedule_decomposes_bit_identically() {
+    use reap::coordinator::batch::numeric_batch;
+    check("batch decompose == single-job", Config { cases: 16, ..Config::default() }, |rng, size| {
+        let n_jobs = 1 + rng.range(0, 5);
+        let mut jobs: Vec<(Csr, Csr)> = Vec::new();
+        for _ in 0..n_jobs {
+            let a = random_matrix(rng, size);
+            let b = gen::generate(random_family(rng), a.ncols, (a.ncols * 2).max(1), rng.next_u64());
+            jobs.push((a, b));
+        }
+        if rng.range(0, 2) == 1 {
+            jobs.push((Csr::new(3, 4), Csr::new(4, 2))); // empty tenant
+        }
+        let pipelines = 1 + rng.range(0, 48);
+        let bundle = 1 + rng.range(0, 33);
+
+        // thread-count invariance of the shared-wave schedule
+        let base = schedule::schedule_spgemm_batch_with_threads(&jobs, pipelines, bundle, 1);
+        for threads in [2usize, 4, 8] {
+            let par =
+                schedule::schedule_spgemm_batch_with_threads(&jobs, pipelines, bundle, threads);
+            assert_eq!(par.waves, base.waves, "threads={threads}");
+            assert_eq!(par.a_words, base.a_words, "threads={threads}");
+            assert_eq!(par.b_words, base.b_words, "threads={threads}");
+            assert_eq!(par.wave_cpu_s.len(), par.waves.len());
+        }
+
+        // decomposition: per-job waves and traffic equal the single-job pass
+        let singles = base.decompose(&jobs);
+        for (j, (a, b)) in jobs.iter().enumerate() {
+            let solo = schedule::schedule_spgemm_with_threads(a, b, pipelines, bundle, 1);
+            assert_eq!(singles[j].waves, solo.waves, "job {j}");
+            assert_eq!(singles[j].a_words, solo.a_words, "job {j}");
+            assert_eq!(singles[j].b_words, solo.b_words, "job {j}");
+        }
+
+        // numeric replay: bit-identical to each job's baseline, for an
+        // arbitrary worker count
+        let outs = numeric_batch(&jobs, &base, 1 + rng.range(0, 8));
+        assert_eq!(outs.len(), jobs.len());
+        for (j, (a, b)) in jobs.iter().enumerate() {
+            outs[j].validate().unwrap();
+            assert_eq!(outs[j], spgemm(a, b), "job {j}");
+        }
+    });
+}
+
 /// Parallel SpGEMM equals serial for arbitrary thread counts.
 #[test]
 fn prop_parallel_spgemm_thread_invariance() {

@@ -29,6 +29,23 @@ use super::overlap::pipelined_total;
 
 /// Batched SpGEMM coordinator for one FPGA design point (in-process
 /// numerics; the XLA request path remains single-job).
+///
+/// ```
+/// use reap::coordinator::ReapBatch;
+/// use reap::fpga::FpgaConfig;
+/// use reap::sparse::gen;
+///
+/// let jobs: Vec<_> = (0..3u64)
+///     .map(|j| (
+///         gen::random_uniform(20, 20, 80, j),
+///         gen::random_uniform(20, 20, 80, 100 + j),
+///     ))
+///     .collect();
+/// let rep = ReapBatch::new(FpgaConfig::reap64_spgemm()).run(&jobs).unwrap();
+/// // each tenant's product is bit-identical to an independent run
+/// assert_eq!(rep.outputs.len(), 3);
+/// assert_eq!(rep.outputs[0], reap::kernels::spgemm(&jobs[0].0, &jobs[0].1));
+/// ```
 pub struct ReapBatch {
     pub cfg: FpgaConfig,
 }

@@ -20,18 +20,29 @@
 //!
 //! The multi-tenant path ([`batch`]) runs the same flow over N
 //! independent SpGEMM jobs packed into shared, job-tagged waves — the
-//! many-small-jobs shape of production traffic.
+//! many-small-jobs shape of production traffic. The multi-vector path
+//! ([`spmm`]) amortizes one SpMV wave schedule over `k` dense right-hand
+//! sides, replaying it once per column block of the design's vector
+//! lanes.
+//!
+//! Every coordinator obeys the same per-wave trace contract: it hands
+//! [`overlap::pipelined_total`] one measured CPU cost and one simulated
+//! FPGA cost **per wave**, equal-length traces (pinned in
+//! `tests/integration_batch.rs`; see `ARCHITECTURE.md` §"Simulator
+//! contracts").
 
 pub mod batch;
 pub mod cholesky;
 pub mod overlap;
 pub mod spgemm;
+pub mod spmm;
 pub mod spmv;
 pub mod verify;
 
 pub use batch::{ReapBatch, ReapBatchReport};
 pub use cholesky::{ReapCholesky, ReapCholeskyReport};
 pub use spgemm::{ReapSpgemm, ReapSpgemmReport};
+pub use spmm::{ReapSpmm, ReapSpmmReport};
 pub use spmv::{ReapSpmv, ReapSpmvReport};
 
 /// How the numeric phase executes.

@@ -14,6 +14,15 @@
 //! * [`overlapped_total`] — the legacy scalar approximation (total CPU
 //!   time amortized over `rounds` equal rounds), kept for sensitivity
 //!   studies that have no per-wave trace.
+//!
+//! **Equal-length trace contract:** every coordinator hands
+//! [`pipelined_total`] exactly one CPU cost and one FPGA cost per wave —
+//! two non-empty traces of different lengths mean mis-wired
+//! instrumentation (the call computes a well-defined result but logs a
+//! warning; `tests/integration_batch.rs` and `tests/integration_spmm.rs`
+//! pin the contract for all five coordinators). Coordinators that replay
+//! waves with no new CPU work (SpMM's later column blocks) pad the CPU
+//! side with zeros to keep the traces aligned.
 
 /// End-to-end time of the per-wave CPU→FPGA pipeline.
 ///

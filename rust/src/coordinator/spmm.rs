@@ -1,0 +1,313 @@
+//! REAP SpMM orchestration — sparse × dense multi-vector through the
+//! synergistic flow, amortizing **one** CPU scheduling pass over all `k`
+//! right-hand-side columns.
+//!
+//! The CPU builds the SpMV wave schedule once (measured, per wave); the
+//! FPGA replays it once per column block of [`FpgaConfig::vector_lanes`]
+//! columns ([`crate::fpga::spmm_sim`]). Only the first replay races the
+//! CPU's wave production — every later block's waves pipeline against a
+//! zero CPU cost, which is exactly how the per-wave overlap trace is
+//! constructed (padded with zeros to the simulator's block-major trace
+//! length, preserving the equal-length trace contract of
+//! [`super::overlap::pipelined_total`]).
+
+use anyhow::{ensure, Result};
+
+use crate::fpga::spgemm_sim::Style;
+use crate::fpga::spmm_sim::simulate_spmm;
+use crate::fpga::{FpgaConfig, SimStats};
+use crate::rir::schedule::{schedule_spgemm, SpgemmSchedule};
+use crate::sparse::{Csr, Val};
+use crate::util::preprocess_threads;
+
+use super::overlap::pipelined_total;
+
+/// SpMM coordinator for one FPGA design point (in-process numerics; the
+/// XLA request path remains per-vector through [`super::ReapSpmv`]).
+///
+/// ```
+/// use reap::coordinator::ReapSpmm;
+/// use reap::fpga::FpgaConfig;
+/// use reap::sparse::gen;
+///
+/// let a = gen::random_uniform(32, 32, 200, 7);
+/// let k = 4;
+/// let x: Vec<f32> = (0..a.ncols * k).map(|i| (i % 5) as f32 - 2.0).collect();
+/// let rep = ReapSpmm::new(FpgaConfig::reap64_spgemm()).run(&a, &x, k).unwrap();
+/// // every column is bit-identical to an independent SpMV
+/// for j in 0..k {
+///     let xj: Vec<f32> = (0..a.ncols).map(|r| x[r * k + j]).collect();
+///     let yj = reap::kernels::spmv(&a, &xj);
+///     for i in 0..a.nrows {
+///         assert_eq!(rep.c[i * k + j], yj[i]);
+///     }
+/// }
+/// ```
+pub struct ReapSpmm {
+    pub cfg: FpgaConfig,
+}
+
+/// Outcome of one REAP SpMM execution.
+#[derive(Clone, Debug)]
+pub struct ReapSpmmReport {
+    /// Row-major `a.nrows × k` dense result — column `j` is bit-identical
+    /// to [`crate::kernels::spmv::spmv`] with column `j` of X.
+    pub c: Vec<Val>,
+    /// Right-hand-side column count.
+    pub k: usize,
+    /// Column blocks the FPGA replayed the schedule for.
+    pub n_blocks: usize,
+    /// Measured CPU preprocessing seconds — spent **once**, not per block.
+    pub cpu_preprocess_s: f64,
+    pub fpga_sim: SimStats,
+    pub fpga_s: f64,
+    pub total_s: f64,
+}
+
+impl ReapSpmm {
+    pub fn new(cfg: FpgaConfig) -> Self {
+        ReapSpmm { cfg }
+    }
+
+    /// Run `C = A X` where `x` is row-major `a.ncols × k`.
+    pub fn run(&self, a: &Csr, x: &[Val], k: usize) -> Result<ReapSpmmReport> {
+        ensure!(x.len() == a.ncols * k, "X panel shape mismatch");
+        ensure!(k > 0, "SpMM needs at least one right-hand-side column");
+
+        // CPU pass, once: the SpMV chunk schedule (empty B surrogate — the
+        // panel lives on-chip per block)
+        let b_surrogate = Csr::new(a.ncols, a.ncols);
+        let schedule = schedule_spgemm(a, &b_surrogate, self.cfg.pipelines, self.cfg.bundle_size);
+        let cpu_preprocess_s = schedule.cpu_total_s();
+
+        let c = numeric_spmm(a, x, k, &schedule, preprocess_threads());
+
+        let sim = simulate_spmm(a, &schedule, &self.cfg, Style::HandCoded, k);
+        let fpga_s = sim.stats.seconds(&self.cfg);
+
+        // per-wave pipelining: the CPU produces each wave once (block 0);
+        // replays for blocks 1.. cost the CPU nothing, so their trace
+        // entries are zero. Panel loads and the chunk-enumeration prologue
+        // serialize ahead of the wave pipeline.
+        let hz = self.cfg.hz();
+        let fpga_wave_s: Vec<f64> = sim.wave_cycles.iter().map(|&cy| cy as f64 / hz).collect();
+        let mut cpu_wave_s = Vec::with_capacity(fpga_wave_s.len());
+        cpu_wave_s.extend_from_slice(&schedule.wave_cpu_s);
+        cpu_wave_s.resize(fpga_wave_s.len(), 0.0);
+        let total_s = schedule.prep_cpu_s
+            + sim.panel_load_cycles as f64 / hz
+            + pipelined_total(&cpu_wave_s, &fpga_wave_s);
+
+        Ok(ReapSpmmReport {
+            c,
+            k,
+            n_blocks: sim.n_blocks,
+            cpu_preprocess_s,
+            fpga_sim: sim.stats,
+            fpga_s,
+            total_s,
+        })
+    }
+}
+
+/// Execute the SpMM numerics by replaying the schedule once per column
+/// block, in chunk order — per column this performs exactly the
+/// floating-point sequence of the SpMV coordinator's in-process path
+/// (f64 accumulation over the row's elements in CSR order), so every
+/// column is bit-identical to an independent SpMV for every thread count
+/// and block width.
+///
+/// Workers own whole column blocks (columns are data-independent); the
+/// block width is [`FpgaConfig::vector_lanes`]-agnostic here — any width
+/// yields the same bits.
+pub fn numeric_spmm(
+    a: &Csr,
+    x: &[Val],
+    k: usize,
+    schedule: &SpgemmSchedule,
+    nthreads: usize,
+) -> Vec<Val> {
+    assert_eq!(x.len(), a.ncols * k, "X panel shape mismatch");
+    if k == 0 {
+        return Vec::new();
+    }
+    let block = crate::kernels::spmm::DEFAULT_COL_BLOCK.min(k);
+    let n_blocks = k.div_ceil(block);
+    let mut c = vec![0 as Val; a.nrows * k];
+
+    let nthreads = nthreads.clamp(1, n_blocks);
+    if nthreads <= 1 || n_blocks < 2 {
+        let mut buf = vec![0 as Val; a.nrows * block];
+        for blk in 0..n_blocks {
+            let j0 = blk * block;
+            let j1 = (j0 + block).min(k);
+            numeric_block(a, x, k, schedule, j0, j1, &mut buf);
+            scatter_block(&buf, k, j0, j1, &mut c);
+        }
+        return c;
+    }
+
+    // contiguous block bands per worker; each worker fills block-major
+    // buffers it owns, and the (cheap, deterministic) scatter into the
+    // row-major result happens after the join — the blocks write disjoint
+    // column ranges, so the result is identical to the serial path
+    let blocks_per = n_blocks.div_ceil(nthreads);
+    let bands: Vec<Vec<(usize, usize, Vec<Val>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..nthreads)
+            .map(|w| {
+                let b_lo = w * blocks_per;
+                let b_hi = ((w + 1) * blocks_per).min(n_blocks);
+                scope.spawn(move || {
+                    let mut outs = Vec::with_capacity(b_hi.saturating_sub(b_lo));
+                    for blk in b_lo..b_hi {
+                        let j0 = blk * block;
+                        let j1 = (j0 + block).min(k);
+                        let mut buf = vec![0 as Val; a.nrows * block];
+                        numeric_block(a, x, k, schedule, j0, j1, &mut buf);
+                        outs.push((j0, j1, buf));
+                    }
+                    outs
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("spmm numeric worker panicked"))
+            .collect()
+    });
+    for (j0, j1, buf) in bands.into_iter().flatten() {
+        scatter_block(&buf, k, j0, j1, &mut c);
+    }
+    c
+}
+
+/// Replay the schedule for columns `[j0, j1)` of the panel into a
+/// block-major buffer (`buf[i * block_stride + t]` is row `i`, block lane
+/// `t`; the stride is `buf.len() / a.nrows`, fixed by the caller).
+fn numeric_block(
+    a: &Csr,
+    x: &[Val],
+    k: usize,
+    schedule: &SpgemmSchedule,
+    j0: usize,
+    j1: usize,
+    buf: &mut [Val],
+) {
+    let kb = j1 - j0;
+    let stride = if a.nrows == 0 { kb.max(1) } else { buf.len() / a.nrows };
+    let mut acc = vec![0f64; kb];
+    for wave in &schedule.waves {
+        for asg in &wave.assignments {
+            for (&col, &v) in asg.a_cols(a).iter().zip(asg.a_vals(a)) {
+                let xrow = &x[col as usize * k + j0..col as usize * k + j1];
+                for (t, &xv) in xrow.iter().enumerate() {
+                    acc[t] += (v as f64) * (xv as f64);
+                }
+            }
+            if asg.last_chunk {
+                let row = asg.a_row as usize;
+                for (t, a_t) in acc.iter_mut().enumerate() {
+                    buf[row * stride + t] = *a_t as Val;
+                    *a_t = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Copy a block-major buffer's columns `[j0, j1)` into the row-major
+/// result (rows that the schedule never touched stay zero in both).
+fn scatter_block(buf: &[Val], k: usize, j0: usize, j1: usize, c: &mut [Val]) {
+    let kb = j1 - j0;
+    if kb == 0 {
+        return;
+    }
+    let nrows = c.len() / k.max(1);
+    let stride = if nrows == 0 { kb } else { buf.len() / nrows };
+    for i in 0..nrows {
+        c[i * k + j0..i * k + j1].copy_from_slice(&buf[i * stride..i * stride + kb]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ReapSpmv;
+    use crate::kernels::spmm::spmm;
+    use crate::sparse::gen;
+
+    fn panel(ncols: usize, k: usize, seed: u64) -> Vec<Val> {
+        (0..ncols * k)
+            .map(|i| (((i as u64).wrapping_mul(seed + 11) % 23) as f32 - 11.0) * 0.125)
+            .collect()
+    }
+
+    #[test]
+    fn bit_identical_to_k_spmv_coordinator_runs() {
+        let a = gen::power_law(120, 2000, 3);
+        let cfg = FpgaConfig::reap64_spgemm();
+        for k in [1usize, 4, 8, 13] {
+            let x = panel(a.ncols, k, 3);
+            let rep = ReapSpmm::new(cfg.clone()).run(&a, &x, k).unwrap();
+            assert_eq!(rep.k, k);
+            for j in 0..k {
+                let xj: Vec<Val> = x.iter().skip(j).step_by(k).copied().collect();
+                let solo = ReapSpmv::new(cfg.clone()).run(&a, &xj).unwrap();
+                for i in 0..a.nrows {
+                    assert_eq!(rep.c[i * k + j], solo.y[i], "k {k} col {j} row {i}");
+                }
+            }
+            // and to the CPU reference kernel
+            assert_eq!(rep.c, spmm(&a, &x, k), "k {k} vs kernel");
+        }
+    }
+
+    #[test]
+    fn numeric_thread_invariant() {
+        let a = gen::random_uniform(90, 110, 1400, 9);
+        let k = 20usize; // several column blocks
+        let x = panel(a.ncols, k, 9);
+        let cfg = FpgaConfig::reap32_spgemm();
+        let s = schedule_spgemm(&a, &Csr::new(a.ncols, a.ncols), cfg.pipelines, cfg.bundle_size);
+        let base = numeric_spmm(&a, &x, k, &s, 1);
+        for t in [2usize, 4, 8] {
+            assert_eq!(numeric_spmm(&a, &x, k, &s, t), base, "threads {t}");
+        }
+        assert_eq!(base, spmm(&a, &x, k));
+    }
+
+    #[test]
+    fn report_times_consistent() {
+        let a = gen::banded_fem(200, 1800, 5);
+        let k = 8usize;
+        let x = panel(a.ncols, k, 5);
+        let rep = ReapSpmm::new(FpgaConfig::reap128_spgemm()).run(&a, &x, k).unwrap();
+        assert!(rep.cpu_preprocess_s >= 0.0);
+        assert!(rep.fpga_s > 0.0);
+        assert!(rep.total_s >= rep.fpga_s);
+        assert!(rep.total_s <= rep.cpu_preprocess_s + rep.fpga_s + 1e-9);
+        assert_eq!(rep.n_blocks, 1);
+    }
+
+    #[test]
+    fn handles_empty_and_oversized_rows() {
+        // rows: empty, 90-nnz (splits across bundles), empty, singleton
+        let mut a = Csr::new(4, 100);
+        a.cols = (0..90).chain([13]).collect();
+        a.vals = (0..91).map(|i| (i as f32) * 0.5 - 20.0).collect();
+        a.row_ptr = vec![0, 0, 90, 90, 91];
+        a.validate().unwrap();
+        let k = 4usize;
+        let x = panel(a.ncols, k, 21);
+        let rep = ReapSpmm::new(FpgaConfig::reap32_spgemm()).run(&a, &x, k).unwrap();
+        assert_eq!(rep.c, spmm(&a, &x, k));
+        assert_eq!(&rep.c[0..k], &vec![0.0; k][..], "empty row stays zero");
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let a = gen::random_uniform(10, 10, 30, 1);
+        assert!(ReapSpmm::new(FpgaConfig::reap32_spgemm()).run(&a, &[0.0; 10], 2).is_err());
+        assert!(ReapSpmm::new(FpgaConfig::reap32_spgemm()).run(&a, &[], 0).is_err());
+    }
+}

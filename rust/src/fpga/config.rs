@@ -41,6 +41,14 @@ pub struct FpgaConfig {
     /// Multipliers inside each Cholesky dot-product PE (8 in REAP-32,
     /// 16 in REAP-64; SpGEMM pipelines have one multiplier each).
     pub dot_multipliers: usize,
+    /// Parallel MAC lanes per SpMV/SpMM pipeline PE: one streamed matrix
+    /// element feeds up to this many dense right-hand-side columns in the
+    /// same cycle, so an SpMM column block of this width runs at the same
+    /// stream rate as a single SpMV (the amortization
+    /// `fpga::spmm_sim` models). Sized like the Cholesky
+    /// dot-product PEs — 8 multipliers fit comfortably per pipeline on the
+    /// Arria-10 design points.
+    pub vector_lanes: usize,
     pub dram: DramConfig,
     /// FP multiply pipeline latency, cycles.
     pub mult_latency: u64,
@@ -62,6 +70,7 @@ impl FpgaConfig {
             freq_mhz: 250.0,
             bundle_size: 32,
             dot_multipliers: 1,
+            vector_lanes: 8,
             dram: DramConfig::single_core(),
             mult_latency: 5,
             add_latency: 4,
@@ -207,6 +216,11 @@ mod tests {
         let ch64 = FpgaConfig::reap64_cholesky();
         assert_eq!(ch64.dot_multipliers, 16);
         assert_eq!(ch64.freq_mhz, 238.0);
+
+        // every design point carries the 8-wide SpMM vector lanes
+        for c in [c32, c128, ch64] {
+            assert_eq!(c.vector_lanes, 8);
+        }
     }
 
     #[test]

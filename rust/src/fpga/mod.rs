@@ -12,18 +12,29 @@
 //!   Fig 8 (right).
 //! * [`dram`] — the bandwidth-capped DRAM queuing model.
 //! * [`spgemm_sim`] — the five-module SpGEMM datapath of Fig 1 (input
-//!   controller → match+multiply (CAM) → sort → merge → output controller).
+//!   controller → match+multiply (CAM) → sort → merge → output controller),
+//!   plus the multi-tenant batched variant with per-job attribution.
 //! * [`cholesky_sim`] — the column-parallel Cholesky datapath of Fig 5
 //!   (dot-product PEs with CAMs + div/sqrt PEs), with idle-cycle tracking.
+//! * [`spmv_sim`] / [`spmm_sim`] — the SpMV extension datapath and its
+//!   SpMM widening ([`FpgaConfig::vector_lanes`] MAC lanes per PE, one
+//!   column block per schedule replay).
 //! * [`hls`] — the §V-C OpenCL-HLS derating model (with/without CPU
 //!   preprocessing).
 //! * [`stats`] — cycle/traffic/utilization accounting shared by all sims.
+//!
+//! Every simulator exposes a per-wave (or per-column) cycle trace next to
+//! its aggregate [`SimStats`]; the coordinators feed those traces into
+//! [`crate::coordinator::overlap::pipelined_total`], which expects the CPU
+//! and FPGA traces of a run to have equal length (see
+//! `ARCHITECTURE.md` §"Simulator contracts").
 
 pub mod cholesky_sim;
 pub mod config;
 pub mod dram;
 pub mod hls;
 pub mod spgemm_sim;
+pub mod spmm_sim;
 pub mod spmv_sim;
 pub mod stats;
 

@@ -1,0 +1,228 @@
+//! Cycle model of the SpMM extension datapath — `C = A · X` with a dense
+//! `k`-column right-hand-side panel.
+//!
+//! The design is the SpMV datapath (`spmv_sim`) with each pipeline PE
+//! widened to [`FpgaConfig::vector_lanes`] parallel MAC lanes: one
+//! streamed A element gathers one contiguous X-panel row segment and feeds
+//! every lane in the same cycle, so a column block as wide as the lanes
+//! runs at the **same stream rate as a single SpMV** while doing
+//! `lanes ×` the flops. Columns beyond the lane width replay the wave
+//! schedule once per column block — the schedule itself is built once on
+//! the CPU and reused (the Sparse Stream Semantic Registers argument:
+//! amortize one stream schedule over many dense right-hand sides).
+//!
+//! Versus `k` independent SpMV runs, the model charges:
+//!
+//! * the A row-bundle stream `ceil(k / lanes)` times instead of `k` times
+//!   (both cycles and DRAM bytes — the headline amortization), and
+//! * **more** panel bytes than `k` raw x-vector loads: the panel streams
+//!   in the RIR dense-panel layout (`rir::layout::dense_panel_words` —
+//!   2 header words per chunk plus a lane-index word per element, so
+//!   `(2·⌈kb/bs⌉ + 2·kb)` words per panel row per block versus `k` raw
+//!   words for `k` x-loads, roughly 2× at the default geometry). The
+//!   A-stream saving dominates that overhead by construction — the
+//!   strict cycle/byte win is asserted, not assumed, in the tests below
+//!   and by `harness::spmm::headline_holds` (`reap bench spmm`) for
+//!   k ∈ {4, 8} on REAP-64/128.
+//!
+//! The per-wave accounting itself is `spmv_sim::row_stream_wave` — the
+//! *same function* the SpMV simulator uses (`kb == 1`), so the two
+//! models the comparison races cannot drift apart.
+
+use crate::rir::layout::dense_panel_bytes;
+use crate::rir::schedule::SpgemmSchedule;
+use crate::sparse::Csr;
+
+use super::config::FpgaConfig;
+use super::dram::DramModel;
+use super::spgemm_sim::Style;
+use super::spmv_sim::row_stream_wave;
+use super::stats::SimStats;
+
+/// Result of simulating one SpMM execution.
+#[derive(Clone, Debug)]
+pub struct SpmmSimResult {
+    pub stats: SimStats,
+    /// Number of column blocks (`ceil(k / vector_lanes)`); the wave
+    /// schedule replays once per block.
+    pub n_blocks: usize,
+    /// Cycles of the per-block dense-panel loads, summed (each block's
+    /// panel streams into on-chip RAM before its first wave).
+    pub panel_load_cycles: u64,
+    /// Cycle count per replayed wave, block-major:
+    /// `n_blocks × schedule.n_waves()` entries, and
+    /// `panel_load_cycles + Σ wave_cycles == stats.cycles`.
+    pub wave_cycles: Vec<u64>,
+}
+
+/// Simulate `C = A X` with `k` dense right-hand-side columns over the
+/// chunk schedule (the same SpGEMM-scheduler wave structure SpMV reuses;
+/// the B-stream list is ignored — the panel lives on-chip per block).
+pub fn simulate_spmm(
+    a: &Csr,
+    schedule: &SpgemmSchedule,
+    cfg: &FpgaConfig,
+    style: Style,
+    k: usize,
+) -> SpmmSimResult {
+    assert!(k > 0, "SpMM needs at least one right-hand-side column");
+    let lanes = cfg.vector_lanes.max(1);
+    let n_blocks = k.div_ceil(lanes);
+    let mut stats = SimStats::default();
+    let mut dram = DramModel::default();
+    let mut panel_load_cycles = 0u64;
+    let mut wave_cycles_log = Vec::with_capacity(n_blocks * schedule.waves.len());
+
+    for blk in 0..n_blocks {
+        let kb = (k - blk * lanes).min(lanes) as u64;
+
+        // per-block panel load into on-chip RAM (cf. spmv_sim's x load).
+        // Each block streams its own kb-wide sub-panel in the RIR
+        // dense-panel layout — byte-for-byte the segment
+        // `encode_csr_with_panel` produces for a kb-column panel. Note
+        // for k > lanes this is NOT a slice of one full-k segment (the
+        // header count differs once k spans multiple bundles); the model
+        // assumes the CPU encodes one sub-panel per block, which is also
+        // what bounds the on-chip panel RAM at lanes columns.
+        let panel_bytes = dense_panel_bytes(a.ncols, kb as usize, cfg.bundle_size) as u64;
+        let load_cy = dram.read(cfg, panel_bytes);
+        stats.cycles += load_cy;
+        stats.dram_bound_cycles += load_cy;
+        panel_load_cycles += load_cy;
+
+        // replay the wave schedule with kb-wide lanes — the shared
+        // accounting the SpMV model runs with kb == 1
+        for wave in &schedule.waves {
+            wave_cycles_log.push(row_stream_wave(wave, cfg, style, kb, &mut dram, &mut stats));
+        }
+    }
+
+    stats.bytes_read = dram.bytes_read;
+    stats.bytes_written = dram.bytes_written;
+    SpmmSimResult { stats, n_blocks, panel_load_cycles, wave_cycles: wave_cycles_log }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::spmv_sim::simulate_spmv;
+    use crate::rir::schedule::schedule_spgemm;
+    use crate::sparse::gen;
+
+    fn schedule_for(a: &Csr, cfg: &FpgaConfig) -> SpgemmSchedule {
+        schedule_spgemm(a, &Csr::new(a.ncols, a.ncols), cfg.pipelines, cfg.bundle_size)
+    }
+
+    #[test]
+    fn conservation_laws() {
+        let a = gen::random_uniform(400, 400, 6000, 3);
+        let cfg = FpgaConfig::reap64_spgemm();
+        let s = schedule_for(&a, &cfg);
+        for k in [1usize, 4, 8, 20] {
+            let r = simulate_spmm(&a, &s, &cfg, Style::HandCoded, k);
+            assert_eq!(r.stats.flops, 2 * 6000 * k as u64, "k {k}");
+            assert_eq!(r.n_blocks, k.div_ceil(cfg.vector_lanes), "k {k}");
+            assert_eq!(r.wave_cycles.len(), r.n_blocks * s.n_waves(), "k {k}");
+            assert_eq!(
+                r.panel_load_cycles + r.wave_cycles.iter().sum::<u64>(),
+                r.stats.cycles,
+                "k {k}: wave log + panel loads must sum to total"
+            );
+            assert_eq!(
+                r.stats.compute_bound_cycles + r.stats.dram_bound_cycles,
+                r.stats.cycles
+            );
+            assert_eq!(
+                r.stats.busy_pipeline_cycles + r.stats.idle_pipeline_cycles,
+                cfg.pipelines as u64 * (r.stats.cycles - r.panel_load_cycles)
+            );
+        }
+    }
+
+    #[test]
+    fn beats_k_independent_spmvs_on_wide_designs() {
+        // the acceptance headline: strictly fewer cycles AND fewer DRAM
+        // bytes than k serial SpMV runs, for k in {4, 8}, on REAP-64/128
+        let a = gen::banded_fem(600, 5400, 7);
+        for cfg in [FpgaConfig::reap64_spgemm(), FpgaConfig::reap128_spgemm()] {
+            let s = schedule_for(&a, &cfg);
+            let spmv = simulate_spmv(&a, &s, &cfg, Style::HandCoded);
+            for k in [4usize, 8] {
+                let spmm = simulate_spmm(&a, &s, &cfg, Style::HandCoded, k);
+                let serial_cycles = spmv.stats.cycles * k as u64;
+                assert!(
+                    spmm.stats.cycles < serial_cycles,
+                    "{} k {k}: {} !< {}",
+                    cfg.name,
+                    spmm.stats.cycles,
+                    serial_cycles
+                );
+                assert!(
+                    spmm.stats.bytes_read < spmv.stats.bytes_read * k as u64,
+                    "{} k {k}: A stream must amortize",
+                    cfg.name
+                );
+                // same useful work
+                assert_eq!(spmm.stats.flops, spmv.stats.flops * k as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_scale_past_the_lane_width() {
+        let a = gen::random_uniform(200, 200, 2400, 11);
+        let cfg = FpgaConfig::reap64_spgemm();
+        let s = schedule_for(&a, &cfg);
+        let one = simulate_spmm(&a, &s, &cfg, Style::HandCoded, cfg.vector_lanes);
+        let two = simulate_spmm(&a, &s, &cfg, Style::HandCoded, 2 * cfg.vector_lanes);
+        assert_eq!(two.n_blocks, 2 * one.n_blocks);
+        // a second block re-streams A: more cycles, but less than 2x+1
+        // blocks' worth of serial SpMV (the panel amortizes within blocks)
+        assert!(two.stats.cycles > one.stats.cycles);
+        assert_eq!(two.stats.flops, 2 * one.stats.flops);
+    }
+
+    #[test]
+    fn panel_traffic_is_one_sub_panel_encode_per_block() {
+        // the panel bytes the model charges are exactly the dense-panel
+        // segments of one kb-wide sub-panel encode per block — pinned
+        // for a multi-block k (8 + 8 + 4) where this is NOT the same as
+        // one full-k segment's bytes
+        let a = gen::random_uniform(150, 150, 1800, 17);
+        let cfg = FpgaConfig::reap64_spgemm();
+        let s = schedule_for(&a, &cfg);
+        let k = 2 * cfg.vector_lanes + 4;
+        let r = simulate_spmm(&a, &s, &cfg, Style::HandCoded, k);
+        let a_stream_bytes = r.n_blocks as u64 * (s.a_words * 4) as u64;
+        let panel_bytes: usize = [cfg.vector_lanes, cfg.vector_lanes, 4]
+            .iter()
+            .map(|&kb| crate::rir::layout::dense_panel_bytes(a.ncols, kb, cfg.bundle_size))
+            .sum();
+        assert_eq!(r.n_blocks, 3);
+        assert_eq!(r.stats.bytes_read, a_stream_bytes + panel_bytes as u64);
+    }
+
+    #[test]
+    fn hls_raw_slower() {
+        let a = gen::random_uniform(300, 300, 4000, 13);
+        let cfg = FpgaConfig::reap32_spgemm();
+        let s = schedule_for(&a, &cfg);
+        let hand = simulate_spmm(&a, &s, &cfg, Style::HandCoded, 8);
+        let raw = simulate_spmm(&a, &s, &cfg, Style::HlsRaw, 8);
+        assert!(raw.stats.cycles > hand.stats.cycles);
+    }
+
+    #[test]
+    fn empty_matrix_costs_only_panel_loads() {
+        let a = Csr::new(100, 100);
+        let cfg = FpgaConfig::reap32_spgemm();
+        let s = schedule_for(&a, &cfg);
+        let r = simulate_spmm(&a, &s, &cfg, Style::HandCoded, 8);
+        assert_eq!(r.stats.waves, 0);
+        assert_eq!(r.stats.cycles, r.panel_load_cycles);
+        assert_eq!(
+            r.stats.bytes_read as usize,
+            crate::rir::layout::dense_panel_bytes(100, 8, cfg.bundle_size)
+        );
+    }
+}

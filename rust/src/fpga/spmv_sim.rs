@@ -8,7 +8,7 @@
 //! inherits exactly the property the paper engineered for SpGEMM.
 
 use crate::rir::layout::WORD_BYTES;
-use crate::rir::schedule::SpgemmSchedule;
+use crate::rir::schedule::{SpgemmSchedule, Wave};
 use crate::sparse::Csr;
 
 use super::config::FpgaConfig;
@@ -30,7 +30,6 @@ pub struct SpmvSimResult {
 /// structure is reused — assignments are row chunks; the B-stream list is
 /// ignored because x lives on-chip).
 pub fn simulate_spmv(a: &Csr, schedule: &SpgemmSchedule, cfg: &FpgaConfig, style: Style) -> SpmvSimResult {
-    let p = cfg.pipelines;
     let mut stats = SimStats::default();
     let mut dram = DramModel::default();
 
@@ -40,57 +39,79 @@ pub fn simulate_spmv(a: &Csr, schedule: &SpgemmSchedule, cfg: &FpgaConfig, style
     let x_cycles = dram.read(cfg, x_bytes);
     stats.cycles += x_cycles;
     stats.dram_bound_cycles += x_cycles;
+
     let mut wave_cycles_log = Vec::with_capacity(schedule.waves.len());
-
-    let fill = cfg.mult_latency + cfg.add_latency * 6; // adder tree drain
-    let indirection = match style {
-        Style::HlsRaw => 6u64,
-        _ => 0,
-    };
-
     for wave in &schedule.waves {
-        let mut max_pipe: u64 = 0;
-        let mut elems_total: u64 = 0;
-        let mut rows_done: u64 = 0;
-        for asg in &wave.assignments {
-            // stream the chunk; gather+multiply+accumulate at 1 elem/cycle
-            let elems = asg.len as u64;
-            let pipe = if style.pipelined_stages() {
-                2 + elems + indirection
-            } else {
-                2 + 2 * elems + indirection // HLS serializes gather and MAC
-            };
-            max_pipe = max_pipe.max(pipe + fill);
-            elems_total += elems;
-            rows_done += u64::from(asg.last_chunk);
-        }
-        let in_bytes: u64 = wave
-            .assignments
-            .iter()
-            .map(|asg| (2 + 2 * asg.len) as u64 * WORD_BYTES as u64)
-            .sum();
-        let out_bytes = rows_done * 4;
-        let read_cy = dram.read(cfg, in_bytes);
-        let write_cy = dram.write(cfg, out_bytes);
-        let dram_cy = read_cy.max(write_cy);
-        let wave_cy = max_pipe.max(dram_cy).max(1);
-        if max_pipe >= dram_cy {
-            stats.compute_bound_cycles += wave_cy;
-        } else {
-            stats.dram_bound_cycles += wave_cy;
-        }
-        stats.cycles += wave_cy;
-        stats.waves += 1;
-        let active = wave.assignments.len() as u64;
-        stats.busy_pipeline_cycles += active * wave_cy;
-        stats.idle_pipeline_cycles += (p as u64 - active) * wave_cy;
-        stats.flops += 2 * elems_total;
-        wave_cycles_log.push(wave_cy);
+        wave_cycles_log.push(row_stream_wave(wave, cfg, style, 1, &mut dram, &mut stats));
     }
 
     stats.bytes_read = dram.bytes_read;
     stats.bytes_written = dram.bytes_written;
     SpmvSimResult { stats, x_load_cycles: x_cycles, wave_cycles: wave_cycles_log }
+}
+
+/// Cycle/traffic accounting for one wave of the row-streaming datapath
+/// with `kb` parallel MAC lanes per PE — **`kb == 1` is exactly the SpMV
+/// datapath**, and the SpMM model (`super::spmm_sim`) calls this same
+/// function with its column-block width, so the two models cannot drift
+/// apart (the SpMM-beats-k-SpMVs comparison depends on that lockstep).
+///
+/// Per assignment the chunk streams at 1 element/cycle
+/// (gather + multiply + accumulate across all `kb` lanes in the same
+/// cycle when stages are pipelined; HLS serializes the gather and the
+/// per-lane MACs); the wave then costs `max(compute, dram)` with the
+/// merged-output write of `kb` dense values per finished row. Updates
+/// `stats` (cycles, bound attribution, busy/idle, flops) and `dram`;
+/// returns the wave's cycles.
+pub(crate) fn row_stream_wave(
+    wave: &Wave,
+    cfg: &FpgaConfig,
+    style: Style,
+    kb: u64,
+    dram: &mut DramModel,
+    stats: &mut SimStats,
+) -> u64 {
+    let fill = cfg.mult_latency + cfg.add_latency * 6; // adder tree drain
+    let indirection = match style {
+        Style::HlsRaw => 6u64,
+        _ => 0,
+    };
+    let mut max_pipe: u64 = 0;
+    let mut elems_total: u64 = 0;
+    let mut rows_done: u64 = 0;
+    for asg in &wave.assignments {
+        let elems = asg.len as u64;
+        let pipe = if style.pipelined_stages() {
+            2 + elems + indirection
+        } else {
+            2 + elems * (1 + kb) + indirection // HLS: gather, then kb MACs
+        };
+        max_pipe = max_pipe.max(pipe + fill);
+        elems_total += elems;
+        rows_done += u64::from(asg.last_chunk);
+    }
+    let in_bytes: u64 = wave
+        .assignments
+        .iter()
+        .map(|asg| (2 + 2 * asg.len) as u64 * WORD_BYTES as u64)
+        .sum();
+    let out_bytes = rows_done * kb * 4;
+    let read_cy = dram.read(cfg, in_bytes);
+    let write_cy = dram.write(cfg, out_bytes);
+    let dram_cy = read_cy.max(write_cy);
+    let wave_cy = max_pipe.max(dram_cy).max(1);
+    if max_pipe >= dram_cy {
+        stats.compute_bound_cycles += wave_cy;
+    } else {
+        stats.dram_bound_cycles += wave_cy;
+    }
+    stats.cycles += wave_cy;
+    stats.waves += 1;
+    let active = wave.assignments.len() as u64;
+    stats.busy_pipeline_cycles += active * wave_cy;
+    stats.idle_pipeline_cycles += (cfg.pipelines as u64 - active) * wave_cy;
+    stats.flops += 2 * elems_total * kb;
+    wave_cy
 }
 
 #[cfg(test)]

@@ -15,6 +15,7 @@
 //! | [`fig11`] | Cholesky CPU/FPGA breakdown |
 //! | [`hls_cmp`] | §V-C HLS preprocessing benefit |
 //! | [`batch`] | multi-tenant batch throughput (no paper figure) |
+//! | [`spmm`] | SpMM multi-vector vs k serial SpMVs (no paper figure) |
 
 pub mod batch;
 pub mod fig10;
@@ -26,6 +27,7 @@ pub mod fig9;
 pub mod hls_cmp;
 pub mod json;
 pub mod report;
+pub mod spmm;
 pub mod suite;
 pub mod tables;
 

@@ -1,0 +1,220 @@
+//! SpMM multi-vector throughput: `C = A·X` with k dense right-hand sides
+//! through one wave schedule, versus k serial SpMV runs (no paper figure
+//! corresponds; EXPERIMENTS.md §SpMM documents the methodology).
+//!
+//! For each design point and each k ∈ {4, 8} the harness runs the same
+//! (matrix, panel) workload twice — once through
+//! [`ReapSpmm`] (one schedule, k-wide vector lanes, one
+//! replay per column block) and once as k independent
+//! [`ReapSpmv`] runs — and reports simulated cycles, DRAM
+//! traffic and end-to-end time. SpMM must win cycles *and* read traffic
+//! on the wide (64/128) designs: that is the headline the CI asserts.
+//! The numeric results are checked bit-identical between the two modes on
+//! every row (`max_abs_err` must be exactly zero).
+
+use crate::coordinator::{ReapSpmm, ReapSpmv};
+use crate::fpga::FpgaConfig;
+use crate::sparse::gen::{self, Family};
+use crate::sparse::{Csr, Val};
+use crate::util::table::Table;
+
+use super::report::RunConfig;
+
+/// One (design point × k) comparison row.
+#[derive(Clone, Debug)]
+pub struct SpmmRow {
+    pub config: String,
+    /// Right-hand-side column count.
+    pub k: usize,
+    /// Simulated FPGA cycles, SpMM / k summed SpMV runs.
+    pub spmm_cycles: u64,
+    pub serial_cycles: u64,
+    /// Simulated DRAM bytes read, SpMM / k summed SpMV runs.
+    pub spmm_bytes_read: u64,
+    pub serial_bytes_read: u64,
+    /// End-to-end seconds under per-wave pipelining.
+    pub spmm_total_s: f64,
+    pub serial_total_s: f64,
+    /// Measured CPU preprocessing seconds: spent once for SpMM, once per
+    /// SpMV run (k schedule passes) on the serial side — the very cost
+    /// the shared schedule amortizes.
+    pub spmm_cpu_s: f64,
+    pub serial_cpu_s: f64,
+    /// Simulated FPGA seconds, SpMM / k summed SpMV runs.
+    pub spmm_fpga_s: f64,
+    pub serial_fpga_s: f64,
+    /// Simulated waves (SpMM, summed over column blocks).
+    pub spmm_waves: u64,
+    /// Max |SpMM − SpMV| over all outputs — bit-identity means exactly 0.
+    pub max_abs_err: f64,
+}
+
+/// The SpMM workload: a banded-FEM clone (the suite's most common family)
+/// plus a deterministic dense panel wide enough for both k values.
+pub fn workload(cfg: &RunConfig, k: usize) -> (Csr, Vec<Val>) {
+    let n = cfg.max_rows.clamp(64, 1200);
+    let a = gen::generate(Family::BandedFem, n, n * 8, cfg.seed ^ 0x59A44);
+    let x: Vec<Val> = (0..a.ncols * k)
+        .map(|i| (((i as u64).wrapping_mul(2654435761) % 31) as f32 - 15.0) * 0.0625)
+        .collect();
+    (a, x)
+}
+
+/// Run the comparison; returns rows plus the rendered table, and writes
+/// `BENCH_spmm.json` when output is enabled.
+pub fn run(cfg: &RunConfig) -> (Vec<SpmmRow>, Table) {
+    let mut rows = Vec::new();
+    for design in [
+        FpgaConfig::reap32_spgemm(),
+        FpgaConfig::reap64_spgemm(),
+        FpgaConfig::reap128_spgemm(),
+    ] {
+        for k in [4usize, 8] {
+            let (a, x) = workload(cfg, k);
+            let spmm = ReapSpmm::new(design.clone()).run(&a, &x, k).expect("spmm run");
+
+            let mut serial_cycles = 0u64;
+            let mut serial_bytes = 0u64;
+            let mut serial_total_s = 0.0f64;
+            let mut serial_cpu_s = 0.0f64;
+            let mut serial_fpga_s = 0.0f64;
+            let mut max_abs_err = 0.0f64;
+            for j in 0..k {
+                let xj: Vec<Val> = x.iter().skip(j).step_by(k).copied().collect();
+                let rep = ReapSpmv::new(design.clone()).run(&a, &xj).expect("spmv run");
+                serial_cycles += rep.fpga_sim.cycles;
+                serial_bytes += rep.fpga_sim.bytes_read;
+                serial_total_s += rep.total_s;
+                serial_cpu_s += rep.cpu_preprocess_s;
+                serial_fpga_s += rep.fpga_s;
+                for i in 0..a.nrows {
+                    max_abs_err =
+                        max_abs_err.max((spmm.c[i * k + j] - rep.y[i]).abs() as f64);
+                }
+            }
+
+            rows.push(SpmmRow {
+                config: design.name.to_string(),
+                k,
+                spmm_cycles: spmm.fpga_sim.cycles,
+                serial_cycles,
+                spmm_bytes_read: spmm.fpga_sim.bytes_read,
+                serial_bytes_read: serial_bytes,
+                spmm_total_s: spmm.total_s,
+                serial_total_s,
+                spmm_cpu_s: spmm.cpu_preprocess_s,
+                serial_cpu_s,
+                spmm_fpga_s: spmm.fpga_s,
+                serial_fpga_s,
+                spmm_waves: spmm.fpga_sim.waves,
+                max_abs_err,
+            });
+        }
+    }
+    write_bench_json(cfg, &rows);
+
+    let mut table = Table::new(
+        "SpMM multi-vector — one schedule, k-wide lanes vs k serial SpMVs",
+        &[
+            "config", "k", "cycles(spmm)", "cycles(serial)", "MB-read(spmm)",
+            "MB-read(serial)", "speedup", "max|err|",
+        ],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.config.clone(),
+            r.k.to_string(),
+            r.spmm_cycles.to_string(),
+            r.serial_cycles.to_string(),
+            format!("{:.3}", r.spmm_bytes_read as f64 / 1e6),
+            format!("{:.3}", r.serial_bytes_read as f64 / 1e6),
+            format!("{:.2}x", r.serial_total_s / r.spmm_total_s.max(1e-12)),
+            format!("{:.1e}", r.max_abs_err),
+        ]);
+    }
+    (rows, table)
+}
+
+/// The SpMM headline: on the wide designs (64/128 pipelines) one schedule
+/// with k-wide vector lanes must cost strictly fewer simulated cycles and
+/// strictly fewer DRAM read bytes than k serial SpMV runs, for every k —
+/// and the numeric results must be bit-identical (zero error) everywhere.
+pub fn headline_holds(rows: &[SpmmRow]) -> bool {
+    rows.iter().all(|r| r.max_abs_err == 0.0)
+        && rows
+            .iter()
+            .filter(|r| r.config != "REAP-32")
+            .all(|r| {
+                r.spmm_cycles < r.serial_cycles && r.spmm_bytes_read < r.serial_bytes_read
+            })
+}
+
+use super::json::{escape, num};
+
+/// Write `BENCH_spmm.json`: two records per (design point, k) — `spmm`
+/// and `serial` mode — alongside the other `BENCH_*.json` trajectory
+/// files (`bytes_read` is the amortization the other files do not carry).
+fn write_bench_json(cfg: &RunConfig, rows: &[SpmmRow]) {
+    let Some(dir) = &cfg.csv_dir else {
+        return;
+    };
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"workload\": \"spmm-k{}\", \"config\": \"{}\", \"mode\": \"spmm\", \
+             \"cpu_s\": {}, \"fpga_s\": {}, \"total_s\": {}, \"waves\": {}, \
+             \"bytes_read\": {}}},\n",
+            r.k,
+            escape(&r.config),
+            num(r.spmm_cpu_s),
+            num(r.spmm_fpga_s),
+            num(r.spmm_total_s),
+            r.spmm_waves,
+            r.spmm_bytes_read,
+        ));
+        out.push_str(&format!(
+            "  {{\"workload\": \"spmm-k{}\", \"config\": \"{}\", \"mode\": \"serial\", \
+             \"cpu_s\": {}, \"fpga_s\": {}, \"total_s\": {}, \"waves\": 0, \
+             \"bytes_read\": {}}}{}\n",
+            r.k,
+            escape(&r.config),
+            num(r.serial_cpu_s),
+            num(r.serial_fpga_s),
+            num(r.serial_total_s),
+            r.serial_bytes_read,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    if let Err(e) = std::fs::create_dir_all(dir)
+        .and_then(|()| std::fs::write(dir.join("BENCH_spmm.json"), out))
+    {
+        eprintln!("warning: could not write BENCH_spmm.json: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn spmm_wins_cycles_and_traffic_on_wide_designs() {
+        let mut cfg = RunConfig::quick();
+        let dir = std::env::temp_dir().join(format!("reap-spmm-{}", std::process::id()));
+        cfg.csv_dir = Some(dir.clone());
+        let (rows, table) = run(&cfg);
+        assert_eq!(rows.len(), 6); // 3 designs × k ∈ {4, 8}
+        assert_eq!(table.len(), 6);
+        assert!(
+            headline_holds(&rows),
+            "one schedule + vector lanes must beat k serial SpMVs on 64/128: {rows:?}"
+        );
+        let text = std::fs::read_to_string(dir.join("BENCH_spmm.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 12); // 6 rows × 2 modes
+        assert!(arr[0].get("bytes_read").unwrap().as_usize().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -12,10 +12,13 @@
 //!   `simplicial, LL^T, no-ordering` configuration, numeric phase).
 //! * [`triangular`] — sparse triangular solves (the solver examples'
 //!   forward/backward substitution).
+//! * [`spmm()`] — sparse × dense multi-vector (`C = A·X`), column-blocked;
+//!   each column is bit-identical to an independent [`spmv()`].
 
 pub mod cholesky;
 pub mod spgemm;
 pub mod spgemm_parallel;
+pub mod spmm;
 pub mod spmv;
 pub mod triangular;
 
@@ -24,4 +27,5 @@ pub use spgemm::spgemm;
 pub use spgemm_parallel::{
     flop_balanced_ranges, spgemm_parallel, spgemm_parallel_with_scratch, SpaScratch,
 };
+pub use spmm::{spmm, spmm_parallel};
 pub use spmv::{spmv, spmv_parallel};

@@ -1,0 +1,182 @@
+//! CSR SpMM baselines — sparse matrix × dense multi-vector, `C = A · X`
+//! with `k` right-hand-side columns.
+//!
+//! SpMM is the SpMV extension's natural scale-up (Sparse Stream Semantic
+//! Registers motivates exactly this: amortize one stream schedule across
+//! many dense right-hand sides). Both X and C are **row-major** dense
+//! panels: `X[r*k + j]` is row `r`, column `j`. That layout keeps each
+//! gathered X row contiguous, which is what the FPGA's k-wide vector
+//! lanes consume per streamed A element (see `fpga::spmm_sim`).
+//!
+//! Accumulation discipline: each output column accumulates in f64 over the
+//! row's elements in CSR order — exactly [`super::spmv::spmv`]'s order —
+//! so every column of the result is **bit-identical** to an independent
+//! SpMV with that column of X (property-tested). Column blocking and row
+//! banding never change per-column op order; they only change which
+//! columns share a pass.
+
+use crate::sparse::{Csr, Val};
+
+/// Default column-block width for the blocked CPU reference — matches the
+/// FPGA design's per-pipeline vector lanes
+/// (`fpga::FpgaConfig::vector_lanes`) so the reference walks memory the
+/// way the datapath does.
+pub const DEFAULT_COL_BLOCK: usize = 8;
+
+/// C = A X, serial, column-blocked with a reused accumulator scratch
+/// (the SpaScratch discipline: one f64 buffer of block width, zeroed per
+/// row, no per-row allocation).
+pub fn spmm(a: &Csr, x: &[Val], k: usize) -> Vec<Val> {
+    spmm_blocked(a, x, k, DEFAULT_COL_BLOCK)
+}
+
+/// C = A X with an explicit column-block width. Any block width yields the
+/// same bits: columns accumulate independently.
+pub fn spmm_blocked(a: &Csr, x: &[Val], k: usize, col_block: usize) -> Vec<Val> {
+    assert_eq!(x.len(), a.ncols * k, "X panel shape mismatch");
+    assert!(col_block > 0, "column block must be positive");
+    let mut c = vec![0 as Val; a.nrows * k];
+    if k > 0 {
+        spmm_rows(a, x, k, col_block, 0, &mut c);
+    }
+    c
+}
+
+/// C = A X with row-band threading (the CPU-N series). Bands own disjoint
+/// output rows and run the same row-range body as the serial path, so the
+/// result is bit-identical for every thread count.
+pub fn spmm_parallel(a: &Csr, x: &[Val], k: usize, nthreads: usize) -> Vec<Val> {
+    assert_eq!(x.len(), a.ncols * k, "X panel shape mismatch");
+    if k == 0 {
+        return Vec::new();
+    }
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || a.nrows < 2 * nthreads {
+        return spmm(a, x, k);
+    }
+    let rows_per = a.nrows.div_ceil(nthreads);
+    let mut c = vec![0 as Val; a.nrows * k];
+    std::thread::scope(|scope| {
+        for (band, out) in c.chunks_mut(rows_per * k).enumerate() {
+            let a = &*a;
+            let x = &*x;
+            scope.spawn(move || {
+                spmm_rows(a, x, k, DEFAULT_COL_BLOCK, band * rows_per, out);
+            });
+        }
+    });
+    c
+}
+
+/// Compute rows `[row_lo, row_lo + out.len() / k)` of `C = A X` into `out`
+/// (row-major, `out[0..k]` is row `row_lo`), column-blocked with one
+/// reused f64 accumulator — the single implementation the serial and the
+/// row-banded parallel paths share, so their per-column accumulation
+/// sequences are identical by construction. Requires `k > 0`.
+fn spmm_rows(a: &Csr, x: &[Val], k: usize, col_block: usize, row_lo: usize, out: &mut [Val]) {
+    let nrows = out.len() / k;
+    let mut acc = vec![0f64; col_block.min(k)];
+    let mut j0 = 0usize;
+    while j0 < k {
+        let j1 = (j0 + col_block).min(k);
+        let kb = j1 - j0;
+        for li in 0..nrows {
+            let i = row_lo + li;
+            acc[..kb].fill(0.0);
+            for (&col, &v) in a.row_cols(i).iter().zip(a.row_vals(i)) {
+                let xrow = &x[col as usize * k + j0..col as usize * k + j1];
+                for (t, &xv) in xrow.iter().enumerate() {
+                    acc[t] += (v as f64) * (xv as f64);
+                }
+            }
+            for (t, &a_t) in acc[..kb].iter().enumerate() {
+                out[li * k + j0 + t] = a_t as Val;
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// Flop count: 2 per stored element per right-hand-side column.
+pub fn spmm_flops(a: &Csr, k: usize) -> usize {
+    2 * a.nnz() * k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::spmv::spmv;
+    use crate::sparse::gen;
+
+    fn panel(ncols: usize, k: usize, seed: u64) -> Vec<Val> {
+        (0..ncols * k)
+            .map(|i| (((i as u64).wrapping_mul(seed + 3) % 17) as f32 - 8.0) * 0.25)
+            .collect()
+    }
+
+    /// Column j of the panel, extracted as an SpMV input vector.
+    fn col(x: &[Val], k: usize, j: usize) -> Vec<Val> {
+        x.iter().skip(j).step_by(k).copied().collect()
+    }
+
+    #[test]
+    fn bit_identical_to_k_independent_spmvs() {
+        for seed in 0..3u64 {
+            let a = gen::power_law(80, 1200, seed);
+            for k in [1usize, 3, 4, 8, 11] {
+                let x = panel(a.ncols, k, seed);
+                let c = spmm(&a, &x, k);
+                for j in 0..k {
+                    let yj = spmv(&a, &col(&x, k, j));
+                    for i in 0..a.nrows {
+                        assert_eq!(c[i * k + j], yj[i], "seed {seed} k {k} col {j} row {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_width_never_changes_bits() {
+        let a = gen::random_uniform(50, 60, 500, 5);
+        let k = 10usize;
+        let x = panel(a.ncols, k, 5);
+        let base = spmm_blocked(&a, &x, k, 1);
+        for block in [2usize, 3, 8, 10, 64] {
+            assert_eq!(spmm_blocked(&a, &x, k, block), base, "block {block}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let a = gen::power_law(150, 2400, 9);
+        let k = 6usize;
+        let x = panel(a.ncols, k, 9);
+        let serial = spmm(&a, &x, k);
+        for t in [2usize, 3, 4, 8] {
+            assert_eq!(spmm_parallel(&a, &x, k, t), serial, "threads {t}");
+        }
+    }
+
+    #[test]
+    fn empty_matrix_and_identity() {
+        let z = Csr::new(4, 4);
+        assert_eq!(spmm(&z, &[1.0; 8], 2), vec![0.0; 8]);
+        let i = crate::sparse::Dense::eye(3).to_csr();
+        let x: Vec<f32> = (0..6).map(|v| v as f32).collect();
+        assert_eq!(spmm(&i, &x, 2), x);
+    }
+
+    #[test]
+    fn zero_width_panel_is_legal() {
+        let a = gen::random_uniform(5, 5, 10, 1);
+        assert_eq!(spmm(&a, &[], 0), Vec::<Val>::new());
+        assert_eq!(spmm_parallel(&a, &[], 0, 4), Vec::<Val>::new());
+    }
+
+    #[test]
+    fn flops_count() {
+        let a = gen::random_uniform(10, 10, 37, 2);
+        assert_eq!(spmm_flops(&a, 4), 2 * 37 * 4);
+    }
+}

@@ -17,8 +17,19 @@
 //!   crate) and executes them from the coordinator's request path — Python
 //!   never runs at request time.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! Four workloads ride the same CPU→RIR→FPGA flow: SpGEMM (the paper's
+//! primary kernel, single-job and multi-tenant batched), sparse Cholesky,
+//! SpMV, and SpMM (k dense right-hand sides over one SpMV wave schedule).
+//! The headline entry points are [`rir::schedule::schedule_spgemm`] (the
+//! CPU scheduling pass), [`coordinator::ReapBatch`] (multi-tenant shared
+//! waves) and [`coordinator::ReapSpmm`] (multi-vector) — each carries a
+//! runnable doctest.
+//!
+//! **`ARCHITECTURE.md`** (repo root) is the written spec: the dataflow,
+//! the module map, the RIR wire format byte-for-byte, and the invariants
+//! (wave monotonicity, bit-identical decompose/replay, thread-invariance)
+//! every layer maintains. See `EXPERIMENTS.md` for paper-vs-measured
+//! results and the per-figure methodology notes.
 
 pub mod coordinator;
 pub mod fpga;

@@ -3,9 +3,12 @@
 //! Subcommands:
 //!
 //! * `spgemm`   — run REAP SpGEMM on a synthetic or Matrix-Market matrix.
+//! * `spmv` / `spmm` — run the SpMV extension / its multi-vector (SpMM)
+//!                scale-up likewise.
 //! * `cholesky` — run REAP sparse Cholesky likewise.
-//! * `bench`    — regenerate the paper's tables/figures
-//!                (`table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls all`).
+//! * `bench`    — regenerate the paper's tables/figures plus the batch and
+//!                SpMM throughput studies (`table1 table2 fig6 fig7 fig8
+//!                fig9 fig10 fig11 hls batch spmm all`).
 //! * `gen-matrix` — write a synthetic matrix as Matrix-Market.
 //! * `info`     — platform, artifact and design-point status.
 //!
@@ -13,7 +16,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use reap::coordinator::{verify, ReapCholesky, ReapSpgemm, ReapSpmv};
+use reap::coordinator::{verify, ReapCholesky, ReapSpgemm, ReapSpmm, ReapSpmv};
 use reap::fpga::FpgaConfig;
 use reap::harness::{self, RunConfig};
 use reap::runtime::{Manifest, XlaRuntime};
@@ -31,6 +34,7 @@ fn main() {
     let result = match cmd.as_str() {
         "spgemm" => cmd_spgemm(argv),
         "spmv" => cmd_spmv(argv),
+        "spmm" => cmd_spmm(argv),
         "cholesky" => cmd_cholesky(argv),
         "bench" => cmd_bench(argv),
         "gen-matrix" => cmd_gen_matrix(argv),
@@ -53,6 +57,7 @@ fn print_help() {
          commands:\n  \
            spgemm      run REAP SpGEMM (C = A*B or A^2)\n  \
            spmv        run REAP SpMV (y = A x, extension kernel)\n  \
+           spmm        run REAP SpMM (C = A X, k dense right-hand sides)\n  \
            cholesky    run REAP sparse Cholesky factorization\n  \
            bench       regenerate paper tables/figures\n  \
            gen-matrix  write a synthetic matrix (.mtx)\n  \
@@ -208,6 +213,49 @@ fn cmd_spmv(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_spmm(argv: Vec<String>) -> Result<()> {
+    let mut specs = matrix_opts();
+    specs.extend([
+        OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
+        OptSpec { name: "k", takes_value: true, help: "dense right-hand-side columns (default 8)" },
+        OptSpec { name: "verify", takes_value: false, help: "check vs CPU baseline" },
+        OptSpec { name: "help", takes_value: false, help: "show usage" },
+    ]);
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!("{}", usage("spmm", "run REAP SpMM (C = A X, multi-vector extension)", &specs));
+        return Ok(());
+    }
+    let a = load_matrix(&args)?;
+    let k = args.get_parsed::<usize>("k", 8)?;
+    let x: Vec<f32> = (0..a.ncols * k).map(|i| ((i % 17) as f32 - 8.0) * 0.125).collect();
+    let cfg = variant_spgemm(args.get("variant").unwrap_or("reap32"))?;
+    println!(
+        "matrix: {}x{}, nnz {}, density {:.5}% | panel: {} columns",
+        a.nrows, a.ncols, a.nnz(), a.density() * 100.0, k
+    );
+    let rep = ReapSpmm::new(cfg.clone()).run(&a, &x, k)?;
+    println!(
+        "{}: cpu preprocess {:.3} ms (once) | fpga(sim) {:.3} ms ({} cycles, {} blocks) | total {:.3} ms | {:.2} sim-GFLOP/s",
+        cfg.name,
+        rep.cpu_preprocess_s * 1e3,
+        rep.fpga_s * 1e3,
+        rep.fpga_sim.cycles,
+        rep.n_blocks,
+        rep.total_s * 1e3,
+        rep.fpga_sim.gflops(&cfg),
+    );
+    if args.flag("verify") {
+        let want = reap::kernels::spmm(&a, &x, k);
+        let err = rep.c.iter().zip(&want).map(|(g, w)| (g - w).abs()).fold(0f32, f32::max);
+        println!("  verify vs CPU baseline: max err {err:.2e} -> {}", if err == 0.0 { "OK" } else { "MISMATCH" });
+        if err != 0.0 {
+            bail!("verification failed (SpMM must be bit-identical to the CPU reference)");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_cholesky(argv: Vec<String>) -> Result<()> {
     let mut specs = matrix_opts();
     specs.extend([
@@ -282,7 +330,7 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") || args.positionals().is_empty() {
         print!(
-            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch all\n",
+            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch spmm all\n",
             usage("bench <target>", "regenerate a paper table/figure", &specs)
         );
         return Ok(());
@@ -387,10 +435,19 @@ fn run_bench_target(target: &str, cfg: &RunConfig) -> Result<()> {
             );
             cfg.dump_csv("batch", &t)?;
         }
+        "spmm" => {
+            let (rows, t) = harness::spmm::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "multi-vector: one schedule + k-wide lanes beat k serial SpMVs on 64/128 -> headline {}",
+                if harness::spmm::headline_holds(&rows) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("spmm", &t)?;
+        }
         "all" => {
             for t in [
                 "table1", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "hls",
-                "batch",
+                "batch", "spmm",
             ] {
                 run_bench_target(t, cfg)?;
                 println!();

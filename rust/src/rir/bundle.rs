@@ -21,6 +21,12 @@ impl BundleFlags {
     /// Final bundle of the whole stream (lets the FPGA input controller
     /// terminate without a separate length channel).
     pub const END_OF_STREAM: u8 = 0b0000_0100;
+    /// Dense-panel bundle (SpMM): the payload is one row of the dense
+    /// right-hand-side block X — shared feature = X row index, distinct
+    /// features = lane (column) indices `0..k`. The input controller
+    /// routes these to the on-chip panel RAM instead of the CAMs, so the
+    /// sparse decoders skip them exactly like metadata-only bundles.
+    pub const DENSE_PANEL: u8 = 0b0000_1000;
 
     pub fn end_of_row(self) -> bool {
         self.0 & Self::END_OF_ROW != 0
@@ -30,6 +36,9 @@ impl BundleFlags {
     }
     pub fn end_of_stream(self) -> bool {
         self.0 & Self::END_OF_STREAM != 0
+    }
+    pub fn dense_panel(self) -> bool {
+        self.0 & Self::DENSE_PANEL != 0
     }
     pub fn with(self, bit: u8) -> Self {
         BundleFlags(self.0 | bit)
@@ -132,6 +141,8 @@ mod tests {
         assert!(f.end_of_row());
         assert!(f.end_of_stream());
         assert!(!f.metadata_only());
+        assert!(!f.dense_panel());
+        assert!(f.with(BundleFlags::DENSE_PANEL).dense_panel());
     }
 
     #[test]

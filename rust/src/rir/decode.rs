@@ -4,7 +4,10 @@
 //! decompress routines" (§II). Decoding validates the stream invariants the
 //! FPGA input controller relies on: bundles of one row are contiguous, each
 //! row chain ends with exactly one `END_OF_ROW`, metadata-only bundles
-//! carry no matrix data.
+//! carry no matrix data. Dense-panel bundles (the SpMM right-hand-side
+//! block, [`BundleStream::encode_csr_with_panel`]) are skipped by the
+//! sparse assemblers — they route to the on-chip panel RAM, not the CAMs —
+//! and reassembled by [`stream_panel_to_dense`].
 
 use anyhow::{bail, ensure, Result};
 
@@ -22,7 +25,7 @@ use super::encode::BundleStream;
 pub fn bundles_to_csr(bundles: &[Bundle], nrows: usize, ncols: usize) -> Result<Csr> {
     let mut asm = RowAssembler::new(nrows, ncols);
     for b in bundles {
-        if b.flags.metadata_only() {
+        if b.flags.metadata_only() || b.flags.dense_panel() {
             continue;
         }
         let (distinct, values) = match &b.payload {
@@ -41,7 +44,7 @@ pub fn bundles_to_csr(bundles: &[Bundle], nrows: usize, ncols: usize) -> Result<
 pub fn stream_to_csr(stream: &BundleStream, nrows: usize, ncols: usize) -> Result<Csr> {
     let mut asm = RowAssembler::new(nrows, ncols);
     for b in stream.iter() {
-        if b.flags.metadata_only() {
+        if b.flags.metadata_only() || b.flags.dense_panel() {
             continue;
         }
         asm.push(b.shared, b.flags, b.cols, b.vals)?;
@@ -68,12 +71,64 @@ pub fn stream_segment_to_csr(
     let mut asm = RowAssembler::new(nrows, ncols);
     for i in lo..hi {
         let b = stream.bundle(i);
-        if b.flags.metadata_only() {
+        if b.flags.metadata_only() || b.flags.dense_panel() {
             continue;
         }
         asm.push(b.shared, b.flags, b.cols, b.vals)?;
     }
     asm.finish()
+}
+
+/// Reassemble the dense right-hand-side panel X from its bundle segment
+/// `[lo, hi)` of a combined SpMM stream (the boundary returned by
+/// [`BundleStream::encode_csr_with_panel`]).
+///
+/// `nrows` is the panel's row count (= the sparse matrix's column count)
+/// and `k` its lane width; the result is row-major `nrows × k`, exactly
+/// the layout [`crate::kernels::spmm::spmm`] consumes. Validation mirrors
+/// the sparse assembler's: every bundle in the segment must carry the
+/// `DENSE_PANEL` flag, rows must arrive contiguously and in ascending
+/// order with exactly `k` lanes (`0..k` in order, possibly split across
+/// bundles), and each chain must close with `END_OF_ROW`.
+pub fn stream_panel_to_dense(
+    stream: &BundleStream,
+    lo: usize,
+    hi: usize,
+    nrows: usize,
+    k: usize,
+) -> Result<Vec<Val>> {
+    ensure!(
+        lo <= hi && hi <= stream.n_bundles(),
+        "panel segment [{lo}, {hi}) out of bounds (stream has {} bundles)",
+        stream.n_bundles()
+    );
+    if k == 0 {
+        ensure!(lo == hi, "zero-width panel cannot carry bundles");
+        return Ok(Vec::new());
+    }
+    let mut x = vec![0 as Val; nrows * k];
+    let mut row = 0usize; // next row expected to *finish*
+    let mut lane = 0usize; // next lane expected within the open row
+    for i in lo..hi {
+        let b = stream.bundle(i);
+        ensure!(b.flags.dense_panel(), "bundle {i} in panel segment lacks DENSE_PANEL");
+        ensure!((b.shared as usize) == row, "panel row {} out of order (expected {row})", b.shared);
+        ensure!(row < nrows, "panel row {row} out of bounds");
+        for (&c, &v) in b.cols.iter().zip(b.vals) {
+            ensure!((c as usize) == lane, "panel lane {c} out of order (expected {lane})");
+            ensure!(lane < k, "panel lane {lane} exceeds width {k}");
+            x[row * k + lane] = v;
+            lane += 1;
+        }
+        if b.flags.end_of_row() {
+            ensure!(lane == k, "panel row {row} closed with {lane} of {k} lanes");
+            row += 1;
+            lane = 0;
+        }
+    }
+    ensure!(lane == 0, "panel segment ended mid-row {row}");
+    ensure!(row == nrows, "panel segment carried {row} of {nrows} rows");
+    Ok(x)
 }
 
 /// Shared row-reassembly state: enforces the stream invariants (row chains
@@ -266,6 +321,43 @@ mod tests {
         assert!(stream_segment_to_csr(&s2, 0, b2[1] - 1, 1, 30).is_err());
         // out-of-bounds segment rejected
         assert!(stream_segment_to_csr(&s, 0, s.n_bundles() + 1, 5, 5).is_err());
+    }
+
+    #[test]
+    fn panel_stream_roundtrips_both_halves() {
+        let m = gen::power_law(14, 160, 41);
+        let k = 6usize;
+        let x: Vec<f32> = (0..m.ncols * k).map(|i| (i as f32 * 0.3).sin()).collect();
+        for bs in [1usize, 4, 16] {
+            let mut s = BundleStream::new();
+            let boundary = s.encode_csr_with_panel(&m, &x, k, bs);
+            // sparse assembler skips the panel and recovers A
+            assert_eq!(stream_to_csr(&s, m.nrows, m.ncols).unwrap(), m, "bs {bs}");
+            // panel assembler recovers X bit-for-bit
+            let back = stream_panel_to_dense(&s, boundary, s.n_bundles(), m.ncols, k).unwrap();
+            assert_eq!(back, x, "bs {bs}");
+        }
+    }
+
+    #[test]
+    fn panel_decode_rejects_malformed_segments() {
+        let m = gen::random_uniform(6, 8, 20, 42);
+        let k = 4usize;
+        let x: Vec<f32> = (0..m.ncols * k).map(|i| i as f32).collect();
+        let mut s = BundleStream::new();
+        let boundary = s.encode_csr_with_panel(&m, &x, k, 16);
+        let n = s.n_bundles();
+        // segment including sparse bundles: not all DENSE_PANEL
+        assert!(stream_panel_to_dense(&s, 0, n, m.ncols, k).is_err());
+        // truncated panel: ends mid-row set (missing rows)
+        assert!(stream_panel_to_dense(&s, boundary, n - 1, m.ncols, k).is_err());
+        // wrong declared width
+        assert!(stream_panel_to_dense(&s, boundary, n, m.ncols, k + 1).is_err());
+        // out-of-bounds segment
+        assert!(stream_panel_to_dense(&s, boundary, n + 1, m.ncols, k).is_err());
+        // zero-width panel: empty segment ok, non-empty rejected
+        assert_eq!(stream_panel_to_dense(&s, boundary, boundary, 0, 0).unwrap(), vec![]);
+        assert!(stream_panel_to_dense(&s, boundary, n, m.ncols, 0).is_err());
     }
 
     #[test]

@@ -212,6 +212,52 @@ impl BundleStream {
         bounds
     }
 
+    /// Encode a CSR matrix **plus a dense right-hand-side panel** into this
+    /// stream (cleared first) — the SpMM input layout: A's bundle chains
+    /// first (exactly [`Self::encode_csr`]), then one `DENSE_PANEL` chain
+    /// per row of X (shared feature = X row index, distinct features =
+    /// lane indices `0..k`), `END_OF_STREAM` on the stream's final bundle.
+    ///
+    /// `x` is row-major `m.ncols × k` (`x[r*k + j]` is row `r`, lane `j`).
+    /// Returns the bundle index where the panel segment begins, so callers
+    /// can address the sparse prefix `0..boundary` and the panel segment
+    /// `boundary..n_bundles()` independently (the same segment discipline
+    /// as [`Self::encode_csr_jobs`]). Sparse decoders skip panel bundles;
+    /// [`super::decode::stream_panel_to_dense`] reassembles X from the
+    /// segment. A `k == 0` panel contributes no bundles.
+    pub fn encode_csr_with_panel(
+        &mut self,
+        m: &Csr,
+        x: &[Val],
+        k: usize,
+        bundle_size: usize,
+    ) -> usize {
+        assert!(bundle_size > 0, "bundle_size must be positive");
+        assert_eq!(x.len(), m.ncols * k, "X panel shape mismatch");
+        self.clear();
+        let panel_chains = if k == 0 { 0 } else { m.ncols };
+        let nb = chain_bundle_count_csr(m, bundle_size)
+            + panel_chains * k.div_ceil(bundle_size.max(1)).max(1);
+        self.reserve_for(nb, m.nnz() + m.ncols * k);
+        for i in 0..m.nrows {
+            self.push_chain(i as Idx, m.row_cols(i), m.row_vals(i), bundle_size);
+        }
+        let boundary = self.n_bundles();
+        if k > 0 {
+            // lane indices are shared by every panel row chain
+            let lanes: Vec<Idx> = (0..k as Idx).collect();
+            for r in 0..m.ncols {
+                let before = self.n_bundles();
+                self.push_chain(r as Idx, &lanes, &x[r * k..(r + 1) * k], bundle_size);
+                for f in &mut self.flags[before..] {
+                    *f = f.with(BundleFlags::DENSE_PANEL);
+                }
+            }
+        }
+        self.mark_end_of_stream();
+        boundary
+    }
+
     /// Encode only the selected rows of a CSR matrix, in the given order
     /// (cleared first) — the SpGEMM scheduler's B-row stream of a wave
     /// (paper Fig 3(d)). No `END_OF_STREAM`: wave streams concatenate.
@@ -656,6 +702,84 @@ mod tests {
                 assert!(s.bundle(bounds[j + 1] - 1).flags.end_of_stream(), "job {j}");
             }
         }
+    }
+
+    // ---- dense-panel (SpMM) streams ----
+
+    #[test]
+    fn panel_segment_follows_sparse_prefix() {
+        let m = gen::power_law(12, 120, 31);
+        let k = 5usize;
+        let x: Vec<f32> = (0..m.ncols * k).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut s = BundleStream::new();
+        let boundary = s.encode_csr_with_panel(&m, &x, k, 8);
+        // sparse prefix is exactly the plain CSR encode (minus the stream
+        // terminator, which moved to the panel's last bundle)
+        let mut plain = BundleStream::new();
+        plain.encode_csr(&m, 8);
+        assert_eq!(boundary, plain.n_bundles());
+        for i in 0..boundary {
+            let (got, want) = (s.bundle(i), plain.bundle(i));
+            assert!(!got.flags.dense_panel(), "sparse bundle {i} mis-flagged");
+            assert_eq!(got.shared, want.shared);
+            assert_eq!(got.cols, want.cols);
+            assert_eq!(got.vals, want.vals);
+            assert_eq!(got.flags.end_of_row(), want.flags.end_of_row());
+            assert!(!got.flags.end_of_stream());
+        }
+        // panel segment: one chain per X row, lanes 0..k, flagged
+        let mut r = 0usize;
+        for i in boundary..s.n_bundles() {
+            let b = s.bundle(i);
+            assert!(b.flags.dense_panel(), "panel bundle {i} unflagged");
+            assert_eq!(b.shared as usize, r);
+            if b.flags.end_of_row() {
+                r += 1;
+            }
+        }
+        assert_eq!(r, m.ncols, "one panel chain per X row");
+        assert!(s.bundle(s.n_bundles() - 1).flags.end_of_stream());
+    }
+
+    #[test]
+    fn panel_rows_split_when_k_exceeds_bundle() {
+        let m = gen::random_uniform(4, 6, 10, 32);
+        let k = 7usize;
+        let x: Vec<f32> = (0..m.ncols * k).map(|i| (i % 9) as f32).collect();
+        let mut s = BundleStream::new();
+        let boundary = s.encode_csr_with_panel(&m, &x, k, 3); // 3+3+1 per row
+        let panel_bundles = s.n_bundles() - boundary;
+        assert_eq!(panel_bundles, m.ncols * 3);
+        for r in 0..m.ncols {
+            let b = s.bundle(boundary + 3 * r);
+            assert_eq!(b.cols, &[0, 1, 2]);
+            assert_eq!(b.vals, &x[r * k..r * k + 3]);
+            assert!(!b.flags.end_of_row());
+            assert!(s.bundle(boundary + 3 * r + 2).flags.end_of_row());
+        }
+    }
+
+    #[test]
+    fn zero_width_panel_degenerates_to_plain_encode() {
+        let m = gen::power_law(10, 80, 33);
+        let mut s = BundleStream::new();
+        let boundary = s.encode_csr_with_panel(&m, &[], 0, 16);
+        let mut plain = BundleStream::new();
+        plain.encode_csr(&m, 16);
+        assert_eq!(boundary, s.n_bundles());
+        assert_eq!(s, plain);
+    }
+
+    #[test]
+    fn empty_matrix_with_panel_is_panel_only() {
+        let m = crate::sparse::Csr::new(0, 4);
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut s = BundleStream::new();
+        let boundary = s.encode_csr_with_panel(&m, &x, 2, 16);
+        assert_eq!(boundary, 0);
+        assert_eq!(s.n_bundles(), 4);
+        assert!(s.iter().all(|b| b.flags.dense_panel()));
+        assert!(s.bundle(3).flags.end_of_stream());
     }
 
     #[test]

@@ -94,6 +94,27 @@ pub fn segment_arena_bytes(s: &super::encode::BundleStream, lo: usize, hi: usize
     segment_arena_words(s, lo, hi) * WORD_BYTES
 }
 
+/// Number of 32-bit words the dense-panel segment of an SpMM stream
+/// occupies in DRAM (see
+/// [`BundleStream::encode_csr_with_panel`](super::encode::BundleStream::encode_csr_with_panel)):
+/// one chain per panel row, `ceil(k / bundle_size)` bundles per chain at
+/// 2 header words each, plus 2 words per element — the same data-bundle
+/// layout as the sparse stream, `k` elements per row. Zero when `k == 0`
+/// (a zero-width panel contributes no bundles). Cross-checked against the
+/// real encoder in the tests below.
+pub fn dense_panel_words(nrows: usize, k: usize, bundle_size: usize) -> usize {
+    assert!(bundle_size > 0, "bundle_size must be positive");
+    if k == 0 {
+        return 0;
+    }
+    nrows * (2 * k.div_ceil(bundle_size) + 2 * k)
+}
+
+/// Bytes the dense-panel segment occupies in DRAM.
+pub fn dense_panel_bytes(nrows: usize, k: usize, bundle_size: usize) -> usize {
+    dense_panel_words(nrows, k, bundle_size) * WORD_BYTES
+}
+
 /// Serialize a flat bundle arena into the DRAM word layout — identical
 /// output to [`serialize`] over the boxed form, with no per-bundle
 /// indirection.
@@ -306,6 +327,58 @@ mod tests {
             segment_arena_bytes(&s, bounds[1], bounds[2]),
             stream_arena_bytes(&solo)
         );
+    }
+
+    #[test]
+    fn dense_panel_words_match_real_encode() {
+        let m = gen::power_law(20, 250, 9);
+        for (k, bs) in [(4usize, 32usize), (8, 32), (7, 3), (0, 16)] {
+            let x: Vec<f32> = (0..m.ncols * k).map(|i| i as f32 * 0.1).collect();
+            let mut s = crate::rir::encode::BundleStream::new();
+            let boundary = s.encode_csr_with_panel(&m, &x, k, bs);
+            assert_eq!(
+                segment_arena_words(&s, boundary, s.n_bundles()),
+                dense_panel_words(m.ncols, k, bs),
+                "k {k} bs {bs}"
+            );
+            // sparse prefix + panel segment partition the whole stream
+            assert_eq!(
+                segment_arena_words(&s, 0, boundary)
+                    + segment_arena_words(&s, boundary, s.n_bundles()),
+                stream_arena_words(&s)
+            );
+            // serialized length agrees with the arithmetic
+            assert_eq!(serialize_stream(&s).len(), stream_arena_words(&s));
+        }
+    }
+
+    /// Pins the word-layout formulas documented in ARCHITECTURE.md §"RIR
+    /// wire format" — if this test moves, the spec must move with it.
+    #[test]
+    fn architecture_md_wire_format_accounting() {
+        // data bundle: metadata word + shared word + 2 words per element
+        let data = Bundle::data(7, vec![1, 2, 3], vec![0.5, 1.5, 2.5], BundleFlags::default());
+        assert_eq!(bundle_words(&data), 2 + 2 * 3);
+        // schedule (RL) bundle: metadata + shared + 3 words per triple
+        let sched = Bundle::schedule(
+            4,
+            vec![RlTriple { row: 1, start: 0, end: 9 }; 2],
+            BundleFlags::default(),
+        );
+        assert_eq!(bundle_words(&sched), 2 + 3 * 2);
+        // metadata word packing: element count in bits 8.., flags in 0..8
+        let words = serialize(std::slice::from_ref(&data));
+        assert_eq!(words[0] >> 8, 3, "count field");
+        assert_eq!(words[0] & 0xff, data.flags.0 as u32, "flags field");
+        assert_eq!(words[1], 7, "shared-feature word");
+        // value words are IEEE-754 bit patterns
+        assert_eq!(words[3], 0.5f32.to_bits());
+        // arena accounting: 2 words per bundle + 2 per element, 4 bytes/word
+        let m = gen::power_law(15, 120, 2);
+        let s = crate::rir::encode::BundleStream::from_csr(&m, 8);
+        assert_eq!(stream_arena_words(&s), 2 * s.n_bundles() + 2 * s.n_elems());
+        assert_eq!(stream_arena_bytes(&s), stream_arena_words(&s) * 4);
+        assert_eq!(WORD_BYTES, 4);
     }
 
     #[test]

@@ -9,14 +9,27 @@
 //! carry pure scheduling information (`RL` triples telling the FPGA where
 //! each needed row of L lives in its memory).
 //!
-//! * [`bundle`] — the bundle type and flags.
+//! * [`bundle`] — the bundle type and flags (including the SpMM
+//!   dense-panel flag).
 //! * [`encode`] — CSR/CSC → bundles (including big-row splitting); the
 //!   hot path is the allocation-free [`encode::BundleStream`] SoA arena.
-//! * [`decode`] — bundles → CSR (the paper's `decompress` routine).
+//!   Three stream shapes exist: single-matrix, job-segmented
+//!   (multi-tenant, [`encode::BundleStream::encode_csr_jobs`]) and
+//!   sparse + dense-panel (SpMM,
+//!   [`encode::BundleStream::encode_csr_with_panel`]).
+//! * [`decode`] — bundles → CSR (the paper's `decompress` routine), plus
+//!   per-tenant segment extraction and dense-panel reassembly.
 //! * [`layout`] — the flat DRAM word stream of Fig 3(d) and its byte
 //!   accounting (drives the simulator's bandwidth model).
 //! * [`schedule`] — wave scheduling of bundles onto pipelines (the CPU's
-//!   "scheduling decisions" of Fig 3).
+//!   "scheduling decisions" of Fig 3), single-job and multi-tenant
+//!   batched.
+//!
+//! The serialized word layout, the arena invariants and the wave-schedule
+//! invariants (monotone B-streams, bit-identical decompose/replay,
+//! thread-invariance) are specified in `ARCHITECTURE.md` — the
+//! wire-format section is cross-checked against this module's byte
+//! accounting by `layout`'s unit tests.
 
 pub mod bundle;
 pub mod decode;

@@ -430,6 +430,20 @@ fn build_batch_wave_band(
 
 /// Build the wave schedule for `C = A × B` with the default worker count
 /// (`REAP_CPU_THREADS` or the host parallelism, capped at 16).
+///
+/// ```
+/// use reap::rir::schedule::schedule_spgemm;
+/// use reap::sparse::gen;
+///
+/// let a = gen::random_uniform(64, 64, 600, 1);
+/// let s = schedule_spgemm(&a, &a, 8, 32);
+/// // every wave holds at most `pipelines` chunks, and its B-stream is the
+/// // sorted, deduped union of the wave's A columns
+/// assert!(s.waves.iter().all(|w| w.assignments.len() <= 8));
+/// assert!(s.waves.iter().all(|w| w.b_rows.windows(2).all(|p| p[0] < p[1])));
+/// // one measured CPU cost per wave drives the overlap pipeline
+/// assert_eq!(s.wave_cpu_s.len(), s.n_waves());
+/// ```
 pub fn schedule_spgemm(a: &Csr, b: &Csr, pipelines: usize, bundle_size: usize) -> SpgemmSchedule {
     schedule_spgemm_with_threads(a, b, pipelines, bundle_size, preprocess_threads())
 }

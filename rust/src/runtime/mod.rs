@@ -4,7 +4,8 @@
 //! This is the boundary that keeps Python off the request path: `make
 //! artifacts` runs JAX once at build time; afterwards the `reap` binary is
 //! self-contained — [`artifacts`] locates and fingerprints the HLO text,
-//! [`client`] compiles it on the PJRT CPU client, and [`exec`] marshals
+//! `client` (compiled only with the `xla` feature) compiles it on the
+//! PJRT CPU client, and [`exec`] marshals
 //! RIR-padded buffers in and results out (the role the FPGA's input/output
 //! controllers play in the paper).
 //!

@@ -1,4 +1,4 @@
-//! Stand-in for [`super::client`] when the crate is built without the
+//! Stand-in for `super::client` when the crate is built without the
 //! `xla` feature: the same API surface, every entry point failing with a
 //! clear message instead of reaching PJRT. Keeps the coordinators, CLI and
 //! tests compiling on images whose crate cache lacks the `xla` closure.

@@ -1,0 +1,137 @@
+//! Integration tests for the SpMM multi-vector path: the acceptance
+//! criteria of the workload — bit-identity to k independent SpMVs across
+//! thread counts, strictly-fewer simulated cycles than k serial SpMV runs
+//! on the wide designs for k ∈ {4, 8}, the per-wave trace contract, and
+//! the combined sparse + dense-panel RIR stream.
+
+use reap::coordinator::spmm::numeric_spmm;
+use reap::coordinator::{ReapSpmm, ReapSpmv};
+use reap::fpga::spgemm_sim::Style;
+use reap::fpga::spmm_sim::simulate_spmm;
+use reap::fpga::spmv_sim::simulate_spmv;
+use reap::fpga::FpgaConfig;
+use reap::kernels::{spmm, spmv};
+use reap::rir::schedule::schedule_spgemm;
+use reap::rir::{decode, layout, BundleStream};
+use reap::sparse::{gen, Csr, Val};
+
+fn panel(ncols: usize, k: usize, seed: u64) -> Vec<Val> {
+    (0..ncols * k)
+        .map(|i| (((i as u64).wrapping_mul(seed | 1) % 29) as f32 - 14.0) * 0.125)
+        .collect()
+}
+
+#[test]
+fn spmm_bit_identical_to_k_spmvs_across_thread_counts() {
+    let a = gen::power_law(300, 5000, 71);
+    for k in [4usize, 8] {
+        let x = panel(a.ncols, k, 71);
+        let cfg = FpgaConfig::reap64_spgemm();
+        let schedule =
+            schedule_spgemm(&a, &Csr::new(a.ncols, a.ncols), cfg.pipelines, cfg.bundle_size);
+        let base = numeric_spmm(&a, &x, k, &schedule, 1);
+        for t in [2usize, 4, 8] {
+            assert_eq!(numeric_spmm(&a, &x, k, &schedule, t), base, "k {k} threads {t}");
+        }
+        // column j == independent SpMV, bit for bit
+        for j in 0..k {
+            let xj: Vec<Val> = x.iter().skip(j).step_by(k).copied().collect();
+            let yj = spmv(&a, &xj);
+            for i in 0..a.nrows {
+                assert_eq!(base[i * k + j], yj[i], "k {k} col {j} row {i}");
+            }
+        }
+        // the kernel reference agrees too
+        assert_eq!(base, spmm(&a, &x, k), "k {k} kernel");
+    }
+}
+
+#[test]
+fn spmm_sim_strictly_beats_k_spmv_runs_on_wide_designs() {
+    let a = gen::banded_fem(800, 7200, 73);
+    for cfg in [FpgaConfig::reap64_spgemm(), FpgaConfig::reap128_spgemm()] {
+        let schedule =
+            schedule_spgemm(&a, &Csr::new(a.ncols, a.ncols), cfg.pipelines, cfg.bundle_size);
+        let one = simulate_spmv(&a, &schedule, &cfg, Style::HandCoded);
+        for k in [4usize, 8] {
+            let wide = simulate_spmm(&a, &schedule, &cfg, Style::HandCoded, k);
+            assert!(
+                wide.stats.cycles < one.stats.cycles * k as u64,
+                "{} k {k}: {} cycles !< {}",
+                cfg.name,
+                wide.stats.cycles,
+                one.stats.cycles * k as u64
+            );
+            assert!(
+                wide.stats.bytes_read < one.stats.bytes_read * k as u64,
+                "{} k {k}: A-stream traffic must amortize",
+                cfg.name
+            );
+        }
+    }
+}
+
+#[test]
+fn spmm_coordinator_end_to_end_matches_spmv_coordinator() {
+    let a = gen::random_uniform(250, 250, 3500, 79);
+    let k = 8usize;
+    let x = panel(a.ncols, k, 79);
+    for cfg in [FpgaConfig::reap64_spgemm(), FpgaConfig::reap128_spgemm()] {
+        let rep = ReapSpmm::new(cfg.clone()).run(&a, &x, k).unwrap();
+        let mut serial_total = 0.0f64;
+        for j in 0..k {
+            let xj: Vec<Val> = x.iter().skip(j).step_by(k).copied().collect();
+            let solo = ReapSpmv::new(cfg.clone()).run(&a, &xj).unwrap();
+            serial_total += solo.total_s;
+            for i in 0..a.nrows {
+                assert_eq!(rep.c[i * k + j], solo.y[i], "{} col {j}", cfg.name);
+            }
+        }
+        assert!(rep.total_s > 0.0 && serial_total > 0.0);
+        assert!(rep.fpga_s > 0.0);
+    }
+}
+
+// the per-wave trace contract (see tests/integration_batch.rs for the
+// other coordinators): the SpMM coordinator pads the CPU trace with zeros
+// for replayed blocks, so both traces are block-major and equal-length
+#[test]
+fn spmm_coordinator_traces_equal_length() {
+    let a = gen::power_law(150, 2000, 83);
+    let cfg = FpgaConfig::reap64_spgemm();
+    let schedule =
+        schedule_spgemm(&a, &Csr::new(a.ncols, a.ncols), cfg.pipelines, cfg.bundle_size);
+    for k in [4usize, 8, 20] {
+        let sim = simulate_spmm(&a, &schedule, &cfg, Style::HandCoded, k);
+        let n_blocks = k.div_ceil(cfg.vector_lanes);
+        assert_eq!(sim.wave_cycles.len(), n_blocks * schedule.n_waves(), "k {k}");
+        // the padded CPU trace the coordinator builds has the same length
+        let mut cpu = schedule.wave_cpu_s.clone();
+        cpu.resize(sim.wave_cycles.len(), 0.0);
+        assert_eq!(cpu.len(), sim.wave_cycles.len(), "k {k}");
+    }
+}
+
+#[test]
+fn combined_sparse_and_panel_stream_roundtrips_through_dram_words() {
+    let a = gen::power_law(40, 500, 89);
+    let k = 5usize;
+    let x = panel(a.ncols, k, 89);
+    let mut s = BundleStream::new();
+    let boundary = s.encode_csr_with_panel(&a, &x, k, 8);
+    // byte accounting: sparse prefix + panel segment partition the stream
+    assert_eq!(
+        layout::segment_arena_words(&s, boundary, s.n_bundles()),
+        layout::dense_panel_words(a.ncols, k, 8)
+    );
+    // through the DRAM word layout and back: the sparse half is A, the
+    // panel half is X, both exact
+    let words = layout::serialize_stream(&s);
+    let bundles = layout::deserialize(&words).unwrap();
+    assert_eq!(decode::bundles_to_csr(&bundles, a.nrows, a.ncols).unwrap(), a);
+    assert_eq!(decode::stream_to_csr(&s, a.nrows, a.ncols).unwrap(), a);
+    assert_eq!(
+        decode::stream_panel_to_dense(&s, boundary, s.n_bundles(), a.ncols, k).unwrap(),
+        x
+    );
+}

@@ -44,6 +44,121 @@ fn prop_rir_roundtrip_through_dram_words() {
     });
 }
 
+/// Every `BundleStream` encoder round-trips through the serialized DRAM
+/// word layout: single-matrix, job-segmented (multi-tenant) and
+/// sparse + dense-panel (SpMM) streams all deserialize back to their
+/// sources — including empty matrices, empty jobs and zero-width panels.
+#[test]
+fn prop_stream_encoders_roundtrip_through_dram_words() {
+    check("stream encoders roundtrip", Config { cases: 24, ..Config::default() }, |rng, size| {
+        let bundle = 1 + rng.range(0, 40);
+
+        // ---- single-matrix encode (empty matrix at case boundary) ----
+        let m = if rng.range(0, 8) == 0 {
+            Csr::new(0, 3)
+        } else {
+            random_matrix(rng, size)
+        };
+        let s = encode::BundleStream::from_csr(&m, bundle);
+        let back = decode::bundles_to_csr(
+            &layout::deserialize(&layout::serialize_stream(&s)).unwrap(),
+            m.nrows,
+            m.ncols,
+        )
+        .unwrap();
+        assert_eq!(back, m, "single-matrix");
+        assert_eq!(decode::stream_to_csr(&s, m.nrows, m.ncols).unwrap(), m);
+
+        // ---- job-segmented encode (with a possibly-empty tenant) ----
+        let mut jobs: Vec<Csr> = (0..1 + rng.range(0, 3))
+            .map(|_| random_matrix(rng, size))
+            .collect();
+        if rng.range(0, 2) == 1 {
+            jobs.insert(rng.range(0, jobs.len() + 1), Csr::new(0, 2)); // empty job
+        }
+        let refs: Vec<&Csr> = jobs.iter().collect();
+        let mut seg = encode::BundleStream::new();
+        let bounds = seg.encode_csr_jobs(&refs, bundle);
+        let words = layout::serialize_stream(&seg);
+        assert_eq!(words.len(), layout::stream_arena_words(&seg));
+        assert_eq!(layout::deserialize(&words).unwrap(), seg.to_bundles());
+        for (j, m) in jobs.iter().enumerate() {
+            let back =
+                decode::stream_segment_to_csr(&seg, bounds[j], bounds[j + 1], m.nrows, m.ncols)
+                    .unwrap();
+            assert_eq!(&back, m, "job {j}");
+        }
+
+        // ---- sparse + dense-panel encode (zero-width panel included) ----
+        let a = random_matrix(rng, size);
+        let k = rng.range(0, 12);
+        let x: Vec<f32> = (0..a.ncols * k)
+            .map(|i| ((i * 7 + 3) % 19) as f32 - 9.0)
+            .collect();
+        let mut ps = encode::BundleStream::new();
+        let boundary = ps.encode_csr_with_panel(&a, &x, k, bundle);
+        let pwords = layout::serialize_stream(&ps);
+        let pback = decode::bundles_to_csr(
+            &layout::deserialize(&pwords).unwrap(),
+            a.nrows,
+            a.ncols,
+        )
+        .unwrap();
+        assert_eq!(pback, a, "panel stream: sparse half");
+        assert_eq!(decode::stream_to_csr(&ps, a.nrows, a.ncols).unwrap(), a);
+        assert_eq!(
+            decode::stream_panel_to_dense(&ps, boundary, ps.n_bundles(), a.ncols, k).unwrap(),
+            x,
+            "panel stream: dense half"
+        );
+        assert_eq!(
+            layout::segment_arena_words(&ps, boundary, ps.n_bundles()),
+            layout::dense_panel_words(a.ncols, k, bundle)
+        );
+    });
+}
+
+/// SpMM invariants: every column of the scheduled multi-vector replay is
+/// bit-identical to an independent SpMV, for arbitrary k, geometry and
+/// worker counts; the simulator conserves flops = 2·nnz·k.
+#[test]
+fn prop_spmm_columns_bit_identical_to_spmv() {
+    use reap::coordinator::spmm::numeric_spmm;
+    use reap::fpga::spmm_sim::simulate_spmm;
+    check("spmm == k spmvs", Config { cases: 20, ..Config::default() }, |rng, size| {
+        let a = random_matrix(rng, size);
+        let k = 1 + rng.range(0, 12);
+        let x: Vec<f32> = (0..a.ncols * k)
+            .map(|i| ((i * 5 + 1) % 13) as f32 - 6.0)
+            .collect();
+        let mut cfg = FpgaConfig::reap32_spgemm();
+        cfg.pipelines = 1 + rng.range(0, 48);
+        cfg.bundle_size = 1 + rng.range(0, 40);
+        cfg.vector_lanes = 1 + rng.range(0, 10);
+        let s = schedule::schedule_spgemm(
+            &a,
+            &Csr::new(a.ncols, a.ncols),
+            cfg.pipelines,
+            cfg.bundle_size,
+        );
+        let c = numeric_spmm(&a, &x, k, &s, 1 + rng.range(0, 8));
+        for j in 0..k {
+            let xj: Vec<f32> = x.iter().skip(j).step_by(k).copied().collect();
+            let yj = reap::kernels::spmv(&a, &xj);
+            for i in 0..a.nrows {
+                assert_eq!(c[i * k + j], yj[i], "col {j} row {i}");
+            }
+        }
+        let r = simulate_spmm(&a, &s, &cfg, Style::HandCoded, k);
+        assert_eq!(r.stats.flops as usize, 2 * a.nnz() * k);
+        assert_eq!(r.wave_cycles.len(), r.n_blocks * s.n_waves());
+        assert_eq!(
+            r.panel_load_cycles + r.wave_cycles.iter().sum::<u64>(),
+            r.stats.cycles
+        );
+    });
+}
+
 /// Scheduling covers every nonzero exactly once, never overfills a wave,
 /// and every wave's B-stream is exactly the union of its A columns.
 #[test]

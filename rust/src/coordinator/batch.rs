@@ -16,6 +16,7 @@
 
 use anyhow::{ensure, Result};
 
+use crate::fpga::engine::execute_waves_at_depth;
 use crate::fpga::spgemm_sim::{simulate_spgemm_batch, JobSimStats, Style};
 use crate::fpga::{FpgaConfig, SimStats};
 use crate::kernels::spgemm_parallel::SpaScratch;
@@ -59,8 +60,13 @@ pub struct ReapBatchReport {
     /// Measured CPU preprocessing seconds for the whole batch (shared
     /// chunk enumeration + shared-wave building).
     pub cpu_preprocess_s: f64,
-    /// Aggregate simulated FPGA statistics over the shared waves.
+    /// Aggregate simulated FPGA statistics over the shared waves (at the
+    /// configured channel depth).
     pub fpga_sim: SimStats,
+    /// The same shared-wave run on the serial depth-1 channel.
+    pub fpga_sim_serial: SimStats,
+    /// The same run on the double-buffered depth-2 channel.
+    pub fpga_sim_db: SimStats,
     /// Per-job simulated attribution (cycles held, flops, traffic).
     pub job_sim: Vec<JobSimStats>,
     /// Bytes of each job's A-side RIR stream segment in the shared arena.
@@ -78,6 +84,7 @@ impl ReapBatch {
 
     /// Run the full batched flow for N independent jobs.
     pub fn run(&self, jobs: &[(Csr, Csr)]) -> Result<ReapBatchReport> {
+        self.cfg.validate()?;
         for (j, (a, b)) in jobs.iter().enumerate() {
             ensure!(a.ncols == b.nrows, "job {j}: inner dimensions disagree");
         }
@@ -116,10 +123,22 @@ impl ReapBatch {
         let total_s =
             schedule.prep_cpu_s + pipelined_total(&schedule.wave_cpu_s, &fpga_wave_s);
 
+        let depth_stats = |d: usize| {
+            if self.cfg.dram_buffer_depth == d {
+                sim.stats.clone()
+            } else {
+                execute_waves_at_depth(&sim.costs, &self.cfg, d).stats
+            }
+        };
+        let fpga_sim_serial = depth_stats(1);
+        let fpga_sim_db = depth_stats(2);
+
         Ok(ReapBatchReport {
             outputs,
             cpu_preprocess_s,
             fpga_sim: sim.stats,
+            fpga_sim_serial,
+            fpga_sim_db,
             job_sim: sim.job_stats,
             a_stream_bytes,
             fpga_s,

@@ -9,6 +9,7 @@
 use anyhow::{ensure, Context, Result};
 
 use crate::fpga::cholesky_sim::simulate_cholesky;
+use crate::fpga::engine::execute_waves_at_depth;
 use crate::fpga::spgemm_sim::Style;
 use crate::fpga::{FpgaConfig, SimStats};
 use crate::kernels::cholesky::{cholesky_numeric, CholeskyFactor};
@@ -33,8 +34,15 @@ pub struct ReapCholeskyReport {
     pub factor: CholeskyFactor,
     /// Measured CPU symbolic-analysis seconds (etree + pattern + bundles).
     pub cpu_symbolic_s: f64,
-    /// Simulated FPGA statistics.
+    /// Simulated FPGA statistics (at the configured channel depth).
     pub fpga_sim: SimStats,
+    /// The same run on the serial depth-1 channel.
+    pub fpga_sim_serial: SimStats,
+    /// The same run on the double-buffered depth-2 channel. Cholesky's
+    /// column stream is `dependent_stream` (column *k+1* reads column
+    /// *k*'s writeback), so this equals the serial stats today — reported
+    /// anyway so the `BENCH_*.json` schema is uniform across workloads.
+    pub fpga_sim_db: SimStats,
     /// Simulated FPGA seconds.
     pub fpga_s: f64,
     /// End-to-end seconds. The global analysis (etree + pattern + storage
@@ -58,6 +66,7 @@ impl<'rt> ReapCholesky<'rt> {
 
     /// Factorize the SPD matrix whose lower triangle is `a_lower`.
     pub fn run(&self, a_lower: &Csc) -> Result<ReapCholeskyReport> {
+        self.cfg.validate()?;
         // ---- CPU pass (measured): symbolic analysis + RIR/RL bundles ----
         let sym = CholeskySymbolic::analyze(a_lower, self.cfg.bundle_size);
         let cpu_symbolic_s = sym.analysis_s + sym.encode_s;
@@ -81,10 +90,22 @@ impl<'rt> ReapCholesky<'rt> {
         let fpga_col_s: Vec<f64> = sim.column_cycles.iter().map(|&cy| cy as f64 / hz).collect();
         let total_s = sym.analysis_s + pipelined_total(&sym.encode_col_s(), &fpga_col_s);
 
+        let depth_stats = |d: usize| {
+            if self.cfg.dram_buffer_depth == d {
+                sim.stats.clone()
+            } else {
+                execute_waves_at_depth(&sim.costs, &self.cfg, d).stats
+            }
+        };
+        let fpga_sim_serial = depth_stats(1);
+        let fpga_sim_db = depth_stats(2);
+
         Ok(ReapCholeskyReport {
             factor,
             cpu_symbolic_s,
             fpga_sim: sim.stats,
+            fpga_sim_serial,
+            fpga_sim_db,
             fpga_s,
             total_s,
         })

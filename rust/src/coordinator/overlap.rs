@@ -18,11 +18,13 @@
 //! **Equal-length trace contract:** every coordinator hands
 //! [`pipelined_total`] exactly one CPU cost and one FPGA cost per wave —
 //! two non-empty traces of different lengths mean mis-wired
-//! instrumentation (the call computes a well-defined result but logs a
-//! warning; `tests/integration_batch.rs` and `tests/integration_spmm.rs`
-//! pin the contract for all five coordinators). Coordinators that replay
-//! waves with no new CPU work (SpMM's later column blocks) pad the CPU
-//! side with zeros to keep the traces aligned.
+//! instrumentation. Under debug assertions (and therefore in every test
+//! build) the skew is a hard error; release builds compute a well-defined
+//! result and log a warning (`tests/integration_batch.rs` and
+//! `tests/integration_spmm.rs` pin the contract for all five
+//! coordinators). Coordinators that replay waves with no new CPU work
+//! (SpMM's later column blocks) pad the CPU side with zeros to keep the
+//! traces aligned.
 
 /// End-to-end time of the per-wave CPU→FPGA pipeline.
 ///
@@ -43,9 +45,12 @@
 ///   phase and is accepted silently;
 /// * two *non-empty* traces of different lengths mean a coordinator
 ///   mis-wired its per-wave instrumentation — every coordinator produces
-///   one CPU cost and one FPGA cost per wave, so the computation proceeds
-///   (the shorter side contributes zero for its missing waves) but a
-///   warning is logged so the skew cannot hide in an aggregate total;
+///   one CPU cost and one FPGA cost per wave. Under debug assertions
+///   (so in every `cargo test` run) this is a **hard error**: a trace
+///   contract violation must fail the test that produced it, not scroll
+///   past as a log line. Release builds keep computing (the shorter side
+///   contributes zero for its missing waves) and log a warning so an
+///   aggregate production run completes;
 /// * a single wave degenerates to the serial sum `c₀ + f₀`;
 /// * all-zero CPU costs degenerate to the FPGA total (and vice versa).
 ///
@@ -56,12 +61,16 @@ pub fn pipelined_total(cpu_wave_s: &[f64], fpga_wave_s: &[f64]) -> f64 {
         && !cpu_wave_s.is_empty()
         && !fpga_wave_s.is_empty()
     {
-        eprintln!(
-            "warning: pipelined_total: mismatched wave traces (cpu {} vs fpga {}) — \
+        let msg = format!(
+            "pipelined_total: mismatched wave traces (cpu {} vs fpga {}) — \
              a coordinator is mis-wiring its per-wave instrumentation",
             cpu_wave_s.len(),
             fpga_wave_s.len()
         );
+        if cfg!(debug_assertions) {
+            panic!("{msg}");
+        }
+        eprintln!("warning: {msg}");
     }
     let n = cpu_wave_s.len().max(fpga_wave_s.len());
     let mut cpu_done = 0.0f64;
@@ -179,16 +188,23 @@ mod tests {
     }
 
     #[test]
-    fn mismatched_lengths_tolerated_but_warned() {
-        // FPGA trace longer than CPU trace: missing CPU waves cost zero
-        // (the call logs a mis-wiring warning to stderr — the value is
-        // still well-defined so an aggregate run completes)
-        assert!((pipelined_total(&[1.0], &[0.5, 0.5, 0.5]) - 2.5).abs() < 1e-12);
-        // CPU trace longer: trailing CPU work still serializes
-        assert!((pipelined_total(&[1.0, 1.0], &[0.1]) - 2.0).abs() < 1e-12);
-        // degenerate one-sided traces are legitimate phases, not skew
+    fn one_sided_traces_are_phases_not_skew() {
+        // degenerate one-sided traces are legitimate CPU-only/FPGA-only
+        // phases and never trip the trace contract
         assert_eq!(pipelined_total(&[], &[2.0, 3.0]), 5.0);
         assert_eq!(pipelined_total(&[2.0, 3.0], &[]), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched wave traces")]
+    fn mismatched_fpga_longer_is_a_hard_error_in_debug() {
+        let _ = pipelined_total(&[1.0], &[0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched wave traces")]
+    fn mismatched_cpu_longer_is_a_hard_error_in_debug() {
+        let _ = pipelined_total(&[1.0, 1.0], &[0.1]);
     }
 
     #[test]

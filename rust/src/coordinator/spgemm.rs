@@ -9,6 +9,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::fpga::engine::execute_waves_at_depth;
 use crate::fpga::spgemm_sim::{simulate_spgemm, Style};
 use crate::fpga::{FpgaConfig, SimStats};
 use crate::kernels::spgemm_parallel::{flop_balanced_ranges, stitch_bands, Band, SpaScratch};
@@ -35,8 +36,15 @@ pub struct ReapSpgemmReport {
     /// Measured CPU preprocessing (RIR scheduling) seconds — the
     /// chunk-enumeration prologue plus every wave's scheduling cost.
     pub cpu_preprocess_s: f64,
-    /// Simulated FPGA statistics.
+    /// Simulated FPGA statistics (at the configured
+    /// [`FpgaConfig::dram_buffer_depth`]).
     pub fpga_sim: SimStats,
+    /// The same run re-executed on the serial depth-1 channel (the
+    /// pre-refactor baseline) — reported side by side in `BENCH_*.json`.
+    pub fpga_sim_serial: SimStats,
+    /// The same run on the double-buffered depth-2 channel (wave *k+1*'s
+    /// stream prefetches under wave *k*'s compute).
+    pub fpga_sim_db: SimStats,
     /// Simulated FPGA seconds at the design's clock.
     pub fpga_s: f64,
     /// End-to-end seconds under per-wave double-buffered CPU/FPGA
@@ -59,6 +67,7 @@ impl<'rt> ReapSpgemm<'rt> {
 
     /// Run the full REAP flow for `C = A × B`.
     pub fn run(&self, a: &Csr, b: &Csr) -> Result<ReapSpgemmReport> {
+        self.cfg.validate()?;
         // ---- CPU pass (measured, per-wave timestamps) ----
         let schedule = schedule_spgemm(a, b, self.cfg.pipelines, self.cfg.bundle_size);
         let cpu_preprocess_s = schedule.cpu_total_s();
@@ -84,7 +93,27 @@ impl<'rt> ReapSpgemm<'rt> {
         let total_s =
             schedule.prep_cpu_s + pipelined_total(&schedule.wave_cpu_s, &fpga_wave_s);
 
-        Ok(ReapSpgemmReport { c, cpu_preprocess_s, fpga_sim: sim.stats, fpga_s, total_s })
+        // serial vs double-buffered channel, from the same cost sequence
+        // (reusing the primary stats when the configured depth matches)
+        let depth_stats = |d: usize| {
+            if self.cfg.dram_buffer_depth == d {
+                sim.stats.clone()
+            } else {
+                execute_waves_at_depth(&sim.costs, &self.cfg, d).stats
+            }
+        };
+        let fpga_sim_serial = depth_stats(1);
+        let fpga_sim_db = depth_stats(2);
+
+        Ok(ReapSpgemmReport {
+            c,
+            cpu_preprocess_s,
+            fpga_sim: sim.stats,
+            fpga_sim_serial,
+            fpga_sim_db,
+            fpga_s,
+            total_s,
+        })
     }
 }
 
@@ -357,6 +386,41 @@ mod tests {
         let serial = rep.cpu_preprocess_s + rep.fpga_s;
         assert!(rep.total_s <= serial + 1e-9);
         assert!(rep.total_s >= rep.cpu_preprocess_s.max(rep.fpga_s) - 1e-9);
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        let a = gen::random_uniform(20, 20, 60, 1);
+        for bad in [
+            FpgaConfig { pipelines: 0, ..FpgaConfig::reap32_spgemm() },
+            FpgaConfig { vector_lanes: 0, ..FpgaConfig::reap32_spgemm() },
+            FpgaConfig { dram_buffer_depth: 0, ..FpgaConfig::reap32_spgemm() },
+        ] {
+            assert!(ReapSpgemm::new(bad).run(&a, &a).is_err());
+        }
+    }
+
+    #[test]
+    fn report_carries_serial_and_double_buffered_stats() {
+        let a = gen::power_law(200, 3600, 9);
+        let rep = ReapSpgemm::new(FpgaConfig::reap64_spgemm()).run(&a, &a).unwrap();
+        // the default depth is 1, so the primary stats ARE the serial ones
+        assert_eq!(rep.fpga_sim, rep.fpga_sim_serial);
+        assert_eq!(rep.fpga_sim_serial.prefetch_hidden_cycles, 0);
+        // double buffering hides the per-wave CAM setup on this multi-wave
+        // run: strictly fewer cycles, identical traffic
+        assert!(rep.fpga_sim_db.cycles < rep.fpga_sim_serial.cycles);
+        assert!(rep.fpga_sim_db.prefetch_hidden_cycles > 0);
+        assert_eq!(
+            rep.fpga_sim_db.cycles + rep.fpga_sim_db.prefetch_hidden_cycles,
+            rep.fpga_sim_serial.cycles
+        );
+        assert_eq!(rep.fpga_sim_db.bytes_read, rep.fpga_sim_serial.bytes_read);
+        assert_eq!(rep.fpga_sim_db.bytes_written, rep.fpga_sim_serial.bytes_written);
+        // running the coordinator AT depth 2 makes the prefetch primary
+        let cfg2 = FpgaConfig { dram_buffer_depth: 2, ..FpgaConfig::reap64_spgemm() };
+        let rep2 = ReapSpgemm::new(cfg2).run(&a, &a).unwrap();
+        assert_eq!(rep2.fpga_sim, rep.fpga_sim_db);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 
 use anyhow::{ensure, Result};
 
+use crate::fpga::engine::execute_waves_at_depth;
 use crate::fpga::spgemm_sim::Style;
 use crate::fpga::spmm_sim::simulate_spmm;
 use crate::fpga::{FpgaConfig, SimStats};
@@ -59,7 +60,13 @@ pub struct ReapSpmmReport {
     pub n_blocks: usize,
     /// Measured CPU preprocessing seconds — spent **once**, not per block.
     pub cpu_preprocess_s: f64,
+    /// Simulated FPGA statistics (at the configured channel depth).
     pub fpga_sim: SimStats,
+    /// The same run on the serial depth-1 channel.
+    pub fpga_sim_serial: SimStats,
+    /// The same run on the double-buffered depth-2 channel (block *b+1*'s
+    /// dense-panel load prefetches under block *b*'s compute).
+    pub fpga_sim_db: SimStats,
     pub fpga_s: f64,
     pub total_s: f64,
 }
@@ -71,6 +78,7 @@ impl ReapSpmm {
 
     /// Run `C = A X` where `x` is row-major `a.ncols × k`.
     pub fn run(&self, a: &Csr, x: &[Val], k: usize) -> Result<ReapSpmmReport> {
+        self.cfg.validate()?;
         ensure!(x.len() == a.ncols * k, "X panel shape mismatch");
         ensure!(k > 0, "SpMM needs at least one right-hand-side column");
 
@@ -98,12 +106,24 @@ impl ReapSpmm {
             + sim.panel_load_cycles as f64 / hz
             + pipelined_total(&cpu_wave_s, &fpga_wave_s);
 
+        let depth_stats = |d: usize| {
+            if self.cfg.dram_buffer_depth == d {
+                sim.stats.clone()
+            } else {
+                execute_waves_at_depth(&sim.costs, &self.cfg, d).stats
+            }
+        };
+        let fpga_sim_serial = depth_stats(1);
+        let fpga_sim_db = depth_stats(2);
+
         Ok(ReapSpmmReport {
             c,
             k,
             n_blocks: sim.n_blocks,
             cpu_preprocess_s,
             fpga_sim: sim.stats,
+            fpga_sim_serial,
+            fpga_sim_db,
             fpga_s,
             total_s,
         })

@@ -5,6 +5,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::fpga::engine::execute_waves_at_depth;
 use crate::fpga::spgemm_sim::Style;
 use crate::fpga::spmv_sim::simulate_spmv;
 use crate::fpga::{FpgaConfig, SimStats};
@@ -27,7 +28,12 @@ pub struct ReapSpmv<'rt> {
 pub struct ReapSpmvReport {
     pub y: Vec<Val>,
     pub cpu_preprocess_s: f64,
+    /// Simulated FPGA statistics (at the configured channel depth).
     pub fpga_sim: SimStats,
+    /// The same run on the serial depth-1 channel.
+    pub fpga_sim_serial: SimStats,
+    /// The same run on the double-buffered depth-2 channel.
+    pub fpga_sim_db: SimStats,
     pub fpga_s: f64,
     pub total_s: f64,
 }
@@ -45,6 +51,7 @@ impl<'rt> ReapSpmv<'rt> {
 
     /// Run y = A x.
     pub fn run(&self, a: &Csr, x: &[Val]) -> Result<ReapSpmvReport> {
+        self.cfg.validate()?;
         // CPU pass: chunk rows into bundles (the SpGEMM scheduler's wave
         // structure, with an empty B surrogate — x lives on-chip)
         let b_surrogate = Csr::new(a.ncols, a.ncols);
@@ -69,7 +76,24 @@ impl<'rt> ReapSpmv<'rt> {
         let total_s = schedule.prep_cpu_s
             + sim.x_load_cycles as f64 / hz
             + pipelined_total(&schedule.wave_cpu_s, &fpga_wave_s);
-        Ok(ReapSpmvReport { y, cpu_preprocess_s, fpga_sim: sim.stats, fpga_s, total_s })
+        let depth_stats = |d: usize| {
+            if self.cfg.dram_buffer_depth == d {
+                sim.stats.clone()
+            } else {
+                execute_waves_at_depth(&sim.costs, &self.cfg, d).stats
+            }
+        };
+        let fpga_sim_serial = depth_stats(1);
+        let fpga_sim_db = depth_stats(2);
+        Ok(ReapSpmvReport {
+            y,
+            cpu_preprocess_s,
+            fpga_sim: sim.stats,
+            fpga_sim_serial,
+            fpga_sim_db,
+            fpga_s,
+            total_s,
+        })
     }
 }
 

@@ -22,7 +22,7 @@
 use crate::symbolic::CholeskySymbolic;
 
 use super::config::FpgaConfig;
-use super::dram::DramModel;
+use super::engine::{execute_waves, Occupancy, WaveCost, WaveKind};
 use super::spgemm_sim::Style;
 use super::stats::SimStats;
 
@@ -32,6 +32,10 @@ pub struct CholeskySimResult {
     pub stats: SimStats,
     /// Cycles per column (diagnostics; shows the dependency serialization).
     pub column_cycles: Vec<u64>,
+    /// Engine cost sequence, one [`WaveCost`] per column (the engine's
+    /// "wave" is a column here; a column's inner pipeline waves are
+    /// pre-aggregated into its compute/occupancy fields).
+    pub costs: Vec<WaveCost>,
 }
 
 /// Intersection size of two ascending index slices (dot-product length).
@@ -60,9 +64,7 @@ pub fn simulate_cholesky(
     let n = sym.pattern.n;
     let p = cfg.pipelines as u64;
     let m = cfg.dot_multipliers as u64;
-    let mut stats = SimStats::default();
-    let mut dram = DramModel::default();
-    let mut column_cycles = Vec::with_capacity(n);
+    let mut costs = Vec::with_capacity(n);
 
     // adder-tree reduction latency for an m-wide multiplier bank
     let tree = (64 - (m.max(1) - 1).leading_zeros()) as u64 * cfg.add_latency;
@@ -104,7 +106,9 @@ pub fn simulate_cholesky(
         // broadcast of row k + RA bundle of column k (input controller)
         let broadcast = 2 + len_k + ra_bytes[k] / 8;
 
-        let mut compute: u64 = 0;
+        let mut wave_sum: u64 = 0;
+        let mut col_busy: u64 = 0;
+        let mut col_idle: u64 = 0;
         let mut row_bytes_total: u64 = 0;
         let mut matches_total: u64 = 0;
         // waves of `pipelines` rows; first row is the diagonal itself
@@ -136,44 +140,49 @@ pub fn simulate_cholesky(
                 wave_max = wave_max.max(pe);
                 row_bytes_total += row_r_head.len() as u64 * 8;
             }
-            compute += wave_max;
+            wave_sum += wave_max;
             let active = wave.len() as u64;
-            stats.busy_pipeline_cycles += active * wave_max;
-            stats.idle_pipeline_cycles += (p - active) * wave_max;
+            col_busy += active * wave_max;
+            col_idle += (p - active) * wave_max;
         }
-        compute += broadcast;
+        // the broadcast (row k + RA bundle) is the column's frontend
+        // setup — at depth >= 2 the input controller streams it while the
+        // previous column's div/sqrt units drain; the hand-coded design
+        // additionally overlaps it with the previous column's fixed tail
+        // even on the serial channel (the `prev_tail` credit)
+        let mut setup = broadcast;
         if style == Style::HandCoded {
-            // overlap this column's head with the previous column's tail
             let credit = prev_tail.min(broadcast);
-            compute -= credit;
+            setup -= credit;
             prev_tail = tree + cfg.div_latency;
         }
 
         // DRAM: broadcast row + per-pipeline L rows + RA + RL reads;
         // column result write-back (stays in FPGA DRAM for later columns).
         let read_bytes = len_k * 8 + row_bytes_total + ra_bytes[k] + rl_bytes[k];
-        let write_bytes = nk * 8;
-        let read_cy = dram.read(cfg, read_bytes);
-        let write_cy = dram.write(cfg, write_bytes);
-        let dram_cy = read_cy.max(write_cy);
-
-        let col_cy = compute.max(dram_cy).max(1);
-        if compute >= dram_cy {
-            stats.compute_bound_cycles += col_cy;
-        } else {
-            stats.dram_bound_cycles += col_cy;
-        }
-        stats.cycles += col_cy;
-        stats.waves += nk.div_ceil(p);
-        // useful flops: 2/mult-add per match (row dots), plus the diagonal
-        // dot once (2*len_k), one sqrt, nk-1 divides
-        stats.flops += 2 * matches_total + 2 * len_k + 1 + (nk - 1);
-        column_cycles.push(col_cy);
+        debug_assert_eq!(read_bytes % 4, 0, "RIR streams are word-aligned");
+        costs.push(WaveCost {
+            kind: WaveKind::Compute,
+            stream_words: read_bytes / 4,
+            setup_cycles: setup,
+            compute_cycles: wave_sum,
+            writeback_words: nk * 2,
+            // column k+1's L-row fetches include entries column k writes
+            // back — a RAW dependency through DRAM the channel must not
+            // prefetch across, so Cholesky's stream stays serial at every
+            // depth (the hand-coded `prev_tail` credit above remains the
+            // only cross-column overlap)
+            dependent_stream: true,
+            occupancy: Occupancy::Fixed { busy: col_busy, idle: col_idle },
+            // useful flops: 2/mult-add per match (row dots), plus the
+            // diagonal dot once (2*len_k), one sqrt, nk-1 divides
+            flops: 2 * matches_total + 2 * len_k + 1 + (nk - 1),
+            waves: nk.div_ceil(p),
+        });
     }
 
-    stats.bytes_read = dram.bytes_read;
-    stats.bytes_written = dram.bytes_written;
-    CholeskySimResult { stats, column_cycles }
+    let engine = execute_waves(&costs, cfg);
+    CholeskySimResult { stats: engine.stats, column_cycles: engine.item_cycles, costs }
 }
 
 #[cfg(test)]

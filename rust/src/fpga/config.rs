@@ -1,5 +1,42 @@
 //! FPGA design-point configuration (paper §V, Table II, Fig 8-right).
 
+use std::fmt;
+
+/// Typed validation failure for an [`FpgaConfig`].
+///
+/// Every variant is a zero-valued geometry field that would otherwise
+/// surface far downstream as a division by zero, an empty schedule, or a
+/// `checked_sub` underflow inside the wave engine — the coordinators
+/// reject the configuration up front instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `pipelines == 0`: no datapath to schedule waves onto.
+    ZeroPipelines,
+    /// `vector_lanes == 0`: the SpMM column-block width would be empty.
+    ZeroVectorLanes,
+    /// `dram_buffer_depth == 0`: the stream frontend needs at least the
+    /// single (serial) wave buffer.
+    ZeroDramBufferDepth,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::ZeroPipelines => {
+                write!(f, "invalid FpgaConfig: pipelines must be >= 1")
+            }
+            ConfigError::ZeroVectorLanes => {
+                write!(f, "invalid FpgaConfig: vector_lanes must be >= 1")
+            }
+            ConfigError::ZeroDramBufferDepth => {
+                write!(f, "invalid FpgaConfig: dram_buffer_depth must be >= 1")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// DRAM bandwidth configuration (the paper's queuing-model cap).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DramConfig {
@@ -49,6 +86,13 @@ pub struct FpgaConfig {
     /// dot-product PEs — 8 multipliers fit comfortably per pipeline on the
     /// Arria-10 design points.
     pub vector_lanes: usize,
+    /// Wave buffers in the DRAM stream frontend
+    /// ([`crate::fpga::engine::DramChannel`]): 1 = single-buffered (wave
+    /// *k+1*'s stream waits for wave *k* to retire — the serial baseline),
+    /// 2 = double-buffered prefetch (wave *k+1*'s RIR/B-stream and CAM
+    /// setup fetch under wave *k*'s compute). Higher depths prefetch
+    /// further ahead. Must be ≥ 1 ([`FpgaConfig::validate`]).
+    pub dram_buffer_depth: usize,
     pub dram: DramConfig,
     /// FP multiply pipeline latency, cycles.
     pub mult_latency: u64,
@@ -71,6 +115,7 @@ impl FpgaConfig {
             bundle_size: 32,
             dot_multipliers: 1,
             vector_lanes: 8,
+            dram_buffer_depth: 1,
             dram: DramConfig::single_core(),
             mult_latency: 5,
             add_latency: 4,
@@ -121,6 +166,22 @@ impl FpgaConfig {
             name: "REAP-64",
             ..Self::reap32_spgemm()
         }
+    }
+
+    /// Reject geometry that would divide by zero or underflow downstream
+    /// (every coordinator validates before running; the simulators assume
+    /// a validated configuration).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.pipelines == 0 {
+            return Err(ConfigError::ZeroPipelines);
+        }
+        if self.vector_lanes == 0 {
+            return Err(ConfigError::ZeroVectorLanes);
+        }
+        if self.dram_buffer_depth == 0 {
+            return Err(ConfigError::ZeroDramBufferDepth);
+        }
+        Ok(())
     }
 
     /// Cycles per second.
@@ -217,10 +278,39 @@ mod tests {
         assert_eq!(ch64.dot_multipliers, 16);
         assert_eq!(ch64.freq_mhz, 238.0);
 
-        // every design point carries the 8-wide SpMM vector lanes
+        // every design point carries the 8-wide SpMM vector lanes and the
+        // serial (depth-1) DRAM frontend as its published baseline
         for c in [c32, c128, ch64] {
             assert_eq!(c.vector_lanes, 8);
+            assert_eq!(c.dram_buffer_depth, 1);
+            assert_eq!(c.validate(), Ok(()));
         }
+    }
+
+    #[test]
+    fn validate_rejects_zero_pipelines() {
+        let cfg = FpgaConfig { pipelines: 0, ..FpgaConfig::reap32_spgemm() };
+        assert_eq!(cfg.validate(), Err(ConfigError::ZeroPipelines));
+    }
+
+    #[test]
+    fn validate_rejects_zero_vector_lanes() {
+        let cfg = FpgaConfig { vector_lanes: 0, ..FpgaConfig::reap32_spgemm() };
+        assert_eq!(cfg.validate(), Err(ConfigError::ZeroVectorLanes));
+    }
+
+    #[test]
+    fn validate_rejects_zero_dram_buffer_depth() {
+        let cfg = FpgaConfig { dram_buffer_depth: 0, ..FpgaConfig::reap32_spgemm() };
+        assert_eq!(cfg.validate(), Err(ConfigError::ZeroDramBufferDepth));
+    }
+
+    #[test]
+    fn config_error_displays_the_offending_field() {
+        let msg = ConfigError::ZeroDramBufferDepth.to_string();
+        assert!(msg.contains("dram_buffer_depth"), "{msg}");
+        // the typed error converts into the coordinators' anyhow chain
+        let _: anyhow::Error = ConfigError::ZeroPipelines.into();
     }
 
     #[test]

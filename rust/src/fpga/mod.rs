@@ -11,6 +11,10 @@
 //!   bandwidths, unit latencies) and the area/frequency scaling model of
 //!   Fig 8 (right).
 //! * [`dram`] — the bandwidth-capped DRAM queuing model.
+//! * [`engine`] — the unified wave engine: every simulator emits
+//!   [`WaveCost`] sequences and one `execute_waves` loop owns the
+//!   DRAM/compute overlap, including the double-buffered stream prefetch
+//!   selected by [`FpgaConfig::dram_buffer_depth`].
 //! * [`spgemm_sim`] — the five-module SpGEMM datapath of Fig 1 (input
 //!   controller → match+multiply (CAM) → sort → merge → output controller),
 //!   plus the multi-tenant batched variant with per-job attribution.
@@ -32,11 +36,13 @@
 pub mod cholesky_sim;
 pub mod config;
 pub mod dram;
+pub mod engine;
 pub mod hls;
 pub mod spgemm_sim;
 pub mod spmm_sim;
 pub mod spmv_sim;
 pub mod stats;
 
-pub use config::{cpu_fp_units, AreaModel, DramConfig, FpgaConfig};
+pub use config::{cpu_fp_units, AreaModel, ConfigError, DramConfig, FpgaConfig};
+pub use engine::{execute_waves, execute_waves_at_depth, DramChannel, WaveCost, WaveKind};
 pub use stats::SimStats;

@@ -19,12 +19,12 @@
 //! *serializes* the stages and, without CPU preprocessing, pays an
 //! indirection penalty per B-row gather.
 
-use crate::rir::schedule::{BatchSchedule, SpgemmSchedule};
 use crate::rir::layout::WORD_BYTES;
+use crate::rir::schedule::{BatchSchedule, SpgemmSchedule};
 use crate::sparse::Csr;
 
 use super::config::FpgaConfig;
-use super::dram::DramModel;
+use super::engine::{execute_waves, Occupancy, WaveCost, WaveKind};
 use super::stats::SimStats;
 
 /// Checked widening for wave accounting: a count that cannot be carried
@@ -79,15 +79,23 @@ impl Style {
 #[derive(Clone, Debug)]
 pub struct SpgemmSimResult {
     pub stats: SimStats,
-    /// Cycle count per wave (diagnostics / ablation).
+    /// Cycle count per wave (diagnostics / ablation; drives the overlap
+    /// pipeline). Sums to `stats.cycles` at every channel depth.
     pub wave_cycles: Vec<u64>,
+    /// Per-wave cost description handed to the engine — re-execute with
+    /// [`crate::fpga::engine::execute_waves_at_depth`] to compare channel
+    /// depths without re-walking the matrices.
+    pub costs: Vec<WaveCost>,
 }
 
 /// Simulate `C = A × B` on the configured design over a prebuilt schedule.
 ///
 /// `b` supplies row lengths and column patterns; values are not consulted
 /// (the numeric result comes from the XLA artifact path or the CPU
-/// reference — the simulator is a timing model, like the paper's).
+/// reference — the simulator is a timing model, like the paper's). The
+/// per-wave DRAM/compute overlap — serial at `dram_buffer_depth == 1`,
+/// prefetched at depth ≥ 2 — is owned by [`crate::fpga::engine`]; this
+/// function only describes each wave's cost.
 pub fn simulate_spgemm(
     a: &Csr,
     b: &Csr,
@@ -95,10 +103,20 @@ pub fn simulate_spgemm(
     cfg: &FpgaConfig,
     style: Style,
 ) -> SpgemmSimResult {
-    let p = cfg.pipelines;
-    let mut stats = SimStats::default();
-    let mut dram = DramModel::default();
-    let mut wave_cycles_log = Vec::with_capacity(schedule.waves.len());
+    let costs = spgemm_wave_costs(a, b, schedule, cfg, style);
+    let engine = execute_waves(&costs, cfg);
+    SpgemmSimResult { stats: engine.stats, wave_cycles: engine.item_cycles, costs }
+}
+
+/// Describe every wave of a single-job SpGEMM schedule as a [`WaveCost`].
+fn spgemm_wave_costs(
+    a: &Csr,
+    b: &Csr,
+    schedule: &SpgemmSchedule,
+    cfg: &FpgaConfig,
+    style: Style,
+) -> Vec<WaveCost> {
+    let mut costs = Vec::with_capacity(schedule.waves.len());
 
     // scratch for merged-output counting (stamped SPA over B's columns)
     let mut stamp = vec![u32::MAX; b.ncols];
@@ -110,19 +128,21 @@ pub fn simulate_spgemm(
     for wave in &schedule.waves {
         // ---- B broadcast stream occupancy (shared by all pipelines) ----
         let mut stream_cycles: u64 = 0;
-        let mut b_elems: u64 = 0;
+        let mut b_words: u64 = 0;
         for &r in &wave.b_rows {
             let nnz = acc_u64(b.row_nnz(r as usize), "B-row nnz");
             let chunks = nnz.div_ceil(schedule.bundle_size as u64).max(1);
             stream_cycles += 2 * chunks + nnz; // header + 1 elem/cycle
-            b_elems += nnz;
             stream_cycles += style.indirection_cycles_per_row();
+            b_words += 2 * chunks + 2 * nnz;
         }
 
         // ---- per-pipeline occupancy ----
         let mut max_pipe: u64 = 0;
+        let mut max_body: u64 = 0;
         let mut products_total: u64 = 0;
         let mut merged_total: u64 = 0;
+        let mut a_words: u64 = 0;
         for asg in &wave.assignments {
             let cam_load = acc_u64(asg.len, "CAM chunk length");
             let mut products: u64 = 0;
@@ -140,59 +160,42 @@ pub fn simulate_spgemm(
             }
             products_total += products;
             merged_total += merged;
-            let pipe = if style.pipelined_stages() {
+            a_words += acc_u64(2 + 2 * asg.len, "A bundle words");
+            let body = if style.pipelined_stages() {
                 // stages overlap; stream rate dominates (products ≤ stream)
-                cam_load + stream_cycles.max(products) + fill
+                stream_cycles.max(products) + fill
             } else {
                 // HLS: stage groups serialize — match/mult then sort then
                 // merge drain back-to-back
-                cam_load + stream_cycles + 2 * products + fill
+                stream_cycles + 2 * products + fill
             };
-            max_pipe = max_pipe.max(pipe);
+            max_body = max_body.max(body);
+            max_pipe = max_pipe.max(cam_load + body);
         }
 
-        // ---- DRAM traffic for this wave ----
-        let a_bytes: u64 = wave
-            .assignments
-            .iter()
-            .map(|asg| acc_u64(2 + 2 * asg.len, "A bundle words") * WORD_BYTES as u64)
-            .sum();
-        let mut b_bytes: u64 = 0;
-        for &r in &wave.b_rows {
-            let nnz = acc_u64(b.row_nnz(r as usize), "B-row nnz");
-            let chunks = nnz.div_ceil(schedule.bundle_size as u64).max(1);
-            b_bytes += (2 * chunks + 2 * nnz) * WORD_BYTES as u64;
-        }
-        let out_bytes = merged_total * 2 * WORD_BYTES as u64; // (col, val)
-        let read_cycles = dram.read(cfg, a_bytes + b_bytes);
-        let write_cycles = dram.write(cfg, out_bytes);
-
-        // ---- wave cost: compute and DRAM overlap ----
-        let compute = max_pipe;
-        let dram_cy = read_cycles.max(write_cycles);
-        let wave_cy = compute.max(dram_cy).max(1);
-        if compute >= dram_cy {
-            stats.compute_bound_cycles += wave_cy;
-        } else {
-            stats.dram_bound_cycles += wave_cy;
-        }
-        stats.cycles += wave_cy;
-        stats.waves += 1;
-        let active = acc_u64(wave.assignments.len(), "active pipelines");
-        let idle = (p as u64)
-            .checked_sub(active)
-            .expect("wave overfilled: more assignments than pipelines");
-        stats.busy_pipeline_cycles += active * wave_cy;
-        stats.idle_pipeline_cycles += idle * wave_cy;
-        stats.flops += 2 * products_total; // multiply + merge-add
-        let _ = b_elems;
-        wave_cycles_log.push(wave_cy);
+        // frontend/backend split: the backend floor is the slowest
+        // pipeline's post-CAM work (a depth-2 channel cannot retire the
+        // wave faster than that, whichever pipe its CAM rode in on); the
+        // CAM-load remainder of the critical pipe is the setup a depth-2
+        // channel loads into the spare bank under the previous wave.
+        // `setup + compute == max_pipe` keeps depth 1 bit-identical.
+        debug_assert!(max_pipe >= max_body);
+        costs.push(WaveCost {
+            kind: WaveKind::Compute,
+            stream_words: a_words + b_words,
+            setup_cycles: max_pipe - max_body,
+            compute_cycles: max_body,
+            writeback_words: merged_total * 2, // (col, val)
+            dependent_stream: false,
+            occupancy: Occupancy::ActivePipelines(acc_u64(
+                wave.assignments.len(),
+                "active pipelines",
+            )),
+            flops: 2 * products_total, // multiply + merge-add
+            waves: 1,
+        });
     }
-
-    stats.bytes_read = dram.bytes_read;
-    stats.bytes_written = dram.bytes_written;
-    let _ = a;
-    SpgemmSimResult { stats, wave_cycles: wave_cycles_log }
+    costs
 }
 
 /// Per-job attribution within a batched simulation: exact integer shares
@@ -221,6 +224,9 @@ pub struct BatchSimResult {
     pub wave_cycles: Vec<u64>,
     /// Per-job attribution, indexed by job id.
     pub job_stats: Vec<JobSimStats>,
+    /// Per-wave cost description handed to the engine (aggregate only —
+    /// per-job attribution always follows the executed depth's deltas).
+    pub costs: Vec<WaveCost>,
 }
 
 /// Simulate N independent jobs `C_j = A_j × B_j` sharing the design's
@@ -247,11 +253,10 @@ pub fn simulate_spgemm_batch(
     style: Style,
 ) -> BatchSimResult {
     assert_eq!(jobs.len(), schedule.n_jobs, "job list does not match schedule");
-    let p = cfg.pipelines;
-    let mut stats = SimStats::default();
-    let mut dram = DramModel::default();
-    let mut wave_cycles_log = Vec::with_capacity(schedule.waves.len());
+    let mut costs = Vec::with_capacity(schedule.waves.len());
     let mut job_stats = vec![JobSimStats::default(); jobs.len()];
+    // per wave: (job, pipelines held) runs, for post-engine attribution
+    let mut wave_runs: Vec<Vec<(usize, u64)>> = Vec::with_capacity(schedule.waves.len());
 
     // one stamp scratch over the widest output column space; ticks are
     // unique per assignment, so jobs can never alias each other's stamps
@@ -264,29 +269,30 @@ pub fn simulate_spgemm_batch(
     for wave in &schedule.waves {
         // ---- B streams: one concurrent lane per tenant segment ----
         let mut seg_streams: Vec<u64> = Vec::with_capacity(wave.segments.len());
-        let mut b_bytes: u64 = 0;
+        let mut b_words: u64 = 0;
         for seg in &wave.segments {
             let b = &jobs[seg.job as usize].1;
             let mut seg_stream: u64 = 0;
-            let mut seg_bytes: u64 = 0;
+            let mut seg_words: u64 = 0;
             for &r in &seg.b_rows {
                 let nnz = acc_u64(b.row_nnz(r as usize), "B-row nnz");
                 let chunks = nnz.div_ceil(schedule.bundle_size as u64).max(1);
                 seg_stream += 2 * chunks + nnz; // header + 1 elem/cycle
                 seg_stream += style.indirection_cycles_per_row();
-                seg_bytes += (2 * chunks + 2 * nnz) * WORD_BYTES as u64;
+                seg_words += 2 * chunks + 2 * nnz;
             }
             seg_streams.push(seg_stream);
-            job_stats[seg.job as usize].bytes_read += seg_bytes;
-            b_bytes += seg_bytes;
+            job_stats[seg.job as usize].bytes_read += seg_words * WORD_BYTES as u64;
+            b_words += seg_words;
         }
 
         // ---- per-pipeline occupancy + per-job work; assignments are
         // job-major, so the run index walks `segments` in lockstep ----
         let mut max_pipe: u64 = 0;
+        let mut max_body: u64 = 0;
         let mut products_total: u64 = 0;
         let mut merged_total: u64 = 0;
-        let mut a_bytes: u64 = 0;
+        let mut a_words: u64 = 0;
         let mut run_counts = vec![0u64; wave.segments.len()];
         let mut run_idx = 0usize;
         let mut prev_job: Option<u32> = None;
@@ -318,52 +324,56 @@ pub fn simulate_spgemm_batch(
             }
             products_total += products;
             merged_total += merged;
-            let chunk_bytes = acc_u64(2 + 2 * asg.len, "A bundle words") * WORD_BYTES as u64;
-            a_bytes += chunk_bytes;
+            let chunk_words = acc_u64(2 + 2 * asg.len, "A bundle words");
+            a_words += chunk_words;
             let js = &mut job_stats[ji];
             js.flops += 2 * products;
-            js.bytes_read += chunk_bytes;
+            js.bytes_read += chunk_words * WORD_BYTES as u64;
             js.bytes_written += merged * 2 * WORD_BYTES as u64;
-            let pipe = if style.pipelined_stages() {
-                cam_load + stream_cycles.max(products) + fill
+            let body = if style.pipelined_stages() {
+                stream_cycles.max(products) + fill
             } else {
-                cam_load + stream_cycles + 2 * products + fill
+                stream_cycles + 2 * products + fill
             };
-            max_pipe = max_pipe.max(pipe);
+            max_body = max_body.max(body);
+            max_pipe = max_pipe.max(cam_load + body);
         }
 
-        // ---- DRAM + wave cost, exactly the single-job model ----
-        let out_bytes = merged_total * 2 * WORD_BYTES as u64;
-        let read_cycles = dram.read(cfg, a_bytes + b_bytes);
-        let write_cycles = dram.write(cfg, out_bytes);
-        let compute = max_pipe;
-        let dram_cy = read_cycles.max(write_cycles);
-        let wave_cy = compute.max(dram_cy).max(1);
-        if compute >= dram_cy {
-            stats.compute_bound_cycles += wave_cy;
-        } else {
-            stats.dram_bound_cycles += wave_cy;
-        }
-        stats.cycles += wave_cy;
-        stats.waves += 1;
-        let active = acc_u64(wave.assignments.len(), "active pipelines");
-        let idle = (p as u64)
-            .checked_sub(active)
-            .expect("batch wave overfilled: more assignments than pipelines");
-        stats.busy_pipeline_cycles += active * wave_cy;
-        stats.idle_pipeline_cycles += idle * wave_cy;
-        stats.flops += 2 * products_total;
-        for (seg, &n_asg) in wave.segments.iter().zip(&run_counts) {
-            let js = &mut job_stats[seg.job as usize];
+        // ---- cost description, exactly the single-job model (same
+        // backend-floor frontend/backend split as `spgemm_wave_costs`) ----
+        debug_assert!(max_pipe >= max_body);
+        costs.push(WaveCost {
+            kind: WaveKind::Compute,
+            stream_words: a_words + b_words,
+            setup_cycles: max_pipe - max_body,
+            compute_cycles: max_body,
+            writeback_words: merged_total * 2,
+            dependent_stream: false,
+            occupancy: Occupancy::ActivePipelines(acc_u64(
+                wave.assignments.len(),
+                "active pipelines",
+            )),
+            flops: 2 * products_total,
+            waves: 1,
+        });
+        wave_runs.push(
+            wave.segments
+                .iter()
+                .zip(&run_counts)
+                .map(|(seg, &n_asg)| (seg.job as usize, n_asg))
+                .collect(),
+        );
+    }
+
+    let engine = execute_waves(&costs, cfg);
+    for (runs, &wave_cy) in wave_runs.iter().zip(&engine.item_cycles) {
+        for &(job, n_asg) in runs {
+            let js = &mut job_stats[job];
             js.waves += 1;
             js.busy_pipeline_cycles += n_asg * wave_cy;
         }
-        wave_cycles_log.push(wave_cy);
     }
-
-    stats.bytes_read = dram.bytes_read;
-    stats.bytes_written = dram.bytes_written;
-    BatchSimResult { stats, wave_cycles: wave_cycles_log, job_stats }
+    BatchSimResult { stats: engine.stats, wave_cycles: engine.item_cycles, job_stats, costs }
 }
 
 #[cfg(test)]

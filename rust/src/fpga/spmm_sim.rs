@@ -25,18 +25,21 @@
 //!   and by `harness::spmm::headline_holds` (`reap bench spmm`) for
 //!   k ∈ {4, 8} on REAP-64/128.
 //!
-//! The per-wave accounting itself is `spmv_sim::row_stream_wave` — the
-//! *same function* the SpMV simulator uses (`kb == 1`), so the two
-//! models the comparison races cannot drift apart.
+//! The per-wave accounting itself is `spmv_sim::row_stream_wave_cost` —
+//! the *same function* the SpMV simulator uses (`kb == 1`), so the two
+//! models the comparison races cannot drift apart; the resulting
+//! [`WaveCost`] sequence is priced by the unified engine
+//! ([`crate::fpga::engine`]), where a depth ≥ 2 DRAM channel prefetches
+//! the next block's panel under the current block's compute.
 
-use crate::rir::layout::dense_panel_bytes;
+use crate::rir::layout::dense_panel_words;
 use crate::rir::schedule::SpgemmSchedule;
 use crate::sparse::Csr;
 
 use super::config::FpgaConfig;
-use super::dram::DramModel;
+use super::engine::{execute_waves, WaveCost, WaveKind};
 use super::spgemm_sim::Style;
-use super::spmv_sim::row_stream_wave;
+use super::spmv_sim::row_stream_wave_cost;
 use super::stats::SimStats;
 
 /// Result of simulating one SpMM execution.
@@ -47,17 +50,23 @@ pub struct SpmmSimResult {
     /// schedule replays once per block.
     pub n_blocks: usize,
     /// Cycles of the per-block dense-panel loads, summed (each block's
-    /// panel streams into on-chip RAM before its first wave).
+    /// panel streams into on-chip RAM before its first wave — and, at
+    /// `dram_buffer_depth >= 2`, *under* the previous block's compute,
+    /// which can drive this to zero).
     pub panel_load_cycles: u64,
     /// Cycle count per replayed wave, block-major:
     /// `n_blocks × schedule.n_waves()` entries, and
-    /// `panel_load_cycles + Σ wave_cycles == stats.cycles`.
+    /// `panel_load_cycles + Σ wave_cycles == stats.cycles` at every depth.
     pub wave_cycles: Vec<u64>,
+    /// Engine cost sequence (each block: one panel [`WaveKind::Load`]
+    /// followed by the block's waves).
+    pub costs: Vec<WaveCost>,
 }
 
 /// Simulate `C = A X` with `k` dense right-hand-side columns over the
 /// chunk schedule (the same SpGEMM-scheduler wave structure SpMV reuses;
 /// the B-stream list is ignored — the panel lives on-chip per block).
+/// The per-wave DRAM/compute overlap is owned by [`crate::fpga::engine`].
 pub fn simulate_spmm(
     a: &Csr,
     schedule: &SpgemmSchedule,
@@ -68,10 +77,7 @@ pub fn simulate_spmm(
     assert!(k > 0, "SpMM needs at least one right-hand-side column");
     let lanes = cfg.vector_lanes.max(1);
     let n_blocks = k.div_ceil(lanes);
-    let mut stats = SimStats::default();
-    let mut dram = DramModel::default();
-    let mut panel_load_cycles = 0u64;
-    let mut wave_cycles_log = Vec::with_capacity(n_blocks * schedule.waves.len());
+    let mut costs = Vec::with_capacity(n_blocks * (schedule.waves.len() + 1));
 
     for blk in 0..n_blocks {
         let kb = (k - blk * lanes).min(lanes) as u64;
@@ -82,24 +88,34 @@ pub fn simulate_spmm(
         // `encode_csr_with_panel` produces for a kb-column panel. Note
         // for k > lanes this is NOT a slice of one full-k segment (the
         // header count differs once k spans multiple bundles); the model
-        // assumes the CPU encodes one sub-panel per block, which is also
-        // what bounds the on-chip panel RAM at lanes columns.
-        let panel_bytes = dense_panel_bytes(a.ncols, kb as usize, cfg.bundle_size) as u64;
-        let load_cy = dram.read(cfg, panel_bytes);
-        stats.cycles += load_cy;
-        stats.dram_bound_cycles += load_cy;
-        panel_load_cycles += load_cy;
+        // assumes the CPU encodes one sub-panel per block, which bounds
+        // the on-chip panel RAM at `lanes` columns per buffer — at
+        // `dram_buffer_depth >= 2` the next block's panel prefetches into
+        // the channel's spare buffer while the current one is in use, so
+        // depth-2 designs carry two such panel buffers (the standard
+        // double-buffering RAM cost, ~2 × lanes × nrows words, well
+        // inside the Arria-10's 67 Mbit for the suite's sizes).
+        costs.push(WaveCost::load(
+            dense_panel_words(a.ncols, kb as usize, cfg.bundle_size) as u64,
+        ));
 
         // replay the wave schedule with kb-wide lanes — the shared
         // accounting the SpMV model runs with kb == 1
         for wave in &schedule.waves {
-            wave_cycles_log.push(row_stream_wave(wave, cfg, style, kb, &mut dram, &mut stats));
+            costs.push(row_stream_wave_cost(wave, cfg, style, kb));
         }
     }
 
-    stats.bytes_read = dram.bytes_read;
-    stats.bytes_written = dram.bytes_written;
-    SpmmSimResult { stats, n_blocks, panel_load_cycles, wave_cycles: wave_cycles_log }
+    let engine = execute_waves(&costs, cfg);
+    let mut panel_load_cycles = 0u64;
+    let mut wave_cycles = Vec::with_capacity(n_blocks * schedule.waves.len());
+    for (c, &cy) in costs.iter().zip(&engine.item_cycles) {
+        match c.kind {
+            WaveKind::Load => panel_load_cycles += cy,
+            WaveKind::Compute => wave_cycles.push(cy),
+        }
+    }
+    SpmmSimResult { stats: engine.stats, n_blocks, panel_load_cycles, wave_cycles, costs }
 }
 
 #[cfg(test)]

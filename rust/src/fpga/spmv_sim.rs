@@ -7,12 +7,11 @@
 //! adder tree, so the datapath runs at RIR stream rate — the extension
 //! inherits exactly the property the paper engineered for SpGEMM.
 
-use crate::rir::layout::WORD_BYTES;
 use crate::rir::schedule::{SpgemmSchedule, Wave};
 use crate::sparse::Csr;
 
 use super::config::FpgaConfig;
-use super::dram::DramModel;
+use super::engine::{execute_waves, Occupancy, WaveCost, WaveKind};
 use super::spgemm_sim::Style;
 use super::stats::SimStats;
 
@@ -22,55 +21,53 @@ pub struct SpmvSimResult {
     pub stats: SimStats,
     /// Cycles of the one-time x-vector load (before the first wave).
     pub x_load_cycles: u64,
-    /// Cycle count per wave; `x_load_cycles + Σ wave_cycles == cycles`.
+    /// Cycle count per wave; `x_load_cycles + Σ wave_cycles == cycles`
+    /// at every channel depth.
     pub wave_cycles: Vec<u64>,
+    /// Engine cost sequence (item 0 is the x-vector [`WaveKind::Load`]).
+    pub costs: Vec<WaveCost>,
 }
 
 /// Simulate `y = A x` over the chunk schedule (the SpGEMM scheduler's wave
 /// structure is reused — assignments are row chunks; the B-stream list is
-/// ignored because x lives on-chip).
-pub fn simulate_spmv(a: &Csr, schedule: &SpgemmSchedule, cfg: &FpgaConfig, style: Style) -> SpmvSimResult {
-    let mut stats = SimStats::default();
-    let mut dram = DramModel::default();
-
-    // one-time x load into on-chip RAM (overlappable in principle; charged
-    // fully — it is tiny relative to the row stream)
-    let x_bytes = (a.ncols * 4) as u64;
-    let x_cycles = dram.read(cfg, x_bytes);
-    stats.cycles += x_cycles;
-    stats.dram_bound_cycles += x_cycles;
-
-    let mut wave_cycles_log = Vec::with_capacity(schedule.waves.len());
+/// ignored because x lives on-chip). The per-wave DRAM/compute overlap is
+/// owned by [`crate::fpga::engine`].
+pub fn simulate_spmv(
+    a: &Csr,
+    schedule: &SpgemmSchedule,
+    cfg: &FpgaConfig,
+    style: Style,
+) -> SpmvSimResult {
+    let mut costs = Vec::with_capacity(schedule.waves.len() + 1);
+    // one-time x load into on-chip RAM (a word per dense element)
+    costs.push(WaveCost::load(a.ncols as u64));
     for wave in &schedule.waves {
-        wave_cycles_log.push(row_stream_wave(wave, cfg, style, 1, &mut dram, &mut stats));
+        costs.push(row_stream_wave_cost(wave, cfg, style, 1));
     }
-
-    stats.bytes_read = dram.bytes_read;
-    stats.bytes_written = dram.bytes_written;
-    SpmvSimResult { stats, x_load_cycles: x_cycles, wave_cycles: wave_cycles_log }
+    let engine = execute_waves(&costs, cfg);
+    let x_load_cycles = engine.item_cycles[0];
+    let wave_cycles = engine.item_cycles[1..].to_vec();
+    SpmvSimResult { stats: engine.stats, x_load_cycles, wave_cycles, costs }
 }
 
-/// Cycle/traffic accounting for one wave of the row-streaming datapath
-/// with `kb` parallel MAC lanes per PE — **`kb == 1` is exactly the SpMV
-/// datapath**, and the SpMM model (`super::spmm_sim`) calls this same
-/// function with its column-block width, so the two models cannot drift
-/// apart (the SpMM-beats-k-SpMVs comparison depends on that lockstep).
+/// Cost of one wave of the row-streaming datapath with `kb` parallel MAC
+/// lanes per PE — **`kb == 1` is exactly the SpMV datapath**, and the
+/// SpMM model (`super::spmm_sim`) calls this same function with its
+/// column-block width, so the two models cannot drift apart (the
+/// SpMM-beats-k-SpMVs comparison depends on that lockstep).
 ///
 /// Per assignment the chunk streams at 1 element/cycle
 /// (gather + multiply + accumulate across all `kb` lanes in the same
 /// cycle when stages are pipelined; HLS serializes the gather and the
-/// per-lane MACs); the wave then costs `max(compute, dram)` with the
-/// merged-output write of `kb` dense values per finished row. Updates
-/// `stats` (cycles, bound attribution, busy/idle, flops) and `dram`;
-/// returns the wave's cycles.
-pub(crate) fn row_stream_wave(
+/// per-lane MACs); the writeback is `kb` dense values per finished row.
+/// The 2-cycle bundle-header decode is the wave's frontend setup (hidden
+/// by a depth ≥ 2 channel).
+pub(crate) fn row_stream_wave_cost(
     wave: &Wave,
     cfg: &FpgaConfig,
     style: Style,
     kb: u64,
-    dram: &mut DramModel,
-    stats: &mut SimStats,
-) -> u64 {
+) -> WaveCost {
     let fill = cfg.mult_latency + cfg.add_latency * 6; // adder tree drain
     let indirection = match style {
         Style::HlsRaw => 6u64,
@@ -90,28 +87,19 @@ pub(crate) fn row_stream_wave(
         elems_total += elems;
         rows_done += u64::from(asg.last_chunk);
     }
-    let in_bytes: u64 = wave
-        .assignments
-        .iter()
-        .map(|asg| (2 + 2 * asg.len) as u64 * WORD_BYTES as u64)
-        .sum();
-    let out_bytes = rows_done * kb * 4;
-    let read_cy = dram.read(cfg, in_bytes);
-    let write_cy = dram.write(cfg, out_bytes);
-    let dram_cy = read_cy.max(write_cy);
-    let wave_cy = max_pipe.max(dram_cy).max(1);
-    if max_pipe >= dram_cy {
-        stats.compute_bound_cycles += wave_cy;
-    } else {
-        stats.dram_bound_cycles += wave_cy;
+    let in_words: u64 = wave.assignments.iter().map(|asg| (2 + 2 * asg.len) as u64).sum();
+    let setup = if wave.assignments.is_empty() { 0 } else { 2 };
+    WaveCost {
+        kind: WaveKind::Compute,
+        stream_words: in_words,
+        setup_cycles: setup,
+        compute_cycles: max_pipe - setup,
+        writeback_words: rows_done * kb,
+        dependent_stream: false,
+        occupancy: Occupancy::ActivePipelines(wave.assignments.len() as u64),
+        flops: 2 * elems_total * kb,
+        waves: 1,
     }
-    stats.cycles += wave_cy;
-    stats.waves += 1;
-    let active = wave.assignments.len() as u64;
-    stats.busy_pipeline_cycles += active * wave_cy;
-    stats.idle_pipeline_cycles += (cfg.pipelines as u64 - active) * wave_cy;
-    stats.flops += 2 * elems_total * kb;
-    wave_cy
 }
 
 #[cfg(test)]

@@ -25,6 +25,12 @@ pub struct SimStats {
     pub flops: u64,
     /// Scheduling waves executed.
     pub waves: u64,
+    /// Frontend cycles (DRAM stream fetch + CAM/bundle setup) the
+    /// double-buffered channel hid under earlier waves' compute
+    /// ([`crate::fpga::engine`]). Always 0 at `dram_buffer_depth == 1`;
+    /// at any depth, `cycles + prefetch_hidden_cycles` equals the
+    /// depth-1 cycle count.
+    pub prefetch_hidden_cycles: u64,
 }
 
 impl SimStats {
@@ -82,6 +88,7 @@ impl SimStats {
         self.bytes_written += other.bytes_written;
         self.flops += other.flops;
         self.waves += other.waves;
+        self.prefetch_hidden_cycles += other.prefetch_hidden_cycles;
     }
 }
 
@@ -112,11 +119,19 @@ mod tests {
     #[test]
     fn merge_adds_fields() {
         let mut a = SimStats { cycles: 10, flops: 5, waves: 1, ..Default::default() };
-        let b = SimStats { cycles: 7, flops: 2, waves: 2, bytes_read: 3, ..Default::default() };
+        let b = SimStats {
+            cycles: 7,
+            flops: 2,
+            waves: 2,
+            bytes_read: 3,
+            prefetch_hidden_cycles: 4,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.cycles, 17);
         assert_eq!(a.flops, 7);
         assert_eq!(a.waves, 3);
         assert_eq!(a.bytes_read, 3);
+        assert_eq!(a.prefetch_hidden_cycles, 4);
     }
 }

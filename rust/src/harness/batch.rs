@@ -38,6 +38,15 @@ pub struct BatchRow {
     pub batch_cpu_s: f64,
     /// Simulated FPGA seconds (batched pass).
     pub batch_fpga_s: f64,
+    /// Batched cycles on the serial (depth-1) DRAM channel.
+    pub batch_cycles_serial: u64,
+    /// Batched cycles on the double-buffered (depth-2) channel.
+    pub batch_cycles_db: u64,
+    /// Frontend cycles depth 2 hid under compute (batched pass).
+    pub batch_prefetch_hidden: u64,
+    /// Summed serial-mode cycles at depth 1 / depth 2.
+    pub serial_cycles_serial: u64,
+    pub serial_cycles_db: u64,
 }
 
 /// The many-small-jobs workload: J jobs whose individual chunk counts
@@ -69,9 +78,9 @@ pub fn run(cfg: &RunConfig) -> (Vec<BatchRow>, Table) {
     let jobs = small_job_suite(cfg);
     let mut rows = Vec::new();
     for design in [
-        FpgaConfig::reap32_spgemm(),
-        FpgaConfig::reap64_spgemm(),
-        FpgaConfig::reap128_spgemm(),
+        cfg.design(FpgaConfig::reap32_spgemm()),
+        cfg.design(FpgaConfig::reap64_spgemm()),
+        cfg.design(FpgaConfig::reap128_spgemm()),
     ] {
         let batch = ReapBatch::new(design.clone()).run(&jobs).expect("batch run");
         let mut serial_busy = 0u64;
@@ -79,6 +88,8 @@ pub fn run(cfg: &RunConfig) -> (Vec<BatchRow>, Table) {
         let mut serial_cycles = 0u64;
         let mut serial_total_s = 0.0f64;
         let mut serial_waves = 0u64;
+        let mut serial_cycles_serial = 0u64;
+        let mut serial_cycles_db = 0u64;
         for (a, b) in &jobs {
             let rep = ReapSpgemm::new(design.clone()).run(a, b).expect("serial run");
             serial_busy += rep.fpga_sim.busy_pipeline_cycles;
@@ -87,6 +98,8 @@ pub fn run(cfg: &RunConfig) -> (Vec<BatchRow>, Table) {
             serial_cycles += rep.fpga_sim.cycles;
             serial_total_s += rep.total_s;
             serial_waves += rep.fpga_sim.waves;
+            serial_cycles_serial += rep.fpga_sim_serial.cycles;
+            serial_cycles_db += rep.fpga_sim_db.cycles;
         }
         rows.push(BatchRow {
             config: design.name.to_string(),
@@ -105,6 +118,11 @@ pub fn run(cfg: &RunConfig) -> (Vec<BatchRow>, Table) {
             serial_waves,
             batch_cpu_s: batch.cpu_preprocess_s,
             batch_fpga_s: batch.fpga_s,
+            batch_cycles_serial: batch.fpga_sim_serial.cycles,
+            batch_cycles_db: batch.fpga_sim_db.cycles,
+            batch_prefetch_hidden: batch.fpga_sim_db.prefetch_hidden_cycles,
+            serial_cycles_serial,
+            serial_cycles_db,
         });
     }
     write_bench_json(cfg, &rows);
@@ -155,7 +173,8 @@ fn write_bench_json(cfg: &RunConfig, rows: &[BatchRow]) {
         out.push_str(&format!(
             "  {{\"workload\": \"many-small-{}\", \"config\": \"{}\", \"mode\": \"batched\", \
              \"cpu_s\": {}, \"fpga_s\": {}, \"total_s\": {}, \"waves\": {}, \
-             \"occupancy\": {:.6}}},\n",
+             \"occupancy\": {:.6}, \"cycles_serial\": {}, \"cycles_db\": {}, \
+             \"prefetch_hidden_cycles\": {}}},\n",
             r.jobs,
             escape(&r.config),
             num(r.batch_cpu_s),
@@ -163,16 +182,23 @@ fn write_bench_json(cfg: &RunConfig, rows: &[BatchRow]) {
             num(r.batch_total_s),
             r.batch_waves,
             r.batch_occupancy,
+            r.batch_cycles_serial,
+            r.batch_cycles_db,
+            r.batch_prefetch_hidden,
         ));
         out.push_str(&format!(
             "  {{\"workload\": \"many-small-{}\", \"config\": \"{}\", \"mode\": \"serial\", \
              \"cpu_s\": 0, \"fpga_s\": 0, \"total_s\": {}, \"waves\": {}, \
-             \"occupancy\": {:.6}}}{}\n",
+             \"occupancy\": {:.6}, \"cycles_serial\": {}, \"cycles_db\": {}, \
+             \"prefetch_hidden_cycles\": {}}}{}\n",
             r.jobs,
             escape(&r.config),
             num(r.serial_total_s),
             r.serial_waves,
             r.serial_occupancy,
+            r.serial_cycles_serial,
+            r.serial_cycles_db,
+            r.serial_cycles_serial - r.serial_cycles_db,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -206,6 +232,27 @@ mod tests {
         let arr = j.as_arr().unwrap();
         assert_eq!(arr.len(), 6); // 3 designs × 2 modes
         assert!(arr[0].get("occupancy").unwrap().as_f64().is_some());
+        assert!(arr[0].get("cycles_serial").unwrap().as_usize().is_some());
+        // acceptance headline: the double-buffered channel strictly beats
+        // the serial one for the batched pass on the wide designs
+        for r in &rows {
+            assert_eq!(
+                r.batch_cycles_db + r.batch_prefetch_hidden,
+                r.batch_cycles_serial,
+                "{}: hidden cycles must equal the depth-1 gap",
+                r.config
+            );
+            if r.config != "REAP-32" {
+                assert!(
+                    r.batch_cycles_db < r.batch_cycles_serial,
+                    "{}: {} !< {}",
+                    r.config,
+                    r.batch_cycles_db,
+                    r.batch_cycles_serial
+                );
+                assert!(r.batch_prefetch_hidden > 0, "{}", r.config);
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

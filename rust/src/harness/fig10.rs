@@ -48,7 +48,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig10Row>, Table) {
 
         let id = spec.cholesky_id.unwrap().to_string();
         let mut speedup_of = |fcfg: FpgaConfig, config: &str| {
-            let rep = ReapCholesky::new(fcfg).run(&lower).unwrap();
+            let rep = ReapCholesky::new(cfg.design(fcfg)).run(&lower).unwrap();
             records.push(super::json::BenchRecord {
                 matrix: format!("{} {}", id, spec.name),
                 config: config.to_string(),
@@ -56,6 +56,9 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig10Row>, Table) {
                 fpga_s: rep.fpga_s,
                 total_s: rep.total_s,
                 waves: rep.fpga_sim.waves,
+                cycles_serial: rep.fpga_sim_serial.cycles,
+                cycles_db: rep.fpga_sim_db.cycles,
+                prefetch_hidden_cycles: rep.fpga_sim_db.prefetch_hidden_cycles,
             });
             let reap_total =
                 (rep.cpu_symbolic_s - etree_s).max(0.0) + rep.fpga_s;

@@ -32,7 +32,8 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig11Row>, Table) {
     let mut records = Vec::new();
     for spec in cholesky_suite() {
         let lower = spec.instantiate_spd(cfg.max_rows, cfg.seed);
-        let rep = ReapCholesky::new(FpgaConfig::reap32_cholesky()).run(&lower).unwrap();
+        let rep =
+            ReapCholesky::new(cfg.design(FpgaConfig::reap32_cholesky())).run(&lower).unwrap();
         let cpu_frac = overlap::cpu_fraction(rep.cpu_symbolic_s, rep.fpga_s);
         let id = spec.cholesky_id.unwrap().to_string();
         records.push(super::json::BenchRecord {
@@ -42,6 +43,9 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig11Row>, Table) {
             fpga_s: rep.fpga_s,
             total_s: rep.total_s,
             waves: rep.fpga_sim.waves,
+            cycles_serial: rep.fpga_sim_serial.cycles,
+            cycles_db: rep.fpga_sim_db.cycles,
+            prefetch_hidden_cycles: rep.fpga_sim_db.prefetch_hidden_cycles,
         });
         rows.push(Fig11Row {
             id,

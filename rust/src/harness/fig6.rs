@@ -40,9 +40,10 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig6Row>, Table) {
         let cpu1 = measure_spgemm_cpu(cfg, &a, &a, 1).min_s;
         let cpu2 = measure_spgemm_cpu(cfg, &a, &a, 2).min_s;
         let cpu16 = measure_spgemm_cpu(cfg, &a, &a, 16).min_s;
-        let r32 = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &a).unwrap();
-        let r64 = ReapSpgemm::new(FpgaConfig::reap64_spgemm()).run(&a, &a).unwrap();
-        let r128 = ReapSpgemm::new(FpgaConfig::reap128_spgemm()).run(&a, &a).unwrap();
+        let r32 = ReapSpgemm::new(cfg.design(FpgaConfig::reap32_spgemm())).run(&a, &a).unwrap();
+        let r64 = ReapSpgemm::new(cfg.design(FpgaConfig::reap64_spgemm())).run(&a, &a).unwrap();
+        let r128 =
+            ReapSpgemm::new(cfg.design(FpgaConfig::reap128_spgemm())).run(&a, &a).unwrap();
         let id = spec.spgemm_id.unwrap().to_string();
         let matrix = format!("{} {}", id, spec.name);
         for (config, rep) in [("REAP-32", &r32), ("REAP-64", &r64), ("REAP-128", &r128)] {
@@ -53,6 +54,9 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig6Row>, Table) {
                 fpga_s: rep.fpga_s,
                 total_s: rep.total_s,
                 waves: rep.fpga_sim.waves,
+                cycles_serial: rep.fpga_sim_serial.cycles,
+                cycles_db: rep.fpga_sim_db.cycles,
+                prefetch_hidden_cycles: rep.fpga_sim_db.prefetch_hidden_cycles,
             });
         }
         rows.push(Fig6Row {
@@ -127,7 +131,28 @@ mod tests {
         }
         let text = std::fs::read_to_string(dir.join("BENCH_spgemm.json")).unwrap();
         let j = crate::util::json::Json::parse(&text).unwrap();
-        assert_eq!(j.as_arr().unwrap().len(), 60); // 20 matrices × 3 designs
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 60); // 20 matrices × 3 designs
+        // serial vs double-buffered cycles ride every record; on the wide
+        // designs the prefetch is a strict aggregate win (the acceptance
+        // headline for the unified wave engine)
+        let mut serial_sum = 0u64;
+        let mut db_sum = 0u64;
+        for rec in arr {
+            let serial = rec.get("cycles_serial").unwrap().as_usize().unwrap() as u64;
+            let db = rec.get("cycles_db").unwrap().as_usize().unwrap() as u64;
+            let hidden =
+                rec.get("prefetch_hidden_cycles").unwrap().as_usize().unwrap() as u64;
+            assert_eq!(db + hidden, serial, "hidden cycles must equal the depth-1 gap");
+            if rec.get("config").unwrap().as_str() != Some("REAP-32") {
+                serial_sum += serial;
+                db_sum += db;
+            }
+        }
+        assert!(
+            db_sum < serial_sum,
+            "double buffering must strictly win on REAP-64/128: {db_sum} !< {serial_sum}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -36,7 +36,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig7Row>, Table) {
     let mut records = Vec::new();
     for spec in spgemm_suite() {
         let a = spec.instantiate(cfg.max_rows, cfg.seed);
-        let rep = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &a).unwrap();
+        let rep = ReapSpgemm::new(cfg.design(FpgaConfig::reap32_spgemm())).run(&a, &a).unwrap();
         let cpu_frac = overlap::cpu_fraction(rep.cpu_preprocess_s, rep.fpga_s);
         let id = spec.spgemm_id.unwrap().to_string();
         records.push(super::json::BenchRecord {
@@ -46,6 +46,9 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig7Row>, Table) {
             fpga_s: rep.fpga_s,
             total_s: rep.total_s,
             waves: rep.fpga_sim.waves,
+            cycles_serial: rep.fpga_sim_serial.cycles,
+            cycles_db: rep.fpga_sim_db.cycles,
+            prefetch_hidden_cycles: rep.fpga_sim_db.prefetch_hidden_cycles,
         });
         rows.push(Fig7Row {
             id,

@@ -23,6 +23,13 @@ pub struct BenchRecord {
     pub total_s: f64,
     /// Scheduling waves (SpGEMM/SpMV) or columns (Cholesky).
     pub waves: u64,
+    /// Simulated FPGA cycles on the serial (depth-1) DRAM channel.
+    pub cycles_serial: u64,
+    /// Simulated FPGA cycles on the double-buffered (depth-2) channel.
+    pub cycles_db: u64,
+    /// Frontend cycles the depth-2 channel hid under compute
+    /// (`cycles_db + prefetch_hidden_cycles == cycles_serial`).
+    pub prefetch_hidden_cycles: u64,
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars).
@@ -59,13 +66,18 @@ pub fn render_bench(records: &[BenchRecord]) -> String {
     for (i, r) in records.iter().enumerate() {
         out.push_str(&format!(
             "  {{\"matrix\": \"{}\", \"config\": \"{}\", \"cpu_s\": {}, \
-             \"fpga_s\": {}, \"total_s\": {}, \"waves\": {}}}{}\n",
+             \"fpga_s\": {}, \"total_s\": {}, \"waves\": {}, \
+             \"cycles_serial\": {}, \"cycles_db\": {}, \
+             \"prefetch_hidden_cycles\": {}}}{}\n",
             escape(&r.matrix),
             escape(&r.config),
             num(r.cpu_s),
             num(r.fpga_s),
             num(r.total_s),
             r.waves,
+            r.cycles_serial,
+            r.cycles_db,
+            r.prefetch_hidden_cycles,
             if i + 1 == records.len() { "" } else { "," }
         ));
     }
@@ -96,6 +108,9 @@ mod tests {
                 fpga_s: 2.5e-3,
                 total_s: 3.0e-3,
                 waves: 42,
+                cycles_serial: 1000,
+                cycles_db: 900,
+                prefetch_hidden_cycles: 100,
             },
             BenchRecord {
                 matrix: "m2".into(),
@@ -104,6 +119,9 @@ mod tests {
                 fpga_s: 1.0,
                 total_s: 1.0,
                 waves: 0,
+                cycles_serial: 0,
+                cycles_db: 0,
+                prefetch_hidden_cycles: 0,
             },
         ]
     }
@@ -118,6 +136,9 @@ mod tests {
         assert_eq!(arr[0].get("config").unwrap().as_str(), Some("REAP-32"));
         assert!((arr[0].get("cpu_s").unwrap().as_f64().unwrap() - 1.5e-3).abs() < 1e-12);
         assert_eq!(arr[1].get("waves").unwrap().as_usize(), Some(0));
+        assert_eq!(arr[0].get("cycles_serial").unwrap().as_usize(), Some(1000));
+        assert_eq!(arr[0].get("cycles_db").unwrap().as_usize(), Some(900));
+        assert_eq!(arr[0].get("prefetch_hidden_cycles").unwrap().as_usize(), Some(100));
     }
 
     #[test]

@@ -19,6 +19,11 @@ pub struct RunConfig {
     pub budget_s: f64,
     /// Directory for CSV dumps (`results/` by default; None disables).
     pub csv_dir: Option<PathBuf>,
+    /// DRAM stream-frontend buffer depth applied to every design point
+    /// the harness runs (1 = serial baseline, 2 = double-buffered
+    /// prefetch; `--dram-depth`). The `BENCH_*.json` records always carry
+    /// both depth-1 and depth-2 cycles side by side regardless.
+    pub dram_buffer_depth: usize,
 }
 
 impl Default for RunConfig {
@@ -28,6 +33,7 @@ impl Default for RunConfig {
             seed: 0x5EA9, // "REAP"
             budget_s: 0.2,
             csv_dir: Some(PathBuf::from("results")),
+            dram_buffer_depth: 1,
         }
     }
 }
@@ -36,6 +42,11 @@ impl RunConfig {
     /// Quick configuration for tests.
     pub fn quick() -> Self {
         RunConfig { max_rows: 400, budget_s: 0.02, csv_dir: None, ..Default::default() }
+    }
+
+    /// A design point with this run's DRAM channel depth applied.
+    pub fn design(&self, base: crate::fpga::FpgaConfig) -> crate::fpga::FpgaConfig {
+        crate::fpga::FpgaConfig { dram_buffer_depth: self.dram_buffer_depth, ..base }
     }
 
     /// Write a table as `<csv_dir>/<name>.csv` when CSV output is enabled.

@@ -45,6 +45,13 @@ pub struct SpmmRow {
     pub serial_fpga_s: f64,
     /// Simulated waves (SpMM, summed over column blocks).
     pub spmm_waves: u64,
+    /// SpMM cycles on the serial (depth-1) DRAM channel.
+    pub spmm_cycles_serial: u64,
+    /// SpMM cycles on the double-buffered (depth-2) channel (later
+    /// blocks' panel loads prefetch under the previous block's compute).
+    pub spmm_cycles_db: u64,
+    /// Frontend cycles depth 2 hid under compute (SpMM pass).
+    pub spmm_prefetch_hidden: u64,
     /// Max |SpMM − SpMV| over all outputs — bit-identity means exactly 0.
     pub max_abs_err: f64,
 }
@@ -65,9 +72,9 @@ pub fn workload(cfg: &RunConfig, k: usize) -> (Csr, Vec<Val>) {
 pub fn run(cfg: &RunConfig) -> (Vec<SpmmRow>, Table) {
     let mut rows = Vec::new();
     for design in [
-        FpgaConfig::reap32_spgemm(),
-        FpgaConfig::reap64_spgemm(),
-        FpgaConfig::reap128_spgemm(),
+        cfg.design(FpgaConfig::reap32_spgemm()),
+        cfg.design(FpgaConfig::reap64_spgemm()),
+        cfg.design(FpgaConfig::reap128_spgemm()),
     ] {
         for k in [4usize, 8] {
             let (a, x) = workload(cfg, k);
@@ -107,6 +114,9 @@ pub fn run(cfg: &RunConfig) -> (Vec<SpmmRow>, Table) {
                 spmm_fpga_s: spmm.fpga_s,
                 serial_fpga_s,
                 spmm_waves: spmm.fpga_sim.waves,
+                spmm_cycles_serial: spmm.fpga_sim_serial.cycles,
+                spmm_cycles_db: spmm.fpga_sim_db.cycles,
+                spmm_prefetch_hidden: spmm.fpga_sim_db.prefetch_hidden_cycles,
                 max_abs_err,
             });
         }
@@ -163,7 +173,8 @@ fn write_bench_json(cfg: &RunConfig, rows: &[SpmmRow]) {
         out.push_str(&format!(
             "  {{\"workload\": \"spmm-k{}\", \"config\": \"{}\", \"mode\": \"spmm\", \
              \"cpu_s\": {}, \"fpga_s\": {}, \"total_s\": {}, \"waves\": {}, \
-             \"bytes_read\": {}}},\n",
+             \"bytes_read\": {}, \"cycles_serial\": {}, \"cycles_db\": {}, \
+             \"prefetch_hidden_cycles\": {}}},\n",
             r.k,
             escape(&r.config),
             num(r.spmm_cpu_s),
@@ -171,6 +182,9 @@ fn write_bench_json(cfg: &RunConfig, rows: &[SpmmRow]) {
             num(r.spmm_total_s),
             r.spmm_waves,
             r.spmm_bytes_read,
+            r.spmm_cycles_serial,
+            r.spmm_cycles_db,
+            r.spmm_prefetch_hidden,
         ));
         out.push_str(&format!(
             "  {{\"workload\": \"spmm-k{}\", \"config\": \"{}\", \"mode\": \"serial\", \
@@ -215,6 +229,29 @@ mod tests {
         let arr = j.as_arr().unwrap();
         assert_eq!(arr.len(), 12); // 6 rows × 2 modes
         assert!(arr[0].get("bytes_read").unwrap().as_usize().is_some());
+        assert!(arr[0].get("cycles_serial").unwrap().as_usize().is_some());
+        // acceptance headline: depth-2 prefetch strictly beats the serial
+        // channel on the wide designs (the panel loads hide, at minimum)
+        for r in &rows {
+            assert_eq!(
+                r.spmm_cycles_db + r.spmm_prefetch_hidden,
+                r.spmm_cycles_serial,
+                "{} k {}: hidden cycles must equal the depth-1 gap",
+                r.config,
+                r.k
+            );
+            if r.config != "REAP-32" {
+                assert!(
+                    r.spmm_cycles_db < r.spmm_cycles_serial,
+                    "{} k {}: {} !< {}",
+                    r.config,
+                    r.k,
+                    r.spmm_cycles_db,
+                    r.spmm_cycles_serial
+                );
+                assert!(r.spmm_prefetch_hidden > 0, "{} k {}", r.config, r.k);
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

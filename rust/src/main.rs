@@ -105,10 +105,25 @@ fn variant_spgemm(name: &str) -> Result<FpgaConfig> {
     })
 }
 
+fn dram_depth_opt() -> OptSpec {
+    OptSpec {
+        name: "dram-depth",
+        takes_value: true,
+        help: "DRAM stream buffer depth: 1 serial, 2 double-buffered prefetch (default 1)",
+    }
+}
+
+/// Apply `--dram-depth` to a design point (validated by the coordinator).
+fn apply_dram_depth(args: &Args, mut cfg: FpgaConfig) -> Result<FpgaConfig> {
+    cfg.dram_buffer_depth = args.get_parsed("dram-depth", cfg.dram_buffer_depth)?;
+    Ok(cfg)
+}
+
 fn cmd_spgemm(argv: Vec<String>) -> Result<()> {
     let mut specs = matrix_opts();
     specs.extend([
         OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
+        dram_depth_opt(),
         OptSpec { name: "xla", takes_value: false, help: "numerics via AOT XLA artifacts" },
         OptSpec { name: "verify", takes_value: false, help: "check vs CPU baseline" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
@@ -119,7 +134,7 @@ fn cmd_spgemm(argv: Vec<String>) -> Result<()> {
         return Ok(());
     }
     let a = load_matrix(&args)?;
-    let cfg = variant_spgemm(args.get("variant").unwrap_or("reap32"))?;
+    let cfg = apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?;
     println!(
         "matrix: {}x{}, nnz {}, density {:.5}%",
         a.nrows,
@@ -153,6 +168,12 @@ fn cmd_spgemm(argv: Vec<String>) -> Result<()> {
         rep.fpga_sim.pipeline_utilization() * 100.0,
         rep.fpga_sim.dram_bound_fraction() * 100.0,
     );
+    println!(
+        "  dram channel: depth-1 {} cycles | depth-2 {} cycles ({} hidden by prefetch)",
+        rep.fpga_sim_serial.cycles,
+        rep.fpga_sim_db.cycles,
+        rep.fpga_sim_db.prefetch_hidden_cycles,
+    );
     if args.flag("verify") {
         let reference = reap::kernels::spgemm(&a, &a);
         let v = verify::verify_csr(&rep.c, &reference);
@@ -168,6 +189,7 @@ fn cmd_spmv(argv: Vec<String>) -> Result<()> {
     let mut specs = matrix_opts();
     specs.extend([
         OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
+        dram_depth_opt(),
         OptSpec { name: "xla", takes_value: false, help: "numerics via AOT XLA artifacts" },
         OptSpec { name: "verify", takes_value: false, help: "check vs CPU baseline" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
@@ -179,7 +201,7 @@ fn cmd_spmv(argv: Vec<String>) -> Result<()> {
     }
     let a = load_matrix(&args)?;
     let x: Vec<f32> = (0..a.ncols).map(|i| ((i % 17) as f32 - 8.0) * 0.125).collect();
-    let cfg = variant_spgemm(args.get("variant").unwrap_or("reap32"))?;
+    let cfg = apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?;
     println!(
         "matrix: {}x{}, nnz {}, density {:.5}%",
         a.nrows, a.ncols, a.nnz(), a.density() * 100.0
@@ -218,6 +240,7 @@ fn cmd_spmm(argv: Vec<String>) -> Result<()> {
     specs.extend([
         OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
         OptSpec { name: "k", takes_value: true, help: "dense right-hand-side columns (default 8)" },
+        dram_depth_opt(),
         OptSpec { name: "verify", takes_value: false, help: "check vs CPU baseline" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
     ]);
@@ -229,7 +252,7 @@ fn cmd_spmm(argv: Vec<String>) -> Result<()> {
     let a = load_matrix(&args)?;
     let k = args.get_parsed::<usize>("k", 8)?;
     let x: Vec<f32> = (0..a.ncols * k).map(|i| ((i % 17) as f32 - 8.0) * 0.125).collect();
-    let cfg = variant_spgemm(args.get("variant").unwrap_or("reap32"))?;
+    let cfg = apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?;
     println!(
         "matrix: {}x{}, nnz {}, density {:.5}% | panel: {} columns",
         a.nrows, a.ncols, a.nnz(), a.density() * 100.0, k
@@ -260,6 +283,7 @@ fn cmd_cholesky(argv: Vec<String>) -> Result<()> {
     let mut specs = matrix_opts();
     specs.extend([
         OptSpec { name: "variant", takes_value: true, help: "reap32|reap64" },
+        dram_depth_opt(),
         OptSpec { name: "xla", takes_value: false, help: "numerics via AOT XLA artifacts" },
         OptSpec { name: "verify", takes_value: false, help: "check LL^T ~= A" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
@@ -272,11 +296,14 @@ fn cmd_cholesky(argv: Vec<String>) -> Result<()> {
     let base = load_matrix(&args)?;
     let spd = ops::make_spd(&base);
     let lower = spd.lower_triangle();
-    let cfg = match args.get("variant").unwrap_or("reap32") {
-        "reap32" => FpgaConfig::reap32_cholesky(),
-        "reap64" => FpgaConfig::reap64_cholesky(),
-        other => bail!("unknown variant `{other}` (reap32|reap64)"),
-    };
+    let cfg = apply_dram_depth(
+        &args,
+        match args.get("variant").unwrap_or("reap32") {
+            "reap32" => FpgaConfig::reap32_cholesky(),
+            "reap64" => FpgaConfig::reap64_cholesky(),
+            other => bail!("unknown variant `{other}` (reap32|reap64)"),
+        },
+    )?;
     println!(
         "SPD matrix: {}x{}, lower nnz {}",
         spd.nrows,
@@ -324,6 +351,7 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
         OptSpec { name: "full", takes_value: false, help: "paper-scale matrices (slow)" },
         OptSpec { name: "budget", takes_value: true, help: "seconds per measurement (default 0.2)" },
         OptSpec { name: "seed", takes_value: true, help: "suite seed" },
+        dram_depth_opt(),
         OptSpec { name: "no-csv", takes_value: false, help: "skip results/*.csv dumps" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
     ];
@@ -339,8 +367,13 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
         max_rows: args.get_parsed("max-rows", 2000)?,
         seed: args.get_parsed("seed", 0x5EA9)?,
         budget_s: args.get_parsed("budget", 0.2)?,
+        dram_buffer_depth: args.get_parsed("dram-depth", 1)?,
         ..Default::default()
     };
+    // fail like the per-kernel commands do, not via a harness panic
+    if cfg.dram_buffer_depth == 0 {
+        bail!("--dram-depth must be >= 1 (1 = serial, 2 = double-buffered)");
+    }
     if args.flag("full") {
         cfg.max_rows = usize::MAX;
     }

@@ -1,0 +1,222 @@
+//! Golden regression tests for the unified wave engine
+//! ([`reap::fpga::engine`]): the depth-1 channel must reproduce the
+//! pre-refactor serial accounting **bit-identically** for all four
+//! workloads (SpGEMM, SpMV, SpMM, Cholesky) plus the batched path, and
+//! the depth-2 channel must be monotonically no slower with identical
+//! DRAM traffic.
+//!
+//! The pre-refactor model is pinned *independently* of the engine: each
+//! simulator's emitted [`WaveCost`] sequence is re-priced here with the
+//! raw serial formula `max(setup + compute, max(read, write))` (at least
+//! one cycle per compute wave) straight from [`DramModel`], and the
+//! depth-1 engine output must match it wave for wave. That formula is,
+//! by construction, exactly what `spgemm_sim`/`spmv_sim`/`spmm_sim`/
+//! `cholesky_sim` hand-rolled before the engine existed.
+
+use reap::fpga::cholesky_sim::simulate_cholesky;
+use reap::fpga::dram::DramModel;
+use reap::fpga::engine::{execute_waves_at_depth, WaveCost, WaveKind};
+use reap::fpga::spgemm_sim::{simulate_spgemm, simulate_spgemm_batch, Style};
+use reap::fpga::spmm_sim::simulate_spmm;
+use reap::fpga::spmv_sim::simulate_spmv;
+use reap::fpga::{FpgaConfig, SimStats};
+use reap::rir::schedule::{schedule_spgemm, schedule_spgemm_batch};
+use reap::sparse::{gen, Csr};
+use reap::symbolic::CholeskySymbolic;
+use reap::testing::prop;
+
+const WORD_BYTES: u64 = reap::rir::layout::WORD_BYTES as u64;
+
+/// The pre-refactor serial wave cost, re-derived from first principles.
+fn serial_cost(c: &WaveCost, cfg: &FpgaConfig) -> u64 {
+    let read = DramModel::read_cycles(cfg, c.stream_words * WORD_BYTES);
+    let write = DramModel::write_cycles(cfg, c.writeback_words * WORD_BYTES);
+    let cy = (c.setup_cycles + c.compute_cycles).max(read.max(write));
+    match c.kind {
+        WaveKind::Compute => cy.max(1),
+        WaveKind::Load => cy,
+    }
+}
+
+/// Assert the full depth-1 ≡ serial contract and the depth-2 laws for one
+/// emitted cost sequence whose depth-1 stats are `stats_d1`.
+fn check_contract(costs: &[WaveCost], cfg: &FpgaConfig, stats_d1: &SimStats, what: &str) {
+    assert_eq!(cfg.dram_buffer_depth, 1, "{what}: golden configs are serial");
+    // depth 1: bit-identical to the independent serial formula, per wave
+    let d1 = execute_waves_at_depth(costs, cfg, 1);
+    let serial: Vec<u64> = costs.iter().map(|c| serial_cost(c, cfg)).collect();
+    assert_eq!(d1.item_cycles, serial, "{what}: depth-1 wave costs");
+    assert_eq!(&d1.stats, stats_d1, "{what}: simulate() must report depth-1 stats");
+    assert_eq!(d1.stats.cycles, serial.iter().sum::<u64>(), "{what}: totals");
+    assert_eq!(d1.stats.prefetch_hidden_cycles, 0, "{what}: depth 1 hides nothing");
+
+    // depth 2+: monotone cycles, exact hidden-cycle ledger, invariant
+    // traffic/flops/waves
+    let mut prev = d1.stats.cycles;
+    for depth in [2usize, 3] {
+        let r = execute_waves_at_depth(costs, cfg, depth);
+        assert!(r.stats.cycles <= prev, "{what}: depth {depth} regressed");
+        assert_eq!(
+            r.stats.cycles + r.stats.prefetch_hidden_cycles,
+            d1.stats.cycles,
+            "{what}: depth {depth} hidden-cycle ledger"
+        );
+        assert_eq!(r.stats.bytes_read, d1.stats.bytes_read, "{what}: read traffic");
+        assert_eq!(r.stats.bytes_written, d1.stats.bytes_written, "{what}: write traffic");
+        assert_eq!(r.stats.flops, d1.stats.flops, "{what}: flops");
+        assert_eq!(r.stats.waves, d1.stats.waves, "{what}: waves");
+        prev = r.stats.cycles;
+    }
+}
+
+fn spgemm_designs() -> [FpgaConfig; 2] {
+    [FpgaConfig::reap64_spgemm(), FpgaConfig::reap128_spgemm()]
+}
+
+#[test]
+fn spgemm_depth1_is_the_serial_model_and_depth2_strictly_wins() {
+    for seed in [7u64, 1959] {
+        let a = gen::power_law(300, 5400, seed);
+        let b = gen::random_uniform(300, 300, 4200, seed + 1);
+        for cfg in spgemm_designs() {
+            let s = schedule_spgemm(&a, &b, cfg.pipelines, cfg.bundle_size);
+            let r = simulate_spgemm(&a, &b, &s, &cfg, Style::HandCoded);
+            check_contract(&r.costs, &cfg, &r.stats, cfg.name);
+            // multi-wave run: the per-wave CAM setup hides -> strict win
+            let d2 = execute_waves_at_depth(&r.costs, &cfg, 2).stats;
+            assert!(
+                d2.cycles < r.stats.cycles && d2.prefetch_hidden_cycles > 0,
+                "{} seed {seed}: depth 2 must strictly win ({} !< {})",
+                cfg.name,
+                d2.cycles,
+                r.stats.cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_depth1_is_the_serial_model_and_depth2_strictly_wins() {
+    let jobs: Vec<(Csr, Csr)> = (0..10u64)
+        .map(|j| {
+            let n = 30 + (j as usize * 13) % 50;
+            (
+                gen::power_law(n, n * 6, 400 + j),
+                gen::random_uniform(n, n, n * 6, 500 + j),
+            )
+        })
+        .collect();
+    for cfg in spgemm_designs() {
+        let s = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+        let r = simulate_spgemm_batch(&jobs, &s, &cfg, Style::HandCoded);
+        check_contract(&r.costs, &cfg, &r.stats, cfg.name);
+        let d2 = execute_waves_at_depth(&r.costs, &cfg, 2).stats;
+        assert!(
+            d2.cycles < r.stats.cycles && d2.prefetch_hidden_cycles > 0,
+            "{}: batched depth 2 must strictly win",
+            cfg.name
+        );
+    }
+}
+
+#[test]
+fn spmv_depth1_is_the_serial_model() {
+    let a = gen::banded_fem(500, 4500, 11);
+    for cfg in spgemm_designs() {
+        let s = schedule_spgemm(&a, &Csr::new(a.ncols, a.ncols), cfg.pipelines, cfg.bundle_size);
+        let r = simulate_spmv(&a, &s, &cfg, Style::HandCoded);
+        check_contract(&r.costs, &cfg, &r.stats, cfg.name);
+    }
+}
+
+#[test]
+fn spmm_depth1_is_the_serial_model_and_depth2_strictly_wins() {
+    let a = gen::banded_fem(400, 3600, 13);
+    for cfg in spgemm_designs() {
+        let s = schedule_spgemm(&a, &Csr::new(a.ncols, a.ncols), cfg.pipelines, cfg.bundle_size);
+        for k in [4usize, 8, 20] {
+            let r = simulate_spmm(&a, &s, &cfg, Style::HandCoded, k);
+            check_contract(&r.costs, &cfg, &r.stats, cfg.name);
+            let d2 = execute_waves_at_depth(&r.costs, &cfg, 2).stats;
+            assert!(
+                d2.cycles < r.stats.cycles && d2.prefetch_hidden_cycles > 0,
+                "{} k {k}: depth 2 must strictly win",
+                cfg.name
+            );
+        }
+    }
+}
+
+#[test]
+fn cholesky_depth1_is_the_serial_model() {
+    let spd = gen::spd(gen::Family::BandedFem, 120, 900, 17);
+    let lower = spd.lower_triangle();
+    for cfg in [FpgaConfig::reap32_cholesky(), FpgaConfig::reap64_cholesky()] {
+        let sym = CholeskySymbolic::analyze(&lower, cfg.bundle_size);
+        let r = simulate_cholesky(&sym, &cfg, Style::HandCoded);
+        check_contract(&r.costs, &cfg, &r.stats, cfg.name);
+        // column k+1's L-row reads include column k's writeback (RAW
+        // through DRAM), so the Cholesky stream marks itself
+        // `dependent_stream` and gains nothing from prefetch: depth 2 is
+        // exactly depth 1, not merely monotone
+        let d2 = execute_waves_at_depth(&r.costs, &cfg, 2).stats;
+        assert_eq!(d2, r.stats);
+        assert!(r.costs.iter().all(|c| c.dependent_stream));
+    }
+}
+
+#[test]
+fn prop_depth1_serial_equivalence_and_depth2_laws_all_workloads() {
+    prop::quickcheck("engine depth laws over random workloads", |rng, size| {
+        let n = 16 + size.0 * 6;
+        let nnz = n * (3 + (rng.next_below(5) as usize));
+        let seed = rng.next_u64();
+        let a = match rng.next_below(3) {
+            0 => gen::random_uniform(n, n, nnz, seed),
+            1 => gen::power_law(n, nnz, seed),
+            _ => gen::banded_fem(n, nnz, seed),
+        };
+        let cfg = if rng.next_below(2) == 0 {
+            FpgaConfig::reap64_spgemm()
+        } else {
+            FpgaConfig::reap128_spgemm()
+        };
+        let style = if rng.next_below(4) == 0 { Style::HlsPreprocessed } else { Style::HandCoded };
+
+        // SpGEMM (C = A^2)
+        let s = schedule_spgemm(&a, &a, cfg.pipelines, cfg.bundle_size);
+        let r = simulate_spgemm(&a, &a, &s, &cfg, style);
+        check_contract(&r.costs, &cfg, &r.stats, "prop spgemm");
+
+        // SpMV / SpMM over the surrogate schedule
+        let sv = schedule_spgemm(&a, &Csr::new(n, n), cfg.pipelines, cfg.bundle_size);
+        let rv = simulate_spmv(&a, &sv, &cfg, style);
+        check_contract(&rv.costs, &cfg, &rv.stats, "prop spmv");
+        let k = 1 + rng.next_below(17) as usize;
+        let rm = simulate_spmm(&a, &sv, &cfg, style, k);
+        check_contract(&rm.costs, &cfg, &rm.stats, "prop spmm");
+
+        // Cholesky on an SPD-ified clone
+        let spd = gen::spd(gen::Family::BandedFem, n, nnz, seed ^ 0xC0DE);
+        let sym = CholeskySymbolic::analyze(&spd.lower_triangle(), cfg.bundle_size);
+        let rc = simulate_cholesky(&sym, &FpgaConfig::reap64_cholesky(), style);
+        check_contract(&rc.costs, &FpgaConfig::reap64_cholesky(), &rc.stats, "prop cholesky");
+    });
+}
+
+#[test]
+fn single_job_batch_matches_plain_sim_at_every_depth() {
+    let a = gen::random_uniform(80, 80, 900, 77);
+    let b = gen::random_uniform(80, 80, 900, 78);
+    for depth in [1usize, 2, 3] {
+        let cfg = FpgaConfig { dram_buffer_depth: depth, ..FpgaConfig::reap64_spgemm() };
+        let jobs = vec![(a.clone(), b.clone())];
+        let bs = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+        let solo = schedule_spgemm(&a, &b, cfg.pipelines, cfg.bundle_size);
+        let rb = simulate_spgemm_batch(&jobs, &bs, &cfg, Style::HandCoded);
+        let rs = simulate_spgemm(&a, &b, &solo, &cfg, Style::HandCoded);
+        assert_eq!(rb.stats, rs.stats, "depth {depth}");
+        assert_eq!(rb.wave_cycles, rs.wave_cycles, "depth {depth}");
+        assert_eq!(rb.costs, rs.costs, "depth {depth}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Fuzz `try_words_panel_to_dense` (SpMM dense-panel reassembly).
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    reap::reliability::fuzz_decode_panel(data);
+});

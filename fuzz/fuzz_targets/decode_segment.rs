@@ -1,0 +1,8 @@
+//! Fuzz `try_words_segment_to_csr` (per-tenant segment extraction).
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    reap::reliability::fuzz_decode_segment(data);
+});

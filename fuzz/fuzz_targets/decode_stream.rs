@@ -1,0 +1,10 @@
+//! Fuzz `try_words_to_csr`: any byte string must decode or error, never
+//! panic. The driver lives in the `reap` lib so the in-tree corpus test
+//! replays the exact same path on stable.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    reap::reliability::fuzz_decode_stream(data);
+});

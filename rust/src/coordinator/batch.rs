@@ -16,9 +16,10 @@
 
 use anyhow::{ensure, Result};
 
-use crate::fpga::engine::execute_waves_at_depth;
-use crate::fpga::spgemm_sim::{simulate_spgemm_batch, JobSimStats, Style};
+use crate::fpga::engine::{execute_waves_with_faults, WaveFault};
+use crate::fpga::spgemm_sim::{simulate_spgemm_batch_with_faults, JobSimStats, Style};
 use crate::fpga::{FpgaConfig, SimStats};
+use crate::reliability::draw_wave_faults;
 use crate::kernels::spgemm_parallel::SpaScratch;
 use crate::rir::encode::chain_bundle_count_csr;
 use crate::rir::layout::WORD_BYTES;
@@ -49,6 +50,14 @@ use super::overlap::pipelined_total;
 /// ```
 pub struct ReapBatch {
     pub cfg: FpgaConfig,
+    /// Probability that one fetch of a wave's stream arrives corrupted
+    /// (modeled on the simulated-time side only — numeric outputs are
+    /// still computed for every job). `0.0` (the default) disables fault
+    /// injection entirely and is bit-identical to the pre-fault model.
+    pub wave_fault_rate: f64,
+    /// Seed for the per-wave fault draw
+    /// ([`crate::reliability::draw_wave_faults`]); irrelevant at rate 0.
+    pub fault_seed: u64,
 }
 
 /// Outcome of one batched REAP SpGEMM execution.
@@ -75,11 +84,25 @@ pub struct ReapBatchReport {
     pub fpga_s: f64,
     /// End-to-end seconds under per-wave CPU/FPGA pipelining.
     pub total_s: f64,
+    /// Jobs whose waves exhausted [`FpgaConfig::max_wave_retries`] under
+    /// the configured [`ReapBatch::wave_fault_rate`]: their simulated
+    /// output never landed, and a production deployment would rerun just
+    /// these. Ascending job ids; always empty at fault rate 0.
+    pub failed_jobs: Vec<usize>,
 }
 
 impl ReapBatch {
     pub fn new(cfg: FpgaConfig) -> Self {
-        ReapBatch { cfg }
+        ReapBatch { cfg, wave_fault_rate: 0.0, fault_seed: 0 }
+    }
+
+    /// Enable seed-deterministic stream-fault injection at `rate` per
+    /// wave fetch (see [`Self::wave_fault_rate`]).
+    pub fn with_faults(mut self, rate: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&rate), "wave_fault_rate must be in [0, 1], got {rate}");
+        self.wave_fault_rate = rate;
+        self.fault_seed = seed;
+        self
     }
 
     /// Run the full batched flow for N independent jobs.
@@ -110,8 +133,24 @@ impl ReapBatch {
         // ---- numeric results via per-job schedule replay ----
         let outputs = numeric_batch(jobs, &schedule, preprocess_threads());
 
-        // ---- FPGA timing + per-job attribution from the cycle model ----
-        let sim = simulate_spgemm_batch(jobs, &schedule, &self.cfg, Style::HandCoded);
+        // ---- FPGA timing + per-job attribution from the cycle model,
+        // with the configured stream-fault draw (None at rate 0 keeps the
+        // fault-free path bit-identical) ----
+        let faults: Option<Vec<WaveFault>> = (self.wave_fault_rate > 0.0).then(|| {
+            draw_wave_faults(
+                self.fault_seed,
+                schedule.n_waves(),
+                self.wave_fault_rate,
+                self.cfg.max_wave_retries,
+            )
+        });
+        let sim = simulate_spgemm_batch_with_faults(
+            jobs,
+            &schedule,
+            &self.cfg,
+            Style::HandCoded,
+            faults.as_deref(),
+        );
         let fpga_s = sim.stats.seconds(&self.cfg);
 
         // ---- per-wave pipelined overlap, identical to the single-job
@@ -127,11 +166,20 @@ impl ReapBatch {
             if self.cfg.dram_buffer_depth == d {
                 sim.stats.clone()
             } else {
-                execute_waves_at_depth(&sim.costs, &self.cfg, d).stats
+                // re-execute under the *same* fault draw, so the serial
+                // vs double-buffered comparison isolates the channel depth
+                execute_waves_with_faults(&sim.costs, &self.cfg, d, faults.as_deref()).stats
             }
         };
         let fpga_sim_serial = depth_stats(1);
         let fpga_sim_db = depth_stats(2);
+
+        let failed_jobs: Vec<usize> = sim
+            .job_stats
+            .iter()
+            .enumerate()
+            .filter_map(|(j, js)| js.failed.then_some(j))
+            .collect();
 
         Ok(ReapBatchReport {
             outputs,
@@ -143,6 +191,7 @@ impl ReapBatch {
             a_stream_bytes,
             fpga_s,
             total_s,
+            failed_jobs,
         })
     }
 }
@@ -363,6 +412,45 @@ mod tests {
             assert!(b.windows(2).all(|w| w[0] < w[1]));
             assert!(b.len() <= t + 1);
         }
+    }
+
+    #[test]
+    fn fault_injection_charges_time_never_outputs() {
+        let jobs = mk_jobs(4, 30, 200, 500);
+        let cfg = FpgaConfig::reap64_spgemm();
+        let base = ReapBatch::new(cfg.clone()).run(&jobs).unwrap();
+        assert!(base.failed_jobs.is_empty());
+        assert_eq!(base.fpga_sim.retry_cycles, 0);
+
+        // the builder at rate 0 is bit-identical to the default
+        let z = ReapBatch::new(cfg.clone()).with_faults(0.0, 99).run(&jobs).unwrap();
+        assert_eq!(z.fpga_sim, base.fpga_sim);
+        assert!(z.failed_jobs.is_empty());
+
+        // a lossy link costs retry cycles — exactly — and leaves the
+        // numeric products untouched; the depth comparison rides the same
+        // draw, so its ledger holds too
+        let f = ReapBatch::new(cfg.clone()).with_faults(0.5, 7).run(&jobs).unwrap();
+        assert_eq!(f.fpga_sim.cycles, base.fpga_sim.cycles + f.fpga_sim.retry_cycles);
+        assert_eq!(f.fpga_sim.bytes_read, base.fpga_sim.bytes_read);
+        assert_eq!(f.outputs, base.outputs);
+        assert_eq!(f.fpga_sim_serial.retry_cycles, f.fpga_sim.retry_cycles);
+        assert_eq!(
+            f.fpga_sim_serial.cycles,
+            base.fpga_sim_serial.cycles + f.fpga_sim_serial.retry_cycles
+        );
+
+        // same seed, same draw: the whole report's fault story replays
+        let f2 = ReapBatch::new(cfg.clone()).with_faults(0.5, 7).run(&jobs).unwrap();
+        assert_eq!(f2.fpga_sim, f.fpga_sim);
+        assert_eq!(f2.failed_jobs, f.failed_jobs);
+
+        // rate 1.0 exhausts every wave's retry budget: graceful
+        // degradation reports every tenant failed, deterministically
+        let all = ReapBatch::new(cfg).with_faults(1.0, 1).run(&jobs).unwrap();
+        assert_eq!(all.failed_jobs, (0..jobs.len()).collect::<Vec<_>>());
+        assert!(all.fpga_sim.retry_cycles > 0, "rate 1.0 always exhausts the budget");
+        assert_eq!(all.fpga_sim.cycles, base.fpga_sim.cycles + all.fpga_sim.retry_cycles);
     }
 
     #[test]

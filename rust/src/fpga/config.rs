@@ -17,6 +17,9 @@ pub enum ConfigError {
     /// `dram_buffer_depth == 0`: the stream frontend needs at least the
     /// single (serial) wave buffer.
     ZeroDramBufferDepth,
+    /// `max_wave_retries == 0`: the detect-and-replay path needs at least
+    /// one re-fetch attempt before a wave may be declared failed.
+    ZeroMaxWaveRetries,
 }
 
 impl fmt::Display for ConfigError {
@@ -30,6 +33,9 @@ impl fmt::Display for ConfigError {
             }
             ConfigError::ZeroDramBufferDepth => {
                 write!(f, "invalid FpgaConfig: dram_buffer_depth must be >= 1")
+            }
+            ConfigError::ZeroMaxWaveRetries => {
+                write!(f, "invalid FpgaConfig: max_wave_retries must be >= 1")
             }
         }
     }
@@ -93,6 +99,14 @@ pub struct FpgaConfig {
     /// setup fetch under wave *k*'s compute). Higher depths prefetch
     /// further ahead. Must be ≥ 1 ([`FpgaConfig::validate`]).
     pub dram_buffer_depth: usize,
+    /// Detect-and-replay bound: how many times the engine re-fetches and
+    /// replays a wave whose stream failed checksum verification before
+    /// declaring the wave (and the jobs scheduled on it) failed
+    /// ([`crate::fpga::engine::execute_waves_with_faults`]). Each retry
+    /// costs the wave's full serial cycle count, charged to
+    /// [`super::SimStats::retry_cycles`]. Must be ≥ 1
+    /// ([`FpgaConfig::validate`]); irrelevant at fault rate 0.
+    pub max_wave_retries: usize,
     pub dram: DramConfig,
     /// FP multiply pipeline latency, cycles.
     pub mult_latency: u64,
@@ -116,6 +130,7 @@ impl FpgaConfig {
             dot_multipliers: 1,
             vector_lanes: 8,
             dram_buffer_depth: 1,
+            max_wave_retries: 3,
             dram: DramConfig::single_core(),
             mult_latency: 5,
             add_latency: 4,
@@ -180,6 +195,9 @@ impl FpgaConfig {
         }
         if self.dram_buffer_depth == 0 {
             return Err(ConfigError::ZeroDramBufferDepth);
+        }
+        if self.max_wave_retries == 0 {
+            return Err(ConfigError::ZeroMaxWaveRetries);
         }
         Ok(())
     }
@@ -278,11 +296,13 @@ mod tests {
         assert_eq!(ch64.dot_multipliers, 16);
         assert_eq!(ch64.freq_mhz, 238.0);
 
-        // every design point carries the 8-wide SpMM vector lanes and the
-        // serial (depth-1) DRAM frontend as its published baseline
+        // every design point carries the 8-wide SpMM vector lanes, the
+        // serial (depth-1) DRAM frontend and the 3-retry replay bound as
+        // its published baseline
         for c in [c32, c128, ch64] {
             assert_eq!(c.vector_lanes, 8);
             assert_eq!(c.dram_buffer_depth, 1);
+            assert_eq!(c.max_wave_retries, 3);
             assert_eq!(c.validate(), Ok(()));
         }
     }
@@ -303,6 +323,14 @@ mod tests {
     fn validate_rejects_zero_dram_buffer_depth() {
         let cfg = FpgaConfig { dram_buffer_depth: 0, ..FpgaConfig::reap32_spgemm() };
         assert_eq!(cfg.validate(), Err(ConfigError::ZeroDramBufferDepth));
+    }
+
+    #[test]
+    fn validate_rejects_zero_max_wave_retries() {
+        let cfg = FpgaConfig { max_wave_retries: 0, ..FpgaConfig::reap32_spgemm() };
+        assert_eq!(cfg.validate(), Err(ConfigError::ZeroMaxWaveRetries));
+        let msg = ConfigError::ZeroMaxWaveRetries.to_string();
+        assert!(msg.contains("max_wave_retries"), "{msg}");
     }
 
     #[test]

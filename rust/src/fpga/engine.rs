@@ -36,6 +36,31 @@
 //! so deeper buffering is monotonically non-slower, and the hidden-cycle
 //! counter is exactly the cycles the prefetch bought. DRAM traffic
 //! (bytes read/written) is depth-invariant by construction.
+//!
+//! # Fault detection and replay
+//!
+//! The streamed RIR words may carry a per-bundle CRC32
+//! ([`crate::rir::bundle::BundleFlags::CHECKSUM`]); the input controller
+//! verifies each bundle before committing it to a CAM bank, and a
+//! mismatch aborts the wave and triggers a re-fetch.
+//! [`execute_waves_with_faults`] models this: each wave may carry a
+//! [`WaveFault`] saying how many times its stream had to be replayed.
+//! Every replay re-runs the wave at its full serial (depth-1) cost — the
+//! corrupted fetch cannot overlap the *next* wave because the wave never
+//! retired — and is charged to [`SimStats::retry_cycles`], so the ledger
+//! is exact at every depth:
+//!
+//! ```text
+//! cycles(faults) == cycles(no faults) + retry_cycles
+//! ```
+//!
+//! DRAM *traffic* stays fault-invariant (the re-fetched bytes are not
+//! added to `bytes_read`): the counters model useful data movement, and
+//! keeping them fault-free preserves the batch partition laws and the
+//! depth-invariance of traffic. Time is charged; traffic is not. A wave
+//! whose retries exhausted [`FpgaConfig::max_wave_retries`] is reported
+//! in [`EngineResult::failed_waves`] so callers (the batch coordinator)
+//! can fail just the affected jobs instead of the whole run.
 
 use crate::rir::layout::WORD_BYTES;
 
@@ -144,6 +169,24 @@ impl WaveCost {
     }
 }
 
+/// Stream-fault outcome of one wave, drawn by
+/// [`crate::reliability::draw_wave_faults`] (or constructed directly in
+/// tests) and consumed by [`execute_waves_with_faults`].
+///
+/// `retries` is the number of times the wave's stream was re-fetched and
+/// replayed after a checksum mismatch — at most
+/// [`FpgaConfig::max_wave_retries`]. `failed` marks a wave whose
+/// corruption persisted past the retry budget; the engine still charges
+/// its retries and advances (the hardware drops the wave's partials and
+/// moves on), reporting the index in [`EngineResult::failed_waves`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WaveFault {
+    /// Replays charged to this wave (each at full serial cost).
+    pub retries: u64,
+    /// The wave exhausted its retry budget and produced no usable result.
+    pub failed: bool,
+}
+
 /// Exact word→byte widening (a word count that cannot be carried in bytes
 /// must abort, not wrap).
 fn words_to_bytes(words: u64) -> u64 {
@@ -193,6 +236,9 @@ pub struct EngineResult {
     /// Per-item cycle deltas (`finish[k] − finish[k−1]`), parallel to the
     /// input cost sequence; they sum to `stats.cycles` at every depth.
     pub item_cycles: Vec<u64>,
+    /// Indices of waves whose stream corruption survived every retry
+    /// ([`WaveFault::failed`]); empty on the fault-free paths.
+    pub failed_waves: Vec<usize>,
 }
 
 /// Execute a wave sequence on the design's channel depth
@@ -221,6 +267,28 @@ pub fn execute_waves(costs: &[WaveCost], cfg: &FpgaConfig) -> EngineResult {
 /// max(setup + compute, dram)` — exactly the serial per-wave model every
 /// simulator used before the refactor.
 pub fn execute_waves_at_depth(costs: &[WaveCost], cfg: &FpgaConfig, depth: usize) -> EngineResult {
+    execute_waves_with_faults(costs, cfg, depth, None)
+}
+
+/// Execute a wave sequence with per-wave stream-fault outcomes.
+///
+/// `faults`, when present, must be parallel to `costs`. Each wave is
+/// first timed exactly as on the fault-free path; its
+/// [`WaveFault::retries`] replays are then appended at the wave's full
+/// serial cost and charged to [`SimStats::retry_cycles`] (see the module
+/// docs for the exact ledger law and why DRAM traffic stays
+/// fault-invariant). `faults == None` — and equally a slice of
+/// all-default [`WaveFault`]s — is bit-identical to
+/// [`execute_waves_at_depth`].
+pub fn execute_waves_with_faults(
+    costs: &[WaveCost],
+    cfg: &FpgaConfig,
+    depth: usize,
+    faults: Option<&[WaveFault]>,
+) -> EngineResult {
+    if let Some(f) = faults {
+        assert_eq!(f.len(), costs.len(), "engine: fault slice must be parallel to the cost slice");
+    }
     let p = cfg.pipelines as u64;
     let mut channel = DramChannel::new(depth);
     let mut stats = SimStats::default();
@@ -228,6 +296,7 @@ pub fn execute_waves_at_depth(costs: &[WaveCost], cfg: &FpgaConfig, depth: usize
     // finish times of every retired item (the slot constraint looks back
     // `depth` items)
     let mut dones: Vec<u64> = Vec::with_capacity(costs.len());
+    let mut failed_waves = Vec::new();
     let mut finish: u64 = 0;
 
     for (k, c) in costs.iter().enumerate() {
@@ -246,13 +315,29 @@ pub fn execute_waves_at_depth(costs: &[WaveCost], cfg: &FpgaConfig, depth: usize
         if c.kind == WaveKind::Compute {
             fin = fin.max(finish + 1);
         }
-        let delta = fin - finish;
+        let delta0 = fin - finish;
         let serial = c.serial_cycles(cfg);
         debug_assert!(
-            delta <= serial,
-            "engine: wave {k} delta {delta} exceeds its serial cost {serial}"
+            delta0 <= serial,
+            "engine: wave {k} delta {delta0} exceeds its serial cost {serial}"
         );
-        stats.prefetch_hidden_cycles += serial.saturating_sub(delta);
+        // Replays: each re-runs the wave at its full serial cost and
+        // cannot overlap anything (the wave never retired, so nothing
+        // downstream can start). The fetch/retire recurrence below stays
+        // on the fault-free timeline — every wave after the replay shifts
+        // uniformly — which is what makes the retry ledger exact at every
+        // depth: cycles(faults) == cycles(no faults) + retry_cycles.
+        let fault = faults.map_or(WaveFault::default(), |f| f[k]);
+        debug_assert!(
+            fault.retries <= cfg.max_wave_retries as u64,
+            "engine: wave {k} carries {} retries, over FpgaConfig::max_wave_retries = {}",
+            fault.retries,
+            cfg.max_wave_retries
+        );
+        let retry_cy = fault.retries * serial;
+        let delta = delta0 + retry_cy;
+        stats.prefetch_hidden_cycles += serial.saturating_sub(delta0);
+        stats.retry_cycles += retry_cy;
         stats.cycles += delta;
         if c.setup_cycles + c.compute_cycles >= dram_cy {
             stats.compute_bound_cycles += delta;
@@ -261,6 +346,8 @@ pub fn execute_waves_at_depth(costs: &[WaveCost], cfg: &FpgaConfig, depth: usize
         }
         match c.occupancy {
             Occupancy::ActivePipelines(active) => {
+                // replays re-occupy the same pipelines, so busy/idle are
+                // charged over the full (retry-inclusive) delta
                 let idle = p
                     .checked_sub(active)
                     .expect("wave overfilled: more active pipelines than the design has");
@@ -272,16 +359,21 @@ pub fn execute_waves_at_depth(costs: &[WaveCost], cfg: &FpgaConfig, depth: usize
                 stats.idle_pipeline_cycles += idle;
             }
         }
+        // traffic/flops/waves are fault-invariant: the counters model
+        // useful data movement and work (see the module docs)
         stats.bytes_read += words_to_bytes(c.stream_words);
         stats.bytes_written += words_to_bytes(c.writeback_words);
         stats.flops += c.flops;
         stats.waves += c.waves;
+        if fault.failed {
+            failed_waves.push(k);
+        }
         item_cycles.push(delta);
         dones.push(fin);
         finish = fin;
     }
 
-    EngineResult { stats, item_cycles }
+    EngineResult { stats, item_cycles, failed_waves }
 }
 
 #[cfg(test)]
@@ -462,5 +554,96 @@ mod tests {
     #[should_panic(expected = "dram_buffer_depth must be >= 1")]
     fn zero_depth_channel_rejected() {
         let _ = DramChannel::new(0);
+    }
+
+    fn mixed_costs() -> Vec<WaveCost> {
+        (0..12)
+            .map(|i| match i % 4 {
+                0 => wave(32, 800, 2800, 50),
+                1 => wave(8, 30, 28_000, 0), // dram-bound
+                2 => WaveCost::load(7000),
+                _ => wave(64, 300, 140, 2000),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zero_faults_are_bit_identical_to_the_plain_path() {
+        let costs = mixed_costs();
+        for depth in [1usize, 2, 3] {
+            let cfg = cfg_at(depth);
+            let plain = execute_waves(&costs, &cfg);
+            let none = execute_waves_with_faults(&costs, &cfg, depth, None);
+            let zeros = vec![WaveFault::default(); costs.len()];
+            let zeroed = execute_waves_with_faults(&costs, &cfg, depth, Some(&zeros));
+            assert_eq!(plain.stats, none.stats);
+            assert_eq!(plain.stats, zeroed.stats);
+            assert_eq!(plain.item_cycles, zeroed.item_cycles);
+            assert_eq!(plain.stats.retry_cycles, 0);
+            assert!(plain.failed_waves.is_empty() && zeroed.failed_waves.is_empty());
+        }
+    }
+
+    #[test]
+    fn retry_ledger_is_exact_at_every_depth() {
+        let costs = mixed_costs();
+        let mut faults = vec![WaveFault::default(); costs.len()];
+        faults[1] = WaveFault { retries: 2, failed: false };
+        faults[5] = WaveFault { retries: 1, failed: false };
+        faults[10] = WaveFault { retries: 3, failed: true };
+        for depth in [1usize, 2, 3] {
+            let cfg = cfg_at(depth);
+            let base = execute_waves(&costs, &cfg);
+            let r = execute_waves_with_faults(&costs, &cfg, depth, Some(&faults));
+            let expected_retry: u64 = faults
+                .iter()
+                .zip(&costs)
+                .map(|(f, c)| f.retries * c.serial_cycles(&cfg))
+                .sum();
+            assert_eq!(r.stats.retry_cycles, expected_retry);
+            assert_eq!(
+                r.stats.cycles,
+                base.stats.cycles + expected_retry,
+                "depth {depth}: cycles(faults) must equal cycles(no faults) + retry_cycles"
+            );
+            // traffic, flops and waves are fault-invariant
+            assert_eq!(r.stats.bytes_read, base.stats.bytes_read);
+            assert_eq!(r.stats.bytes_written, base.stats.bytes_written);
+            assert_eq!(r.stats.flops, base.stats.flops);
+            assert_eq!(r.stats.waves, base.stats.waves);
+            // the hidden-cycle counter still measures only prefetch wins
+            assert_eq!(r.stats.prefetch_hidden_cycles, base.stats.prefetch_hidden_cycles);
+            // bound split and per-item deltas stay internally consistent
+            assert_eq!(
+                r.stats.compute_bound_cycles + r.stats.dram_bound_cycles,
+                r.stats.cycles
+            );
+            assert_eq!(r.stats.cycles, r.item_cycles.iter().sum::<u64>());
+            assert_eq!(r.failed_waves, vec![10]);
+        }
+    }
+
+    #[test]
+    fn depth_ledger_still_holds_under_faults() {
+        // cycles(d) + hidden(d) == cycles(1) when both runs carry the
+        // same fault slice (retries are depth-invariant serial charges)
+        let costs = mixed_costs();
+        let faults: Vec<WaveFault> = (0..costs.len())
+            .map(|k| WaveFault { retries: (k % 3) as u64, failed: k == 7 })
+            .collect();
+        let d1 = execute_waves_with_faults(&costs, &cfg_at(1), 1, Some(&faults));
+        for depth in [2usize, 3, 4] {
+            let r = execute_waves_with_faults(&costs, &cfg_at(depth), depth, Some(&faults));
+            assert_eq!(r.stats.cycles + r.stats.prefetch_hidden_cycles, d1.stats.cycles);
+            assert_eq!(r.stats.retry_cycles, d1.stats.retry_cycles);
+            assert_eq!(r.failed_waves, vec![7]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fault slice must be parallel")]
+    fn mismatched_fault_slice_rejected() {
+        let costs = vec![wave(0, 10, 0, 0)];
+        let _ = execute_waves_with_faults(&costs, &cfg_at(1), 1, Some(&[]));
     }
 }

@@ -14,7 +14,10 @@
 //! * [`engine`] — the unified wave engine: every simulator emits
 //!   [`WaveCost`] sequences and one `execute_waves` loop owns the
 //!   DRAM/compute overlap, including the double-buffered stream prefetch
-//!   selected by [`FpgaConfig::dram_buffer_depth`].
+//!   selected by [`FpgaConfig::dram_buffer_depth`] and the
+//!   checksum-failure detect-and-replay model (per-wave [`WaveFault`]s,
+//!   retries charged to [`SimStats::retry_cycles`], bounded by
+//!   [`FpgaConfig::max_wave_retries`]).
 //! * [`spgemm_sim`] — the five-module SpGEMM datapath of Fig 1 (input
 //!   controller → match+multiply (CAM) → sort → merge → output controller),
 //!   plus the multi-tenant batched variant with per-job attribution.
@@ -44,5 +47,8 @@ pub mod spmv_sim;
 pub mod stats;
 
 pub use config::{cpu_fp_units, AreaModel, ConfigError, DramConfig, FpgaConfig};
-pub use engine::{execute_waves, execute_waves_at_depth, DramChannel, WaveCost, WaveKind};
+pub use engine::{
+    execute_waves, execute_waves_at_depth, execute_waves_with_faults, DramChannel, WaveCost,
+    WaveFault, WaveKind,
+};
 pub use stats::SimStats;

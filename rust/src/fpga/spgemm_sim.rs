@@ -24,7 +24,9 @@ use crate::rir::schedule::{BatchSchedule, SpgemmSchedule};
 use crate::sparse::Csr;
 
 use super::config::FpgaConfig;
-use super::engine::{execute_waves, Occupancy, WaveCost, WaveKind};
+use super::engine::{
+    execute_waves, execute_waves_with_faults, Occupancy, WaveCost, WaveFault, WaveKind,
+};
 use super::stats::SimStats;
 
 /// Checked widening for wave accounting: a count that cannot be carried
@@ -213,6 +215,11 @@ pub struct JobSimStats {
     pub bytes_read: u64,
     /// DRAM bytes written for the job's merged output.
     pub bytes_written: u64,
+    /// The job rode at least one wave whose stream corruption survived
+    /// every retry ([`WaveFault::failed`]): its output is unusable and the
+    /// coordinator reports it failed, without failing the rest of the
+    /// batch. Always `false` on the fault-free path.
+    pub failed: bool,
 }
 
 /// Result of simulating one batched (multi-tenant) SpGEMM execution.
@@ -227,6 +234,10 @@ pub struct BatchSimResult {
     /// Per-wave cost description handed to the engine (aggregate only —
     /// per-job attribution always follows the executed depth's deltas).
     pub costs: Vec<WaveCost>,
+    /// Shared waves whose retries were exhausted
+    /// ([`crate::fpga::engine::EngineResult::failed_waves`]); empty
+    /// without fault injection.
+    pub failed_waves: Vec<usize>,
 }
 
 /// Simulate N independent jobs `C_j = A_j × B_j` sharing the design's
@@ -251,6 +262,25 @@ pub fn simulate_spgemm_batch(
     schedule: &BatchSchedule,
     cfg: &FpgaConfig,
     style: Style,
+) -> BatchSimResult {
+    simulate_spgemm_batch_with_faults(jobs, schedule, cfg, style, None)
+}
+
+/// [`simulate_spgemm_batch`] with per-wave stream-fault outcomes (drawn
+/// by [`crate::reliability::draw_wave_faults`]).
+///
+/// Retries are charged to [`SimStats::retry_cycles`] by the engine; a
+/// wave that exhausts [`FpgaConfig::max_wave_retries`] fails **only the
+/// jobs riding it** — each such job's [`JobSimStats::failed`] is set and
+/// the wave index lands in [`BatchSimResult::failed_waves`], while every
+/// other job's results stay exactly as simulated. `faults == None` is
+/// bit-identical to [`simulate_spgemm_batch`].
+pub fn simulate_spgemm_batch_with_faults(
+    jobs: &[(Csr, Csr)],
+    schedule: &BatchSchedule,
+    cfg: &FpgaConfig,
+    style: Style,
+    faults: Option<&[WaveFault]>,
 ) -> BatchSimResult {
     assert_eq!(jobs.len(), schedule.n_jobs, "job list does not match schedule");
     let mut costs = Vec::with_capacity(schedule.waves.len());
@@ -365,7 +395,7 @@ pub fn simulate_spgemm_batch(
         );
     }
 
-    let engine = execute_waves(&costs, cfg);
+    let engine = execute_waves_with_faults(&costs, cfg, cfg.dram_buffer_depth, faults);
     for (runs, &wave_cy) in wave_runs.iter().zip(&engine.item_cycles) {
         for &(job, n_asg) in runs {
             let js = &mut job_stats[job];
@@ -373,7 +403,19 @@ pub fn simulate_spgemm_batch(
             js.busy_pipeline_cycles += n_asg * wave_cy;
         }
     }
-    BatchSimResult { stats: engine.stats, wave_cycles: engine.item_cycles, job_stats, costs }
+    // graceful degradation: a dead wave kills only the tenants riding it
+    for &w in &engine.failed_waves {
+        for &(job, _) in &wave_runs[w] {
+            job_stats[job].failed = true;
+        }
+    }
+    BatchSimResult {
+        stats: engine.stats,
+        wave_cycles: engine.item_cycles,
+        job_stats,
+        costs,
+        failed_waves: engine.failed_waves,
+    }
 }
 
 #[cfg(test)]
@@ -555,6 +597,48 @@ mod tests {
             "shared waves must cost fewer cycles: {} vs {}",
             batch.stats.cycles,
             serial_cycles
+        );
+    }
+
+    #[test]
+    fn batch_faults_charge_retries_and_fail_only_riding_jobs() {
+        let jobs = mk_jobs(5, 40, 300, 21);
+        let cfg = FpgaConfig::reap64_spgemm();
+        let s = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+        let base = simulate_spgemm_batch(&jobs, &s, &cfg, Style::HandCoded);
+        assert!(base.failed_waves.is_empty());
+        assert!(base.job_stats.iter().all(|j| !j.failed));
+        assert_eq!(base.stats.retry_cycles, 0);
+
+        // None and all-default faults are bit-identical to the plain path
+        let zeros = vec![WaveFault::default(); s.n_waves()];
+        let rz =
+            simulate_spgemm_batch_with_faults(&jobs, &s, &cfg, Style::HandCoded, Some(&zeros));
+        assert_eq!(rz.stats, base.stats);
+        assert_eq!(rz.wave_cycles, base.wave_cycles);
+
+        // retry one wave, fail another: the ledger is exact and only the
+        // failed wave's tenants are marked
+        assert!(s.n_waves() >= 2, "suite must span at least two waves");
+        let mut faults = zeros;
+        faults[0].retries = 2;
+        let last = faults.len() - 1;
+        faults[last] = WaveFault { retries: 1, failed: true };
+        let rf =
+            simulate_spgemm_batch_with_faults(&jobs, &s, &cfg, Style::HandCoded, Some(&faults));
+        assert!(rf.stats.retry_cycles > 0);
+        assert_eq!(rf.stats.cycles, base.stats.cycles + rf.stats.retry_cycles);
+        assert_eq!(rf.stats.bytes_read, base.stats.bytes_read, "traffic is fault-invariant");
+        assert_eq!(rf.stats.flops, base.stats.flops);
+        assert_eq!(rf.failed_waves, vec![last]);
+        let riding: Vec<usize> =
+            s.waves[last].segments.iter().map(|seg| seg.job as usize).collect();
+        for (j, js) in rf.job_stats.iter().enumerate() {
+            assert_eq!(js.failed, riding.contains(&j), "job {j}");
+        }
+        assert!(
+            rf.job_stats.iter().any(|j| !j.failed),
+            "a single dead wave must not take down every tenant"
         );
     }
 

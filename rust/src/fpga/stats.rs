@@ -31,6 +31,13 @@ pub struct SimStats {
     /// at any depth, `cycles + prefetch_hidden_cycles` equals the
     /// depth-1 cycle count.
     pub prefetch_hidden_cycles: u64,
+    /// Cycles spent re-fetching and replaying waves whose stream failed
+    /// checksum verification ([`crate::fpga::engine`]'s detect-and-replay
+    /// model). Each retry re-runs the wave at its full serial cost, so
+    /// the ledger is exact: `cycles` under faults equals the fault-free
+    /// cycle count plus `retry_cycles`, and at `fault_rate == 0` this is
+    /// always 0 with `cycles` bit-identical to the baseline.
+    pub retry_cycles: u64,
 }
 
 impl SimStats {
@@ -89,6 +96,7 @@ impl SimStats {
         self.flops += other.flops;
         self.waves += other.waves;
         self.prefetch_hidden_cycles += other.prefetch_hidden_cycles;
+        self.retry_cycles += other.retry_cycles;
     }
 }
 
@@ -125,6 +133,7 @@ mod tests {
             waves: 2,
             bytes_read: 3,
             prefetch_hidden_cycles: 4,
+            retry_cycles: 6,
             ..Default::default()
         };
         a.merge(&b);
@@ -133,5 +142,6 @@ mod tests {
         assert_eq!(a.waves, 3);
         assert_eq!(a.bytes_read, 3);
         assert_eq!(a.prefetch_hidden_cycles, 4);
+        assert_eq!(a.retry_cycles, 6);
     }
 }

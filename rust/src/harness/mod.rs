@@ -16,6 +16,7 @@
 //! | [`hls_cmp`] | §V-C HLS preprocessing benefit |
 //! | [`batch`] | multi-tenant batch throughput (no paper figure) |
 //! | [`spmm`] | SpMM multi-vector vs k serial SpMVs (no paper figure) |
+//! | [`reliability`] | checksummed-stream fault sweep (no paper figure) |
 
 pub mod batch;
 pub mod fig10;
@@ -26,6 +27,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod hls_cmp;
 pub mod json;
+pub mod reliability;
 pub mod report;
 pub mod spmm;
 pub mod suite;

@@ -1,0 +1,282 @@
+//! Reliability: fault-rate sweep over the checksummed RIR stream path
+//! and the engine's wave-retry model (no paper figure corresponds;
+//! EXPERIMENTS.md §Reliability documents the methodology).
+//!
+//! Two studies per fault rate, both seed-deterministic:
+//!
+//! * **Detection** — serialized RIR streams are corrupted with per-word
+//!   bit flips ([`FaultInjector`]); each corrupted stream is decoded
+//!   twice, once from the checksummed form
+//!   ([`serialize_stream_checksummed`]) and once from the plain form.
+//!   A corruption is *silent* when the decoder returns `Ok` with a
+//!   matrix that differs from the original — the checksummed path must
+//!   have zero silent rows at every rate (that is the headline the CI
+//!   asserts); the plain columns show what the CRC word buys.
+//! * **Survival** — the multi-tenant batch workload
+//!   ([`super::batch::small_job_suite`]) runs through
+//!   [`ReapBatch::with_faults`]: detected wave corruption costs
+//!   full-serial replays ([`SimStats::retry_cycles`], exact ledger
+//!   `cycles == baseline + retry_cycles`), and a wave that exhausts
+//!   [`FpgaConfig::max_wave_retries`]
+//!   fails only the tenants riding it. At rate 1.0 every wave exhausts
+//!   its budget and every job is reported failed — graceful degradation,
+//!   not a panic or a whole-batch abort.
+
+use crate::coordinator::ReapBatch;
+use crate::fpga::FpgaConfig;
+use crate::reliability::{FaultConfig, FaultInjector};
+use crate::rir::decode::try_words_to_csr;
+use crate::rir::layout::{serialize_stream, serialize_stream_checksummed};
+use crate::rir::BundleStream;
+use crate::sparse::gen::{self, Family};
+use crate::util::table::Table;
+
+use super::report::RunConfig;
+
+/// Fault rates swept: clean baseline, rare, moderate, heavy, total loss.
+pub const FAULT_RATES: [f64; 5] = [0.0, 0.01, 0.05, 0.2, 1.0];
+
+/// Streams per rate in the detection study.
+const DETECTION_STREAMS: usize = 16;
+
+/// One fault-rate row of the sweep.
+#[derive(Clone, Debug)]
+pub struct ReliabilityRow {
+    /// Per-word bit-flip / per-fetch corruption probability.
+    pub fault_rate: f64,
+    /// Streams corrupted-and-decoded in the detection study.
+    pub streams: usize,
+    /// Streams the injector actually damaged (≥ 1 bit flipped).
+    pub corrupted: usize,
+    /// Damaged checksummed streams the decoder rejected.
+    pub detected: usize,
+    /// Damaged checksummed streams decoded `Ok` to a *different* matrix
+    /// — silent corruption. Must be 0 at every rate.
+    pub silent: usize,
+    /// Same two counters for the plain (no-CRC) wire form.
+    pub detected_nochk: usize,
+    pub silent_nochk: usize,
+    /// Tenants in the survival batch.
+    pub jobs: usize,
+    /// Tenants whose waves exhausted the retry budget.
+    pub failed_jobs: usize,
+    /// Simulated batch cycles under this fault rate.
+    pub cycles: u64,
+    /// Replay cycles charged by the engine.
+    pub retry_cycles: u64,
+    /// The same batch at fault rate 0 (sweep-invariant).
+    pub baseline_cycles: u64,
+}
+
+/// Small single-matrix streams for the detection study, mixed across
+/// pattern families like the batch tenants.
+fn detection_streams(cfg: &RunConfig) -> Vec<(crate::sparse::Csr, BundleStream)> {
+    (0..DETECTION_STREAMS)
+        .map(|i| {
+            let n = (20 + (i * 7) % 40).min(cfg.max_rows.max(8));
+            let nnz = n * (3 + i % 4);
+            let family = match i % 3 {
+                0 => Family::RandomUniform,
+                1 => Family::PowerLaw,
+                _ => Family::BandedFem,
+            };
+            let m = gen::generate(family, n, nnz, cfg.seed ^ (0xFA11 + i as u64));
+            let s = BundleStream::from_csr(&m, 16);
+            (m, s)
+        })
+        .collect()
+}
+
+/// Run the sweep; returns rows plus the rendered table, and writes
+/// `BENCH_reliability.json` when output is enabled.
+pub fn run(cfg: &RunConfig) -> (Vec<ReliabilityRow>, Table) {
+    let streams = detection_streams(cfg);
+    let jobs = super::batch::small_job_suite(cfg);
+    let design = cfg.design(FpgaConfig::reap64_spgemm());
+    let baseline = ReapBatch::new(design.clone()).run(&jobs).expect("baseline batch");
+
+    let mut rows = Vec::new();
+    for (ri, &rate) in FAULT_RATES.iter().enumerate() {
+        // ---- detection: checksummed vs plain wire form, same damage ----
+        let injector = FaultInjector::new(cfg.seed ^ 0xC4C, FaultConfig::bit_flips(rate));
+        let (mut corrupted, mut detected, mut silent) = (0usize, 0usize, 0usize);
+        let (mut detected_nochk, mut silent_nochk) = (0usize, 0usize);
+        for (i, (m, s)) in streams.iter().enumerate() {
+            // one injector stream id per (rate, matrix); both wire forms
+            // are damaged under the same id (the plain form is shorter,
+            // so its damage is a deterministic variant, not a copy)
+            let id = (ri * DETECTION_STREAMS + i) as u64;
+            let mut chk = serialize_stream_checksummed(s);
+            let report = injector.inject(id, &mut chk);
+            let mut plain = serialize_stream(s);
+            injector.inject(id, &mut plain);
+            if !report.corrupted() {
+                continue;
+            }
+            corrupted += 1;
+            match try_words_to_csr(&chk, m.nrows, m.ncols) {
+                Err(_) => detected += 1,
+                Ok(d) if d != *m => silent += 1,
+                Ok(_) => detected += 1, // damage landed but stayed invisible
+            }
+            match try_words_to_csr(&plain, m.nrows, m.ncols) {
+                Err(_) => detected_nochk += 1,
+                Ok(d) if d != *m => silent_nochk += 1,
+                Ok(_) => detected_nochk += 1,
+            }
+        }
+
+        // ---- survival: the batched workload on a lossy link ----
+        let rep = if rate == 0.0 {
+            baseline.clone()
+        } else {
+            ReapBatch::new(design.clone())
+                .with_faults(rate, cfg.seed ^ 0xFA17)
+                .run(&jobs)
+                .expect("faulty batch")
+        };
+
+        rows.push(ReliabilityRow {
+            fault_rate: rate,
+            streams: streams.len(),
+            corrupted,
+            detected,
+            silent,
+            detected_nochk,
+            silent_nochk,
+            jobs: jobs.len(),
+            failed_jobs: rep.failed_jobs.len(),
+            cycles: rep.fpga_sim.cycles,
+            retry_cycles: rep.fpga_sim.retry_cycles,
+            baseline_cycles: baseline.fpga_sim.cycles,
+        });
+    }
+    write_bench_json(cfg, &rows);
+
+    let mut table = Table::new(
+        "Reliability — checksummed detection + wave retry under stream faults",
+        &[
+            "fault_rate", "corrupted", "detected", "silent", "silent(no-crc)",
+            "retry_cycles", "overhead", "failed_jobs",
+        ],
+    );
+    for r in &rows {
+        table.row(vec![
+            format!("{:.2}", r.fault_rate),
+            format!("{}/{}", r.corrupted, r.streams),
+            r.detected.to_string(),
+            r.silent.to_string(),
+            r.silent_nochk.to_string(),
+            r.retry_cycles.to_string(),
+            format!("{:.1}%", 100.0 * r.retry_cycles as f64 / r.baseline_cycles.max(1) as f64),
+            format!("{}/{}", r.failed_jobs, r.jobs),
+        ]);
+    }
+    (rows, table)
+}
+
+/// The reliability headline the CI asserts:
+///
+/// 1. the rate-0 row is pristine — nothing corrupted, nothing retried,
+///    cycles bit-identical to the fault-free baseline;
+/// 2. at every rate the checksummed path has **zero silent corruptions**
+///    and the retry ledger is exact
+///    (`cycles == baseline_cycles + retry_cycles`);
+/// 3. at rate 1.0 degradation is graceful and total: every tenant is
+///    reported failed (rather than the run aborting), with damage at
+///    higher rates never below lower ones.
+pub fn headline_holds(rows: &[ReliabilityRow]) -> bool {
+    let Some(first) = rows.first() else {
+        return false;
+    };
+    let Some(last) = rows.last() else {
+        return false;
+    };
+    let clean_baseline = first.fault_rate == 0.0
+        && first.corrupted == 0
+        && first.retry_cycles == 0
+        && first.failed_jobs == 0
+        && first.cycles == first.baseline_cycles;
+    let exact_everywhere = rows.iter().all(|r| {
+        r.silent == 0
+            && r.detected == r.corrupted
+            && r.cycles == r.baseline_cycles + r.retry_cycles
+    });
+    let total_loss_is_graceful = last.fault_rate == 1.0 && last.failed_jobs == last.jobs;
+    let monotone_damage = rows.windows(2).all(|w| {
+        w[0].retry_cycles <= w[1].retry_cycles && w[0].failed_jobs <= w[1].failed_jobs
+    });
+    clean_baseline && exact_everywhere && total_loss_is_graceful && monotone_damage
+}
+
+use super::json::{escape, num};
+
+/// Write `BENCH_reliability.json`: one record per fault rate, diffable
+/// across PRs alongside the other `BENCH_*.json` files.
+fn write_bench_json(cfg: &RunConfig, rows: &[ReliabilityRow]) {
+    let Some(dir) = &cfg.csv_dir else {
+        return;
+    };
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"workload\": \"reliability\", \"config\": \"{}\", \"fault_rate\": {}, \
+             \"streams\": {}, \"corrupted\": {}, \"detected\": {}, \"silent\": {}, \
+             \"detected_nochk\": {}, \"silent_nochk\": {}, \"jobs\": {}, \
+             \"failed_jobs\": {}, \"cycles\": {}, \"retry_cycles\": {}, \
+             \"baseline_cycles\": {}}}{}\n",
+            escape("REAP-64"),
+            num(r.fault_rate),
+            r.streams,
+            r.corrupted,
+            r.detected,
+            r.silent,
+            r.detected_nochk,
+            r.silent_nochk,
+            r.jobs,
+            r.failed_jobs,
+            r.cycles,
+            r.retry_cycles,
+            r.baseline_cycles,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    if let Err(e) = std::fs::create_dir_all(dir)
+        .and_then(|()| std::fs::write(dir.join("BENCH_reliability.json"), out))
+    {
+        eprintln!("warning: could not write BENCH_reliability.json: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn sweep_headline_and_json_artifact() {
+        let mut cfg = RunConfig::quick();
+        let dir = std::env::temp_dir().join(format!("reap-rel-{}", std::process::id()));
+        cfg.csv_dir = Some(dir.clone());
+        let (rows, table) = run(&cfg);
+        assert_eq!(rows.len(), FAULT_RATES.len());
+        assert_eq!(table.len(), FAULT_RATES.len());
+        assert!(headline_holds(&rows), "reliability headline must hold: {rows:?}");
+        // the lossy rows actually exercise the retry path
+        assert!(rows.last().unwrap().retry_cycles > 0);
+        assert!(rows.iter().skip(1).any(|r| r.corrupted > 0));
+
+        let text = std::fs::read_to_string(dir.join("BENCH_reliability.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), FAULT_RATES.len());
+        assert!(arr[0].get("fault_rate").unwrap().as_f64().is_some());
+        assert!(arr[0].get("retry_cycles").unwrap().as_usize().is_some());
+        assert_eq!(
+            arr.last().unwrap().get("failed_jobs").unwrap().as_usize().unwrap(),
+            rows.last().unwrap().jobs
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

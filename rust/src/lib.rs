@@ -28,13 +28,15 @@
 //! **`ARCHITECTURE.md`** (repo root) is the written spec: the dataflow,
 //! the module map, the RIR wire format byte-for-byte, and the invariants
 //! (wave monotonicity, bit-identical decompose/replay, thread-invariance)
-//! every layer maintains. See `EXPERIMENTS.md` for paper-vs-measured
-//! results and the per-figure methodology notes.
+//! every layer maintains — including the checksummed wire format and the
+//! fault/retry model exercised by [`reliability`]. See `EXPERIMENTS.md`
+//! for paper-vs-measured results and the per-figure methodology notes.
 
 pub mod coordinator;
 pub mod fpga;
 pub mod harness;
 pub mod kernels;
+pub mod reliability;
 pub mod rir;
 pub mod runtime;
 pub mod sparse;

@@ -6,9 +6,9 @@
 //! * `spmv` / `spmm` — run the SpMV extension / its multi-vector (SpMM)
 //!                scale-up likewise.
 //! * `cholesky` — run REAP sparse Cholesky likewise.
-//! * `bench`    — regenerate the paper's tables/figures plus the batch and
-//!                SpMM throughput studies (`table1 table2 fig6 fig7 fig8
-//!                fig9 fig10 fig11 hls batch spmm all`).
+//! * `bench`    — regenerate the paper's tables/figures plus the batch,
+//!                SpMM and reliability studies (`table1 table2 fig6 fig7
+//!                fig8 fig9 fig10 fig11 hls batch spmm reliability all`).
 //! * `gen-matrix` — write a synthetic matrix as Matrix-Market.
 //! * `info`     — platform, artifact and design-point status.
 //!
@@ -358,7 +358,7 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") || args.positionals().is_empty() {
         print!(
-            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch spmm all\n",
+            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch spmm reliability all\n",
             usage("bench <target>", "regenerate a paper table/figure", &specs)
         );
         return Ok(());
@@ -477,10 +477,19 @@ fn run_bench_target(target: &str, cfg: &RunConfig) -> Result<()> {
             );
             cfg.dump_csv("spmm", &t)?;
         }
+        "reliability" => {
+            let (rows, t) = harness::reliability::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "fault tolerance: zero silent corruption + exact retry ledger -> headline {}",
+                if harness::reliability::headline_holds(&rows) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("reliability", &t)?;
+        }
         "all" => {
             for t in [
                 "table1", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "hls",
-                "batch", "spmm",
+                "batch", "spmm", "reliability",
             ] {
                 run_bench_target(t, cfg)?;
                 println!();

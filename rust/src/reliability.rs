@@ -1,0 +1,341 @@
+//! Fault injection for the RIR stream path and the wave-retry model.
+//!
+//! The DRAM link between the CPU encoder and the FPGA input controller
+//! can corrupt the serialized RIR words (bit flips) or mangle the stream
+//! shape (truncation, duplication, reordering). This module provides the
+//! two halves of the reliability story:
+//!
+//! * [`FaultInjector`] — a seed-deterministic corruptor of serialized
+//!   stream words, used by the reliability harness
+//!   ([`crate::harness::reliability`]) and the property tests to measure
+//!   what the checksummed wire format ([`crate::rir::bundle::BundleFlags::CHECKSUM`])
+//!   detects and what the `try_*` decoders survive.
+//! * [`draw_wave_faults`] — a seed-deterministic draw of per-wave
+//!   [`WaveFault`] outcomes at a given corruption rate, consumed by
+//!   [`crate::fpga::engine::execute_waves_with_faults`] (each detected
+//!   corruption costs one full-serial replay, bounded by
+//!   [`crate::fpga::FpgaConfig::max_wave_retries`]).
+//!
+//! Everything here is driven by [`Pcg64`] streams, so a `(seed, stream)`
+//! pair reproduces the exact same corruption bit-for-bit — experiments
+//! stay replayable, and the engine's retry ledger can be asserted
+//! exactly.
+//!
+//! The `fuzz_decode_*` free functions are the shared drivers behind the
+//! `fuzz/` crate's libFuzzer targets *and* the in-tree corpus-replay test
+//! (`rust/tests/fuzz_corpus.rs`), so the corpus exercises the identical
+//! code path on stable toolchains.
+
+use crate::fpga::engine::WaveFault;
+use crate::rir::decode::{try_words_panel_to_dense, try_words_segment_to_csr, try_words_to_csr};
+use crate::util::rng::Pcg64;
+
+/// Per-word corruption rates for a [`FaultInjector`]. All rates are
+/// probabilities in `[0, 1]` applied independently per serialized word
+/// (truncation is drawn once per stream).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultConfig {
+    /// Probability that a word has one uniformly chosen bit flipped.
+    pub bit_flip_rate: f64,
+    /// Probability that the stream is cut at a uniformly chosen point
+    /// (drawn once per `inject` call).
+    pub truncate_rate: f64,
+    /// Probability that a word is emitted twice.
+    pub duplicate_rate: f64,
+    /// Probability that a word is swapped with its successor.
+    pub reorder_rate: f64,
+}
+
+impl FaultConfig {
+    /// Bit flips only — the corruption mode the CRC32 word is designed to
+    /// catch (single-bit detection is guaranteed; see ARCHITECTURE.md §3).
+    pub fn bit_flips(rate: f64) -> Self {
+        FaultConfig { bit_flip_rate: rate, ..Default::default() }
+    }
+
+    /// All four corruption modes at one shared rate.
+    pub fn all(rate: f64) -> Self {
+        FaultConfig {
+            bit_flip_rate: rate,
+            truncate_rate: rate,
+            duplicate_rate: rate,
+            reorder_rate: rate,
+        }
+    }
+}
+
+/// What one [`FaultInjector::inject`] call actually did to the stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Words that had a bit flipped.
+    pub bit_flips: u64,
+    /// Words dropped off the tail by truncation.
+    pub truncated_words: u64,
+    /// Words emitted twice.
+    pub duplicated_words: u64,
+    /// Adjacent swaps applied.
+    pub reordered_swaps: u64,
+}
+
+impl FaultReport {
+    /// Did any corruption land on the stream?
+    pub fn corrupted(&self) -> bool {
+        self.bit_flips + self.truncated_words + self.duplicated_words + self.reordered_swaps > 0
+    }
+}
+
+/// Seed-deterministic corruptor of serialized RIR stream words.
+///
+/// The injector itself is immutable; each [`inject`](Self::inject) call
+/// derives its randomness from `Pcg64::with_stream(seed, stream)`, so
+/// corrupting stream 7 is independent of — and unaffected by — whether
+/// streams 0–6 were corrupted first.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    seed: u64,
+    cfg: FaultConfig,
+}
+
+impl FaultInjector {
+    /// An injector applying `cfg`'s rates under `seed`.
+    pub fn new(seed: u64, cfg: FaultConfig) -> Self {
+        FaultInjector { seed, cfg }
+    }
+
+    /// The injector's rate configuration.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Corrupt `words` in place, deterministically for `(seed, stream)`.
+    ///
+    /// Order of operations: bit flips (in place), duplication (rebuild),
+    /// adjacent reordering, truncation last — so a truncated stream can
+    /// still carry flipped or duplicated words in its surviving prefix.
+    pub fn inject(&self, stream: u64, words: &mut Vec<u32>) -> FaultReport {
+        let mut rng = Pcg64::with_stream(self.seed, stream);
+        let mut report = FaultReport::default();
+
+        if self.cfg.bit_flip_rate > 0.0 {
+            for w in words.iter_mut() {
+                if rng.chance(self.cfg.bit_flip_rate) {
+                    *w ^= 1u32 << rng.next_below(32);
+                    report.bit_flips += 1;
+                }
+            }
+        }
+
+        if self.cfg.duplicate_rate > 0.0 && !words.is_empty() {
+            let mut out = Vec::with_capacity(words.len());
+            for &w in words.iter() {
+                out.push(w);
+                if rng.chance(self.cfg.duplicate_rate) {
+                    out.push(w);
+                    report.duplicated_words += 1;
+                }
+            }
+            *words = out;
+        }
+
+        if self.cfg.reorder_rate > 0.0 && words.len() >= 2 {
+            for i in 0..words.len() - 1 {
+                if rng.chance(self.cfg.reorder_rate) {
+                    words.swap(i, i + 1);
+                    report.reordered_swaps += 1;
+                }
+            }
+        }
+
+        if self.cfg.truncate_rate > 0.0 && !words.is_empty() && rng.chance(self.cfg.truncate_rate) {
+            let keep = rng.next_below(words.len() as u64) as usize;
+            report.truncated_words = (words.len() - keep) as u64;
+            words.truncate(keep);
+        }
+
+        report
+    }
+}
+
+/// Draw per-wave stream-fault outcomes for an `n_waves`-wave run.
+///
+/// Models the input controller's detect-and-replay loop: each fetch of a
+/// wave's stream is independently corrupted with probability
+/// `fault_rate`; the controller re-fetches until a clean copy arrives or
+/// `max_retries` replays are spent, after which the wave is marked
+/// [`WaveFault::failed`]. Each wave draws from its own
+/// `Pcg64::with_stream(seed, wave_index)`, so the outcome of wave *k* is
+/// invariant to how many waves surround it.
+///
+/// `fault_rate == 0.0` returns all-default faults (bit-identical engine
+/// timing); `fault_rate == 1.0` deterministically exhausts every wave's
+/// budget (every draw fails), which the harness uses as its
+/// graceful-degradation endpoint.
+pub fn draw_wave_faults(
+    seed: u64,
+    n_waves: usize,
+    fault_rate: f64,
+    max_retries: usize,
+) -> Vec<WaveFault> {
+    let max = max_retries as u64;
+    (0..n_waves)
+        .map(|k| {
+            let mut rng = Pcg64::with_stream(seed, k as u64);
+            let mut failures: u64 = 0;
+            while failures <= max && rng.chance(fault_rate) {
+                failures += 1;
+            }
+            WaveFault { retries: failures.min(max), failed: failures > max }
+        })
+        .collect()
+}
+
+/// Reinterpret fuzzer bytes as RIR stream words (little-endian, tail
+/// bytes dropped).
+pub fn words_from_bytes(data: &[u8]) -> Vec<u32> {
+    data.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+// Caps keep the fuzz drivers from allocating huge dense outputs for tiny
+// inputs (a 16-byte input must not ask for a gigabyte panel).
+const FUZZ_DIM_CAP: u64 = 4096;
+const FUZZ_PANEL_CAP: u64 = 64;
+
+/// Fuzz driver: `try_words_to_csr` must return, never panic, on any
+/// byte string. The first word seeds the decode dimensions.
+pub fn fuzz_decode_stream(data: &[u8]) {
+    let words = words_from_bytes(data);
+    let nrows = words.first().map_or(8, |&w| (w as u64 % FUZZ_DIM_CAP) as usize);
+    let ncols = words.get(1).map_or(8, |&w| (w as u64 % FUZZ_DIM_CAP) as usize);
+    let _ = try_words_to_csr(&words, nrows, ncols);
+}
+
+/// Fuzz driver for `try_words_segment_to_csr` (per-tenant extraction).
+pub fn fuzz_decode_segment(data: &[u8]) {
+    let words = words_from_bytes(data);
+    let lo = words.first().map_or(0, |&w| (w as u64 % FUZZ_DIM_CAP) as usize);
+    let hi = words.get(1).map_or(4, |&w| (w as u64 % FUZZ_DIM_CAP) as usize);
+    let nrows = words.get(2).map_or(8, |&w| (w as u64 % FUZZ_DIM_CAP) as usize);
+    let ncols = words.get(3).map_or(8, |&w| (w as u64 % FUZZ_DIM_CAP) as usize);
+    let _ = try_words_segment_to_csr(&words, lo, hi, nrows, ncols);
+}
+
+/// Fuzz driver for `try_words_panel_to_dense` (SpMM dense panels).
+pub fn fuzz_decode_panel(data: &[u8]) {
+    let words = words_from_bytes(data);
+    let lo = words.first().map_or(0, |&w| (w as u64 % FUZZ_DIM_CAP) as usize);
+    let hi = words.get(1).map_or(4, |&w| (w as u64 % FUZZ_DIM_CAP) as usize);
+    let nrows = words.get(2).map_or(8, |&w| (w as u64 % FUZZ_DIM_CAP) as usize);
+    let k = words.get(3).map_or(4, |&w| (w as u64 % FUZZ_PANEL_CAP) as usize);
+    let _ = try_words_panel_to_dense(&words, lo, hi, nrows, k);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_words() -> Vec<u32> {
+        (0..64u32).map(|i| i.wrapping_mul(0x9e37_79b9) ^ 0x5EA9).collect()
+    }
+
+    #[test]
+    fn injection_is_deterministic_per_seed_and_stream() {
+        let inj = FaultInjector::new(42, FaultConfig::all(0.3));
+        let mut a = sample_words();
+        let mut b = sample_words();
+        let ra = inj.inject(7, &mut a);
+        let rb = inj.inject(7, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(ra, rb);
+        assert!(ra.corrupted(), "rate 0.3 over 64 words virtually always lands");
+
+        // distinct streams diverge; distinct seeds diverge
+        let mut c = sample_words();
+        inj.inject(8, &mut c);
+        assert_ne!(a, c);
+        let mut d = sample_words();
+        FaultInjector::new(43, FaultConfig::all(0.3)).inject(7, &mut d);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn zero_rates_are_a_noop() {
+        let inj = FaultInjector::new(1, FaultConfig::default());
+        let mut w = sample_words();
+        let r = inj.inject(0, &mut w);
+        assert_eq!(w, sample_words());
+        assert_eq!(r, FaultReport::default());
+        assert!(!r.corrupted());
+    }
+
+    #[test]
+    fn report_counts_match_the_damage() {
+        // bit flips only: the word count is preserved, exactly
+        // `bit_flips` words differ
+        let inj = FaultInjector::new(9, FaultConfig::bit_flips(0.25));
+        let mut w = sample_words();
+        let r = inj.inject(0, &mut w);
+        assert_eq!(w.len(), sample_words().len());
+        let differing = w.iter().zip(sample_words()).filter(|(a, b)| **a != *b).count() as u64;
+        assert_eq!(differing, r.bit_flips);
+        assert!(r.bit_flips > 0);
+        assert_eq!(r.truncated_words + r.duplicated_words + r.reordered_swaps, 0);
+
+        // duplication grows the stream by exactly the duplicated count
+        let inj = FaultInjector::new(9, FaultConfig { duplicate_rate: 0.25, ..Default::default() });
+        let mut w = sample_words();
+        let r = inj.inject(0, &mut w);
+        assert_eq!(w.len() as u64, sample_words().len() as u64 + r.duplicated_words);
+
+        // truncation shrinks it by exactly the truncated count
+        let inj = FaultInjector::new(9, FaultConfig { truncate_rate: 1.0, ..Default::default() });
+        let mut w = sample_words();
+        let r = inj.inject(0, &mut w);
+        assert_eq!(w.len() as u64, sample_words().len() as u64 - r.truncated_words);
+        assert!(r.truncated_words > 0, "truncate_rate 1.0 always cuts");
+    }
+
+    #[test]
+    fn wave_fault_draws_are_deterministic_and_rate_extremes_are_exact() {
+        let a = draw_wave_faults(5, 32, 0.4, 3);
+        let b = draw_wave_faults(5, 32, 0.4, 3);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|f| f.retries <= 3));
+        assert!(a.iter().any(|f| f.retries > 0), "rate 0.4 over 32 waves lands");
+
+        // per-wave independence: a shorter run is a prefix of a longer one
+        let short = draw_wave_faults(5, 8, 0.4, 3);
+        assert_eq!(&a[..8], &short[..]);
+
+        // rate 0 → all default; rate 1 → every wave exhausts its budget
+        assert!(draw_wave_faults(5, 16, 0.0, 3).iter().all(|f| *f == WaveFault::default()));
+        for f in draw_wave_faults(5, 16, 1.0, 3) {
+            assert_eq!(f, WaveFault { retries: 3, failed: true });
+        }
+    }
+
+    #[test]
+    fn fuzz_drivers_survive_arbitrary_and_corrupted_bytes() {
+        // hand-picked shapes plus injector-corrupted valid streams: the
+        // drivers must simply return
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![0xff; 3],
+            vec![0x11; 256],
+            (0..255u8).collect(),
+        ];
+        for c in &cases {
+            fuzz_decode_stream(c);
+            fuzz_decode_segment(c);
+            fuzz_decode_panel(c);
+        }
+        let inj = FaultInjector::new(77, FaultConfig::all(0.2));
+        for stream in 0..16u64 {
+            let mut words = sample_words();
+            inj.inject(stream, &mut words);
+            let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+            fuzz_decode_stream(&bytes);
+            fuzz_decode_segment(&bytes);
+            fuzz_decode_panel(&bytes);
+        }
+    }
+}

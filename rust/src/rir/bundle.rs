@@ -27,6 +27,12 @@ impl BundleFlags {
     /// routes these to the on-chip panel RAM instead of the CAMs, so the
     /// sparse decoders skip them exactly like metadata-only bundles.
     pub const DENSE_PANEL: u8 = 0b0000_1000;
+    /// Checksummed bundle: one CRC32 word (IEEE 802.3 polynomial over the
+    /// bundle's preceding words, metadata word included) follows the
+    /// payload in the serialized layout. The input controller verifies it
+    /// before committing the bundle to a CAM; a mismatch aborts the wave
+    /// and triggers a re-fetch (ARCHITECTURE.md §3.3/§7).
+    pub const CHECKSUM: u8 = 0b0001_0000;
 
     pub fn end_of_row(self) -> bool {
         self.0 & Self::END_OF_ROW != 0
@@ -39,6 +45,9 @@ impl BundleFlags {
     }
     pub fn dense_panel(self) -> bool {
         self.0 & Self::DENSE_PANEL != 0
+    }
+    pub fn checksum(self) -> bool {
+        self.0 & Self::CHECKSUM != 0
     }
     pub fn with(self, bit: u8) -> Self {
         BundleFlags(self.0 | bit)
@@ -142,7 +151,9 @@ mod tests {
         assert!(f.end_of_stream());
         assert!(!f.metadata_only());
         assert!(!f.dense_panel());
+        assert!(!f.checksum());
         assert!(f.with(BundleFlags::DENSE_PANEL).dense_panel());
+        assert!(f.with(BundleFlags::CHECKSUM).checksum());
     }
 
     #[test]

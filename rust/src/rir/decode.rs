@@ -8,13 +8,25 @@
 //! block, [`BundleStream::encode_csr_with_panel`]) are skipped by the
 //! sparse assemblers — they route to the on-chip panel RAM, not the CAMs —
 //! and reassembled by [`stream_panel_to_dense`].
+//!
+//! Two API tiers exist for each of the three decoders:
+//!
+//! * `try_*` — fallible, total over arbitrary input, returning the typed
+//!   [`RirError`]. The `try_words_*` forms additionally take the raw
+//!   serialized word stream (the untrusted wire bytes) and verify
+//!   per-bundle CRC32 checksums as they walk — this is the path faulty
+//!   DRAM/PCIe transfers go through, and the one the fuzz targets drive.
+//! * the legacy infallible-looking entry points (`anyhow` errors) — thin
+//!   wrappers over the `try_*` forms for trusted in-process streams.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, Result};
 
 use crate::sparse::{Csr, Idx, Val};
 
 use super::bundle::{Bundle, BundleFlags, Payload};
 use super::encode::BundleStream;
+use super::error::RirError;
+use super::layout::crc32_words;
 
 /// Reassemble a CSR matrix from a bundle stream produced by
 /// [`super::encode::csr_to_bundles`].
@@ -36,12 +48,23 @@ pub fn bundles_to_csr(bundles: &[Bundle], nrows: usize, ncols: usize) -> Result<
         };
         asm.push(b.shared, b.flags, distinct, values)?;
     }
-    asm.finish()
+    Ok(asm.finish()?)
 }
 
 /// Reassemble a CSR matrix from a flat [`BundleStream`] arena — identical
 /// validation to [`bundles_to_csr`] without materializing boxed bundles.
+/// Trusted-caller wrapper over [`try_stream_to_csr`].
 pub fn stream_to_csr(stream: &BundleStream, nrows: usize, ncols: usize) -> Result<Csr> {
+    Ok(try_stream_to_csr(stream, nrows, ncols)?)
+}
+
+/// Fallible form of [`stream_to_csr`]: malformed streams come back as a
+/// structured [`RirError`], never a panic.
+pub fn try_stream_to_csr(
+    stream: &BundleStream,
+    nrows: usize,
+    ncols: usize,
+) -> std::result::Result<Csr, RirError> {
     let mut asm = RowAssembler::new(nrows, ncols);
     for b in stream.iter() {
         if b.flags.metadata_only() || b.flags.dense_panel() {
@@ -56,6 +79,7 @@ pub fn stream_to_csr(stream: &BundleStream, nrows: usize, ncols: usize) -> Resul
 /// shared multi-job stream (the boundaries returned by
 /// [`BundleStream::encode_csr_jobs`]). Validation is identical to
 /// [`stream_to_csr`] — the segment must be a self-contained stream.
+/// Trusted-caller wrapper over [`try_stream_segment_to_csr`].
 pub fn stream_segment_to_csr(
     stream: &BundleStream,
     lo: usize,
@@ -63,11 +87,20 @@ pub fn stream_segment_to_csr(
     nrows: usize,
     ncols: usize,
 ) -> Result<Csr> {
-    ensure!(
-        lo <= hi && hi <= stream.n_bundles(),
-        "segment [{lo}, {hi}) out of bounds (stream has {} bundles)",
-        stream.n_bundles()
-    );
+    Ok(try_stream_segment_to_csr(stream, lo, hi, nrows, ncols)?)
+}
+
+/// Fallible form of [`stream_segment_to_csr`].
+pub fn try_stream_segment_to_csr(
+    stream: &BundleStream,
+    lo: usize,
+    hi: usize,
+    nrows: usize,
+    ncols: usize,
+) -> std::result::Result<Csr, RirError> {
+    if lo > hi || hi > stream.n_bundles() {
+        return Err(RirError::SegmentOutOfBounds { lo, hi, n_bundles: stream.n_bundles() });
+    }
     let mut asm = RowAssembler::new(nrows, ncols);
     for i in lo..hi {
         let b = stream.bundle(i);
@@ -90,6 +123,7 @@ pub fn stream_segment_to_csr(
 /// `DENSE_PANEL` flag, rows must arrive contiguously and in ascending
 /// order with exactly `k` lanes (`0..k` in order, possibly split across
 /// bundles), and each chain must close with `END_OF_ROW`.
+/// Trusted-caller wrapper over [`try_stream_panel_to_dense`].
 pub fn stream_panel_to_dense(
     stream: &BundleStream,
     lo: usize,
@@ -97,38 +131,198 @@ pub fn stream_panel_to_dense(
     nrows: usize,
     k: usize,
 ) -> Result<Vec<Val>> {
-    ensure!(
-        lo <= hi && hi <= stream.n_bundles(),
-        "panel segment [{lo}, {hi}) out of bounds (stream has {} bundles)",
-        stream.n_bundles()
-    );
+    Ok(try_stream_panel_to_dense(stream, lo, hi, nrows, k)?)
+}
+
+/// Fallible form of [`stream_panel_to_dense`].
+pub fn try_stream_panel_to_dense(
+    stream: &BundleStream,
+    lo: usize,
+    hi: usize,
+    nrows: usize,
+    k: usize,
+) -> std::result::Result<Vec<Val>, RirError> {
+    if lo > hi || hi > stream.n_bundles() {
+        return Err(RirError::SegmentOutOfBounds { lo, hi, n_bundles: stream.n_bundles() });
+    }
     if k == 0 {
-        ensure!(lo == hi, "zero-width panel cannot carry bundles");
+        if lo != hi {
+            return Err(RirError::PanelZeroWidthNonEmpty);
+        }
         return Ok(Vec::new());
     }
-    let mut x = vec![0 as Val; nrows * k];
-    let mut row = 0usize; // next row expected to *finish*
-    let mut lane = 0usize; // next lane expected within the open row
+    let mut asm = PanelAssembler::new(nrows, k);
     for i in lo..hi {
         let b = stream.bundle(i);
-        ensure!(b.flags.dense_panel(), "bundle {i} in panel segment lacks DENSE_PANEL");
-        ensure!((b.shared as usize) == row, "panel row {} out of order (expected {row})", b.shared);
-        ensure!(row < nrows, "panel row {row} out of bounds");
+        asm.begin_bundle(i, b.shared, b.flags)?;
         for (&c, &v) in b.cols.iter().zip(b.vals) {
-            ensure!((c as usize) == lane, "panel lane {c} out of order (expected {lane})");
-            ensure!(lane < k, "panel lane {lane} exceeds width {k}");
-            x[row * k + lane] = v;
-            lane += 1;
+            asm.lane(c, v)?;
         }
-        if b.flags.end_of_row() {
-            ensure!(lane == k, "panel row {row} closed with {lane} of {k} lanes");
-            row += 1;
-            lane = 0;
-        }
+        asm.end_bundle(b.flags)?;
     }
-    ensure!(lane == 0, "panel segment ended mid-row {row}");
-    ensure!(row == nrows, "panel segment carried {row} of {nrows} rows");
-    Ok(x)
+    asm.finish()
+}
+
+/// Reassemble a CSR matrix straight from an untrusted serialized word
+/// stream (the [`super::layout`] wire form), verifying per-bundle CRC32
+/// checksums where [`BundleFlags::CHECKSUM`] is set. Total over arbitrary
+/// input — truncation, bad extents and corruption all return [`RirError`].
+pub fn try_words_to_csr(
+    words: &[u32],
+    nrows: usize,
+    ncols: usize,
+) -> std::result::Result<Csr, RirError> {
+    let mut asm = RowAssembler::new(nrows, ncols);
+    let mut cur = WireCursor::new(words);
+    while let Some(b) = cur.next() {
+        let b = b?;
+        if b.flags.metadata_only() || b.flags.dense_panel() {
+            continue;
+        }
+        asm.begin_bundle(b.shared)?;
+        for pair in b.payload.chunks_exact(2) {
+            asm.elem(pair[0], f32::from_bits(pair[1]))?;
+        }
+        asm.end_bundle(b.shared, b.flags)?;
+    }
+    asm.finish()
+}
+
+/// Reassemble one tenant's CSR from bundles `[lo, hi)` of an untrusted
+/// serialized multi-job word stream. Bundle indices count every bundle in
+/// the stream, in order — the same boundaries
+/// [`BundleStream::encode_csr_jobs`] returns. The whole stream is walked
+/// (extent and checksum validation cover out-of-segment bundles too, as
+/// the input controller's DMA does), but only the segment is assembled.
+pub fn try_words_segment_to_csr(
+    words: &[u32],
+    lo: usize,
+    hi: usize,
+    nrows: usize,
+    ncols: usize,
+) -> std::result::Result<Csr, RirError> {
+    let mut asm = RowAssembler::new(nrows, ncols);
+    let mut cur = WireCursor::new(words);
+    let mut n_bundles = 0usize;
+    while let Some(b) = cur.next() {
+        let b = b?;
+        n_bundles += 1;
+        if b.index < lo || b.index >= hi || b.flags.metadata_only() || b.flags.dense_panel() {
+            continue;
+        }
+        asm.begin_bundle(b.shared)?;
+        for pair in b.payload.chunks_exact(2) {
+            asm.elem(pair[0], f32::from_bits(pair[1]))?;
+        }
+        asm.end_bundle(b.shared, b.flags)?;
+    }
+    if lo > hi || hi > n_bundles {
+        return Err(RirError::SegmentOutOfBounds { lo, hi, n_bundles });
+    }
+    asm.finish()
+}
+
+/// Reassemble the dense panel from bundles `[lo, hi)` of an untrusted
+/// serialized SpMM word stream — the wire-level form of
+/// [`try_stream_panel_to_dense`].
+pub fn try_words_panel_to_dense(
+    words: &[u32],
+    lo: usize,
+    hi: usize,
+    nrows: usize,
+    k: usize,
+) -> std::result::Result<Vec<Val>, RirError> {
+    let mut asm = if k == 0 { None } else { Some(PanelAssembler::new(nrows, k)) };
+    let mut cur = WireCursor::new(words);
+    let mut n_bundles = 0usize;
+    while let Some(b) = cur.next() {
+        let b = b?;
+        n_bundles += 1;
+        if b.index < lo || b.index >= hi {
+            continue;
+        }
+        let Some(asm) = asm.as_mut() else {
+            return Err(RirError::PanelZeroWidthNonEmpty);
+        };
+        asm.begin_bundle(b.index, b.shared, b.flags)?;
+        for pair in b.payload.chunks_exact(2) {
+            asm.lane(pair[0], f32::from_bits(pair[1]))?;
+        }
+        asm.end_bundle(b.flags)?;
+    }
+    if lo > hi || hi > n_bundles {
+        return Err(RirError::SegmentOutOfBounds { lo, hi, n_bundles });
+    }
+    match asm {
+        None => Ok(Vec::new()),
+        Some(asm) => asm.finish(),
+    }
+}
+
+/// One bundle as it appears on the wire: decoded header fields plus the
+/// raw payload words (interleaved `(distinct, value-bits)` pairs for data
+/// bundles, `(row, start, end)` triples for schedule bundles). The CRC32
+/// word, when present, has already been verified and is not included.
+struct WireBundle<'a> {
+    index: usize,
+    shared: Idx,
+    flags: BundleFlags,
+    payload: &'a [u32],
+}
+
+/// Walks a serialized word stream bundle by bundle, validating payload
+/// extents and per-bundle checksums before handing any payload out; never
+/// indexes past the slice, so arbitrary byte garbage is safe to feed in.
+struct WireCursor<'a> {
+    words: &'a [u32],
+    p: usize,
+    index: usize,
+}
+
+impl<'a> WireCursor<'a> {
+    fn new(words: &'a [u32]) -> Self {
+        WireCursor { words, p: 0, index: 0 }
+    }
+
+    #[allow(clippy::should_implement_trait)] // fallible streaming iterator
+    fn next(&mut self) -> Option<std::result::Result<WireBundle<'a>, RirError>> {
+        if self.p >= self.words.len() {
+            return None;
+        }
+        if self.p + 2 > self.words.len() {
+            return Some(Err(RirError::TruncatedHeader { word: self.p }));
+        }
+        let meta = self.words[self.p];
+        let shared = self.words[self.p + 1];
+        let count = (meta >> 8) as usize;
+        let flags = BundleFlags((meta & 0xff) as u8);
+        let payload_words = if flags.metadata_only() { 3 * count } else { 2 * count };
+        let need = payload_words + usize::from(flags.checksum());
+        let have = self.words.len() - (self.p + 2);
+        if need > have {
+            return Some(Err(RirError::TruncatedPayload { bundle: self.index, need, have }));
+        }
+        if flags.checksum() {
+            let stored = self.words[self.p + 2 + payload_words];
+            let computed = crc32_words(&self.words[self.p..self.p + 2 + payload_words]);
+            if stored != computed {
+                return Some(Err(RirError::ChecksumMismatch {
+                    bundle: self.index,
+                    stored,
+                    computed,
+                }));
+            }
+        }
+        let b = WireBundle {
+            index: self.index,
+            shared,
+            flags,
+            payload: &self.words[self.p + 2..self.p + 2 + payload_words],
+        };
+        self.p += 2 + need;
+        self.index += 1;
+        Some(Ok(b))
+    }
 }
 
 /// Shared row-reassembly state: enforces the stream invariants (row chains
@@ -156,32 +350,36 @@ impl RowAssembler {
         }
     }
 
-    fn push(
-        &mut self,
-        shared: Idx,
-        flags: BundleFlags,
-        distinct: &[Idx],
-        values: &[Val],
-    ) -> Result<()> {
+    fn begin_bundle(&mut self, shared: Idx) -> std::result::Result<(), RirError> {
         match self.current_row {
             None => self.current_row = Some(shared),
-            Some(r) => ensure!(
-                r == shared,
-                "bundle for row {shared} interleaved into unfinished row {r}"
-            ),
+            Some(r) => {
+                if r != shared {
+                    return Err(RirError::InterleavedRows { open: r, found: shared });
+                }
+            }
         }
-        ensure!((shared as usize) < self.nrows, "row {shared} out of bounds");
-        for (&c, &v) in distinct.iter().zip(values) {
-            ensure!((c as usize) < self.ncols, "column {c} out of bounds");
-            self.cols.push(c);
-            self.vals.push(v);
+        if (shared as usize) >= self.nrows {
+            return Err(RirError::RowOutOfBounds { row: shared, nrows: self.nrows });
         }
+        Ok(())
+    }
+
+    fn elem(&mut self, c: Idx, v: Val) -> std::result::Result<(), RirError> {
+        if (c as usize) >= self.ncols {
+            return Err(RirError::ColumnOutOfBounds { col: c, ncols: self.ncols });
+        }
+        self.cols.push(c);
+        self.vals.push(v);
+        Ok(())
+    }
+
+    fn end_bundle(&mut self, shared: Idx, flags: BundleFlags) -> std::result::Result<(), RirError> {
         if flags.end_of_row() {
             let r = shared as usize;
-            ensure!(
-                r >= self.next_row_fill,
-                "row {r} completed twice (or rows out of order)"
-            );
+            if r < self.next_row_fill {
+                return Err(RirError::RowOrder { row: shared });
+            }
             // fill row_ptr for any skipped (absent) rows, then this one
             for rr in self.next_row_fill..=r {
                 self.row_ptr[rr + 1] = if rr == r { self.cols.len() } else { self.row_ptr[rr] };
@@ -194,12 +392,24 @@ impl RowAssembler {
         Ok(())
     }
 
-    fn finish(mut self) -> Result<Csr> {
-        ensure!(
-            self.current_row.is_none(),
-            "stream ended mid-row {:?}",
-            self.current_row
-        );
+    fn push(
+        &mut self,
+        shared: Idx,
+        flags: BundleFlags,
+        distinct: &[Idx],
+        values: &[Val],
+    ) -> std::result::Result<(), RirError> {
+        self.begin_bundle(shared)?;
+        for (&c, &v) in distinct.iter().zip(values) {
+            self.elem(c, v)?;
+        }
+        self.end_bundle(shared, flags)
+    }
+
+    fn finish(mut self) -> std::result::Result<Csr, RirError> {
+        if let Some(r) = self.current_row {
+            return Err(RirError::EndedMidRow { row: r });
+        }
         for rr in self.next_row_fill..self.nrows {
             self.row_ptr[rr + 1] = self.row_ptr[rr];
         }
@@ -210,8 +420,77 @@ impl RowAssembler {
             cols: self.cols,
             vals: self.vals,
         };
-        m.validate()?;
+        m.validate().map_err(|e| RirError::InvalidCsr(format!("{e:#}")))?;
         Ok(m)
+    }
+}
+
+/// Shared dense-panel reassembly state (mirrors the on-chip panel RAM's
+/// write-port checks): rows ascend contiguously, lanes run `0..k` in
+/// order, each row chain closes with `END_OF_ROW`.
+struct PanelAssembler {
+    nrows: usize,
+    k: usize,
+    x: Vec<Val>,
+    row: usize,  // next row expected to *finish*
+    lane: usize, // next lane expected within the open row
+}
+
+impl PanelAssembler {
+    fn new(nrows: usize, k: usize) -> Self {
+        debug_assert!(k > 0);
+        PanelAssembler { nrows, k, x: vec![0 as Val; nrows * k], row: 0, lane: 0 }
+    }
+
+    fn begin_bundle(
+        &mut self,
+        index: usize,
+        shared: Idx,
+        flags: BundleFlags,
+    ) -> std::result::Result<(), RirError> {
+        if !flags.dense_panel() {
+            return Err(RirError::NotAPanelBundle { bundle: index });
+        }
+        if (shared as usize) != self.row {
+            return Err(RirError::PanelRowOrder { shared, expected: self.row });
+        }
+        if self.row >= self.nrows {
+            return Err(RirError::PanelRowOutOfBounds { row: self.row, nrows: self.nrows });
+        }
+        Ok(())
+    }
+
+    fn lane(&mut self, c: Idx, v: Val) -> std::result::Result<(), RirError> {
+        if (c as usize) != self.lane {
+            return Err(RirError::PanelLaneOrder { lane: c, expected: self.lane });
+        }
+        if self.lane >= self.k {
+            return Err(RirError::PanelLaneOverflow { k: self.k });
+        }
+        self.x[self.row * self.k + self.lane] = v;
+        self.lane += 1;
+        Ok(())
+    }
+
+    fn end_bundle(&mut self, flags: BundleFlags) -> std::result::Result<(), RirError> {
+        if flags.end_of_row() {
+            if self.lane != self.k {
+                return Err(RirError::PanelRowWidth { row: self.row, lanes: self.lane, k: self.k });
+            }
+            self.row += 1;
+            self.lane = 0;
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> std::result::Result<Vec<Val>, RirError> {
+        if self.lane != 0 {
+            return Err(RirError::PanelEndedMidRow { row: self.row });
+        }
+        if self.row != self.nrows {
+            return Err(RirError::PanelRowCount { rows: self.row, nrows: self.nrows });
+        }
+        Ok(self.x)
     }
 }
 
@@ -220,6 +499,7 @@ mod tests {
     use super::*;
     use crate::rir::bundle::{BundleFlags, RlTriple};
     use crate::rir::encode::csr_to_bundles;
+    use crate::rir::layout::{serialize_stream, serialize_stream_checksummed};
     use crate::sparse::gen;
 
     #[test]
@@ -369,5 +649,84 @@ mod tests {
             BundleFlags::default().with(BundleFlags::END_OF_ROW),
         )];
         assert!(bundles_to_csr(&bundles, 1, 2).is_err());
+    }
+
+    #[test]
+    fn words_roundtrip_plain_and_checksummed() {
+        for seed in 0..3u64 {
+            let m = gen::power_law(25, 300, seed);
+            let s = BundleStream::from_csr(&m, 5);
+            let plain = serialize_stream(&s);
+            assert_eq!(try_words_to_csr(&plain, m.nrows, m.ncols).unwrap(), m, "seed {seed}");
+            let protected = serialize_stream_checksummed(&s);
+            assert_eq!(
+                try_words_to_csr(&protected, m.nrows, m.ncols).unwrap(),
+                m,
+                "checksummed seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn words_segment_extracts_each_tenant() {
+        let m0 = gen::power_law(18, 200, 31);
+        let m1 = crate::sparse::Csr::new(0, 6);
+        let m2 = gen::random_uniform(9, 14, 60, 32);
+        let jobs = [&m0, &m1, &m2];
+        let mut s = BundleStream::new();
+        let bounds = s.encode_csr_jobs(&jobs, 8);
+        for words in [serialize_stream(&s), serialize_stream_checksummed(&s)] {
+            for (j, m) in jobs.iter().enumerate() {
+                let back =
+                    try_words_segment_to_csr(&words, bounds[j], bounds[j + 1], m.nrows, m.ncols)
+                        .unwrap();
+                assert_eq!(&back, *m, "job {j}");
+            }
+            assert!(matches!(
+                try_words_segment_to_csr(&words, 0, s.n_bundles() + 1, 5, 5),
+                Err(RirError::SegmentOutOfBounds { .. })
+            ));
+        }
+    }
+
+    #[test]
+    fn words_panel_roundtrips() {
+        let m = gen::power_law(14, 160, 43);
+        let k = 6usize;
+        let x: Vec<f32> = (0..m.ncols * k).map(|i| (i as f32 * 0.7).cos()).collect();
+        let mut s = BundleStream::new();
+        let boundary = s.encode_csr_with_panel(&m, &x, k, 4);
+        for words in [serialize_stream(&s), serialize_stream_checksummed(&s)] {
+            let back =
+                try_words_panel_to_dense(&words, boundary, s.n_bundles(), m.ncols, k).unwrap();
+            assert_eq!(back, x);
+            // the sparse decoder skips the panel segment
+            assert_eq!(try_words_to_csr(&words, m.nrows, m.ncols).unwrap(), m);
+            // zero-width panel over a non-empty segment is rejected
+            assert!(matches!(
+                try_words_panel_to_dense(&words, boundary, s.n_bundles(), m.ncols, 0),
+                Err(RirError::PanelZeroWidthNonEmpty)
+            ));
+        }
+    }
+
+    #[test]
+    fn words_decoders_reject_truncation_at_every_cut() {
+        let m = gen::random_uniform(8, 8, 30, 44);
+        let s = BundleStream::from_csr(&m, 4);
+        let words = serialize_stream_checksummed(&s);
+        // every strict prefix must be handled without panicking (a cut on
+        // a bundle boundary may legally decode to a shorter matrix; a cut
+        // inside a bundle must error)
+        for cut in 0..words.len() {
+            let w = &words[..cut];
+            let _ = try_words_to_csr(w, m.nrows, m.ncols);
+            let _ = try_words_segment_to_csr(w, 0, 1, m.nrows, m.ncols);
+            let _ = try_words_panel_to_dense(w, 0, 1, m.nrows, 4);
+        }
+        assert!(matches!(
+            try_words_to_csr(&words[..words.len() - 1], m.nrows, m.ncols),
+            Err(RirError::TruncatedPayload { .. })
+        ));
     }
 }

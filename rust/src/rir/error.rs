@@ -1,0 +1,141 @@
+//! Typed errors for untrusted RIR stream bytes.
+//!
+//! The RIR stream is the CPU→FPGA contract; once it crosses a DRAM/PCIe
+//! link it must be treated as untrusted input (flipped bits, truncated
+//! DMA, reordered words). Every way a serialized stream can be malformed
+//! maps to a variant here, and the `try_*` APIs in
+//! [`layout`](super::layout) and [`decode`](super::decode) return these
+//! instead of panicking. The legacy infallible entry points wrap the
+//! `try_*` forms and convert to [`anyhow::Error`] for trusted in-process
+//! streams.
+
+use std::fmt;
+
+/// Structured decode/verification error for RIR streams.
+///
+/// Word offsets and bundle indices refer to the serialized stream being
+/// decoded (bundle indices count every bundle walked, including skipped
+/// metadata/panel bundles).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RirError {
+    /// Stream ends inside a 2-word bundle header.
+    TruncatedHeader { word: usize },
+    /// Stream ends inside a bundle payload (or its checksum word).
+    TruncatedPayload { bundle: usize, need: usize, have: usize },
+    /// Stored per-bundle CRC32 disagrees with the recomputed checksum.
+    ChecksumMismatch { bundle: usize, stored: u32, computed: u32 },
+    /// Requested bundle range `[lo, hi)` exceeds the stream.
+    SegmentOutOfBounds { lo: usize, hi: usize, n_bundles: usize },
+    /// A bundle for one row arrived while another row was still open.
+    InterleavedRows { open: u32, found: u32 },
+    /// Row index at or beyond the destination row count.
+    RowOutOfBounds { row: u32, nrows: usize },
+    /// Column index at or beyond the destination column count.
+    ColumnOutOfBounds { col: u32, ncols: usize },
+    /// A row chain closed twice, or chains arrived out of ascending order.
+    RowOrder { row: u32 },
+    /// Stream ended while a split row chain was still open.
+    EndedMidRow { row: u32 },
+    /// Panel decoder fed a bundle without the `DENSE_PANEL` flag.
+    NotAPanelBundle { bundle: usize },
+    /// Panel chains must arrive in ascending row order.
+    PanelRowOrder { shared: u32, expected: usize },
+    /// Panel row index at or beyond the panel height.
+    PanelRowOutOfBounds { row: usize, nrows: usize },
+    /// Panel lane indices must run `0..k` in order within a row chain.
+    PanelLaneOrder { lane: u32, expected: usize },
+    /// Panel row carried more than `k` lanes.
+    PanelLaneOverflow { k: usize },
+    /// Panel row chain closed with the wrong number of lanes.
+    PanelRowWidth { row: usize, lanes: usize, k: usize },
+    /// Panel segment ended while a row chain was still open.
+    PanelEndedMidRow { row: usize },
+    /// Panel segment didn't cover exactly `nrows` rows.
+    PanelRowCount { rows: usize, nrows: usize },
+    /// Non-empty segment decoded as a zero-width (`k == 0`) panel.
+    PanelZeroWidthNonEmpty,
+    /// The assembled matrix failed CSR validation.
+    InvalidCsr(String),
+}
+
+impl fmt::Display for RirError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RirError::TruncatedHeader { word } => {
+                write!(f, "truncated bundle header at word {word}")
+            }
+            RirError::TruncatedPayload { bundle, need, have } => {
+                write!(f, "truncated payload in bundle {bundle}: need {need} words, have {have}")
+            }
+            RirError::ChecksumMismatch { bundle, stored, computed } => write!(
+                f,
+                "checksum mismatch in bundle {bundle}: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            RirError::SegmentOutOfBounds { lo, hi, n_bundles } => {
+                write!(f, "segment [{lo}, {hi}) out of bounds (stream has {n_bundles} bundles)")
+            }
+            RirError::InterleavedRows { open, found } => {
+                write!(f, "bundle for row {found} interleaved into unfinished row {open}")
+            }
+            RirError::RowOutOfBounds { row, nrows } => {
+                write!(f, "row {row} out of bounds (nrows {nrows})")
+            }
+            RirError::ColumnOutOfBounds { col, ncols } => {
+                write!(f, "column {col} out of bounds (ncols {ncols})")
+            }
+            RirError::RowOrder { row } => {
+                write!(f, "row {row} completed twice (or rows out of order)")
+            }
+            RirError::EndedMidRow { row } => write!(f, "stream ended mid-row {row}"),
+            RirError::NotAPanelBundle { bundle } => {
+                write!(f, "bundle {bundle} in panel segment lacks DENSE_PANEL")
+            }
+            RirError::PanelRowOrder { shared, expected } => {
+                write!(f, "panel row {shared} out of order (expected {expected})")
+            }
+            RirError::PanelRowOutOfBounds { row, nrows } => {
+                write!(f, "panel row {row} out of bounds (nrows {nrows})")
+            }
+            RirError::PanelLaneOrder { lane, expected } => {
+                write!(f, "panel lane {lane} out of order (expected {expected})")
+            }
+            RirError::PanelLaneOverflow { k } => {
+                write!(f, "panel lane exceeds width {k}")
+            }
+            RirError::PanelRowWidth { row, lanes, k } => {
+                write!(f, "panel row {row} closed with {lanes} of {k} lanes")
+            }
+            RirError::PanelEndedMidRow { row } => {
+                write!(f, "panel segment ended mid-row {row}")
+            }
+            RirError::PanelRowCount { rows, nrows } => {
+                write!(f, "panel segment carried {rows} of {nrows} rows")
+            }
+            RirError::PanelZeroWidthNonEmpty => {
+                write!(f, "zero-width panel cannot carry bundles")
+            }
+            RirError::InvalidCsr(why) => write!(f, "assembled CSR failed validation: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for RirError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_stable_and_error_converts_to_anyhow() {
+        let e = RirError::ChecksumMismatch { bundle: 3, stored: 0xdead_beef, computed: 1 };
+        assert_eq!(
+            e.to_string(),
+            "checksum mismatch in bundle 3: stored 0xdeadbeef, computed 0x00000001"
+        );
+        let _: anyhow::Error = e.into();
+        assert_eq!(
+            RirError::TruncatedHeader { word: 9 }.to_string(),
+            "truncated bundle header at word 9"
+        );
+    }
+}

@@ -9,25 +9,67 @@
 //! This module is both the wire format (serialize/deserialize, used by the
 //! runtime tests and the `gen-stream` CLI) and the **byte accounting** the
 //! DRAM bandwidth model charges for each bundle.
+//!
+//! Bundles whose [`BundleFlags::CHECKSUM`] bit is set carry one extra
+//! CRC32 word after the payload (ARCHITECTURE.md §3.3): the IEEE 802.3
+//! checksum of the bundle's preceding words — metadata word, shared word
+//! and payload — over their little-endian byte serialization.
+//! [`try_deserialize`] verifies it; [`serialize_stream_checksummed`]
+//! produces the protected form of an arena stream.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::Result;
 
 use crate::sparse::{Idx, Val};
 
 use super::bundle::{Bundle, BundleFlags, Payload, RlTriple};
+use super::error::RirError;
 
 /// Bytes per stream word (the design streams 32-bit index + 32-bit f32).
 pub const WORD_BYTES: usize = 4;
 
+/// IEEE 802.3 CRC32 lookup table (reflected polynomial `0xEDB88320`).
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// IEEE 802.3 CRC32 of a word sequence, taken over the words'
+/// little-endian byte serialization — the exact bytes the DRAM link
+/// carries, so a software `crc32` of the raw stream buffer agrees with
+/// the per-bundle words the FPGA input controller checks.
+pub fn crc32_words(words: &[u32]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ b as u32) & 0xff) as usize];
+        }
+    }
+    !crc
+}
+
 /// Number of 32-bit words a bundle occupies in DRAM.
 ///
 /// metadata word + shared word + payload (2 words per data pair, 3 words
-/// per schedule triple).
+/// per schedule triple), plus one CRC32 word when the bundle is
+/// checksummed.
 pub fn bundle_words(b: &Bundle) -> usize {
     2 + match &b.payload {
         Payload::Data { distinct, .. } => 2 * distinct.len(),
         Payload::Schedule { triples } => 3 * triples.len(),
-    }
+    } + usize::from(b.flags.checksum())
 }
 
 /// Bytes a bundle occupies in DRAM.
@@ -46,6 +88,7 @@ pub fn serialize(bundles: &[Bundle]) -> Vec<u32> {
     for b in bundles {
         let count = b.len() as u32;
         debug_assert!(count < (1 << 24), "bundle too large for metadata word");
+        let start = words.len();
         let meta = (count << 8) | b.flags.0 as u32;
         words.push(meta);
         words.push(b.shared);
@@ -64,15 +107,21 @@ pub fn serialize(bundles: &[Bundle]) -> Vec<u32> {
                 }
             }
         }
+        if b.flags.checksum() {
+            let crc = crc32_words(&words[start..]);
+            words.push(crc);
+        }
     }
     words
 }
 
 /// Number of 32-bit words a [`BundleStream`](super::encode::BundleStream)
 /// occupies in DRAM (all bundles are data bundles: 2 header words + 2 per
-/// element).
+/// element, plus one CRC32 word per checksummed bundle — the encoders
+/// never set [`BundleFlags::CHECKSUM`], so for encoder-produced arenas
+/// this stays exactly `2·bundles + 2·elems`).
 pub fn stream_arena_words(s: &super::encode::BundleStream) -> usize {
-    2 * s.n_bundles() + 2 * s.n_elems()
+    2 * s.n_bundles() + 2 * s.n_elems() + s.flags.iter().filter(|f| f.checksum()).count()
 }
 
 /// Bytes a [`BundleStream`](super::encode::BundleStream) occupies in DRAM.
@@ -86,7 +135,9 @@ pub fn stream_arena_bytes(s: &super::encode::BundleStream) -> usize {
 /// segment reproduces [`stream_arena_words`] exactly.
 pub fn segment_arena_words(s: &super::encode::BundleStream, lo: usize, hi: usize) -> usize {
     assert!(lo <= hi && hi <= s.n_bundles(), "segment [{lo}, {hi}) out of bounds");
-    2 * (hi - lo) + 2 * (s.off[hi] - s.off[lo])
+    2 * (hi - lo)
+        + 2 * (s.off[hi] - s.off[lo])
+        + s.flags[lo..hi].iter().filter(|f| f.checksum()).count()
 }
 
 /// Bytes bundles `[lo, hi)` of a stream arena occupy in DRAM.
@@ -131,13 +182,47 @@ pub fn write_stream_words(s: &super::encode::BundleStream, words: &mut Vec<u32>)
     for b in s.iter() {
         let count = b.cols.len() as u32;
         debug_assert!(count < (1 << 24), "bundle too large for metadata word");
+        let start = words.len();
         words.push((count << 8) | b.flags.0 as u32);
         words.push(b.shared);
         for (&d, &v) in b.cols.iter().zip(b.vals) {
             words.push(d);
             words.push(v.to_bits());
         }
+        if b.flags.checksum() {
+            let crc = crc32_words(&words[start..]);
+            words.push(crc);
+        }
     }
+}
+
+/// Number of 32-bit words a [`BundleStream`](super::encode::BundleStream)
+/// occupies in DRAM once every bundle is checksummed: the plain layout
+/// plus exactly one CRC32 word per bundle.
+pub fn checksummed_stream_words(s: &super::encode::BundleStream) -> usize {
+    3 * s.n_bundles() + 2 * s.n_elems()
+}
+
+/// Serialize a flat bundle arena with [`BundleFlags::CHECKSUM`] forced on
+/// every bundle: each bundle's header carries the flag and is followed by
+/// its CRC32 word (the fault-protected wire form of ARCHITECTURE.md §3.3).
+/// Output length is exactly [`checksummed_stream_words`].
+pub fn serialize_stream_checksummed(s: &super::encode::BundleStream) -> Vec<u32> {
+    let mut words = Vec::with_capacity(checksummed_stream_words(s));
+    for b in s.iter() {
+        let count = b.cols.len() as u32;
+        debug_assert!(count < (1 << 24), "bundle too large for metadata word");
+        let start = words.len();
+        words.push((count << 8) | b.flags.with(BundleFlags::CHECKSUM).0 as u32);
+        words.push(b.shared);
+        for (&d, &v) in b.cols.iter().zip(b.vals) {
+            words.push(d);
+            words.push(v.to_bits());
+        }
+        let crc = crc32_words(&words[start..]);
+        words.push(crc);
+    }
+    words
 }
 
 /// Streaming writer: encode a CSC matrix's bundle chains directly into the
@@ -224,34 +309,68 @@ pub fn write_rl_stream(
 }
 
 /// Walk the stream to its last bundle header and set `END_OF_STREAM`.
+///
+/// The header word participates in the per-bundle checksum, so a
+/// checksummed last bundle has its CRC32 word recomputed after the flag
+/// is set.
 fn mark_last_header_end_of_stream(words: &mut Vec<u32>) {
     let mut p = 0usize;
-    let mut last_header = None;
+    let mut last = None;
     while p < words.len() {
-        last_header = Some(p);
         let meta = words[p];
         let count = (meta >> 8) as usize;
         let flags = BundleFlags((meta & 0xff) as u8);
-        p += 2 + if flags.metadata_only() { 3 * count } else { 2 * count };
+        let payload = if flags.metadata_only() { 3 * count } else { 2 * count };
+        last = Some((p, payload, flags.checksum()));
+        p += 2 + payload + usize::from(flags.checksum());
     }
-    if let Some(h) = last_header {
+    if let Some((h, payload, checksummed)) = last {
         words[h] |= BundleFlags::END_OF_STREAM as u32;
+        if checksummed {
+            words[h + 2 + payload] = crc32_words(&words[h..h + 2 + payload]);
+        }
     }
 }
 
-/// Deserialize a flat word stream back into bundles.
+/// Deserialize a flat word stream back into bundles, verifying per-bundle
+/// checksums — trusted-caller wrapper over [`try_deserialize`].
 pub fn deserialize(words: &[u32]) -> Result<Vec<Bundle>> {
+    Ok(try_deserialize(words)?)
+}
+
+/// Deserialize a flat word stream back into bundles.
+///
+/// Total over arbitrary input: truncation, undersized payloads and CRC32
+/// mismatches come back as structured [`RirError`]s; no input panics.
+/// Checksummed bundles keep their `CHECKSUM` flag so re-serializing
+/// reproduces the protected wire form bit-for-bit.
+pub fn try_deserialize(words: &[u32]) -> std::result::Result<Vec<Bundle>, RirError> {
     let mut out = Vec::new();
     let mut p = 0usize;
+    let mut bundle = 0usize;
     while p < words.len() {
-        ensure!(p + 2 <= words.len(), "truncated bundle header at word {p}");
+        if p + 2 > words.len() {
+            return Err(RirError::TruncatedHeader { word: p });
+        }
         let meta = words[p];
         let shared = words[p + 1];
-        p += 2;
         let count = (meta >> 8) as usize;
         let flags = BundleFlags((meta & 0xff) as u8);
+        let payload = if flags.metadata_only() { 3 * count } else { 2 * count };
+        let need = payload + usize::from(flags.checksum());
+        let have = words.len() - (p + 2);
+        if need > have {
+            return Err(RirError::TruncatedPayload { bundle, need, have });
+        }
+        if flags.checksum() {
+            let stored = words[p + 2 + payload];
+            let computed = crc32_words(&words[p..p + 2 + payload]);
+            if stored != computed {
+                return Err(RirError::ChecksumMismatch { bundle, stored, computed });
+            }
+        }
+        p += 2;
         if flags.metadata_only() {
-            ensure!(p + 3 * count <= words.len(), "truncated schedule payload");
             let mut triples = Vec::with_capacity(count);
             for k in 0..count {
                 triples.push(RlTriple {
@@ -260,23 +379,19 @@ pub fn deserialize(words: &[u32]) -> Result<Vec<Bundle>> {
                     end: words[p + 3 * k + 2],
                 });
             }
-            p += 3 * count;
             // schedule() re-sets METADATA_ONLY; keep other flag bits
             out.push(Bundle::schedule(shared, triples, flags));
         } else {
-            ensure!(p + 2 * count <= words.len(), "truncated data payload");
             let mut distinct: Vec<Idx> = Vec::with_capacity(count);
             let mut values: Vec<Val> = Vec::with_capacity(count);
             for k in 0..count {
                 distinct.push(words[p + 2 * k]);
                 values.push(f32::from_bits(words[p + 2 * k + 1]));
             }
-            p += 2 * count;
             out.push(Bundle::data(shared, distinct, values, flags));
         }
-    }
-    if p != words.len() {
-        bail!("trailing garbage after last bundle");
+        p += need;
+        bundle += 1;
     }
     Ok(out)
 }
@@ -379,6 +494,90 @@ mod tests {
         assert_eq!(stream_arena_words(&s), 2 * s.n_bundles() + 2 * s.n_elems());
         assert_eq!(stream_arena_bytes(&s), stream_arena_words(&s) * 4);
         assert_eq!(WORD_BYTES, 4);
+
+        // §3.3 checksummed form: CHECKSUM flag bit, +1 CRC32 word per
+        // bundle, checksum taken over the bundle's preceding words
+        assert_eq!(BundleFlags::CHECKSUM, 0b0001_0000);
+        let ck = Bundle::data(
+            7,
+            vec![1, 2, 3],
+            vec![0.5, 1.5, 2.5],
+            BundleFlags::default().with(BundleFlags::CHECKSUM),
+        );
+        assert_eq!(bundle_words(&ck), 2 + 2 * 3 + 1);
+        let ckw = serialize(std::slice::from_ref(&ck));
+        assert_eq!(ckw.len(), bundle_words(&ck));
+        assert_eq!(ckw[0] & 0xff, BundleFlags::CHECKSUM as u32, "flags field");
+        assert_eq!(*ckw.last().unwrap(), crc32_words(&ckw[..ckw.len() - 1]));
+        let cks = serialize_stream_checksummed(&s);
+        assert_eq!(cks.len(), checksummed_stream_words(&s));
+        assert_eq!(checksummed_stream_words(&s), 3 * s.n_bundles() + 2 * s.n_elems());
+    }
+
+    /// The CRC32 is the IEEE 802.3 / zlib `crc32` of the words'
+    /// little-endian bytes — values pinned against an independent
+    /// implementation.
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        assert_eq!(crc32_words(&[]), 0);
+        assert_eq!(crc32_words(&[0x0102_0304]), 0xe951_a406);
+        assert_eq!(crc32_words(&[0, 0, 0, 0]), 0xecbb_4b55);
+        assert_eq!(crc32_words(&[0xdead_beef, 0x00c0_ffee]), 0x9f1d_caf9);
+        // a fully worked checksummed data bundle, header included
+        let b = Bundle::data(
+            7,
+            vec![2, 5, 9],
+            vec![0.5, 1.5, -2.0],
+            BundleFlags::default().with(BundleFlags::END_OF_ROW).with(BundleFlags::CHECKSUM),
+        );
+        let w = serialize(std::slice::from_ref(&b));
+        assert_eq!(w[0], 0x311);
+        assert_eq!(*w.last().unwrap(), 0xb3a6_a5bc);
+    }
+
+    #[test]
+    fn checksummed_stream_roundtrips_and_detects_corruption() {
+        let m = gen::power_law(22, 260, 6);
+        let s = crate::rir::encode::BundleStream::from_csr(&m, 8);
+        let words = serialize_stream_checksummed(&s);
+        // decode keeps CHECKSUM flags, so re-serializing is bit-identical
+        let bundles = try_deserialize(&words).unwrap();
+        assert!(bundles.iter().all(|b| b.flags.checksum()));
+        assert_eq!(serialize(&bundles), words);
+        // stripping the flags recovers the plain serialized form
+        let plain: Vec<Bundle> = bundles
+            .iter()
+            .map(|b| Bundle {
+                flags: BundleFlags(b.flags.0 & !BundleFlags::CHECKSUM),
+                ..b.clone()
+            })
+            .collect();
+        assert_eq!(serialize(&plain), serialize_stream(&s));
+        // a corrupted shared-feature word is caught by the bundle's CRC
+        let mut bad = words.clone();
+        bad[1] ^= 1 << 17;
+        match try_deserialize(&bad) {
+            Err(RirError::ChecksumMismatch { bundle: 0, .. }) => {}
+            other => panic!("expected checksum mismatch, got {other:?}"),
+        }
+        // dropping the CRC word of the last bundle truncates the stream
+        let mut short = words;
+        short.pop();
+        assert!(matches!(
+            try_deserialize(&short),
+            Err(RirError::TruncatedPayload { .. })
+        ));
+    }
+
+    #[test]
+    fn end_of_stream_marker_recomputes_last_checksum() {
+        // build a checksummed two-bundle stream by hand, then re-mark it
+        let m = gen::random_uniform(6, 6, 18, 11);
+        let s = crate::rir::encode::BundleStream::from_csr(&m, 4);
+        let mut words = serialize_stream_checksummed(&s);
+        super::mark_last_header_end_of_stream(&mut words);
+        let bundles = try_deserialize(&words).expect("marker must keep checksums valid");
+        assert!(bundles.last().unwrap().flags.end_of_stream());
     }
 
     #[test]

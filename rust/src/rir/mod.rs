@@ -20,7 +20,10 @@
 //! * [`decode`] — bundles → CSR (the paper's `decompress` routine), plus
 //!   per-tenant segment extraction and dense-panel reassembly.
 //! * [`layout`] — the flat DRAM word stream of Fig 3(d) and its byte
-//!   accounting (drives the simulator's bandwidth model).
+//!   accounting (drives the simulator's bandwidth model), including the
+//!   optional per-bundle CRC32 word behind [`BundleFlags::CHECKSUM`].
+//! * [`error`] — the typed [`RirError`] the fallible `try_*` stream
+//!   decoders return for malformed, truncated or checksum-failing input.
 //! * [`schedule`] — wave scheduling of bundles onto pipelines (the CPU's
 //!   "scheduling decisions" of Fig 3), single-job and multi-tenant
 //!   batched.
@@ -34,9 +37,11 @@
 pub mod bundle;
 pub mod decode;
 pub mod encode;
+pub mod error;
 pub mod layout;
 pub mod schedule;
 
 pub use bundle::{Bundle, BundleFlags, Payload, RlTriple, DEFAULT_BUNDLE_SIZE};
 pub use encode::{BundleRef, BundleStream};
+pub use error::RirError;
 pub use schedule::{BatchSchedule, BatchSegment, BatchWave, SpgemmSchedule, Wave};

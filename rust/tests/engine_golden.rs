@@ -5,6 +5,10 @@
 //! the depth-2 channel must be monotonically no slower with identical
 //! DRAM traffic.
 //!
+//! The fault-aware entry point (`execute_waves_with_faults`) with an
+//! all-zero fault slice must also collapse to the plain path
+//! bit-identically — fault tolerance is free when nothing faults.
+//!
 //! The pre-refactor model is pinned *independently* of the engine: each
 //! simulator's emitted [`WaveCost`] sequence is re-priced here with the
 //! raw serial formula `max(setup + compute, max(read, write))` (at least
@@ -15,7 +19,9 @@
 
 use reap::fpga::cholesky_sim::simulate_cholesky;
 use reap::fpga::dram::DramModel;
-use reap::fpga::engine::{execute_waves_at_depth, WaveCost, WaveKind};
+use reap::fpga::engine::{
+    execute_waves_at_depth, execute_waves_with_faults, WaveCost, WaveFault, WaveKind,
+};
 use reap::fpga::spgemm_sim::{simulate_spgemm, simulate_spgemm_batch, Style};
 use reap::fpga::spmm_sim::simulate_spmm;
 use reap::fpga::spmv_sim::simulate_spmv;
@@ -66,6 +72,19 @@ fn check_contract(costs: &[WaveCost], cfg: &FpgaConfig, stats_d1: &SimStats, wha
         assert_eq!(r.stats.flops, d1.stats.flops, "{what}: flops");
         assert_eq!(r.stats.waves, d1.stats.waves, "{what}: waves");
         prev = r.stats.cycles;
+    }
+
+    // the fault-aware entry point with a present-but-all-zero fault slice
+    // must collapse to the plain path bit-identically at every depth,
+    // with an empty retry ledger
+    let zeros = vec![WaveFault::default(); costs.len()];
+    for depth in [1usize, 2, 3] {
+        let plain = execute_waves_at_depth(costs, cfg, depth);
+        let faulted = execute_waves_with_faults(costs, cfg, depth, Some(&zeros));
+        assert_eq!(faulted.stats, plain.stats, "{what}: zero-fault stats, depth {depth}");
+        assert_eq!(faulted.item_cycles, plain.item_cycles, "{what}: zero-fault waves, d{depth}");
+        assert!(faulted.failed_waves.is_empty(), "{what}: zero-fault failures, depth {depth}");
+        assert_eq!(faulted.stats.retry_cycles, 0, "{what}: zero-fault ledger, depth {depth}");
     }
 }
 

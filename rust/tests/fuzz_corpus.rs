@@ -1,0 +1,53 @@
+//! Replays the checked-in libFuzzer seed corpus (`fuzz/corpus/<target>/`)
+//! through the same `reap::reliability::fuzz_decode_*` drivers the fuzz
+//! targets call — so the corpus is exercised on every stable-toolchain
+//! test run, not only when the nightly fuzz job fires. Each driver must
+//! simply return on every input; any panic fails the test.
+
+use std::fs;
+use std::path::PathBuf;
+
+fn corpus_dir(target: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("fuzz")
+        .join("corpus")
+        .join(target)
+}
+
+fn replay(target: &str, driver: fn(&[u8])) {
+    let dir = corpus_dir(target);
+    let entries =
+        fs::read_dir(&dir).unwrap_or_else(|e| panic!("corpus dir {}: {e}", dir.display()));
+    let mut n = 0usize;
+    for entry in entries {
+        let path = entry.expect("corpus entry").path();
+        if !path.is_file() {
+            continue;
+        }
+        let bytes = fs::read(&path).expect("corpus file");
+        driver(&bytes);
+        // the drivers must also hold on every prefix of a seed (cheap
+        // truncation sweep — the corpus files are tiny)
+        for cut in 0..bytes.len().min(64) {
+            driver(&bytes[..cut]);
+        }
+        n += 1;
+    }
+    assert!(n > 0, "empty corpus for `{target}` — seeds must be checked in");
+}
+
+#[test]
+fn corpus_decode_stream_never_panics() {
+    replay("decode_stream", reap::reliability::fuzz_decode_stream);
+}
+
+#[test]
+fn corpus_decode_segment_never_panics() {
+    replay("decode_segment", reap::reliability::fuzz_decode_segment);
+}
+
+#[test]
+fn corpus_decode_panel_never_panics() {
+    replay("decode_panel", reap::reliability::fuzz_decode_panel);
+}

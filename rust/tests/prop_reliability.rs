@@ -1,0 +1,231 @@
+//! Fault-tolerance properties end to end: the checksummed wire format
+//! must turn every single-bit corruption into a typed decode error (no
+//! silent wrong answers), truncation and garbage must never panic, and
+//! the engine's wave-retry ledger must be exact at every channel depth.
+//!
+//! The exhaustive flip test runs over a hand-pinned two-bundle stream
+//! whose CRC words are literals; all 512 single-bit flips of that stream
+//! were verified off-line to fail wire-level validation (header-count and
+//! CHECKSUM-flag flips included), so `is_err()` is asserted outright.
+
+use reap::fpga::engine::{execute_waves_at_depth, execute_waves_with_faults, WaveFault};
+use reap::fpga::spgemm_sim::{simulate_spgemm, Style};
+use reap::fpga::FpgaConfig;
+use reap::reliability::draw_wave_faults;
+use reap::rir::decode::{try_words_panel_to_dense, try_words_segment_to_csr, try_words_to_csr};
+use reap::rir::encode::BundleStream;
+use reap::rir::layout::{crc32_words, serialize_stream_checksummed};
+use reap::rir::schedule::schedule_spgemm;
+use reap::sparse::{gen, Csr};
+use reap::util::rng::Pcg64;
+
+/// A 2×10 matrix small enough to pin its entire checksummed wire image.
+fn pinned_matrix() -> Csr {
+    let mut m = Csr::new(2, 10);
+    m.cols = vec![2, 5, 9, 0, 4];
+    m.vals = vec![0.5, 1.5, -2.0, 3.25, -0.75];
+    m.row_ptr = vec![0, 3, 5];
+    m.validate().unwrap();
+    m
+}
+
+/// The checksummed serialization of [`pinned_matrix`], written out as
+/// literals (CRC words included) so the test is independent of the
+/// encoder. Layout per ARCHITECTURE.md §3: header `(count << 8) | flags`,
+/// shared word, `(index, value-bits)` pairs, trailing CRC32.
+fn pinned_words() -> Vec<u32> {
+    vec![
+        0x0311, 0, // count 3, END_OF_ROW|CHECKSUM; row 0
+        2, 0x3F00_0000, // (2, 0.5)
+        5, 0x3FC0_0000, // (5, 1.5)
+        9, 0xC000_0000, // (9, -2.0)
+        0xB7AF_56EF, // CRC32 of the 8 words above
+        0x0211, 1, // count 2, END_OF_ROW|CHECKSUM; row 1
+        0, 0x4050_0000, // (0, 3.25)
+        4, 0xBF40_0000, // (4, -0.75)
+        0x9D15_5238, // CRC32 of the 6 words above
+    ]
+}
+
+#[test]
+fn pinned_stream_decodes_and_its_crc_literals_match_the_implementation() {
+    let w = pinned_words();
+    assert_eq!(crc32_words(&w[0..8]), w[8], "bundle 0 CRC literal");
+    assert_eq!(crc32_words(&w[9..15]), w[15], "bundle 1 CRC literal");
+    assert_eq!(try_words_to_csr(&w, 2, 10).unwrap(), pinned_matrix());
+}
+
+#[test]
+fn every_single_bit_flip_of_a_checksummed_stream_is_detected() {
+    let words = pinned_words();
+    for wi in 0..words.len() {
+        for bit in 0..32 {
+            let mut fl = words.clone();
+            fl[wi] ^= 1u32 << bit;
+            assert!(
+                try_words_to_csr(&fl, 2, 10).is_err(),
+                "flip of word {wi} bit {bit} decoded successfully"
+            );
+        }
+    }
+}
+
+#[test]
+fn the_unprotected_form_of_the_same_stream_corrupts_silently() {
+    // strip the CRC words and clear the CHECKSUM flag: the exact damage
+    // the checksummed test detects 100% of now sails through
+    let w = pinned_words();
+    let mut plain = vec![0x0301, w[1]];
+    plain.extend_from_slice(&w[2..8]);
+    plain.push(0x0201);
+    plain.extend_from_slice(&w[10..15]);
+    assert_eq!(try_words_to_csr(&plain, 2, 10).unwrap(), pinned_matrix());
+    let mut fl = plain.clone();
+    fl[3] ^= 1 << 22; // 0.5 -> 0.75: a one-bit value corruption
+    let d = try_words_to_csr(&fl, 2, 10).unwrap();
+    assert_ne!(d, pinned_matrix(), "unprotected flip must decode to wrong data");
+    assert_eq!(d.vals[0], 0.75);
+}
+
+#[test]
+fn random_bit_flips_on_random_checksummed_streams_never_decode_wrong() {
+    for seed in 0..10u64 {
+        let m = gen::power_law(20, 200, seed);
+        let s = BundleStream::from_csr(&m, 6);
+        let words = serialize_stream_checksummed(&s);
+        let mut rng = Pcg64::with_stream(0xB1F0, seed);
+        let mut detected = 0usize;
+        for _ in 0..64 {
+            let mut fl = words.clone();
+            let wi = rng.next_below(fl.len() as u64) as usize;
+            fl[wi] ^= 1u32 << rng.next_below(32);
+            match try_words_to_csr(&fl, m.nrows, m.ncols) {
+                Err(_) => detected += 1,
+                // a flip may only pass validation if it was semantically
+                // invisible — a wrong matrix is silent corruption
+                Ok(d) => assert_eq!(d, m, "seed {seed}: silent corruption at word {wi}"),
+            }
+            match try_words_segment_to_csr(&fl, 0, s.n_bundles(), m.nrows, m.ncols) {
+                Err(_) => {}
+                Ok(d) => assert_eq!(d, m, "seed {seed}: silent segment corruption"),
+            }
+        }
+        assert!(detected > 0, "seed {seed}: the checksum never fired");
+    }
+}
+
+#[test]
+fn truncation_and_garbage_never_panic_any_decoder() {
+    // a combined sparse+panel stream exercises all three decoders
+    let m = gen::random_uniform(8, 8, 30, 91);
+    let k = 4usize;
+    let x: Vec<f32> = (0..m.ncols * k).map(|i| i as f32 * 0.5 - 3.0).collect();
+    let mut s = BundleStream::new();
+    let boundary = s.encode_csr_with_panel(&m, &x, k, 4);
+    let words = serialize_stream_checksummed(&s);
+    for cut in 0..=words.len() {
+        let w = &words[..cut];
+        let _ = try_words_to_csr(w, m.nrows, m.ncols);
+        let _ = try_words_segment_to_csr(w, 0, boundary, m.nrows, m.ncols);
+        let _ = try_words_panel_to_dense(w, boundary, s.n_bundles(), m.ncols, k);
+    }
+    // arbitrary word garbage of arbitrary length
+    let mut rng = Pcg64::new(0x6A5B);
+    for _ in 0..200 {
+        let len = rng.next_below(96) as usize;
+        let g: Vec<u32> = (0..len).map(|_| rng.next_u64() as u32).collect();
+        let _ = try_words_to_csr(&g, 16, 16);
+        let _ = try_words_segment_to_csr(&g, 1, 3, 16, 16);
+        let _ = try_words_panel_to_dense(&g, 0, 2, 16, 3);
+    }
+}
+
+/// Emit a real SpGEMM wave-cost sequence to drive the engine properties.
+fn spgemm_costs(cfg: &FpgaConfig) -> Vec<reap::fpga::engine::WaveCost> {
+    let a = gen::power_law(120, 1800, 3);
+    let b = gen::random_uniform(120, 120, 1500, 4);
+    let s = schedule_spgemm(&a, &b, cfg.pipelines, cfg.bundle_size);
+    simulate_spgemm(&a, &b, &s, cfg, Style::HandCoded).costs
+}
+
+#[test]
+fn retry_ledger_is_exact_at_every_depth_with_exact_attribution() {
+    let cfg = FpgaConfig::reap64_spgemm();
+    let costs = spgemm_costs(&cfg);
+    assert!(costs.len() >= 8, "workload too small to exercise retries");
+    // a deterministic hand-built fault slice: every retry count in range,
+    // a sprinkling of exhausted waves
+    let faults: Vec<WaveFault> = (0..costs.len())
+        .map(|k| WaveFault {
+            retries: (k % (cfg.max_wave_retries + 1)) as u64,
+            failed: k % 7 == 0,
+        })
+        .collect();
+    let expected_retry: u64 = costs
+        .iter()
+        .zip(&faults)
+        .map(|(c, f)| f.retries * c.serial_cycles(&cfg))
+        .sum();
+    let expected_failed: Vec<usize> =
+        faults.iter().enumerate().filter(|(_, f)| f.failed).map(|(k, _)| k).collect();
+    let base1 = execute_waves_at_depth(&costs, &cfg, 1);
+    for depth in [1usize, 2, 3] {
+        let plain = execute_waves_at_depth(&costs, &cfg, depth);
+        let r = execute_waves_with_faults(&costs, &cfg, depth, Some(&faults));
+        assert_eq!(r.stats.retry_cycles, expected_retry, "depth {depth}: retry ledger");
+        assert_eq!(
+            r.stats.cycles,
+            plain.stats.cycles + expected_retry,
+            "depth {depth}: cycles(faults) == cycles(no faults) + retry_cycles"
+        );
+        assert_eq!(r.failed_waves, expected_failed, "depth {depth}: attribution");
+        // DRAM traffic, flops and wave counts are fault-invariant: time
+        // is charged for replays, refetched bytes are not re-counted
+        assert_eq!(r.stats.bytes_read, plain.stats.bytes_read, "depth {depth}");
+        assert_eq!(r.stats.bytes_written, plain.stats.bytes_written, "depth {depth}");
+        assert_eq!(r.stats.flops, plain.stats.flops, "depth {depth}");
+        assert_eq!(r.stats.waves, plain.stats.waves, "depth {depth}");
+        // the depth ledger holds under a fixed fault slice too
+        let base_f = execute_waves_with_faults(&costs, &cfg, 1, Some(&faults));
+        assert_eq!(
+            r.stats.cycles + r.stats.prefetch_hidden_cycles,
+            base_f.stats.cycles,
+            "depth {depth}: hidden-cycle ledger under faults"
+        );
+        assert_eq!(
+            r.stats.prefetch_hidden_cycles, plain.stats.prefetch_hidden_cycles,
+            "depth {depth}: hidden cycles are fault-invariant"
+        );
+        assert_eq!(base_f.stats.cycles, base1.stats.cycles + expected_retry);
+    }
+}
+
+#[test]
+fn zero_fault_rate_draw_reproduces_the_plain_engine_at_every_depth() {
+    let cfg = FpgaConfig::reap64_spgemm();
+    let costs = spgemm_costs(&cfg);
+    let faults = draw_wave_faults(0xFEED, costs.len(), 0.0, cfg.max_wave_retries);
+    assert!(faults.iter().all(|f| *f == WaveFault::default()));
+    for depth in [1usize, 2, 3] {
+        let plain = execute_waves_at_depth(&costs, &cfg, depth);
+        let r = execute_waves_with_faults(&costs, &cfg, depth, Some(&faults));
+        assert_eq!(r.stats, plain.stats, "depth {depth}");
+        assert_eq!(r.item_cycles, plain.item_cycles, "depth {depth}");
+        assert!(r.failed_waves.is_empty(), "depth {depth}");
+    }
+}
+
+#[test]
+fn total_fault_rate_exhausts_every_wave_deterministically() {
+    let cfg = FpgaConfig::reap64_spgemm();
+    let costs = spgemm_costs(&cfg);
+    let max = cfg.max_wave_retries as u64;
+    let faults = draw_wave_faults(0xFEED, costs.len(), 1.0, cfg.max_wave_retries);
+    assert!(faults.iter().all(|f| f.retries == max && f.failed));
+    let plain = execute_waves_at_depth(&costs, &cfg, 1);
+    let r = execute_waves_with_faults(&costs, &cfg, 1, Some(&faults));
+    let expected_retry: u64 = costs.iter().map(|c| max * c.serial_cycles(&cfg)).sum();
+    assert_eq!(r.stats.retry_cycles, expected_retry);
+    assert_eq!(r.stats.cycles, plain.stats.cycles + expected_retry);
+    assert_eq!(r.failed_waves, (0..costs.len()).collect::<Vec<_>>());
+}

@@ -1,4 +1,6 @@
 //! Fuzz `try_words_panel_to_dense` (SpMM dense-panel reassembly).
+//! Seeds include a FIXED_POINT dense-panel bundle so the Q1.15 lane
+//! decode inside panel assembly is part of the mutation frontier.
 #![no_main]
 
 use libfuzzer_sys::fuzz_target;

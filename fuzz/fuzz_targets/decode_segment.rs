@@ -1,4 +1,6 @@
 //! Fuzz `try_words_segment_to_csr` (per-tenant segment extraction).
+//! Seeds include BITMAP- and FIXED_POINT-encoded bundles inside the
+//! extracted segment so the expander path is mutated, not just raw pairs.
 #![no_main]
 
 use libfuzzer_sys::fuzz_target;

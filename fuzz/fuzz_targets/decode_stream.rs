@@ -1,6 +1,8 @@
 //! Fuzz `try_words_to_csr`: any byte string must decode or error, never
 //! panic. The driver lives in the `reap` lib so the in-tree corpus test
-//! replays the exact same path on stable.
+//! replays the exact same path on stable. Seeds cover raw, checksummed,
+//! BITMAP (hierarchical-bitmap index section) and FIXED_POINT (Q1.15
+//! value lane) bundles so mutation starts from every wire layout.
 #![no_main]
 
 use libfuzzer_sys::fuzz_target;

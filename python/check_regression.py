@@ -7,14 +7,24 @@ regresses by more than the tolerance. Only files present on *both* sides
 are compared, so a PR that adds a new benchmark is not penalized for it;
 per-file breakdowns are printed for diagnosis.
 
+Records that carry the simulated-FPGA cycle fields (``cycles_serial`` and
+``cycles_db`` — the batch and compression benches) are additionally gated
+on those sums with their own, much tighter tolerance: the cycle model is
+deterministic, so any drift is a real modeling change, not runner noise.
+A small ``--cycles-tol`` (default 2%) leaves headroom for intentional
+model refinements while catching accidental pricing regressions — e.g. a
+double-buffer prefetch term silently lost, or stream words over-billed.
+
 Either side may be a colon-separated list of directories holding repeated
 runs; the per-file value is then the **minimum** across runs — min-of-N
 is the standard defense against shared-runner scheduling noise (timing
-noise on a deterministic pass is strictly additive).
+noise on a deterministic pass is strictly additive; for the cycle sums
+every run is identical and the min is a no-op).
 
 Usage:
     python3 python/check_regression.py <baseline_dir[:dir...]> \
-        <fresh_dir[:dir...]> [--tol 0.10] [--min-seconds 0.002]
+        <fresh_dir[:dir...]> [--tol 0.10] [--cycles-tol 0.02] \
+        [--min-seconds 0.002]
 
 Exit status: 0 when within tolerance (or nothing comparable / baseline
 below the noise floor), 1 on regression, 2 on usage errors.
@@ -48,12 +58,56 @@ def min_cpu_s(paths):
     return min(combined_cpu_s(p) for p in paths)
 
 
+def combined_cycles(path, field):
+    """Sum of one cycle field over the records that carry it, or None."""
+    with open(path) as f:
+        records = json.load(f)
+    vals = [int(r[field]) for r in records if field in r]
+    return sum(vals) if vals else None
+
+
+def min_cycles(paths, field):
+    """Minimum cycle sum across runs (identical runs — min is a no-op)."""
+    vals = [c for c in (combined_cycles(p, field) for p in paths)
+            if c is not None]
+    return min(vals) if vals else None
+
+
+def gate_cycles(common, base, fresh, field, tol):
+    """Gate one deterministic cycle field; returns True when it holds."""
+    base_total = 0
+    fresh_total = 0
+    for name in common:
+        b = min_cycles(base[name], field)
+        f = min_cycles(fresh[name], field)
+        if b is None or f is None:
+            continue  # bench doesn't emit this field on both sides
+        base_total += b
+        fresh_total += f
+        print(f"  {name}: baseline {field} {b} fresh {f}")
+    if base_total == 0:
+        print(f"perf gate: no comparable {field} records; skipping")
+        return True
+    ratio = fresh_total / base_total
+    print(f"perf gate: combined {field} baseline {base_total} -> "
+          f"fresh {fresh_total} (ratio {ratio:.4f}, tol {1 + tol:.2f})")
+    if ratio > 1.0 + tol:
+        print(f"perf gate: FAIL — {field} regressed "
+              f"{(ratio - 1.0) * 100:.2f}% (> {tol * 100:.0f}%); the cycle "
+              f"model is deterministic, so this is a real pricing change")
+        return False
+    return True
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline_dir")
     ap.add_argument("fresh_dir")
     ap.add_argument("--tol", type=float, default=0.10,
                     help="allowed relative regression (default 0.10 = 10%%)")
+    ap.add_argument("--cycles-tol", type=float, default=0.02,
+                    help="allowed relative regression of the deterministic "
+                         "cycles_serial / cycles_db sums (default 0.02)")
     ap.add_argument("--min-seconds", type=float, default=0.002,
                     help="baseline noise floor: below this combined time "
                          "the gate passes trivially")
@@ -77,10 +131,17 @@ def main():
         print(f"  {name}: baseline {b:.6f}s (min of {len(base[name])}) "
               f"fresh {f:.6f}s (min of {len(fresh[name])})")
 
+    # deterministic cycle gates run regardless of the wall-clock noise
+    # floor — the model has no noise to floor away
+    cycles_ok = all(
+        gate_cycles(common, base, fresh, field, args.cycles_tol)
+        for field in ("cycles_serial", "cycles_db")
+    )
+
     if base_total < args.min_seconds:
         print(f"perf gate: baseline combined CPU pass {base_total:.6f}s is "
               f"below the {args.min_seconds}s noise floor; passing")
-        return 0
+        return 0 if cycles_ok else 1
 
     ratio = fresh_total / base_total
     print(f"perf gate: combined CPU pass baseline {base_total:.6f}s -> "
@@ -88,6 +149,8 @@ def main():
     if ratio > 1.0 + args.tol:
         print(f"perf gate: FAIL — combined CPU pass regressed "
               f"{(ratio - 1.0) * 100:.1f}% (> {args.tol * 100:.0f}%)")
+        return 1
+    if not cycles_ok:
         return 1
     print("perf gate: OK")
     return 0

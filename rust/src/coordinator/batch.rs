@@ -89,6 +89,11 @@ pub struct ReapBatchReport {
     /// output never landed, and a production deployment would rerun just
     /// these. Ascending job ids; always empty at fault rate 0.
     pub failed_jobs: Vec<usize>,
+    /// The negotiated stream encoding the simulation priced
+    /// ([`FpgaConfig::encoding`]). [`Self::a_stream_bytes`] stays the raw
+    /// arena segment size — it describes the CPU-side arena layout, not
+    /// the priced wire traffic.
+    pub encoding: String,
 }
 
 impl ReapBatch {
@@ -192,6 +197,7 @@ impl ReapBatch {
             fpga_s,
             total_s,
             failed_jobs,
+            encoding: self.cfg.encoding.to_string(),
         })
     }
 }

@@ -52,6 +52,9 @@ pub struct ReapSpgemmReport {
     /// compute (paper §V-A), driven by measured per-wave CPU timestamps
     /// and simulated per-wave FPGA cycles.
     pub total_s: f64,
+    /// The negotiated stream encoding the simulation priced
+    /// ([`FpgaConfig::encoding`], e.g. `"raw"` or `"bitmap+fx32"`).
+    pub encoding: String,
 }
 
 impl<'rt> ReapSpgemm<'rt> {
@@ -113,6 +116,7 @@ impl<'rt> ReapSpgemm<'rt> {
             fpga_sim_db,
             fpga_s,
             total_s,
+            encoding: self.cfg.encoding.to_string(),
         })
     }
 }

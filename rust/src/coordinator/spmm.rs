@@ -69,6 +69,9 @@ pub struct ReapSpmmReport {
     pub fpga_sim_db: SimStats,
     pub fpga_s: f64,
     pub total_s: f64,
+    /// The negotiated stream encoding the simulation priced
+    /// ([`FpgaConfig::encoding`]).
+    pub encoding: String,
 }
 
 impl ReapSpmm {
@@ -126,6 +129,7 @@ impl ReapSpmm {
             fpga_sim_db,
             fpga_s,
             total_s,
+            encoding: self.cfg.encoding.to_string(),
         })
     }
 }

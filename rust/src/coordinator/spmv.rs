@@ -36,6 +36,9 @@ pub struct ReapSpmvReport {
     pub fpga_sim_db: SimStats,
     pub fpga_s: f64,
     pub total_s: f64,
+    /// The negotiated stream encoding the simulation priced
+    /// ([`FpgaConfig::encoding`]).
+    pub encoding: String,
 }
 
 impl<'rt> ReapSpmv<'rt> {
@@ -93,6 +96,7 @@ impl<'rt> ReapSpmv<'rt> {
             fpga_sim_db,
             fpga_s,
             total_s,
+            encoding: self.cfg.encoding.to_string(),
         })
     }
 }

@@ -17,6 +17,16 @@
 //! Idle pipeline-cycles are tracked: the paper observes "as we increase
 //! the number of pipelines, the idle cycles increase almost linearly",
 //! which the `idle_grows_with_pipelines` test reproduces.
+//!
+//! Cholesky does **not** participate in the negotiated stream compression
+//! ([`FpgaConfig::encoding`] is ignored here). The RA/RL streams are baked
+//! raw at [`CholeskySymbolic::analyze`] time — the CPU measures their word
+//! extents once and the RL metadata triples carry absolute DRAM addresses
+//! into that raw layout — and, unlike the multiply kernels, every column's
+//! L rows are *re-read* by later dependent columns, so a lossy value lane
+//! would compound quantization error through the factorization chain
+//! instead of bounding it per element. Keeping this datapath raw preserves
+//! the dependent-stream semantics the retry model relies on.
 
 
 use crate::symbolic::CholeskySymbolic;

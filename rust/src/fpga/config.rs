@@ -107,6 +107,15 @@ pub struct FpgaConfig {
     /// [`super::SimStats::retry_cycles`]. Must be ≥ 1
     /// ([`FpgaConfig::validate`]); irrelevant at fault rate 0.
     pub max_wave_retries: usize,
+    /// Negotiated RIR stream encoding (`--encoding`, ARCHITECTURE.md §3.4):
+    /// bitmap index sections and/or fixed-point value lanes. The simulators
+    /// price every A/B/panel stream at its encoded size
+    /// ([`crate::rir::layout::encoded_data_bundle_words`]) and charge the
+    /// expander fill latency
+    /// ([`crate::rir::layout::StreamEncoding::expansion_cycles`]) to each
+    /// wave's setup. `Raw` is bit-identical to the pre-compression model.
+    /// Cholesky streams do not participate (see `fpga::cholesky_sim`).
+    pub encoding: crate::rir::layout::StreamEncoding,
     pub dram: DramConfig,
     /// FP multiply pipeline latency, cycles.
     pub mult_latency: u64,
@@ -131,6 +140,7 @@ impl FpgaConfig {
             vector_lanes: 8,
             dram_buffer_depth: 1,
             max_wave_retries: 3,
+            encoding: crate::rir::layout::StreamEncoding::Raw,
             dram: DramConfig::single_core(),
             mult_latency: 5,
             add_latency: 4,
@@ -303,6 +313,7 @@ mod tests {
             assert_eq!(c.vector_lanes, 8);
             assert_eq!(c.dram_buffer_depth, 1);
             assert_eq!(c.max_wave_retries, 3);
+            assert_eq!(c.encoding, crate::rir::layout::StreamEncoding::Raw);
             assert_eq!(c.validate(), Ok(()));
         }
     }

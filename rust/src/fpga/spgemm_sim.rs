@@ -18,6 +18,15 @@
 //! RIR the datapath runs at stream rate). The §V-C HLS variant instead
 //! *serializes* the stages and, without CPU preprocessing, pays an
 //! indirection penalty per B-row gather.
+//!
+//! Both A-chunk bundles and B-row chains are priced at their **encoded**
+//! wire size under [`FpgaConfig::encoding`]
+//! ([`crate::rir::layout::encoded_data_bundle_words`] /
+//! [`crate::rir::layout::encoded_chain_words`]); non-raw encodings add the
+//! pipelined expander's fill latency to the wave's setup while the
+//! post-expander element rate — and thus every stage occupancy — is
+//! unchanged. Merged output writes back as raw (col, f32) pairs:
+//! compression is negotiated for the input RIR streams only.
 
 use crate::rir::layout::WORD_BYTES;
 use crate::rir::schedule::{BatchSchedule, SpgemmSchedule};
@@ -136,7 +145,14 @@ fn spgemm_wave_costs(
             let chunks = nnz.div_ceil(schedule.bundle_size as u64).max(1);
             stream_cycles += 2 * chunks + nnz; // header + 1 elem/cycle
             stream_cycles += style.indirection_cycles_per_row();
-            b_words += 2 * chunks + 2 * nnz;
+            b_words += acc_u64(
+                crate::rir::layout::encoded_chain_words(
+                    b.row_cols(r as usize),
+                    schedule.bundle_size,
+                    cfg.encoding,
+                ),
+                "B-row chain words",
+            );
         }
 
         // ---- per-pipeline occupancy ----
@@ -162,7 +178,10 @@ fn spgemm_wave_costs(
             }
             products_total += products;
             merged_total += merged;
-            a_words += acc_u64(2 + 2 * asg.len, "A bundle words");
+            a_words += acc_u64(
+                crate::rir::layout::encoded_data_bundle_words(asg.a_cols(a), cfg.encoding),
+                "A bundle words",
+            );
             let body = if style.pipelined_stages() {
                 // stages overlap; stream rate dominates (products ≤ stream)
                 stream_cycles.max(products) + fill
@@ -179,13 +198,17 @@ fn spgemm_wave_costs(
         // pipeline's post-CAM work (a depth-2 channel cannot retire the
         // wave faster than that, whichever pipe its CAM rode in on); the
         // CAM-load remainder of the critical pipe is the setup a depth-2
-        // channel loads into the spare bank under the previous wave.
+        // channel loads into the spare bank under the previous wave. The
+        // expander fill for a non-raw encoding rides with the frontend
+        // (and so is likewise hidden at depth ≥ 2); at Raw it is zero and
         // `setup + compute == max_pipe` keeps depth 1 bit-identical.
         debug_assert!(max_pipe >= max_body);
+        let expansion =
+            if wave.assignments.is_empty() { 0 } else { cfg.encoding.expansion_cycles() };
         costs.push(WaveCost {
             kind: WaveKind::Compute,
             stream_words: a_words + b_words,
-            setup_cycles: max_pipe - max_body,
+            setup_cycles: max_pipe - max_body + expansion,
             compute_cycles: max_body,
             writeback_words: merged_total * 2, // (col, val)
             dependent_stream: false,
@@ -309,7 +332,14 @@ pub fn simulate_spgemm_batch_with_faults(
                 let chunks = nnz.div_ceil(schedule.bundle_size as u64).max(1);
                 seg_stream += 2 * chunks + nnz; // header + 1 elem/cycle
                 seg_stream += style.indirection_cycles_per_row();
-                seg_words += 2 * chunks + 2 * nnz;
+                seg_words += acc_u64(
+                    crate::rir::layout::encoded_chain_words(
+                        b.row_cols(r as usize),
+                        schedule.bundle_size,
+                        cfg.encoding,
+                    ),
+                    "B-row chain words",
+                );
             }
             seg_streams.push(seg_stream);
             job_stats[seg.job as usize].bytes_read += seg_words * WORD_BYTES as u64;
@@ -354,7 +384,10 @@ pub fn simulate_spgemm_batch_with_faults(
             }
             products_total += products;
             merged_total += merged;
-            let chunk_words = acc_u64(2 + 2 * asg.len, "A bundle words");
+            let chunk_words = acc_u64(
+                crate::rir::layout::encoded_data_bundle_words(asg.a_cols(a), cfg.encoding),
+                "A bundle words",
+            );
             a_words += chunk_words;
             let js = &mut job_stats[ji];
             js.flops += 2 * products;
@@ -370,12 +403,15 @@ pub fn simulate_spgemm_batch_with_faults(
         }
 
         // ---- cost description, exactly the single-job model (same
-        // backend-floor frontend/backend split as `spgemm_wave_costs`) ----
+        // backend-floor frontend/backend split and expander-fill setup
+        // term as `spgemm_wave_costs`) ----
         debug_assert!(max_pipe >= max_body);
+        let expansion =
+            if wave.assignments.is_empty() { 0 } else { cfg.encoding.expansion_cycles() };
         costs.push(WaveCost {
             kind: WaveKind::Compute,
             stream_words: a_words + b_words,
-            setup_cycles: max_pipe - max_body,
+            setup_cycles: max_pipe - max_body + expansion,
             compute_cycles: max_body,
             writeback_words: merged_total * 2,
             dependent_stream: false,
@@ -640,6 +676,45 @@ mod tests {
             rf.job_stats.iter().any(|j| !j.failed),
             "a single dead wave must not take down every tenant"
         );
+    }
+
+    #[test]
+    fn encoded_streams_price_both_operands_and_match_batch_partition() {
+        use crate::rir::layout::StreamEncoding;
+        let a = gen::random_uniform(80, 80, 1200, 51);
+        let b = gen::random_uniform(80, 80, 1200, 52);
+        let base = FpgaConfig::reap32_spgemm();
+        let s = schedule_spgemm(&a, &b, base.pipelines, base.bundle_size);
+        let raw = simulate_spgemm(&a, &b, &s, &base, Style::HandCoded);
+        for enc in [StreamEncoding::Bitmap, StreamEncoding::Fx, StreamEncoding::BitmapFx] {
+            let cfg = FpgaConfig { encoding: enc, ..base.clone() };
+            let r = simulate_spgemm(&a, &b, &s, &cfg, Style::HandCoded);
+            // compression touches only the read side of the ledger
+            assert!(
+                r.stats.bytes_read <= raw.stats.bytes_read,
+                "{enc}: encoded reads must never exceed raw"
+            );
+            assert_eq!(r.stats.bytes_written, raw.stats.bytes_written, "{enc}: writeback raw");
+            assert_eq!(r.stats.flops, raw.stats.flops, "{enc}: same useful work");
+            assert_eq!(r.stats.waves, raw.stats.waves, "{enc}: same schedule");
+            if enc.fx() {
+                // ~15 nnz/row: packed value lanes always beat one word/value
+                assert!(r.stats.bytes_read < raw.stats.bytes_read, "{enc}: fx must shrink");
+            }
+            // the batch path prices streams through the same helpers, so a
+            // single-job batch stays bit-identical at every encoding
+            let jobs = vec![(a.clone(), b.clone())];
+            let bs = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+            let rb = simulate_spgemm_batch(&jobs, &bs, &cfg, Style::HandCoded);
+            let solo = schedule_spgemm(&a, &b, cfg.pipelines, cfg.bundle_size);
+            let rs = simulate_spgemm(&a, &b, &solo, &cfg, Style::HandCoded);
+            assert_eq!(rb.stats, rs.stats, "{enc}: single-job batch == plain sim");
+            assert_eq!(
+                rb.job_stats[0].bytes_read,
+                rb.stats.bytes_read,
+                "{enc}: one tenant owns every encoded byte"
+            );
+        }
     }
 
     #[test]

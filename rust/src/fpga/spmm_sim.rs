@@ -32,7 +32,7 @@
 //! ([`crate::fpga::engine`]), where a depth ≥ 2 DRAM channel prefetches
 //! the next block's panel under the current block's compute.
 
-use crate::rir::layout::dense_panel_words;
+use crate::rir::layout::encoded_dense_panel_words;
 use crate::rir::schedule::SpgemmSchedule;
 use crate::sparse::Csr;
 
@@ -94,15 +94,18 @@ pub fn simulate_spmm(
         // the channel's spare buffer while the current one is in use, so
         // depth-2 designs carry two such panel buffers (the standard
         // double-buffering RAM cost, ~2 × lanes × nrows words, well
-        // inside the Arria-10's 67 Mbit for the suite's sizes).
+        // inside the Arria-10's 67 Mbit for the suite's sizes). The panel
+        // is a real RIR segment, so it is priced at its encoded size under
+        // the negotiated `cfg.encoding` — contiguous lane chains compress
+        // especially well under bitmap index sections.
         costs.push(WaveCost::load(
-            dense_panel_words(a.ncols, kb as usize, cfg.bundle_size) as u64,
+            encoded_dense_panel_words(a.ncols, kb as usize, cfg.bundle_size, cfg.encoding) as u64,
         ));
 
         // replay the wave schedule with kb-wide lanes — the shared
         // accounting the SpMV model runs with kb == 1
         for wave in &schedule.waves {
-            costs.push(row_stream_wave_cost(wave, cfg, style, kb));
+            costs.push(row_stream_wave_cost(a, wave, cfg, style, kb));
         }
     }
 
@@ -226,6 +229,37 @@ mod tests {
         let hand = simulate_spmm(&a, &s, &cfg, Style::HandCoded, 8);
         let raw = simulate_spmm(&a, &s, &cfg, Style::HlsRaw, 8);
         assert!(raw.stats.cycles > hand.stats.cycles);
+    }
+
+    #[test]
+    fn compressed_encodings_win_on_panel_dominated_workloads() {
+        use crate::rir::layout::StreamEncoding;
+        // wide rectangular A: the dense panel dominates the traffic, so
+        // encoded panels translate directly into cycle wins (the
+        // `reap bench compression` headline shape)
+        let a = gen::random_uniform(64, 4800, 512, 23);
+        for base in [FpgaConfig::reap64_spgemm(), FpgaConfig::reap128_spgemm()] {
+            let s = schedule_for(&a, &base);
+            let raw = simulate_spmm(&a, &s, &base, Style::HandCoded, 8);
+            for enc in [StreamEncoding::Bitmap, StreamEncoding::Fx, StreamEncoding::BitmapFx] {
+                let cfg = FpgaConfig { encoding: enc, ..base.clone() };
+                let r = simulate_spmm(&a, &s, &cfg, Style::HandCoded, 8);
+                assert!(
+                    r.stats.bytes_read < raw.stats.bytes_read,
+                    "{} {enc}: bytes must shrink",
+                    base.name
+                );
+                assert!(
+                    r.stats.cycles < raw.stats.cycles,
+                    "{} {enc}: {} !< {}",
+                    base.name,
+                    r.stats.cycles,
+                    raw.stats.cycles
+                );
+                assert_eq!(r.stats.flops, raw.stats.flops, "same useful work");
+                assert_eq!(r.stats.bytes_written, raw.stats.bytes_written, "raw writeback");
+            }
+        }
     }
 
     #[test]

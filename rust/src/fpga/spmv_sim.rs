@@ -7,6 +7,7 @@
 //! adder tree, so the datapath runs at RIR stream rate — the extension
 //! inherits exactly the property the paper engineered for SpGEMM.
 
+use crate::rir::layout::encoded_data_bundle_words;
 use crate::rir::schedule::{SpgemmSchedule, Wave};
 use crate::sparse::Csr;
 
@@ -39,10 +40,12 @@ pub fn simulate_spmv(
     style: Style,
 ) -> SpmvSimResult {
     let mut costs = Vec::with_capacity(schedule.waves.len() + 1);
-    // one-time x load into on-chip RAM (a word per dense element)
+    // one-time x load into on-chip RAM (a word per dense element; the
+    // dense x vector is CPU-resident data, not an RIR stream, so the
+    // negotiated encoding does not apply to it)
     costs.push(WaveCost::load(a.ncols as u64));
     for wave in &schedule.waves {
-        costs.push(row_stream_wave_cost(wave, cfg, style, 1));
+        costs.push(row_stream_wave_cost(a, wave, cfg, style, 1));
     }
     let engine = execute_waves(&costs, cfg);
     let x_load_cycles = engine.item_cycles[0];
@@ -62,7 +65,17 @@ pub fn simulate_spmv(
 /// per-lane MACs); the writeback is `kb` dense values per finished row.
 /// The 2-cycle bundle-header decode is the wave's frontend setup (hidden
 /// by a depth ≥ 2 channel).
+///
+/// The A-row stream is priced at its **encoded** wire size
+/// ([`crate::rir::layout::encoded_data_bundle_words`] per assignment under
+/// `cfg.encoding`), and non-raw encodings add the expander fill latency
+/// ([`StreamEncoding::expansion_cycles`](crate::rir::layout::StreamEncoding::expansion_cycles))
+/// to the wave's setup — the expanders are fully pipelined, so the
+/// element rate (and thus `compute_cycles`) is unchanged. Writeback stays
+/// raw f32 words: compression is negotiated for the input RIR streams
+/// only, so kernel outputs keep full f32 precision.
 pub(crate) fn row_stream_wave_cost(
+    a: &Csr,
     wave: &Wave,
     cfg: &FpgaConfig,
     style: Style,
@@ -87,13 +100,17 @@ pub(crate) fn row_stream_wave_cost(
         elems_total += elems;
         rows_done += u64::from(asg.last_chunk);
     }
-    let in_words: u64 = wave.assignments.iter().map(|asg| (2 + 2 * asg.len) as u64).sum();
-    let setup = if wave.assignments.is_empty() { 0 } else { 2 };
+    let in_words: u64 = wave
+        .assignments
+        .iter()
+        .map(|asg| encoded_data_bundle_words(asg.a_cols(a), cfg.encoding) as u64)
+        .sum();
+    let setup = if wave.assignments.is_empty() { 0 } else { 2 + cfg.encoding.expansion_cycles() };
     WaveCost {
         kind: WaveKind::Compute,
         stream_words: in_words,
         setup_cycles: setup,
-        compute_cycles: max_pipe - setup,
+        compute_cycles: max_pipe.saturating_sub(2),
         writeback_words: rows_done * kb,
         dependent_stream: false,
         occupancy: Occupancy::ActivePipelines(wave.assignments.len() as u64),
@@ -148,5 +165,24 @@ mod tests {
         let r = simulate_spmv(&a, &s, &cfg, Style::HandCoded);
         assert_eq!(r.stats.waves, 0);
         assert_eq!(r.stats.bytes_read, 400);
+    }
+
+    #[test]
+    fn encoded_streams_shrink_reads_but_not_writebacks() {
+        use crate::rir::layout::StreamEncoding;
+        let a = gen::random_uniform(300, 300, 4000, 7);
+        let mut cfg = FpgaConfig::reap32_spgemm();
+        let s = schedule_spgemm(&a, &Csr::new(300, 300), cfg.pipelines, cfg.bundle_size);
+        let raw = simulate_spmv(&a, &s, &cfg, Style::HandCoded);
+        cfg.encoding = StreamEncoding::Fx;
+        let fx = simulate_spmv(&a, &s, &cfg, Style::HandCoded);
+        assert!(fx.stats.bytes_read < raw.stats.bytes_read, "fx packs 2 values per word");
+        assert_eq!(fx.stats.flops, raw.stats.flops, "same useful work");
+        assert_eq!(fx.stats.bytes_written, raw.stats.bytes_written, "writeback stays raw");
+        assert_eq!(fx.stats.waves, raw.stats.waves);
+        // bitmap never loses: scattered random rows fall back to raw form
+        cfg.encoding = StreamEncoding::Bitmap;
+        let bm = simulate_spmv(&a, &s, &cfg, Style::HandCoded);
+        assert!(bm.stats.bytes_read <= raw.stats.bytes_read);
     }
 }

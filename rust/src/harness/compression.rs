@@ -1,0 +1,302 @@
+//! Compressed + mixed-precision RIR streams: bytes-per-nnz and end-to-end
+//! cycle pricing per [`StreamEncoding`] (no paper figure; EXPERIMENTS.md
+//! §Compression documents the methodology).
+//!
+//! The workloads are **bandwidth-bound by construction**: wide rectangular
+//! SpMM (`nrows ≪ ncols`, k = 8 dense right-hand sides) where the dense
+//! panel load dominates the cycle count, so a smaller wire format converts
+//! directly into fewer cycles. For each design point × matrix × encoding
+//! the harness runs [`ReapSpmm`] under the negotiated encoding and reports
+//! simulated input traffic (normalized to bytes per nonzero of A), the
+//! serial (depth-1) and double-buffered (depth-2) channel cycles, and the
+//! worst value error of a **real wire round-trip** of A's RIR stream —
+//! serialized with [`layout::serialize_stream_encoded`], decoded with
+//! [`layout::try_deserialize`], compared element-wise against the f32
+//! reference. Bitmap metadata compression is exact (zero error); the
+//! Q1.15 fixed-point value lanes must stay within the per-bundle bound
+//! [`layout::fx_max_abs_error`] derives.
+//!
+//! The headline CI asserts: on the wide (64/128) designs every compressed
+//! encoding moves strictly fewer DRAM bytes **and** retires in strictly
+//! fewer cycles than raw on *both* channels — bytes are cycles now.
+
+use crate::coordinator::ReapSpmm;
+use crate::fpga::FpgaConfig;
+use crate::rir::bundle::Payload;
+use crate::rir::encode::BundleStream;
+use crate::rir::layout::{self, StreamEncoding};
+use crate::sparse::{gen, Csr, Val};
+use crate::util::table::Table;
+
+use super::report::RunConfig;
+
+/// One (design point × matrix × encoding) pricing row.
+#[derive(Clone, Debug)]
+pub struct CompressionRow {
+    pub config: String,
+    pub matrix: String,
+    /// Encoding token (`raw | bitmap | fx32 | bitmap+fx32`).
+    pub encoding: String,
+    /// Nonzeros of A.
+    pub nnz: usize,
+    /// Simulated DRAM bytes read (A stream + dense panel, encoded).
+    pub bytes_read: u64,
+    /// `bytes_read / nnz` — the normalized traffic metric the
+    /// EXPERIMENTS.md table reports.
+    pub bytes_per_nnz: f64,
+    /// Cycles at the run's configured channel depth.
+    pub cycles: u64,
+    /// Cycles on the serial depth-1 channel.
+    pub cycles_serial: u64,
+    /// Cycles on the double-buffered depth-2 channel.
+    pub cycles_db: u64,
+    /// Frontend cycles depth 2 hid under compute.
+    pub prefetch_hidden: u64,
+    pub fpga_s: f64,
+    pub total_s: f64,
+    /// Max |decoded − reference| over a real wire round-trip of A's RIR
+    /// stream under this encoding (exactly 0 for raw and bitmap).
+    pub max_abs_err: f64,
+    /// The documented worst-case bound for the lossy lanes (max over
+    /// bundles of [`layout::fx_max_abs_error`]; 0 for lossless encodings).
+    pub err_bound: f64,
+}
+
+/// The bandwidth-bound workloads: two wide rectangular matrices whose
+/// dense-panel load dominates the wave pipeline (~8 and ~16 nnz per row
+/// over thousands of columns). `max_rows` caps the row count as usual.
+pub fn workloads(cfg: &RunConfig) -> Vec<(&'static str, Csr)> {
+    let r1 = cfg.max_rows.clamp(16, 64);
+    let r2 = cfg.max_rows.clamp(16, 96);
+    vec![
+        ("wide-8pr", gen::random_uniform(r1, 4800, r1 * 8, cfg.seed ^ 0xC0DE)),
+        ("wide-16pr", gen::random_uniform(r2, 6400, r2 * 16, cfg.seed ^ 0xFACE)),
+    ]
+}
+
+/// Worst value error (and the documented bound) of serializing A's RIR
+/// stream under `enc` and decoding it back — the decoders expand and strip
+/// the compression flags, so the comparison is element-wise against the
+/// original f32 values in bundle order.
+fn stream_roundtrip_err(a: &Csr, bundle_size: usize, enc: StreamEncoding) -> (f64, f64) {
+    let s = BundleStream::from_csr(a, bundle_size);
+    let words = layout::serialize_stream_encoded(&s, enc, false);
+    let decoded = layout::try_deserialize(&words).expect("encoded stream must round-trip");
+    assert_eq!(decoded.len(), s.n_bundles(), "bundle count must survive the wire");
+    let mut err = 0f64;
+    let mut bound = 0f64;
+    for (b, d) in s.iter().zip(&decoded) {
+        if enc.fx() && !b.vals.is_empty() {
+            let scale = b.vals.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            bound = bound.max(layout::fx_max_abs_error(scale));
+        }
+        match &d.payload {
+            Payload::Data { values, .. } => {
+                for (&v, &w) in b.vals.iter().zip(values) {
+                    err = err.max((f64::from(v) - f64::from(w)).abs());
+                }
+            }
+            Payload::Schedule { .. } => {}
+        }
+    }
+    (err, bound)
+}
+
+/// Run the pricing sweep; returns rows plus the rendered table, and writes
+/// `BENCH_compression.json` when output is enabled.
+pub fn run(cfg: &RunConfig) -> (Vec<CompressionRow>, Table) {
+    const K: usize = 8; // = vector_lanes on every preset: one full block
+    let encodings = [
+        StreamEncoding::Raw,
+        StreamEncoding::Bitmap,
+        StreamEncoding::Fx,
+        StreamEncoding::BitmapFx,
+    ];
+    let mut rows = Vec::new();
+    for design in [
+        cfg.design(FpgaConfig::reap32_spgemm()),
+        cfg.design(FpgaConfig::reap64_spgemm()),
+        cfg.design(FpgaConfig::reap128_spgemm()),
+    ] {
+        for (mname, a) in workloads(cfg) {
+            let x: Vec<Val> = (0..a.ncols * K)
+                .map(|i| (((i as u64).wrapping_mul(2654435761) % 31) as f32 - 15.0) * 0.0625)
+                .collect();
+            for enc in encodings {
+                let dp = FpgaConfig { encoding: enc, ..design.clone() };
+                let rep = ReapSpmm::new(dp.clone()).run(&a, &x, K).expect("spmm run");
+                let (max_abs_err, err_bound) = stream_roundtrip_err(&a, dp.bundle_size, enc);
+                rows.push(CompressionRow {
+                    config: design.name.to_string(),
+                    matrix: mname.to_string(),
+                    encoding: enc.to_string(),
+                    nnz: a.nnz(),
+                    bytes_read: rep.fpga_sim.bytes_read,
+                    bytes_per_nnz: rep.fpga_sim.bytes_read as f64 / a.nnz() as f64,
+                    cycles: rep.fpga_sim.cycles,
+                    cycles_serial: rep.fpga_sim_serial.cycles,
+                    cycles_db: rep.fpga_sim_db.cycles,
+                    prefetch_hidden: rep.fpga_sim_db.prefetch_hidden_cycles,
+                    fpga_s: rep.fpga_s,
+                    total_s: rep.total_s,
+                    max_abs_err,
+                    err_bound,
+                });
+            }
+        }
+    }
+    write_bench_json(cfg, &rows);
+
+    let mut table = Table::new(
+        "Compressed RIR streams — encoded wire size priced end-to-end (SpMM, k=8)",
+        &[
+            "config", "matrix", "encoding", "B/nnz", "cycles(d1)", "cycles(d2)", "MB-read",
+            "max|err|",
+        ],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.config.clone(),
+            r.matrix.clone(),
+            r.encoding.clone(),
+            format!("{:.2}", r.bytes_per_nnz),
+            r.cycles_serial.to_string(),
+            r.cycles_db.to_string(),
+            format!("{:.3}", r.bytes_read as f64 / 1e6),
+            format!("{:.1e}", r.max_abs_err),
+        ]);
+    }
+    (rows, table)
+}
+
+/// The compression headline: every encoding obeys its error contract
+/// (lossless encodings exactly zero, fixed-point within the documented
+/// per-bundle bound), and on the wide (64/128) designs every compressed
+/// encoding moves strictly fewer DRAM bytes and costs strictly fewer
+/// cycles than raw on **both** the serial and double-buffered channels.
+pub fn headline_holds(rows: &[CompressionRow]) -> bool {
+    for r in rows {
+        let lossless = r.encoding == "raw" || r.encoding == "bitmap";
+        if lossless && r.max_abs_err != 0.0 {
+            return false;
+        }
+        if !lossless && r.max_abs_err > r.err_bound {
+            return false;
+        }
+    }
+    for raw in rows.iter().filter(|r| r.encoding == "raw" && r.config != "REAP-32") {
+        let wins = rows
+            .iter()
+            .filter(|r| {
+                r.config == raw.config && r.matrix == raw.matrix && r.encoding != "raw"
+            })
+            .all(|r| {
+                r.bytes_read < raw.bytes_read
+                    && r.cycles_serial < raw.cycles_serial
+                    && r.cycles_db < raw.cycles_db
+            });
+        if !wins {
+            return false;
+        }
+    }
+    true
+}
+
+use super::json::{escape, num};
+
+/// Write `BENCH_compression.json`: one record per (design point, matrix,
+/// encoding) alongside the other `BENCH_*.json` trajectory files. The
+/// perf-regression gate sums `cycles_serial` and `cycles_db` across these
+/// records, so a pricing regression in any encoding fails CI.
+fn write_bench_json(cfg: &RunConfig, rows: &[CompressionRow]) {
+    let Some(dir) = &cfg.csv_dir else {
+        return;
+    };
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"workload\": \"compression-{}\", \"config\": \"{}\", \"encoding\": \"{}\", \
+             \"nnz\": {}, \"bytes_read\": {}, \"bytes_per_nnz\": {}, \
+             \"cycles_serial\": {}, \"cycles_db\": {}, \"prefetch_hidden_cycles\": {}, \
+             \"max_abs_err\": {}, \"err_bound\": {}, \"fpga_s\": {}, \"total_s\": {}}}{}\n",
+            escape(&r.matrix),
+            escape(&r.config),
+            escape(&r.encoding),
+            r.nnz,
+            r.bytes_read,
+            num(r.bytes_per_nnz),
+            r.cycles_serial,
+            r.cycles_db,
+            r.prefetch_hidden,
+            num(r.max_abs_err),
+            num(r.err_bound),
+            num(r.fpga_s),
+            num(r.total_s),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    if let Err(e) = std::fs::create_dir_all(dir)
+        .and_then(|()| std::fs::write(dir.join("BENCH_compression.json"), out))
+    {
+        eprintln!("warning: could not write BENCH_compression.json: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn compressed_streams_win_bytes_and_cycles_on_wide_designs() {
+        let mut cfg = RunConfig::quick();
+        let dir = std::env::temp_dir().join(format!("reap-compression-{}", std::process::id()));
+        cfg.csv_dir = Some(dir.clone());
+        let (rows, table) = run(&cfg);
+        assert_eq!(rows.len(), 24); // 3 designs × 2 matrices × 4 encodings
+        assert_eq!(table.len(), 24);
+        assert!(
+            headline_holds(&rows),
+            "compressed encodings must strictly win bytes AND cycles on 64/128: {rows:?}"
+        );
+        for r in &rows {
+            // the wire round-trip error contract, row by row
+            match r.encoding.as_str() {
+                "raw" | "bitmap" => {
+                    assert_eq!(r.max_abs_err, 0.0, "{} {} {}", r.config, r.matrix, r.encoding);
+                    assert_eq!(r.err_bound, 0.0, "{} {} {}", r.config, r.matrix, r.encoding);
+                }
+                _ => {
+                    assert!(r.err_bound > 0.0, "{} {}", r.config, r.matrix);
+                    assert!(
+                        r.max_abs_err <= r.err_bound,
+                        "{} {} {}: {} > bound {}",
+                        r.config,
+                        r.matrix,
+                        r.encoding,
+                        r.max_abs_err,
+                        r.err_bound
+                    );
+                }
+            }
+            // the depth ledger stays exact under every encoding
+            assert_eq!(
+                r.cycles_db + r.prefetch_hidden,
+                r.cycles_serial,
+                "{} {} {}: hidden cycles must equal the depth-1 gap",
+                r.config,
+                r.matrix,
+                r.encoding
+            );
+        }
+        let text = std::fs::read_to_string(dir.join("BENCH_compression.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 24);
+        assert!(arr[0].get("bytes_per_nnz").unwrap().as_f64().is_some());
+        assert!(arr[0].get("cycles_serial").unwrap().as_usize().is_some());
+        assert!(arr[0].get("cycles_db").unwrap().as_usize().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

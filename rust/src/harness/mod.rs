@@ -17,8 +17,10 @@
 //! | [`batch`] | multi-tenant batch throughput (no paper figure) |
 //! | [`spmm`] | SpMM multi-vector vs k serial SpMVs (no paper figure) |
 //! | [`reliability`] | checksummed-stream fault sweep (no paper figure) |
+//! | [`compression`] | encoded-stream pricing: bytes-per-nnz vs cycles (no paper figure) |
 
 pub mod batch;
+pub mod compression;
 pub mod fig10;
 pub mod fig11;
 pub mod fig6;

@@ -7,8 +7,9 @@
 //!                scale-up likewise.
 //! * `cholesky` — run REAP sparse Cholesky likewise.
 //! * `bench`    — regenerate the paper's tables/figures plus the batch,
-//!                SpMM and reliability studies (`table1 table2 fig6 fig7
-//!                fig8 fig9 fig10 fig11 hls batch spmm reliability all`).
+//!                SpMM, reliability and stream-compression studies
+//!                (`table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls
+//!                batch spmm reliability compression all`).
 //! * `gen-matrix` — write a synthetic matrix as Matrix-Market.
 //! * `info`     — platform, artifact and design-point status.
 //!
@@ -119,11 +120,31 @@ fn apply_dram_depth(args: &Args, mut cfg: FpgaConfig) -> Result<FpgaConfig> {
     Ok(cfg)
 }
 
+fn encoding_opt() -> OptSpec {
+    OptSpec {
+        name: "encoding",
+        takes_value: true,
+        help: "RIR stream encoding: raw|bitmap|fx32|bitmap+fx32 (default raw)",
+    }
+}
+
+/// Apply `--encoding` to a design point (the negotiated per-stream wire
+/// format the cycle models price; Cholesky ignores it — its RA/RL streams
+/// are baked raw at analyze time).
+fn apply_encoding(args: &Args, mut cfg: FpgaConfig) -> Result<FpgaConfig> {
+    if let Some(tok) = args.get("encoding") {
+        cfg.encoding = reap::rir::layout::StreamEncoding::parse(tok)
+            .with_context(|| format!("unknown encoding `{tok}` (raw|bitmap|fx32|bitmap+fx32)"))?;
+    }
+    Ok(cfg)
+}
+
 fn cmd_spgemm(argv: Vec<String>) -> Result<()> {
     let mut specs = matrix_opts();
     specs.extend([
         OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
         dram_depth_opt(),
+        encoding_opt(),
         OptSpec { name: "xla", takes_value: false, help: "numerics via AOT XLA artifacts" },
         OptSpec { name: "verify", takes_value: false, help: "check vs CPU baseline" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
@@ -134,7 +155,10 @@ fn cmd_spgemm(argv: Vec<String>) -> Result<()> {
         return Ok(());
     }
     let a = load_matrix(&args)?;
-    let cfg = apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?;
+    let cfg = apply_encoding(
+        &args,
+        apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?,
+    )?;
     println!(
         "matrix: {}x{}, nnz {}, density {:.5}%",
         a.nrows,
@@ -142,6 +166,9 @@ fn cmd_spgemm(argv: Vec<String>) -> Result<()> {
         a.nnz(),
         a.density() * 100.0
     );
+    if !cfg.encoding.is_raw() {
+        println!("stream encoding: {}", cfg.encoding);
+    }
 
     let rt;
     let coord = if args.flag("xla") {
@@ -190,6 +217,7 @@ fn cmd_spmv(argv: Vec<String>) -> Result<()> {
     specs.extend([
         OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
         dram_depth_opt(),
+        encoding_opt(),
         OptSpec { name: "xla", takes_value: false, help: "numerics via AOT XLA artifacts" },
         OptSpec { name: "verify", takes_value: false, help: "check vs CPU baseline" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
@@ -201,11 +229,17 @@ fn cmd_spmv(argv: Vec<String>) -> Result<()> {
     }
     let a = load_matrix(&args)?;
     let x: Vec<f32> = (0..a.ncols).map(|i| ((i % 17) as f32 - 8.0) * 0.125).collect();
-    let cfg = apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?;
+    let cfg = apply_encoding(
+        &args,
+        apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?,
+    )?;
     println!(
         "matrix: {}x{}, nnz {}, density {:.5}%",
         a.nrows, a.ncols, a.nnz(), a.density() * 100.0
     );
+    if !cfg.encoding.is_raw() {
+        println!("stream encoding: {}", cfg.encoding);
+    }
     let rt;
     let coord = if args.flag("xla") {
         rt = XlaRuntime::load_default().context("loading artifacts (run `make artifacts`)")?;
@@ -241,6 +275,7 @@ fn cmd_spmm(argv: Vec<String>) -> Result<()> {
         OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
         OptSpec { name: "k", takes_value: true, help: "dense right-hand-side columns (default 8)" },
         dram_depth_opt(),
+        encoding_opt(),
         OptSpec { name: "verify", takes_value: false, help: "check vs CPU baseline" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
     ]);
@@ -252,11 +287,17 @@ fn cmd_spmm(argv: Vec<String>) -> Result<()> {
     let a = load_matrix(&args)?;
     let k = args.get_parsed::<usize>("k", 8)?;
     let x: Vec<f32> = (0..a.ncols * k).map(|i| ((i % 17) as f32 - 8.0) * 0.125).collect();
-    let cfg = apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?;
+    let cfg = apply_encoding(
+        &args,
+        apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?,
+    )?;
     println!(
         "matrix: {}x{}, nnz {}, density {:.5}% | panel: {} columns",
         a.nrows, a.ncols, a.nnz(), a.density() * 100.0, k
     );
+    if !cfg.encoding.is_raw() {
+        println!("stream encoding: {}", cfg.encoding);
+    }
     let rep = ReapSpmm::new(cfg.clone()).run(&a, &x, k)?;
     println!(
         "{}: cpu preprocess {:.3} ms (once) | fpga(sim) {:.3} ms ({} cycles, {} blocks) | total {:.3} ms | {:.2} sim-GFLOP/s",
@@ -284,6 +325,7 @@ fn cmd_cholesky(argv: Vec<String>) -> Result<()> {
     specs.extend([
         OptSpec { name: "variant", takes_value: true, help: "reap32|reap64" },
         dram_depth_opt(),
+        encoding_opt(),
         OptSpec { name: "xla", takes_value: false, help: "numerics via AOT XLA artifacts" },
         OptSpec { name: "verify", takes_value: false, help: "check LL^T ~= A" },
         OptSpec { name: "help", takes_value: false, help: "show usage" },
@@ -296,14 +338,23 @@ fn cmd_cholesky(argv: Vec<String>) -> Result<()> {
     let base = load_matrix(&args)?;
     let spd = ops::make_spd(&base);
     let lower = spd.lower_triangle();
-    let cfg = apply_dram_depth(
+    let cfg = apply_encoding(
         &args,
-        match args.get("variant").unwrap_or("reap32") {
-            "reap32" => FpgaConfig::reap32_cholesky(),
-            "reap64" => FpgaConfig::reap64_cholesky(),
-            other => bail!("unknown variant `{other}` (reap32|reap64)"),
-        },
+        apply_dram_depth(
+            &args,
+            match args.get("variant").unwrap_or("reap32") {
+                "reap32" => FpgaConfig::reap32_cholesky(),
+                "reap64" => FpgaConfig::reap64_cholesky(),
+                other => bail!("unknown variant `{other}` (reap32|reap64)"),
+            },
+        )?,
     )?;
+    if !cfg.encoding.is_raw() {
+        println!(
+            "note: Cholesky streams are baked raw at analyze time; --encoding {} is ignored",
+            cfg.encoding
+        );
+    }
     println!(
         "SPD matrix: {}x{}, lower nnz {}",
         spd.nrows,
@@ -358,7 +409,7 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") || args.positionals().is_empty() {
         print!(
-            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch spmm reliability all\n",
+            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch spmm reliability compression all\n",
             usage("bench <target>", "regenerate a paper table/figure", &specs)
         );
         return Ok(());
@@ -486,10 +537,19 @@ fn run_bench_target(target: &str, cfg: &RunConfig) -> Result<()> {
             );
             cfg.dump_csv("reliability", &t)?;
         }
+        "compression" => {
+            let (rows, t) = harness::compression::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "compressed streams: fewer bytes AND fewer cycles on 64/128, error within bound -> headline {}",
+                if harness::compression::headline_holds(&rows) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("compression", &t)?;
+        }
         "all" => {
             for t in [
                 "table1", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "hls",
-                "batch", "spmm", "reliability",
+                "batch", "spmm", "reliability", "compression",
             ] {
                 run_bench_target(t, cfg)?;
                 println!();

@@ -33,6 +33,21 @@ impl BundleFlags {
     /// before committing the bundle to a CAM; a mismatch aborts the wave
     /// and triggers a re-fetch (ARCHITECTURE.md §3.3/§7).
     pub const CHECKSUM: u8 = 0b0001_0000;
+    /// Bitmap-indexed bundle (SMASH-style hierarchical bitmap): the
+    /// distinct-feature indices are carried as a two-level bitmap section
+    /// instead of explicit index words, chosen per bundle by exact byte
+    /// accounting (`rir::layout::bitmap_index_words`). Setting either
+    /// compression flag switches the payload from interleaved
+    /// `(index, value)` pairs to an index section followed by a value
+    /// section (ARCHITECTURE.md §3.4). Never set on metadata-only bundles.
+    pub const BITMAP: u8 = 0b0010_0000;
+    /// Fixed-point value lane: the bundle's values are quantized to Q1.15
+    /// against a per-bundle f32 scale word and packed two per 32-bit word
+    /// (`rir::layout::fx_value_words`; worst-case error bound in
+    /// `rir::layout::fx_max_abs_error`). Selected per stream; like
+    /// [`Self::BITMAP`] it implies the sectioned payload layout. Never set
+    /// on metadata-only bundles.
+    pub const FIXED_POINT: u8 = 0b0100_0000;
 
     pub fn end_of_row(self) -> bool {
         self.0 & Self::END_OF_ROW != 0
@@ -49,8 +64,24 @@ impl BundleFlags {
     pub fn checksum(self) -> bool {
         self.0 & Self::CHECKSUM != 0
     }
+    pub fn bitmap(self) -> bool {
+        self.0 & Self::BITMAP != 0
+    }
+    pub fn fixed_point(self) -> bool {
+        self.0 & Self::FIXED_POINT != 0
+    }
+    /// True when either compression flag selects the sectioned payload
+    /// layout (index section then value section) over interleaved pairs.
+    pub fn sectioned(self) -> bool {
+        self.bitmap() || self.fixed_point()
+    }
     pub fn with(self, bit: u8) -> Self {
         BundleFlags(self.0 | bit)
+    }
+    /// Copy with `bit` cleared (decoders strip compression flags after
+    /// expanding the payload back to raw pairs).
+    pub fn without(self, bit: u8) -> Self {
+        BundleFlags(self.0 & !bit)
     }
 }
 
@@ -152,8 +183,19 @@ mod tests {
         assert!(!f.metadata_only());
         assert!(!f.dense_panel());
         assert!(!f.checksum());
+        assert!(!f.bitmap());
+        assert!(!f.fixed_point());
+        assert!(!f.sectioned());
         assert!(f.with(BundleFlags::DENSE_PANEL).dense_panel());
         assert!(f.with(BundleFlags::CHECKSUM).checksum());
+        assert!(f.with(BundleFlags::BITMAP).bitmap());
+        assert!(f.with(BundleFlags::BITMAP).sectioned());
+        assert!(f.with(BundleFlags::FIXED_POINT).fixed_point());
+        assert!(f.with(BundleFlags::FIXED_POINT).sectioned());
+        assert!(!f.with(BundleFlags::BITMAP).without(BundleFlags::BITMAP).bitmap());
+        let both = f.with(BundleFlags::BITMAP).with(BundleFlags::FIXED_POINT);
+        assert!(both.without(BundleFlags::BITMAP).fixed_point());
+        assert!(both.without(BundleFlags::BITMAP).end_of_row());
     }
 
     #[test]

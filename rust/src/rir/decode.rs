@@ -26,7 +26,7 @@ use crate::sparse::{Csr, Idx, Val};
 use super::bundle::{Bundle, BundleFlags, Payload};
 use super::encode::BundleStream;
 use super::error::RirError;
-use super::layout::crc32_words;
+use super::layout;
 
 /// Reassemble a CSR matrix from a bundle stream produced by
 /// [`super::encode::csr_to_bundles`].
@@ -180,7 +180,7 @@ pub fn try_words_to_csr(
             continue;
         }
         asm.begin_bundle(b.shared)?;
-        for pair in b.payload.chunks_exact(2) {
+        for pair in b.payload.pairs().chunks_exact(2) {
             asm.elem(pair[0], f32::from_bits(pair[1]))?;
         }
         asm.end_bundle(b.shared, b.flags)?;
@@ -211,7 +211,7 @@ pub fn try_words_segment_to_csr(
             continue;
         }
         asm.begin_bundle(b.shared)?;
-        for pair in b.payload.chunks_exact(2) {
+        for pair in b.payload.pairs().chunks_exact(2) {
             asm.elem(pair[0], f32::from_bits(pair[1]))?;
         }
         asm.end_bundle(b.shared, b.flags)?;
@@ -245,7 +245,7 @@ pub fn try_words_panel_to_dense(
             return Err(RirError::PanelZeroWidthNonEmpty);
         };
         asm.begin_bundle(b.index, b.shared, b.flags)?;
-        for pair in b.payload.chunks_exact(2) {
+        for pair in b.payload.pairs().chunks_exact(2) {
             asm.lane(pair[0], f32::from_bits(pair[1]))?;
         }
         asm.end_bundle(b.flags)?;
@@ -259,20 +259,45 @@ pub fn try_words_panel_to_dense(
     }
 }
 
-/// One bundle as it appears on the wire: decoded header fields plus the
-/// raw payload words (interleaved `(distinct, value-bits)` pairs for data
-/// bundles, `(row, start, end)` triples for schedule bundles). The CRC32
-/// word, when present, has already been verified and is not included.
+/// Payload of a wire bundle after extent/CRC validation: raw bundles
+/// borrow their words straight from the stream; sectioned (BITMAP /
+/// FIXED_POINT) bundles own the expanded pair words the hardware expander
+/// would emit.
+enum WirePayload<'a> {
+    Raw(&'a [u32]),
+    Expanded(Vec<u32>),
+}
+
+impl WirePayload<'_> {
+    /// The payload as interleaved `(distinct, value-bits)` pair words
+    /// (`(row, start, end)` triples for schedule bundles, which callers
+    /// skip before reading pairs).
+    fn pairs(&self) -> &[u32] {
+        match self {
+            WirePayload::Raw(w) => w,
+            WirePayload::Expanded(v) => v,
+        }
+    }
+}
+
+/// One bundle as it appears on the wire: decoded header fields plus its
+/// payload, expanded back to raw pairs when a compressed encoding was
+/// negotiated (the compression flags are stripped alongside, mirroring
+/// [`layout::try_deserialize`]). The CRC32 word, when present, has
+/// already been verified and is not included.
 struct WireBundle<'a> {
     index: usize,
     shared: Idx,
     flags: BundleFlags,
-    payload: &'a [u32],
+    payload: WirePayload<'a>,
 }
 
 /// Walks a serialized word stream bundle by bundle, validating payload
 /// extents and per-bundle checksums before handing any payload out; never
 /// indexes past the slice, so arbitrary byte garbage is safe to feed in.
+/// Sizing, CRC verification and sectioned-payload expansion all go through
+/// the shared [`layout`] helpers, so this walker cannot drift from
+/// [`layout::try_deserialize`].
 struct WireCursor<'a> {
     words: &'a [u32],
     p: usize,
@@ -289,37 +314,27 @@ impl<'a> WireCursor<'a> {
         if self.p >= self.words.len() {
             return None;
         }
-        if self.p + 2 > self.words.len() {
-            return Some(Err(RirError::TruncatedHeader { word: self.p }));
-        }
-        let meta = self.words[self.p];
-        let shared = self.words[self.p + 1];
-        let count = (meta >> 8) as usize;
-        let flags = BundleFlags((meta & 0xff) as u8);
-        let payload_words = if flags.metadata_only() { 3 * count } else { 2 * count };
-        let need = payload_words + usize::from(flags.checksum());
-        let have = self.words.len() - (self.p + 2);
-        if need > have {
-            return Some(Err(RirError::TruncatedPayload { bundle: self.index, need, have }));
-        }
-        if flags.checksum() {
-            let stored = self.words[self.p + 2 + payload_words];
-            let computed = crc32_words(&self.words[self.p..self.p + 2 + payload_words]);
-            if stored != computed {
-                return Some(Err(RirError::ChecksumMismatch {
-                    bundle: self.index,
-                    stored,
-                    computed,
-                }));
-            }
-        }
-        let b = WireBundle {
-            index: self.index,
-            shared,
-            flags,
-            payload: &self.words[self.p + 2..self.p + 2 + payload_words],
+        let ext = match layout::bundle_extent(self.words, self.p, self.index) {
+            Ok(ext) => ext,
+            Err(e) => return Some(Err(e)),
         };
-        self.p += 2 + need;
+        if let Err(e) = layout::verify_bundle_crc(self.words, self.p, &ext, self.index) {
+            return Some(Err(e));
+        }
+        let raw = &self.words[self.p + 2..self.p + 2 + ext.payload_words];
+        let (payload, flags) = if !ext.flags.metadata_only() && ext.flags.sectioned() {
+            match layout::expand_sectioned_payload(raw, ext.count, ext.flags, self.index) {
+                Ok(pairs) => (
+                    WirePayload::Expanded(pairs),
+                    ext.flags.without(BundleFlags::BITMAP).without(BundleFlags::FIXED_POINT),
+                ),
+                Err(e) => return Some(Err(e)),
+            }
+        } else {
+            (WirePayload::Raw(raw), ext.flags)
+        };
+        let b = WireBundle { index: self.index, shared: ext.shared, flags, payload };
+        self.p += ext.total_words;
         self.index += 1;
         Some(Ok(b))
     }
@@ -728,5 +743,60 @@ mod tests {
             try_words_to_csr(&words[..words.len() - 1], m.nrows, m.ncols),
             Err(RirError::TruncatedPayload { .. })
         ));
+    }
+
+    #[test]
+    fn words_decoders_handle_compressed_encodings() {
+        use crate::rir::layout::{fx_max_abs_error, serialize_stream_encoded, StreamEncoding};
+        let m = gen::power_law(20, 300, 51);
+        let s = BundleStream::from_csr(&m, 8);
+        for ck in [false, true] {
+            // bitmap is lossless: the decoded CSR is bit-identical
+            let words = serialize_stream_encoded(&s, StreamEncoding::Bitmap, ck);
+            assert_eq!(try_words_to_csr(&words, m.nrows, m.ncols).unwrap(), m, "ck {ck}");
+            // fixed point: same pattern, values within the documented
+            // bound (every bundle's scale ≤ the global max |v|, so the
+            // global bound is conservative)
+            let words = serialize_stream_encoded(&s, StreamEncoding::BitmapFx, ck);
+            let back = try_words_to_csr(&words, m.nrows, m.ncols).unwrap();
+            assert_eq!(back.row_ptr, m.row_ptr, "ck {ck}");
+            assert_eq!(back.cols, m.cols, "ck {ck}");
+            let bound = fx_max_abs_error(m.vals.iter().fold(0f32, |mx, v| mx.max(v.abs())));
+            for (&v, &vhat) in m.vals.iter().zip(&back.vals) {
+                let err = (v as f64 - vhat as f64).abs();
+                assert!(err <= bound, "ck {ck}: err {err} > bound {bound}");
+            }
+            // truncating inside a compressed bundle errors, never panics
+            for cut in 0..words.len() {
+                let _ = try_words_to_csr(&words[..cut], m.nrows, m.ncols);
+            }
+        }
+    }
+
+    #[test]
+    fn words_segment_and_panel_decode_compressed_streams() {
+        use crate::rir::layout::{serialize_stream_encoded, StreamEncoding};
+        // multi-job segment over a compressed wire form
+        let m0 = gen::power_law(15, 150, 53);
+        let m1 = gen::random_uniform(7, 12, 40, 54);
+        let mut s = BundleStream::new();
+        let bounds = s.encode_csr_jobs(&[&m0, &m1], 8);
+        let words = serialize_stream_encoded(&s, StreamEncoding::Bitmap, true);
+        for (j, m) in [&m0, &m1].iter().enumerate() {
+            let back = try_words_segment_to_csr(&words, bounds[j], bounds[j + 1], m.nrows, m.ncols)
+                .unwrap();
+            assert_eq!(&back, *m, "job {j}");
+        }
+        // dense panel: contiguous lane chains compress under bitmaps and
+        // decode back losslessly; the sparse decoder still skips them
+        let mp = gen::power_law(10, 100, 55);
+        let k = 8usize;
+        let x: Vec<f32> = (0..mp.ncols * k).map(|i| (i as f32 * 0.2).sin()).collect();
+        let mut sp = BundleStream::new();
+        let boundary = sp.encode_csr_with_panel(&mp, &x, k, 16);
+        let pw = serialize_stream_encoded(&sp, StreamEncoding::Bitmap, true);
+        let back = try_words_panel_to_dense(&pw, boundary, sp.n_bundles(), mp.ncols, k).unwrap();
+        assert_eq!(back, x, "bitmap lanes are lossless");
+        assert_eq!(try_words_to_csr(&pw, mp.nrows, mp.ncols).unwrap(), mp);
     }
 }

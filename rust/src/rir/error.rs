@@ -54,6 +54,11 @@ pub enum RirError {
     PanelRowCount { rows: usize, nrows: usize },
     /// Non-empty segment decoded as a zero-width (`k == 0`) panel.
     PanelZeroWidthNonEmpty,
+    /// A bitmap index section's set L1 bits disagree with the bundle
+    /// header's declared element count.
+    BitmapCountMismatch { bundle: usize, declared: usize, decoded: usize },
+    /// A bitmap index section reconstructs an index beyond `u32::MAX`.
+    BitmapIndexOverflow { bundle: usize },
     /// The assembled matrix failed CSR validation.
     InvalidCsr(String),
 }
@@ -114,6 +119,13 @@ impl fmt::Display for RirError {
             RirError::PanelZeroWidthNonEmpty => {
                 write!(f, "zero-width panel cannot carry bundles")
             }
+            RirError::BitmapCountMismatch { bundle, declared, decoded } => write!(
+                f,
+                "bitmap section of bundle {bundle} decodes {decoded} indices, header declares {declared}"
+            ),
+            RirError::BitmapIndexOverflow { bundle } => {
+                write!(f, "bitmap section of bundle {bundle} reconstructs an index beyond u32")
+            }
             RirError::InvalidCsr(why) => write!(f, "assembled CSR failed validation: {why}"),
         }
     }
@@ -136,6 +148,14 @@ mod tests {
         assert_eq!(
             RirError::TruncatedHeader { word: 9 }.to_string(),
             "truncated bundle header at word 9"
+        );
+        assert_eq!(
+            RirError::BitmapCountMismatch { bundle: 2, declared: 5, decoded: 4 }.to_string(),
+            "bitmap section of bundle 2 decodes 4 indices, header declares 5"
+        );
+        assert_eq!(
+            RirError::BitmapIndexOverflow { bundle: 7 }.to_string(),
+            "bitmap section of bundle 7 reconstructs an index beyond u32"
         );
     }
 }

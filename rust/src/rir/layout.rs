@@ -27,6 +27,79 @@ use super::error::RirError;
 /// Bytes per stream word (the design streams 32-bit index + 32-bit f32).
 pub const WORD_BYTES: usize = 4;
 
+/// Negotiated per-stream RIR encoding (`--encoding`, ARCHITECTURE.md §3.4).
+///
+/// * `Raw` — the Fig-3(d) interleaved `(index, value)` pair layout,
+///   bit-identical to every pre-compression stream.
+/// * `Bitmap` — SMASH-style two-level bitmap index sections, chosen **per
+///   bundle** by exact byte accounting ([`bitmap_index_words`]); bundles
+///   whose pattern does not compress stay raw, so the encoding is always
+///   lossless and never larger than necessary.
+/// * `Fx` — Q1.15 fixed-point value lanes packing two values per word
+///   against a per-bundle scale word ([`fx_value_words`]), selected per
+///   stream; lossy within the bound of [`fx_max_abs_error`].
+/// * `BitmapFx` — both.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StreamEncoding {
+    #[default]
+    Raw,
+    Bitmap,
+    Fx,
+    BitmapFx,
+}
+
+impl StreamEncoding {
+    /// True when bitmap index sections are negotiated for this stream.
+    pub fn bitmap(self) -> bool {
+        matches!(self, StreamEncoding::Bitmap | StreamEncoding::BitmapFx)
+    }
+
+    /// True when fixed-point value lanes are negotiated for this stream.
+    pub fn fx(self) -> bool {
+        matches!(self, StreamEncoding::Fx | StreamEncoding::BitmapFx)
+    }
+
+    /// True for the uncompressed baseline.
+    pub fn is_raw(self) -> bool {
+        self == StreamEncoding::Raw
+    }
+
+    /// Parse a CLI token (`raw | bitmap | fx32 | bitmap+fx32`).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "raw" => StreamEncoding::Raw,
+            "bitmap" => StreamEncoding::Bitmap,
+            "fx32" => StreamEncoding::Fx,
+            "bitmap+fx32" => StreamEncoding::BitmapFx,
+            _ => return None,
+        })
+    }
+
+    /// Per-wave frontend fill latency of the hardware expanders, in cycles.
+    ///
+    /// Each negotiated compression stage (bitmap expander, fixed-point
+    /// de-quantizer) sits as one pipelined stage between the DRAM stream
+    /// buffer and the CAM/panel path; being fully pipelined it costs only
+    /// its fill latency — charged once per wave to `setup_cycles`, exactly
+    /// like the CAM-load setup it extends, so at buffer depth ≥ 2 it hides
+    /// under the previous wave's compute. Raw streams pay nothing and stay
+    /// bit-identical to the pre-compression model.
+    pub fn expansion_cycles(self) -> u64 {
+        2 * u64::from(self.bitmap()) + 2 * u64::from(self.fx())
+    }
+}
+
+impl std::fmt::Display for StreamEncoding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            StreamEncoding::Raw => "raw",
+            StreamEncoding::Bitmap => "bitmap",
+            StreamEncoding::Fx => "fx32",
+            StreamEncoding::BitmapFx => "bitmap+fx32",
+        })
+    }
+}
+
 /// IEEE 802.3 CRC32 lookup table (reflected polynomial `0xEDB88320`).
 static CRC32_TABLE: [u32; 256] = crc32_table();
 
@@ -225,6 +298,272 @@ pub fn serialize_stream_checksummed(s: &super::encode::BundleStream) -> Vec<u32>
     words
 }
 
+// ---------------------------------------------------------------------------
+// Compressed encodings (ARCHITECTURE.md §3.4): bitmap index sections and
+// fixed-point value lanes. When either compression flag is set on a data
+// bundle, the interleaved pair payload is replaced by an **index section**
+// followed by a **value section**; the CHECKSUM word (when present) still
+// covers every preceding word of the encoded bundle.
+// ---------------------------------------------------------------------------
+
+/// Width in distinct features of one L1 bitmap word (one bit per feature).
+const BITMAP_L1_SPAN: usize = 32;
+/// Width in distinct features of one L0 bitmap *bit* — each L0 bit flags a
+/// 32-feature block, so one L0 word covers `32 × 32 = 1024` features.
+const BITMAP_L0_SPAN: usize = 32 * BITMAP_L1_SPAN;
+
+/// Words of the two-level bitmap index section for `cols`, or `None` when
+/// the section cannot represent them (empty, not strictly ascending, or a
+/// span exceeding `u32::MAX` features).
+///
+/// Layout: `base` word (first index), `span` word (`last − first + 1`),
+/// `ceil(span / 1024)` L0 words (bit `t` of the L0 sequence flags the
+/// 32-feature block `[base + 32t, base + 32t + 32)` as occupied), then one
+/// L1 word per **set** L0 bit in ascending block order (bit `o` of block
+/// `t`'s L1 word flags index `base + 32t + o` as present). Cost is
+/// therefore `2 + ceil(span/1024) + (#occupied 32-blocks)` words; the
+/// encoder picks the bitmap form per bundle iff this is strictly below the
+/// `count` raw index words it replaces.
+pub fn bitmap_index_words(cols: &[Idx]) -> Option<usize> {
+    let (&first, &last) = (cols.first()?, cols.last()?);
+    if !cols.windows(2).all(|w| w[0] < w[1]) {
+        return None;
+    }
+    let span = last as u64 - first as u64 + 1;
+    if span > u32::MAX as u64 {
+        return None;
+    }
+    let n_l0 = (span as usize).div_ceil(BITMAP_L0_SPAN);
+    let mut blocks = 0usize;
+    let mut prev = usize::MAX;
+    for &c in cols {
+        let t = ((c - first) as usize) / BITMAP_L1_SPAN;
+        if t != prev {
+            blocks += 1;
+            prev = t;
+        }
+    }
+    Some(2 + n_l0 + blocks)
+}
+
+/// The bitmap index words the encoder actually picks for this bundle under
+/// `enc`: `Some` iff bitmaps are negotiated **and** strictly cheaper than
+/// the `count` raw index words (exact per-bundle byte accounting).
+fn chosen_bitmap_words(cols: &[Idx], enc: StreamEncoding) -> Option<usize> {
+    if !enc.bitmap() {
+        return None;
+    }
+    bitmap_index_words(cols).filter(|&w| w < cols.len())
+}
+
+/// Append the bitmap index section for `cols` (caller guarantees
+/// [`bitmap_index_words`] is `Some`).
+fn write_bitmap_section(cols: &[Idx], out: &mut Vec<u32>) {
+    let first = cols[0];
+    let span = (*cols.last().unwrap() as u64 - first as u64 + 1) as u32;
+    out.push(first);
+    out.push(span);
+    let n_l0 = (span as usize).div_ceil(BITMAP_L0_SPAN);
+    let l0_start = out.len();
+    out.resize(l0_start + n_l0, 0);
+    let mut i = 0usize;
+    while i < cols.len() {
+        let t = ((cols[i] - first) as usize) / BITMAP_L1_SPAN;
+        out[l0_start + t / 32] |= 1 << (t % 32);
+        let mut l1 = 0u32;
+        while i < cols.len() && ((cols[i] - first) as usize) / BITMAP_L1_SPAN == t {
+            l1 |= 1 << (((cols[i] - first) as usize) % BITMAP_L1_SPAN);
+            i += 1;
+        }
+        out.push(l1);
+    }
+}
+
+/// Words of the fixed-point value section for a `count`-element bundle:
+/// one f32 scale word plus `ceil(count / 2)` packed Q1.15 words (empty
+/// bundles carry no section at all).
+pub fn fx_value_words(count: usize) -> usize {
+    if count == 0 {
+        0
+    } else {
+        1 + count.div_ceil(2)
+    }
+}
+
+/// Worst-case absolute error of the Q1.15 fixed-point value lane against
+/// the original f32 values, for a bundle whose scale word is `scale`.
+///
+/// Derivation: the encoder sets `scale = max|v|` over the bundle and
+/// stores `q = round(v / scale · 32767)` (so `|q| ≤ 32767` always holds
+/// and ±scale round-trips exactly); the decoder reconstructs
+/// `v̂ = f32(q · scale / 32767)`. Rounding `q` costs at most half a
+/// quantization step, `scale / (2 · 32767) = scale / 65534`; the final
+/// f32 cast adds at most one half-ulp, ≤ `2⁻²⁴ · scale` since
+/// `|v̂| ≤ scale`. (The intermediate f64 arithmetic contributes ~`2⁻⁵³`
+/// relative — absorbed many times over by the `2⁻²⁴` term.) The bound
+/// applies to finite inputs; a zero scale (all-zero bundle) decodes
+/// exactly.
+pub fn fx_max_abs_error(scale: f32) -> f64 {
+    scale.abs() as f64 * (1.0 / 65534.0 + (2f64).powi(-24))
+}
+
+/// Quantize one value against a bundle scale (Q1.15, two's complement).
+fn fx_quantize(v: Val, scale: f32) -> u16 {
+    if scale == 0.0 {
+        return 0;
+    }
+    let q = ((v as f64 / scale as f64) * 32767.0).round() as i32;
+    (q.clamp(-32767, 32767) as i16) as u16
+}
+
+/// Dequantize one Q1.15 half-word against a bundle scale.
+fn fx_dequantize(half: u16, scale: f32) -> Val {
+    ((half as i16) as f64 * scale as f64 / 32767.0) as f32
+}
+
+/// Append the fixed-point value section for `vals` (non-empty): scale word
+/// then packed pairs, even-index value in the low half-word, odd-index in
+/// the high, odd trailing count leaving the high half zero.
+fn write_fx_section(vals: &[Val], out: &mut Vec<u32>) {
+    let scale = vals.iter().fold(0f32, |m, v| m.max(v.abs()));
+    debug_assert!(scale.is_finite(), "fixed-point lanes require finite values");
+    out.push(scale.to_bits());
+    for pair in vals.chunks(2) {
+        let lo = fx_quantize(pair[0], scale) as u32;
+        let hi = if pair.len() == 2 { fx_quantize(pair[1], scale) as u32 } else { 0 };
+        out.push(lo | (hi << 16));
+    }
+}
+
+/// Header + payload words of one **non-checksummed** data bundle under
+/// `enc`, from its actual distinct indices — the single source of truth
+/// the simulators price streams with. Reduces exactly to `2 + 2·count`
+/// (the raw interleaved layout) at [`StreamEncoding::Raw`], and whenever
+/// neither compression form engages (no bitmap win, empty bundle).
+pub fn encoded_data_bundle_words(cols: &[Idx], enc: StreamEncoding) -> usize {
+    let c = cols.len();
+    let bm = chosen_bitmap_words(cols, enc);
+    let fx = enc.fx() && c > 0;
+    if bm.is_none() && !fx {
+        return 2 + 2 * c;
+    }
+    2 + bm.unwrap_or(c) + if fx { fx_value_words(c) } else { c }
+}
+
+/// Words of one bundle chain (a row/column split into `bundle_size`
+/// chunks) under `enc`. An empty chain still emits one empty end-of-row
+/// bundle (2 words), matching every streaming encoder. At
+/// [`StreamEncoding::Raw`] this is exactly
+/// `2·ceil(len/bundle_size).max(1) + 2·len` — the formula the simulators
+/// charged before compression existed.
+pub fn encoded_chain_words(cols: &[Idx], bundle_size: usize, enc: StreamEncoding) -> usize {
+    assert!(bundle_size > 0, "bundle_size must be positive");
+    if cols.is_empty() {
+        return 2;
+    }
+    cols.chunks(bundle_size).map(|ch| encoded_data_bundle_words(ch, enc)).sum()
+}
+
+/// Words a [`BundleStream`](super::encode::BundleStream) arena occupies in
+/// DRAM under `enc` (plus one CRC word per already-checksummed bundle).
+/// Reduces exactly to [`stream_arena_words`] at [`StreamEncoding::Raw`].
+pub fn encoded_stream_words(s: &super::encode::BundleStream, enc: StreamEncoding) -> usize {
+    s.iter()
+        .map(|b| encoded_data_bundle_words(b.cols, enc) + usize::from(b.flags.checksum()))
+        .sum()
+}
+
+/// Words the SpMM dense-panel segment occupies under `enc`: the panel
+/// encoder emits one chain of lane indices `0..k` per panel row, so every
+/// row chain prices identically. Contiguous lane blocks compress well
+/// under bitmaps (`2 + ceil(len/1024) + ceil(len/32)` vs `len` raw index
+/// words per chunk). Reduces exactly to [`dense_panel_words`] at
+/// [`StreamEncoding::Raw`].
+pub fn encoded_dense_panel_words(
+    nrows: usize,
+    k: usize,
+    bundle_size: usize,
+    enc: StreamEncoding,
+) -> usize {
+    assert!(bundle_size > 0, "bundle_size must be positive");
+    if k == 0 {
+        return 0;
+    }
+    let lanes: Vec<Idx> = (0..k as Idx).collect();
+    nrows * encoded_chain_words(&lanes, bundle_size, enc)
+}
+
+/// Append one data bundle in its encoded wire form: compression flags set
+/// per the negotiated `enc` (bitmap only where it wins byte accounting,
+/// fixed-point on every non-empty bundle), optional CRC32 trailer.
+fn write_encoded_bundle(
+    shared: Idx,
+    flags: BundleFlags,
+    cols: &[Idx],
+    vals: &[Val],
+    enc: StreamEncoding,
+    checksummed: bool,
+    out: &mut Vec<u32>,
+) {
+    debug_assert_eq!(cols.len(), vals.len());
+    let count = cols.len() as u32;
+    debug_assert!(count < (1 << 24), "bundle too large for metadata word");
+    let bm = chosen_bitmap_words(cols, enc).is_some();
+    let fx = enc.fx() && !cols.is_empty();
+    let mut f = flags;
+    if bm {
+        f = f.with(BundleFlags::BITMAP);
+    }
+    if fx {
+        f = f.with(BundleFlags::FIXED_POINT);
+    }
+    if checksummed {
+        f = f.with(BundleFlags::CHECKSUM);
+    }
+    let start = out.len();
+    out.push((count << 8) | f.0 as u32);
+    out.push(shared);
+    if !bm && !fx {
+        for (&d, &v) in cols.iter().zip(vals) {
+            out.push(d);
+            out.push(v.to_bits());
+        }
+    } else {
+        if bm {
+            write_bitmap_section(cols, out);
+        } else {
+            out.extend_from_slice(cols);
+        }
+        if fx {
+            write_fx_section(vals, out);
+        } else {
+            out.extend(vals.iter().map(|v| v.to_bits()));
+        }
+    }
+    if f.checksum() {
+        let crc = crc32_words(&out[start..]);
+        out.push(crc);
+    }
+}
+
+/// Serialize a flat bundle arena under a negotiated [`StreamEncoding`],
+/// optionally checksumming every bundle. `(Raw, false)` is bit-identical
+/// to [`serialize_stream`] and `(Raw, true)` to
+/// [`serialize_stream_checksummed`]; output length is exactly
+/// [`encoded_stream_words`] plus (when checksummed) one word per bundle.
+pub fn serialize_stream_encoded(
+    s: &super::encode::BundleStream,
+    enc: StreamEncoding,
+    checksummed: bool,
+) -> Vec<u32> {
+    let crc_words = if checksummed { s.n_bundles() } else { 0 };
+    let mut words = Vec::with_capacity(encoded_stream_words(s, enc) + crc_words);
+    for b in s.iter() {
+        write_encoded_bundle(b.shared, b.flags, b.cols, b.vals, enc, checksummed, &mut words);
+    }
+    words
+}
+
 /// Streaming writer: encode a CSC matrix's bundle chains directly into the
 /// flat word layout, one chain per column, recording words-per-column.
 ///
@@ -308,21 +647,188 @@ pub fn write_rl_stream(
     mark_last_header_end_of_stream(words);
 }
 
+/// Parsed extent of one wire bundle starting at word `p`: everything the
+/// walkers need to size, verify and step over it. The single source of
+/// payload-sizing truth — `try_deserialize`, the `decode::WireCursor` and
+/// [`mark_last_header_end_of_stream`] all use it, so the flag-dependent
+/// layout (METADATA_ONLY triples, sectioned BITMAP / FIXED_POINT payloads,
+/// trailing CHECKSUM word) cannot drift between them.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct BundleExtent {
+    pub count: usize,
+    pub flags: BundleFlags,
+    pub shared: u32,
+    /// Payload words between the shared word and the optional CRC word.
+    pub payload_words: usize,
+    /// Total words including the two header words and the CRC word.
+    pub total_words: usize,
+}
+
+/// Size the bundle at `words[p..]` without decoding it. Total over
+/// arbitrary input: every read is bounds-checked and sizing errors come
+/// back as structured [`RirError`]s. Compression flags on metadata-only
+/// bundles are ignored (schedule payloads are always raw triples — the
+/// encoders never set them there, and treating them as sizing no-ops keeps
+/// the walker total on fuzzed input).
+pub(crate) fn bundle_extent(
+    words: &[u32],
+    p: usize,
+    bundle: usize,
+) -> std::result::Result<BundleExtent, RirError> {
+    if p + 2 > words.len() {
+        return Err(RirError::TruncatedHeader { word: p });
+    }
+    let meta = words[p];
+    let shared = words[p + 1];
+    let count = (meta >> 8) as usize;
+    let flags = BundleFlags((meta & 0xff) as u8);
+    let have = words.len() - (p + 2);
+    let payload_words = if flags.metadata_only() {
+        3 * count
+    } else if flags.sectioned() {
+        let idx_words = if flags.bitmap() {
+            // the bitmap section self-describes its size: base + span
+            // words, ceil(span/1024) L0 words, one L1 word per set L0 bit
+            if have < 2 {
+                return Err(RirError::TruncatedPayload { bundle, need: 2, have });
+            }
+            let span = words[p + 3] as usize;
+            let n_l0 = span.div_ceil(BITMAP_L0_SPAN);
+            if have < 2 + n_l0 {
+                return Err(RirError::TruncatedPayload { bundle, need: 2 + n_l0, have });
+            }
+            let n_l1: usize =
+                words[p + 4..p + 4 + n_l0].iter().map(|w| w.count_ones() as usize).sum();
+            2 + n_l0 + n_l1
+        } else {
+            count
+        };
+        let val_words = if flags.fixed_point() { fx_value_words(count) } else { count };
+        idx_words + val_words
+    } else {
+        2 * count
+    };
+    let need = payload_words + usize::from(flags.checksum());
+    if need > have {
+        return Err(RirError::TruncatedPayload { bundle, need, have });
+    }
+    Ok(BundleExtent {
+        count,
+        flags,
+        shared,
+        payload_words,
+        total_words: 2 + payload_words + usize::from(flags.checksum()),
+    })
+}
+
+/// Verify the CRC32 trailer of a checksummed bundle at `words[p..]`.
+pub(crate) fn verify_bundle_crc(
+    words: &[u32],
+    p: usize,
+    ext: &BundleExtent,
+    bundle: usize,
+) -> std::result::Result<(), RirError> {
+    if ext.flags.checksum() {
+        let stored = words[p + 2 + ext.payload_words];
+        let computed = crc32_words(&words[p..p + 2 + ext.payload_words]);
+        if stored != computed {
+            return Err(RirError::ChecksumMismatch { bundle, stored, computed });
+        }
+    }
+    Ok(())
+}
+
+/// Expand a sectioned (BITMAP and/or FIXED_POINT) data payload back into
+/// raw interleaved `(index, value-bits)` pairs. `payload` is exactly the
+/// [`BundleExtent::payload_words`] slice (header and CRC excluded), so
+/// every in-bounds guarantee is already established; what remains to check
+/// is bitmap integrity — the set L1 bits must reproduce exactly the
+/// declared element count, and no reconstructed index may overflow `u32`.
+pub(crate) fn expand_sectioned_payload(
+    payload: &[u32],
+    count: usize,
+    flags: BundleFlags,
+    bundle: usize,
+) -> std::result::Result<Vec<u32>, RirError> {
+    let mut cols: Vec<u32> = Vec::with_capacity(count);
+    let mut q;
+    if flags.bitmap() {
+        let base = payload[0] as u64;
+        let span = payload[1] as usize;
+        let n_l0 = span.div_ceil(BITMAP_L0_SPAN);
+        q = 2 + n_l0;
+        for (wi, &l0w) in payload[2..2 + n_l0].iter().enumerate() {
+            let mut bits = l0w;
+            while bits != 0 {
+                let bit = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let t = 32 * wi + bit;
+                let mut l1 = payload[q];
+                q += 1;
+                while l1 != 0 {
+                    let o = l1.trailing_zeros() as usize;
+                    l1 &= l1 - 1;
+                    let col = base + (BITMAP_L1_SPAN * t + o) as u64;
+                    if col > u32::MAX as u64 {
+                        return Err(RirError::BitmapIndexOverflow { bundle });
+                    }
+                    cols.push(col as u32);
+                }
+            }
+        }
+        if cols.len() != count {
+            return Err(RirError::BitmapCountMismatch {
+                bundle,
+                declared: count,
+                decoded: cols.len(),
+            });
+        }
+    } else {
+        cols.extend_from_slice(&payload[..count]);
+        q = count;
+    }
+    let mut pairs = Vec::with_capacity(2 * count);
+    if flags.fixed_point() && count > 0 {
+        let scale = f32::from_bits(payload[q]);
+        q += 1;
+        for (i, &col) in cols.iter().enumerate() {
+            let w = payload[q + i / 2];
+            let half = (if i % 2 == 0 { w & 0xffff } else { w >> 16 }) as u16;
+            pairs.push(col);
+            pairs.push(fx_dequantize(half, scale).to_bits());
+        }
+    } else {
+        for (i, &col) in cols.iter().enumerate() {
+            pairs.push(col);
+            pairs.push(payload[q + i]);
+        }
+    }
+    Ok(pairs)
+}
+
 /// Walk the stream to its last bundle header and set `END_OF_STREAM`.
 ///
 /// The header word participates in the per-bundle checksum, so a
 /// checksummed last bundle has its CRC32 word recomputed after the flag
-/// is set.
+/// is set. Sizing goes through [`bundle_extent`], so checksummed,
+/// metadata-only, bitmap and fixed-point bundles all step correctly.
 fn mark_last_header_end_of_stream(words: &mut Vec<u32>) {
     let mut p = 0usize;
+    let mut bundle = 0usize;
     let mut last = None;
     while p < words.len() {
-        let meta = words[p];
-        let count = (meta >> 8) as usize;
-        let flags = BundleFlags((meta & 0xff) as u8);
-        let payload = if flags.metadata_only() { 3 * count } else { 2 * count };
-        last = Some((p, payload, flags.checksum()));
-        p += 2 + payload + usize::from(flags.checksum());
+        match bundle_extent(words, p, bundle) {
+            Ok(ext) => {
+                last = Some((p, ext.payload_words, ext.flags.checksum()));
+                p += ext.total_words;
+                bundle += 1;
+            }
+            Err(e) => {
+                // only internally produced, well-formed streams reach here
+                debug_assert!(false, "malformed internal stream: {e}");
+                return;
+            }
+        }
     }
     if let Some((h, payload, checksummed)) = last {
         words[h] |= BundleFlags::END_OF_STREAM as u32;
@@ -340,57 +846,52 @@ pub fn deserialize(words: &[u32]) -> Result<Vec<Bundle>> {
 
 /// Deserialize a flat word stream back into bundles.
 ///
-/// Total over arbitrary input: truncation, undersized payloads and CRC32
-/// mismatches come back as structured [`RirError`]s; no input panics.
-/// Checksummed bundles keep their `CHECKSUM` flag so re-serializing
-/// reproduces the protected wire form bit-for-bit.
+/// Total over arbitrary input: truncation, undersized payloads, CRC32
+/// mismatches and malformed bitmap sections come back as structured
+/// [`RirError`]s; no input panics. Checksummed bundles keep their
+/// `CHECKSUM` flag so re-serializing reproduces the protected wire form
+/// bit-for-bit; BITMAP / FIXED_POINT bundles are expanded back to raw
+/// pairs and their compression flags **stripped** (the in-memory `Bundle`
+/// is always the raw form, so serialize∘deserialize is not the identity
+/// on compressed streams — by design; compare decoded contents instead).
 pub fn try_deserialize(words: &[u32]) -> std::result::Result<Vec<Bundle>, RirError> {
     let mut out = Vec::new();
     let mut p = 0usize;
     let mut bundle = 0usize;
     while p < words.len() {
-        if p + 2 > words.len() {
-            return Err(RirError::TruncatedHeader { word: p });
-        }
-        let meta = words[p];
-        let shared = words[p + 1];
-        let count = (meta >> 8) as usize;
-        let flags = BundleFlags((meta & 0xff) as u8);
-        let payload = if flags.metadata_only() { 3 * count } else { 2 * count };
-        let need = payload + usize::from(flags.checksum());
-        let have = words.len() - (p + 2);
-        if need > have {
-            return Err(RirError::TruncatedPayload { bundle, need, have });
-        }
-        if flags.checksum() {
-            let stored = words[p + 2 + payload];
-            let computed = crc32_words(&words[p..p + 2 + payload]);
-            if stored != computed {
-                return Err(RirError::ChecksumMismatch { bundle, stored, computed });
-            }
-        }
-        p += 2;
+        let ext = bundle_extent(words, p, bundle)?;
+        verify_bundle_crc(words, p, &ext, bundle)?;
+        let (count, flags, shared) = (ext.count, ext.flags, ext.shared);
+        let payload = &words[p + 2..p + 2 + ext.payload_words];
         if flags.metadata_only() {
             let mut triples = Vec::with_capacity(count);
             for k in 0..count {
                 triples.push(RlTriple {
-                    row: words[p + 3 * k],
-                    start: words[p + 3 * k + 1],
-                    end: words[p + 3 * k + 2],
+                    row: payload[3 * k],
+                    start: payload[3 * k + 1],
+                    end: payload[3 * k + 2],
                 });
             }
             // schedule() re-sets METADATA_ONLY; keep other flag bits
             out.push(Bundle::schedule(shared, triples, flags));
         } else {
+            let pairs;
+            let raw_pairs: &[u32] = if flags.sectioned() {
+                pairs = expand_sectioned_payload(payload, count, flags, bundle)?;
+                &pairs
+            } else {
+                payload
+            };
             let mut distinct: Vec<Idx> = Vec::with_capacity(count);
             let mut values: Vec<Val> = Vec::with_capacity(count);
             for k in 0..count {
-                distinct.push(words[p + 2 * k]);
-                values.push(f32::from_bits(words[p + 2 * k + 1]));
+                distinct.push(raw_pairs[2 * k]);
+                values.push(f32::from_bits(raw_pairs[2 * k + 1]));
             }
-            out.push(Bundle::data(shared, distinct, values, flags));
+            let clean = flags.without(BundleFlags::BITMAP).without(BundleFlags::FIXED_POINT);
+            out.push(Bundle::data(shared, distinct, values, clean));
         }
-        p += need;
+        p += ext.total_words;
         bundle += 1;
     }
     Ok(out)
@@ -628,5 +1129,361 @@ mod tests {
     #[test]
     fn empty_stream_is_empty() {
         assert_eq!(deserialize(&[]).unwrap(), Vec::<Bundle>::new());
+    }
+
+    #[test]
+    fn stream_encoding_parse_display_and_expansion() {
+        for enc in [
+            StreamEncoding::Raw,
+            StreamEncoding::Bitmap,
+            StreamEncoding::Fx,
+            StreamEncoding::BitmapFx,
+        ] {
+            assert_eq!(StreamEncoding::parse(&enc.to_string()), Some(enc));
+        }
+        assert_eq!(StreamEncoding::parse("fx"), None);
+        assert_eq!(StreamEncoding::parse("Raw"), None);
+        assert_eq!(StreamEncoding::default(), StreamEncoding::Raw);
+        // expansion fill latencies are pinned: raw streams pay nothing
+        assert_eq!(StreamEncoding::Raw.expansion_cycles(), 0);
+        assert_eq!(StreamEncoding::Bitmap.expansion_cycles(), 2);
+        assert_eq!(StreamEncoding::Fx.expansion_cycles(), 2);
+        assert_eq!(StreamEncoding::BitmapFx.expansion_cycles(), 4);
+    }
+
+    /// Pins the worked byte-level examples documented in ARCHITECTURE.md
+    /// §3.4 — if this test moves, the spec must move with it.
+    #[test]
+    fn architecture_md_compression_worked_examples() {
+        assert_eq!(BundleFlags::BITMAP, 0b0010_0000);
+        assert_eq!(BundleFlags::FIXED_POINT, 0b0100_0000);
+
+        // -- bitmap index section --------------------------------------
+        // cols [4,5,6,7, 36,37,38,39]: base 4, span 36, one L0 word with
+        // bits 0 and 1 set (blocks [4,36) and [36,68) occupied), then one
+        // L1 word per block with its low four bits set.
+        let cols: Vec<Idx> = vec![4, 5, 6, 7, 36, 37, 38, 39];
+        assert_eq!(bitmap_index_words(&cols), Some(5)); // 2 + 1 L0 + 2 L1
+        let mut section = Vec::new();
+        write_bitmap_section(&cols, &mut section);
+        assert_eq!(section, vec![4, 36, 0x3, 0xF, 0xF]);
+        // whole-bundle accounting: 2 header + 5 index + 8 value words = 15,
+        // vs 2 + 2·8 = 18 raw — the encoder picks the bitmap form.
+        assert_eq!(encoded_data_bundle_words(&cols, StreamEncoding::Bitmap), 15);
+        assert_eq!(encoded_data_bundle_words(&cols, StreamEncoding::Raw), 18);
+        let vals: Vec<Val> = (0..8).map(|i| i as f32 * 0.5).collect();
+        let mut words = Vec::new();
+        write_encoded_bundle(
+            9,
+            BundleFlags::default().with(BundleFlags::END_OF_ROW),
+            &cols,
+            &vals,
+            StreamEncoding::Bitmap,
+            false,
+            &mut words,
+        );
+        assert_eq!(words.len(), 15);
+        // metadata word: count 8 in bits 8.., END_OF_ROW | BITMAP below
+        assert_eq!(words[0], 0x821);
+        assert_eq!(words[1], 9, "shared-feature word");
+        assert_eq!(&words[2..7], &[4, 36, 0x3, 0xF, 0xF]);
+        assert_eq!(words[7], 0.0f32.to_bits(), "values follow the index section");
+        let back = try_deserialize(&words).unwrap();
+        assert_eq!(back[0].distinct(), &cols[..]);
+        assert_eq!(back[0].values(), &vals[..], "bitmap-only is lossless");
+        assert!(!back[0].flags.bitmap(), "decoder strips the flag");
+
+        // -- fixed-point value section ---------------------------------
+        // vals [0.5, -1.0, 0.25] at scale 1.0: q = [16384, -32767, 8192],
+        // packed two per word (even index low, odd index high half).
+        let mut fx = Vec::new();
+        write_fx_section(&[0.5, -1.0, 0.25], &mut fx);
+        assert_eq!(fx, vec![1.0f32.to_bits(), 0x8001_4000, 0x0000_2000]);
+        assert_eq!(fx_value_words(3), 3); // scale word + 2 packed words
+        assert_eq!(fx_value_words(0), 0, "empty bundles carry no section");
+        // ±scale round-trips exactly; the others stay within the bound
+        assert_eq!(fx_dequantize(0x8001, 1.0), -1.0);
+        let bound = fx_max_abs_error(1.0);
+        for (half, v) in [(0x4000u16, 0.5f64), (0x2000, 0.25)] {
+            let err = (fx_dequantize(half, 1.0) as f64 - v).abs();
+            assert!(err <= bound, "err {err} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn bitmap_index_words_edge_cases() {
+        assert_eq!(bitmap_index_words(&[]), None, "empty");
+        assert_eq!(bitmap_index_words(&[7, 7]), None, "not strictly ascending");
+        assert_eq!(bitmap_index_words(&[9, 3]), None, "descending");
+        assert_eq!(bitmap_index_words(&[0, u32::MAX]), None, "span overflows u32");
+        assert_eq!(bitmap_index_words(&[5]), Some(4), "singleton: 2 + 1 L0 + 1 L1");
+        // a singleton never wins over its 1 raw index word
+        assert_eq!(encoded_data_bundle_words(&[5], StreamEncoding::Bitmap), 2 + 2);
+        // widely scattered indices fall back to raw form too
+        let scattered: Vec<Idx> = vec![3, 1000, 50_000];
+        let bm = bitmap_index_words(&scattered).unwrap();
+        assert!(bm > scattered.len(), "bitmap form loses: {bm} words vs 3 raw");
+        assert_eq!(encoded_data_bundle_words(&scattered, StreamEncoding::Bitmap), 2 + 2 * 3);
+    }
+
+    #[test]
+    fn fx_error_is_within_documented_bound_and_zero_scale_exact() {
+        let vals: Vec<Val> =
+            vec![0.0, 1e-3, -0.7, 123.456, -9999.25, 3.0e-39 /* subnormal */, 0.125];
+        let scale = vals.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let bound = fx_max_abs_error(scale);
+        for &v in &vals {
+            let err = (fx_dequantize(fx_quantize(v, scale), scale) as f64 - v as f64).abs();
+            assert!(err <= bound, "v {v}: err {err} > bound {bound}");
+        }
+        // all-zero bundle: scale 0, decodes exactly
+        assert_eq!(fx_quantize(0.0, 0.0), 0);
+        assert_eq!(fx_dequantize(0, 0.0), 0.0);
+        assert_eq!(fx_max_abs_error(0.0), 0.0);
+    }
+
+    /// Every encoded serializer's output length must equal the accounting
+    /// helpers' arithmetic, and the Raw encoding must stay bit-identical
+    /// to the pre-compression serializers.
+    #[test]
+    fn encoded_accounting_matches_serialized_length() {
+        let all = [
+            StreamEncoding::Raw,
+            StreamEncoding::Bitmap,
+            StreamEncoding::Fx,
+            StreamEncoding::BitmapFx,
+        ];
+        for (m, bs) in [
+            (gen::power_law(30, 500, 1), 32usize),
+            (gen::random_uniform(12, 40, 150, 2), 8),
+            (gen::banded_fem(40, 300, 3), 16),
+            (crate::sparse::Csr::new(0, 4), 32), // empty matrix
+        ] {
+            let s = crate::rir::encode::BundleStream::from_csr(&m, bs);
+            for enc in all {
+                for ck in [false, true] {
+                    let words = serialize_stream_encoded(&s, enc, ck);
+                    assert_eq!(
+                        words.len(),
+                        encoded_stream_words(&s, enc) + if ck { s.n_bundles() } else { 0 },
+                        "enc {enc} ck {ck} bs {bs}"
+                    );
+                }
+            }
+            assert_eq!(
+                serialize_stream_encoded(&s, StreamEncoding::Raw, false),
+                serialize_stream(&s)
+            );
+            assert_eq!(
+                serialize_stream_encoded(&s, StreamEncoding::Raw, true),
+                serialize_stream_checksummed(&s)
+            );
+            assert_eq!(encoded_stream_words(&s, StreamEncoding::Raw), stream_arena_words(&s));
+        }
+    }
+
+    /// Compressed streams decode back to the arena's exact structure —
+    /// same bundles, same columns, compression flags stripped, values
+    /// bit-identical except under fixed-point where the error stays within
+    /// [`fx_max_abs_error`] of the per-bundle scale.
+    #[test]
+    fn encoded_streams_roundtrip_with_flags_stripped() {
+        let m = gen::power_law(25, 400, 5);
+        let s = crate::rir::encode::BundleStream::from_csr(&m, 8);
+        for enc in [StreamEncoding::Bitmap, StreamEncoding::Fx, StreamEncoding::BitmapFx] {
+            for ck in [false, true] {
+                let words = serialize_stream_encoded(&s, enc, ck);
+                let back = try_deserialize(&words).unwrap_or_else(|e| {
+                    panic!("enc {enc} ck {ck}: {e}");
+                });
+                assert_eq!(back.len(), s.n_bundles());
+                for (b, d) in s.iter().zip(&back) {
+                    assert_eq!(d.shared, b.shared);
+                    assert_eq!(d.distinct(), b.cols, "enc {enc}");
+                    assert!(!d.flags.bitmap() && !d.flags.fixed_point(), "flags stripped");
+                    assert_eq!(d.flags.checksum(), ck, "CHECKSUM kept iff protected");
+                    assert_eq!(d.flags.end_of_row(), b.flags.end_of_row());
+                    if enc.fx() {
+                        let scale = b.vals.iter().fold(0f32, |mx, v| mx.max(v.abs()));
+                        let bound = fx_max_abs_error(scale);
+                        for (&v, &vhat) in b.vals.iter().zip(d.values()) {
+                            let err = (vhat as f64 - v as f64).abs();
+                            assert!(err <= bound, "enc {enc}: err {err} > bound {bound}");
+                        }
+                    } else {
+                        assert_eq!(d.values(), b.vals, "bitmap-only is lossless");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Satellite audit: exhaustive flag-composition accounting. For every
+    /// combination of passthrough flags (END_OF_ROW / END_OF_STREAM /
+    /// DENSE_PANEL) × CHECKSUM × encoding × payload shape, the wire walker
+    /// ([`bundle_extent`]) must size the written bundle exactly, its CRC
+    /// must verify, and the bundle must decode back losslessly (indices
+    /// always; values except under fixed-point).
+    #[test]
+    fn exhaustive_flag_combination_accounting() {
+        let encs = [
+            StreamEncoding::Raw,
+            StreamEncoding::Bitmap,
+            StreamEncoding::Fx,
+            StreamEncoding::BitmapFx,
+        ];
+        let compressible: Vec<Idx> = vec![4, 5, 6, 7, 36, 37, 38, 39];
+        let scattered: Vec<Idx> = vec![3, 1000, 50_000];
+        let shapes: [&[Idx]; 3] = [&compressible, &scattered, &[]];
+        for base in 0u8..8 {
+            let mut flags = BundleFlags::default();
+            if base & 1 != 0 {
+                flags = flags.with(BundleFlags::END_OF_ROW);
+            }
+            if base & 2 != 0 {
+                flags = flags.with(BundleFlags::END_OF_STREAM);
+            }
+            if base & 4 != 0 {
+                flags = flags.with(BundleFlags::DENSE_PANEL);
+            }
+            for ck in [false, true] {
+                for enc in encs {
+                    for cols in shapes {
+                        let vals: Vec<Val> = (0..cols.len()).map(|i| i as f32 - 2.0).collect();
+                        let mut words = Vec::new();
+                        write_encoded_bundle(11, flags, cols, &vals, enc, ck, &mut words);
+                        let ext = bundle_extent(&words, 0, 0)
+                            .unwrap_or_else(|e| panic!("{flags:?} {enc} ck {ck}: {e}"));
+                        assert_eq!(ext.total_words, words.len(), "{flags:?} {enc} ck {ck}");
+                        assert_eq!(ext.count, cols.len());
+                        assert_eq!(ext.flags.checksum(), ck);
+                        verify_bundle_crc(&words, 0, &ext, 0).unwrap();
+                        let back = try_deserialize(&words).unwrap();
+                        assert_eq!(back.len(), 1);
+                        assert_eq!(back[0].distinct(), cols);
+                        assert_eq!(back[0].flags.end_of_row(), flags.end_of_row());
+                        assert_eq!(back[0].flags.end_of_stream(), flags.end_of_stream());
+                        assert_eq!(back[0].flags.dense_panel(), flags.dense_panel());
+                        if !(enc.fx() && !cols.is_empty()) {
+                            assert_eq!(back[0].values(), &vals[..]);
+                        }
+                        // truncating any suffix must error, never panic
+                        for cut in 1..words.len() {
+                            assert!(try_deserialize(&words[..cut]).is_err(), "cut {cut}");
+                        }
+                    }
+                }
+                // metadata-only bundles: triple payload regardless of flags
+                let b = Bundle::schedule(
+                    6,
+                    vec![RlTriple { row: 2, start: 0, end: 5 }; 2],
+                    if ck { flags.with(BundleFlags::CHECKSUM) } else { flags },
+                );
+                let words = serialize(std::slice::from_ref(&b));
+                let ext = bundle_extent(&words, 0, 0).unwrap();
+                assert_eq!(ext.total_words, words.len());
+                assert_eq!(ext.payload_words, 3 * 2);
+                verify_bundle_crc(&words, 0, &ext, 0).unwrap();
+            }
+        }
+        // compression flags on a metadata-only header are sizing no-ops:
+        // the payload is still raw triples (encoders never emit this, but
+        // the walker must stay total on fuzzed input)
+        let meta = (1u32 << 8)
+            | (BundleFlags::METADATA_ONLY | BundleFlags::BITMAP | BundleFlags::FIXED_POINT) as u32;
+        let words = vec![meta, 9, 4, 0, 7];
+        let ext = bundle_extent(&words, 0, 0).unwrap();
+        assert_eq!(ext.payload_words, 3);
+        assert_eq!(ext.total_words, 5);
+    }
+
+    #[test]
+    fn encoded_chain_and_dense_panel_accounting() {
+        // chain accounting reduces to the raw formula at Raw
+        let cols: Vec<Idx> = (0..37).map(|i| i * 3).collect();
+        for bs in [1usize, 8, 32] {
+            assert_eq!(
+                encoded_chain_words(&cols, bs, StreamEncoding::Raw),
+                2 * cols.len().div_ceil(bs) + 2 * cols.len()
+            );
+        }
+        assert_eq!(encoded_chain_words(&[], 32, StreamEncoding::Raw), 2, "empty chain");
+        assert_eq!(encoded_chain_words(&[], 32, StreamEncoding::BitmapFx), 2);
+        // panel accounting reduces to dense_panel_words at Raw...
+        for (nrows, k, bs) in [(20usize, 8usize, 32usize), (5, 7, 3), (9, 0, 16)] {
+            assert_eq!(
+                encoded_dense_panel_words(nrows, k, bs, StreamEncoding::Raw),
+                dense_panel_words(nrows, k, bs)
+            );
+        }
+        // ...and contiguous lane chains compress under bitmaps: lanes 0..8
+        // cost 2 + (2+1+1) + 8 = 14 words per row vs 18 raw
+        assert_eq!(encoded_dense_panel_words(10, 8, 32, StreamEncoding::Bitmap), 10 * 14);
+        assert_eq!(encoded_dense_panel_words(10, 8, 32, StreamEncoding::Raw), 10 * 18);
+        // fx packs 8 lane values into 1 scale + 4 words: 2 + 8 + 5 = 15
+        assert_eq!(encoded_dense_panel_words(10, 8, 32, StreamEncoding::Fx), 10 * 15);
+        // both: 2 + 4 + 5 = 11
+        assert_eq!(encoded_dense_panel_words(10, 8, 32, StreamEncoding::BitmapFx), 10 * 11);
+    }
+
+    #[test]
+    fn end_of_stream_marker_walks_encoded_checksummed_streams() {
+        let m = gen::random_uniform(6, 60, 40, 13);
+        let s = crate::rir::encode::BundleStream::from_csr(&m, 4);
+        for enc in [StreamEncoding::Bitmap, StreamEncoding::Fx, StreamEncoding::BitmapFx] {
+            let mut words = serialize_stream_encoded(&s, enc, true);
+            super::mark_last_header_end_of_stream(&mut words);
+            let bundles = try_deserialize(&words)
+                .unwrap_or_else(|e| panic!("enc {enc}: marker broke the stream: {e}"));
+            assert!(bundles.last().unwrap().flags.end_of_stream(), "enc {enc}");
+        }
+    }
+
+    #[test]
+    fn corrupted_compressed_streams_are_rejected_not_panicked() {
+        let cols: Vec<Idx> = vec![4, 5, 6, 7, 36, 37, 38, 39];
+        let vals: Vec<Val> = (0..8).map(|i| i as f32).collect();
+        let mut words = Vec::new();
+        write_encoded_bundle(
+            0,
+            BundleFlags::default(),
+            &cols,
+            &vals,
+            StreamEncoding::Bitmap,
+            false,
+            &mut words,
+        );
+        // clearing an L1 bit makes the decoded count disagree with the
+        // header; without a CRC the bitmap integrity check still catches it
+        let mut bad = words.clone();
+        bad[5] &= !1u32; // L1 word of block 0, drop index 4
+        match try_deserialize(&bad) {
+            Err(RirError::BitmapCountMismatch { bundle: 0, declared: 8, decoded: 7 }) => {}
+            other => panic!("expected count mismatch, got {other:?}"),
+        }
+        // a base near u32::MAX whose expansion overflows is rejected
+        let mut ovf = words.clone();
+        ovf[2] = u32::MAX - 2; // base: first decoded cols fit, later ones overflow
+        match try_deserialize(&ovf) {
+            Err(RirError::BitmapIndexOverflow { bundle: 0 }) => {}
+            other => panic!("expected index overflow, got {other:?}"),
+        }
+        // with a CRC, any of these flips is caught before expansion
+        let mut ckw = Vec::new();
+        write_encoded_bundle(
+            0,
+            BundleFlags::default(),
+            &cols,
+            &vals,
+            StreamEncoding::Bitmap,
+            true,
+            &mut ckw,
+        );
+        let mut flipped = ckw.clone();
+        flipped[5] &= !1u32;
+        assert!(matches!(
+            try_deserialize(&flipped),
+            Err(RirError::ChecksumMismatch { bundle: 0, .. })
+        ));
     }
 }

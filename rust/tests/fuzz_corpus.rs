@@ -3,6 +3,14 @@
 //! targets call — so the corpus is exercised on every stable-toolchain
 //! test run, not only when the nightly fuzz job fires. Each driver must
 //! simply return on every input; any panic fails the test.
+//!
+//! The corpus covers every wire layout: raw pairs, checksummed bundles,
+//! BITMAP index sections, FIXED_POINT value lanes, and the combined
+//! BITMAP+FIXED_POINT+CHECKSUM form. The `seed_*` files for the
+//! compressed encodings are additionally pinned to *decode successfully*
+//! (not merely not panic) so mutation always starts from inputs that
+//! reach the expander, and a refactor that breaks sectioned decoding
+//! can't hide behind the no-panic contract.
 
 use std::fs;
 use std::path::PathBuf;
@@ -50,4 +58,62 @@ fn corpus_decode_segment_never_panics() {
 #[test]
 fn corpus_decode_panel_never_panics() {
     replay("decode_panel", reap::reliability::fuzz_decode_panel);
+}
+
+/// Little-endian u32 words of a corpus file (the drivers' framing).
+fn seed_words(target: &str, name: &str) -> Vec<u32> {
+    let bytes = fs::read(corpus_dir(target).join(name))
+        .unwrap_or_else(|e| panic!("seed {target}/{name}: {e}"));
+    assert_eq!(bytes.len() % 4, 0, "seed {target}/{name} is not word-aligned");
+    bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// The compressed-encoding seeds must *decode successfully* — they exist
+/// to put the BITMAP expander and Q1.15 lane on the mutation frontier,
+/// which only works if the unmutated seed reaches those paths.
+#[test]
+fn compressed_seeds_decode_successfully() {
+    use reap::rir::decode::{try_words_panel_to_dense, try_words_segment_to_csr, try_words_to_csr};
+    use reap::rir::layout::fx_max_abs_error;
+
+    // BITMAP bundle: cols {4..=7, 36..=39}, raw f32 values 1.0..=8.0.
+    let w = seed_words("decode_stream", "seed_bitmap");
+    let m = try_words_to_csr(&w, 0x821, 100).expect("seed_bitmap decodes");
+    assert_eq!(m.cols, vec![4, 5, 6, 7, 36, 37, 38, 39]);
+    assert_eq!(m.vals, (1..=8).map(|i| i as f32).collect::<Vec<_>>());
+
+    // FIXED_POINT bundle: cols [0,5,9], values [0.5, -1.0, 0.25] @ scale 1.
+    let w = seed_words("decode_stream", "seed_fx");
+    let m = try_words_to_csr(&w, 0x341, 50).expect("seed_fx decodes");
+    assert_eq!(m.cols, vec![0, 5, 9]);
+    let bound = fx_max_abs_error(1.0);
+    for (got, want) in m.vals.iter().zip([0.5f32, -1.0, 0.25]) {
+        assert!((f64::from(*got) - f64::from(want)).abs() <= bound);
+    }
+
+    // BITMAP + FIXED_POINT + CHECKSUM: same column set, values i @ scale 8.
+    let w = seed_words("decode_stream", "seed_bitmap_fx_crc");
+    let m = try_words_to_csr(&w, 0x871, 100).expect("seed_bitmap_fx_crc decodes");
+    assert_eq!(m.cols, vec![4, 5, 6, 7, 36, 37, 38, 39]);
+    let bound = fx_max_abs_error(8.0);
+    for (i, got) in m.vals.iter().enumerate() {
+        assert!((f64::from(*got) - (i as f64 + 1.0)).abs() <= bound);
+    }
+
+    // Segment seed: bundles [2,4) hold an fx row (5) and a bitmap row (6);
+    // the four leading parameter words double as two benign empty bundles.
+    let w = seed_words("decode_segment", "seed_bitmap_fx");
+    let m = try_words_segment_to_csr(&w, 2, 4, 8, 64).expect("segment seed decodes");
+    assert_eq!(m.row_ptr[5..=7], [0, 3, 11]);
+    assert_eq!(&m.cols[3..], &[4, 5, 6, 7, 36, 37, 38, 39]);
+
+    // Panel seed: one DENSE_PANEL fx bundle, row 0, lanes 0..4 of k=4.
+    let w = seed_words("decode_panel", "seed_fx_panel");
+    let d = try_words_panel_to_dense(&w, 2, 3, 8, 4).expect("panel seed decodes");
+    assert_eq!(d.len(), 8 * 4);
+    let bound = fx_max_abs_error(1.0);
+    for (got, want) in d[..4].iter().zip([0.5f32, -1.0, 0.25, 1.0]) {
+        assert!((f64::from(*got) - f64::from(want)).abs() <= bound);
+    }
+    assert!(d[4..].iter().all(|v| *v == 0.0));
 }

@@ -118,6 +118,118 @@ fn prop_stream_encoders_roundtrip_through_dram_words() {
     });
 }
 
+/// Every negotiated [`layout::StreamEncoding`] round-trips through the
+/// serialized DRAM words: lossless encodings (Raw, Bitmap) are the
+/// identity on CSR; Fx encodings preserve the sparsity structure exactly
+/// and every value to within the documented per-bundle Q1.15 bound
+/// [`layout::fx_max_abs_error`]. Serialized length is exactly
+/// [`layout::encoded_stream_words`] (+1 CRC word per bundle when
+/// checksummed) — including empty matrices and dense-panel streams.
+#[test]
+fn prop_encoded_streams_roundtrip_through_dram_words() {
+    use reap::rir::layout::{
+        encoded_stream_words, fx_max_abs_error, serialize_stream_encoded, StreamEncoding,
+    };
+    const ENCODINGS: [StreamEncoding; 4] =
+        [StreamEncoding::Raw, StreamEncoding::Bitmap, StreamEncoding::Fx, StreamEncoding::BitmapFx];
+    check("encoded roundtrip", Config { cases: 16, ..Config::default() }, |rng, size| {
+        let bundle = 1 + rng.range(0, 40);
+        let m = if rng.range(0, 8) == 0 {
+            Csr::new(0, 3)
+        } else {
+            random_matrix(rng, size)
+        };
+        let s = encode::BundleStream::from_csr(&m, bundle);
+        // per-element error bound: each bundle's scale is its max |value|
+        let bounds: Vec<f64> = s
+            .iter()
+            .flat_map(|b| {
+                let scale = b.vals.iter().fold(0f32, |acc, v| acc.max(v.abs()));
+                std::iter::repeat(fx_max_abs_error(scale)).take(b.vals.len())
+            })
+            .collect();
+        for enc in ENCODINGS {
+            for checksummed in [false, true] {
+                let words = serialize_stream_encoded(&s, enc, checksummed);
+                assert_eq!(
+                    words.len(),
+                    encoded_stream_words(&s, enc)
+                        + if checksummed { s.n_bundles() } else { 0 },
+                    "{enc:?} accounting"
+                );
+                let back = decode::bundles_to_csr(
+                    &layout::try_deserialize(&words).unwrap(),
+                    m.nrows,
+                    m.ncols,
+                )
+                .unwrap();
+                assert_eq!(back.row_ptr, m.row_ptr, "{enc:?} structure");
+                assert_eq!(back.cols, m.cols, "{enc:?} structure");
+                if enc.fx() {
+                    for (i, (got, want)) in back.vals.iter().zip(&m.vals).enumerate() {
+                        let err = (f64::from(*got) - f64::from(*want)).abs();
+                        assert!(err <= bounds[i], "{enc:?} elem {i}: err {err} > {}", bounds[i]);
+                    }
+                } else {
+                    assert_eq!(back.vals, m.vals, "{enc:?} is lossless");
+                }
+            }
+        }
+
+        // dense-panel stream: structure exact, fx values within the global
+        // bound (each bundle's scale ≤ the panel's max |value|)
+        let a = random_matrix(rng, size);
+        let k = rng.range(0, 12);
+        let x: Vec<f32> = (0..a.ncols * k)
+            .map(|i| ((i * 7 + 3) % 19) as f32 - 9.0)
+            .collect();
+        let mut ps = encode::BundleStream::new();
+        let boundary = ps.encode_csr_with_panel(&a, &x, k, bundle);
+        let xmax = x.iter().fold(0f32, |acc, v| acc.max(v.abs()));
+        for enc in ENCODINGS {
+            let words = serialize_stream_encoded(&ps, enc, false);
+            assert_eq!(words.len(), encoded_stream_words(&ps, enc), "{enc:?} panel accounting");
+            let d = decode::try_words_panel_to_dense(&words, boundary, ps.n_bundles(), a.ncols, k)
+                .unwrap();
+            assert_eq!(d.len(), x.len(), "{enc:?} panel shape");
+            let bound = if enc.fx() { fx_max_abs_error(xmax) } else { 0.0 };
+            for (i, (got, want)) in d.iter().zip(&x).enumerate() {
+                let err = (f64::from(*got) - f64::from(*want)).abs();
+                assert!(err <= bound, "{enc:?} panel elem {i}: err {err} > {bound}");
+            }
+        }
+    });
+}
+
+/// The encoder's per-bundle raw-vs-bitmap choice is exactly the byte
+/// accounting rule: the wire bundle carries the BITMAP flag iff
+/// [`layout::bitmap_index_words`] prices strictly below `count` raw index
+/// words — and [`layout::encoded_data_bundle_words`] matches the wire
+/// bundle-by-bundle (the walk ends exactly at the stream's last word).
+#[test]
+fn prop_bitmap_choice_matches_byte_accounting() {
+    use reap::rir::layout::{
+        bitmap_index_words, encoded_data_bundle_words, serialize_stream_encoded, StreamEncoding,
+    };
+    use reap::rir::BundleFlags;
+    check("bitmap byte accounting", Config { cases: 24, ..Config::default() }, |rng, size| {
+        let m = random_matrix(rng, size);
+        let bundle = 1 + rng.range(0, 40);
+        let s = encode::BundleStream::from_csr(&m, bundle);
+        for enc in [StreamEncoding::Bitmap, StreamEncoding::BitmapFx] {
+            let words = serialize_stream_encoded(&s, enc, false);
+            let mut p = 0usize;
+            for b in s.iter() {
+                let wire_bitmap = words[p] & BundleFlags::BITMAP as u32 != 0;
+                let wins = matches!(bitmap_index_words(b.cols), Some(n) if n < b.cols.len());
+                assert_eq!(wire_bitmap, wins, "{enc:?} bundle at word {p}");
+                p += encoded_data_bundle_words(b.cols, enc);
+            }
+            assert_eq!(p, words.len(), "{enc:?} per-bundle accounting drift");
+        }
+    });
+}
+
 /// SpMM invariants: every column of the scheduled multi-vector replay is
 /// bit-identical to an independent SpMV, for arbitrary k, geometry and
 /// worker counts; the simulator conserves flops = 2·nnz·k.

@@ -1,0 +1,10 @@
+//! Fuzz the static stream auditor: `reap lint`'s RIR pass must be total —
+//! it returns a diagnostic list (possibly long) and never panics, on any
+//! byte string reinterpreted as stream words.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    reap::reliability::fuzz_lint_stream(data);
+});

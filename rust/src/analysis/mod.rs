@@ -1,0 +1,377 @@
+//! Static analysis of the CPU→FPGA contract — `reap lint`.
+//!
+//! REAP's premise is that the CPU's scheduling pass hands the FPGA
+//! *correct-by-construction* work: wave schedules that respect pipeline
+//! capacity, RIR streams whose byte accounting matches their flags, and
+//! [`WaveCost`](crate::fpga::WaveCost) sequences free of
+//! prefetch-past-RAW hazards. A violation of any of those invariants does
+//! not crash the simulator — it silently produces wrong cycles or wrong
+//! numerics. This module is the borrow-checker for that contract: three
+//! pure verification passes that audit an artifact *before* it is
+//! simulated, sharing one [`Diagnostic`] spine.
+//!
+//! * [`audit_spgemm_schedule`] / [`audit_batch_schedule`]
+//!   ([`schedule`]) — structural invariants of
+//!   [`SpgemmSchedule`](crate::rir::schedule::SpgemmSchedule) and
+//!   [`BatchSchedule`](crate::rir::schedule::BatchSchedule): exact chunk
+//!   coverage of the CSR, wave capacity, B-stream unions, job-tag
+//!   partitioning, traffic accounting and the CPU-trace length contract.
+//! * [`audit_stream`] ([`stream`]) — walks serialized RIR words with the
+//!   same [`crate::rir::layout`] extent/section walkers the decoders use,
+//!   cross-checking flag legality, CRC trailers, sectioned-payload byte
+//!   accounting and end-of-stream marking **without decoding values**.
+//!   Total over arbitrary input (it is a fuzz target).
+//! * [`audit_wave_costs`] ([`wave`]) — static hazards in a
+//!   [`WaveCost`](crate::fpga::WaveCost) sequence: over-capacity
+//!   occupancy, a `dependent_stream` whose producer emitted no writeback,
+//!   prefetch-past-RAW exposure at buffer depth ≥ 2, zero-occupancy /
+//!   zero-wave anomalies, and the engine's depth ledger law.
+//!
+//! Every coordinator runs the schedule and wave-cost audits on its own
+//! artifacts under `debug_assertions`; release builds opt in per run via
+//! the coordinators' `strict` flag, failing with a typed
+//! [`AnalysisError`]. The `reap lint` CLI subcommand runs all passes on
+//! any workload/design/encoding combination and renders the diagnostics
+//! human-readable or as JSON ([`render_human`] / [`render_json`]).
+//! ARCHITECTURE.md §8 catalogues the invariant set pass by pass.
+
+pub mod schedule;
+pub mod stream;
+pub mod wave;
+
+pub use schedule::{audit_batch_schedule, audit_spgemm_schedule};
+pub use stream::audit_stream;
+pub use wave::audit_wave_costs;
+
+use std::fmt;
+
+/// Which verification pass produced a diagnostic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pass {
+    /// Schedule structure ([`audit_spgemm_schedule`], [`audit_batch_schedule`]).
+    Schedule,
+    /// Serialized RIR stream words ([`audit_stream`]).
+    Stream,
+    /// Wave-cost sequences ([`audit_wave_costs`]).
+    WaveCost,
+}
+
+impl Pass {
+    /// Stable lowercase name (the JSON `pass` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::Schedule => "schedule",
+            Pass::Stream => "stream",
+            Pass::WaveCost => "wave-cost",
+        }
+    }
+}
+
+/// Severity of a diagnostic.
+///
+/// `Error` marks a contract violation that makes simulation or decoding
+/// unsound (the coordinators refuse to run on it); `Warning` marks a
+/// legal-but-suspect artifact (e.g. a bitmap section that does not pay
+/// for itself) that `reap lint` reports but the coordinators tolerate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    /// Stable lowercase name (the JSON `severity` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding of a verification pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub pass: Pass,
+    pub severity: Severity,
+    /// Where in the artifact ("wave 3, slot 2", "bundle 7", "item 12").
+    pub location: String,
+    /// Human-readable statement of the violated invariant.
+    pub message: String,
+    /// Stable machine-readable code (one of [`codes`]), the key mutation
+    /// tests and CI assert on.
+    pub code: &'static str,
+}
+
+impl Diagnostic {
+    /// An error-severity diagnostic.
+    pub fn error(pass: Pass, code: &'static str, location: String, message: String) -> Self {
+        Diagnostic { pass, severity: Severity::Error, location, message, code }
+    }
+
+    /// A warning-severity diagnostic.
+    pub fn warning(pass: Pass, code: &'static str, location: String, message: String) -> Self {
+        Diagnostic { pass, severity: Severity::Warning, location, message, code }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] {}: {}: {}",
+            self.severity.name(),
+            self.code,
+            self.pass.name(),
+            self.location,
+            self.message
+        )
+    }
+}
+
+/// Stable diagnostic codes, one constant per invariant. Codes are part of
+/// the tool's interface: CI greps them, the mutation tests
+/// (`tests/analysis_mutations.rs`) pin them, and ARCHITECTURE.md §8
+/// documents them — never reuse or renumber.
+pub mod codes {
+    /// Schedule geometry is unusable (`pipelines == 0` or `bundle_size == 0`).
+    pub const SCH_CONFIG: &str = "SCH-CONFIG";
+    /// A wave carries more assignments than the design has pipelines.
+    pub const SCH_WAVE_OVERFULL: &str = "SCH-WAVE-OVERFULL";
+    /// A wave carries no assignments at all (the scheduler never emits one).
+    pub const SCH_WAVE_EMPTY: &str = "SCH-WAVE-EMPTY";
+    /// A chunk length outside `1..=bundle_size`.
+    pub const SCH_CHUNK_LEN: &str = "SCH-CHUNK-LEN";
+    /// The same `(row, chunk)` assigned more than once.
+    pub const SCH_CHUNK_DUP: &str = "SCH-CHUNK-DUP";
+    /// A chunk whose row/ordinal/extent does not exist in the source CSR.
+    pub const SCH_CHUNK_RANGE: &str = "SCH-CHUNK-RANGE";
+    /// A `last_chunk` flag on the wrong chunk ordinal.
+    pub const SCH_LAST_CHUNK: &str = "SCH-LAST-CHUNK";
+    /// A `(row, chunk)` of the source CSR that no wave covers.
+    pub const SCH_COVERAGE: &str = "SCH-COVERAGE";
+    /// A wave's B-row stream is not the sorted, deduped union of its
+    /// assignments' A columns (or indexes past B).
+    pub const SCH_B_ROWS: &str = "SCH-B-ROWS";
+    /// `a_words`/`b_words` disagree with the recomputed traffic.
+    pub const SCH_WORDS: &str = "SCH-WORDS";
+    /// The per-wave CPU trace breaks the `overlap` length/value contract.
+    pub const SCH_TRACE: &str = "SCH-TRACE";
+    /// A batch assignment tagged with a job id outside `0..n_jobs`.
+    pub const SCH_JOB_TAG: &str = "SCH-JOB-TAG";
+    /// A job's chunks, extracted in wave order, are not its single-job
+    /// chunk sequence (the `decompose()` invariant).
+    pub const SCH_JOB_ORDER: &str = "SCH-JOB-ORDER";
+    /// Batch wave segments do not mirror the wave's job runs.
+    pub const SCH_SEGMENT: &str = "SCH-SEGMENT";
+
+    /// The stream ends mid-header or mid-payload.
+    pub const STR_TRUNCATED: &str = "STR-TRUNCATED";
+    /// A checksummed bundle whose CRC32 trailer does not verify.
+    pub const STR_CRC: &str = "STR-CRC";
+    /// An illegal flag combination (compression or panel flags on a
+    /// metadata-only bundle, a compression flag on an empty bundle).
+    pub const STR_FLAGS: &str = "STR-FLAGS";
+    /// A bitmap section whose set bits disagree with the declared element
+    /// count, or that reconstructs an index past `u32`.
+    pub const STR_BITMAP: &str = "STR-BITMAP";
+    /// A sectioned payload whose index-section size disagrees with the
+    /// canonical accounting for its decoded indices.
+    pub const STR_SECTION_WORDS: &str = "STR-SECTION-WORDS";
+    /// A bitmap section at least as large as the raw indices it replaces —
+    /// legal to decode, but the encoder's negotiation would never emit it.
+    pub const STR_BITMAP_WASTE: &str = "STR-BITMAP-WASTE";
+    /// A fixed-point scale word that is not a finite f32.
+    pub const STR_FX_SCALE: &str = "STR-FX-SCALE";
+    /// Distinct indices within a data bundle not strictly ascending.
+    pub const STR_INDEX_ORDER: &str = "STR-INDEX-ORDER";
+    /// End-of-stream marking is inconsistent (a segment boundary exists
+    /// but the final bundle does not terminate the stream, or no bundle
+    /// carries the flag at all).
+    pub const STR_EOS: &str = "STR-EOS";
+
+    /// The [`FpgaConfig`](crate::fpga::FpgaConfig) handed to the wave
+    /// audit fails its own validation — no cost sequence is meaningful
+    /// against it.
+    pub const WAV_CONFIG: &str = "WAV-CONFIG";
+    /// A wave occupying more pipelines than the design has (the engine
+    /// would abort on it).
+    pub const WAV_OVERFULL: &str = "WAV-OVERFULL";
+    /// A `dependent_stream` item whose immediate producer emitted no
+    /// writeback — there is nothing in DRAM for the RAW edge to read.
+    pub const WAV_DEP_NO_PRODUCER: &str = "WAV-DEP-NO-PRODUCER";
+    /// At buffer depth ≥ 2, an independent stream directly following a
+    /// dependent producer's writeback — its prefetch can race the RAW
+    /// data it may be reading.
+    pub const WAV_PREFETCH_RAW: &str = "WAV-PREFETCH-RAW";
+    /// A pure `Load` item carrying compute, occupancy, flops or waves.
+    pub const WAV_LOAD: &str = "WAV-LOAD";
+    /// A compute item with compute cycles but zero active pipelines.
+    pub const WAV_ZERO_OCC: &str = "WAV-ZERO-OCC";
+    /// A compute item contributing zero scheduling waves.
+    pub const WAV_ZERO_WAVES: &str = "WAV-ZERO-WAVES";
+    /// A word count too large for the engine's byte accounting.
+    pub const WAV_WORDS_OVERFLOW: &str = "WAV-WORDS-OVERFLOW";
+    /// The engine's depth ledger (`cycles(d) + hidden(d) == cycles(1)`,
+    /// depth-invariant traffic/flops/waves) fails on this sequence.
+    pub const WAV_LEDGER: &str = "WAV-LEDGER";
+}
+
+/// Typed failure carrying every diagnostic of a failed audit — the error
+/// the coordinators return in `strict` mode (and debug builds).
+#[derive(Clone, Debug)]
+pub struct AnalysisError {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl fmt::Display for AnalysisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let errors = count_severity(&self.diagnostics, Severity::Error);
+        writeln!(f, "static analysis failed with {errors} error(s):")?;
+        for d in &self.diagnostics {
+            writeln!(f, "  {d}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for AnalysisError {}
+
+/// Number of diagnostics at `severity`.
+pub fn count_severity(diags: &[Diagnostic], severity: Severity) -> usize {
+    diags.iter().filter(|d| d.severity == severity).count()
+}
+
+/// Fail with a typed [`AnalysisError`] if any **error**-severity
+/// diagnostic is present (warnings alone pass — the coordinators tolerate
+/// suspect-but-legal artifacts; `reap lint` still reports them).
+pub fn ensure_clean(diags: Vec<Diagnostic>) -> Result<(), AnalysisError> {
+    if count_severity(&diags, Severity::Error) > 0 {
+        Err(AnalysisError { diagnostics: diags })
+    } else {
+        Ok(())
+    }
+}
+
+/// Render diagnostics for a terminal, one line each, plus a summary line.
+pub fn render_human(diags: &[Diagnostic]) -> String {
+    let mut out = String::new();
+    for d in diags {
+        out.push_str(&d.to_string());
+        out.push('\n');
+    }
+    let errors = count_severity(diags, Severity::Error);
+    let warnings = count_severity(diags, Severity::Warning);
+    out.push_str(&format!("{errors} error(s), {warnings} warning(s)\n"));
+    out
+}
+
+/// Render diagnostics as one machine-readable JSON object:
+/// `{"diagnostics": [...], "errors": N, "warnings": N}`.
+pub fn render_json(diags: &[Diagnostic]) -> String {
+    let mut out = String::from("{\"diagnostics\": [");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!(
+            "{{\"pass\": \"{}\", \"severity\": \"{}\", \"code\": \"{}\", \
+             \"location\": \"{}\", \"message\": \"{}\"}}",
+            d.pass.name(),
+            d.severity.name(),
+            json_escape(d.code),
+            json_escape(&d.location),
+            json_escape(&d.message)
+        ));
+    }
+    out.push_str(&format!(
+        "], \"errors\": {}, \"warnings\": {}}}",
+        count_severity(diags, Severity::Error),
+        count_severity(diags, Severity::Warning)
+    ));
+    out
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control bytes) —
+/// local so the analysis layer stays independent of the bench harness.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Diagnostic> {
+        vec![
+            Diagnostic::error(
+                Pass::Schedule,
+                codes::SCH_CHUNK_DUP,
+                "wave 3, slot 2".into(),
+                "chunk (7, 0) already assigned".into(),
+            ),
+            Diagnostic::warning(
+                Pass::Stream,
+                codes::STR_BITMAP_WASTE,
+                "bundle 5".into(),
+                "bitmap section (9 words) not below 4 raw index words".into(),
+            ),
+        ]
+    }
+
+    #[test]
+    fn severity_counting_and_gate() {
+        let diags = sample();
+        assert_eq!(count_severity(&diags, Severity::Error), 1);
+        assert_eq!(count_severity(&diags, Severity::Warning), 1);
+        let err = ensure_clean(diags).unwrap_err();
+        assert_eq!(err.diagnostics.len(), 2);
+        let msg = err.to_string();
+        assert!(msg.contains("SCH-CHUNK-DUP"), "{msg}");
+        // warnings alone pass the gate
+        let warn_only = vec![sample().pop().unwrap()];
+        assert!(ensure_clean(warn_only).is_ok());
+        assert!(ensure_clean(Vec::new()).is_ok());
+    }
+
+    #[test]
+    fn human_rendering_is_one_line_per_diagnostic() {
+        let text = render_human(&sample());
+        assert!(text.contains("error[SCH-CHUNK-DUP]"), "{text}");
+        assert!(text.contains("warning[STR-BITMAP-WASTE]"), "{text}");
+        assert!(text.contains("schedule: wave 3, slot 2"), "{text}");
+        assert!(text.ends_with("1 error(s), 1 warning(s)\n"), "{text}");
+    }
+
+    #[test]
+    fn json_rendering_parses_back() {
+        use crate::util::json::Json;
+        let text = render_json(&sample());
+        let j = Json::parse(&text).expect("diagnostics JSON parses");
+        assert_eq!(j.get("errors").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("warnings").and_then(|v| v.as_usize()), Some(1));
+        let arr = j.get("diagnostics").and_then(|v| v.as_arr()).expect("array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("code").and_then(|v| v.as_str()), Some("SCH-CHUNK-DUP"));
+        assert_eq!(arr[1].get("severity").and_then(|v| v.as_str()), Some("warning"));
+    }
+
+    #[test]
+    fn empty_report_is_clean() {
+        assert_eq!(render_human(&[]), "0 error(s), 0 warning(s)\n");
+        let j = crate::util::json::Json::parse(&render_json(&[])).unwrap();
+        assert_eq!(j.get("errors").and_then(|v| v.as_usize()), Some(0));
+    }
+}

@@ -1,0 +1,593 @@
+//! ScheduleAudit — structural invariants of
+//! [`SpgemmSchedule`](crate::rir::schedule::SpgemmSchedule) and
+//! [`BatchSchedule`](crate::rir::schedule::BatchSchedule).
+//!
+//! The audit recomputes what the scheduler promises from the source
+//! matrices alone and diffs the schedule against it: every `(row, chunk)`
+//! of the CSR assigned exactly once with its canonical extent, at most
+//! `pipelines` assignments per wave, every wave's `b_rows` the sorted
+//! deduped union of its A columns, the A/B word accounting, the per-wave
+//! CPU trace contract from `overlap`, and — for batches — job-tag
+//! partitioning, run/segment mirroring and the `decompose()` order
+//! invariant. Pure: no simulation, no mutation, total over corrupt input
+//! (a malformed extent is reported, never sliced).
+
+use std::collections::HashSet;
+
+use crate::rir::schedule::{row_stream_words, Assignment, BatchSchedule, SpgemmSchedule};
+use crate::sparse::{Csr, Idx};
+
+use super::{codes, Diagnostic, Pass};
+
+fn err(code: &'static str, location: String, message: String) -> Diagnostic {
+    Diagnostic::error(Pass::Schedule, code, location, message)
+}
+
+fn warn(code: &'static str, location: String, message: String) -> Diagnostic {
+    Diagnostic::warning(Pass::Schedule, code, location, message)
+}
+
+/// Audit a single-job SpGEMM schedule against its source matrices.
+/// Returns every violation found (empty = clean).
+pub fn audit_spgemm_schedule(a: &Csr, b: &Csr, s: &SpgemmSchedule) -> Vec<Diagnostic> {
+    let mut d = Vec::new();
+    if s.pipelines == 0 || s.bundle_size == 0 {
+        d.push(err(
+            codes::SCH_CONFIG,
+            "schedule".into(),
+            format!(
+                "unusable geometry: pipelines = {}, bundle_size = {}",
+                s.pipelines, s.bundle_size
+            ),
+        ));
+        return d;
+    }
+    if a.ncols != b.nrows {
+        d.push(err(
+            codes::SCH_CONFIG,
+            "schedule".into(),
+            format!(
+                "inner dimensions disagree: A is {}x{}, B is {}x{}",
+                a.nrows, a.ncols, b.nrows, b.ncols
+            ),
+        ));
+        return d;
+    }
+
+    let bs = s.bundle_size;
+    let mut seen: HashSet<(Idx, u32)> = HashSet::new();
+    let mut a_words = 0usize;
+    let mut b_words = 0usize;
+    // word accounting is only meaningful while every extent priced so far
+    // was valid; a bad extent suppresses the SCH-WORDS comparison
+    let mut words_ok = true;
+
+    for (wid, wave) in s.waves.iter().enumerate() {
+        if wave.assignments.is_empty() {
+            d.push(warn(
+                codes::SCH_WAVE_EMPTY,
+                format!("wave {wid}"),
+                "wave has no assignments (the scheduler never emits one)".into(),
+            ));
+        }
+        if wave.assignments.len() > s.pipelines {
+            d.push(err(
+                codes::SCH_WAVE_OVERFULL,
+                format!("wave {wid}"),
+                format!(
+                    "{} assignments exceed the design's {} pipelines",
+                    wave.assignments.len(),
+                    s.pipelines
+                ),
+            ));
+        }
+        let mut union: Vec<Idx> = Vec::new();
+        for (slot, asg) in wave.assignments.iter().enumerate() {
+            let loc = format!("wave {wid}, slot {slot}");
+            if !check_chunk(a, bs, asg, &loc, &mut d) {
+                words_ok = false;
+                continue;
+            }
+            if !seen.insert((asg.a_row, asg.chunk)) {
+                d.push(err(
+                    codes::SCH_CHUNK_DUP,
+                    loc,
+                    format!("chunk ({}, {}) is already assigned", asg.a_row, asg.chunk),
+                ));
+            }
+            a_words += 2 + 2 * asg.len;
+            union.extend_from_slice(asg.a_cols(a));
+        }
+        union.sort_unstable();
+        union.dedup();
+        if wave.b_rows != union {
+            d.push(err(
+                codes::SCH_B_ROWS,
+                format!("wave {wid}"),
+                format!(
+                    "b_rows is not the sorted deduped union of the wave's A columns \
+                     ({} stored vs {} expected entries)",
+                    wave.b_rows.len(),
+                    union.len()
+                ),
+            ));
+        }
+        for &r in &wave.b_rows {
+            if (r as usize) < b.nrows {
+                b_words += row_stream_words(b.row_nnz(r as usize), bs);
+            } else {
+                d.push(err(
+                    codes::SCH_B_ROWS,
+                    format!("wave {wid}"),
+                    format!("b_row {r} out of range for B with {} rows", b.nrows),
+                ));
+                words_ok = false;
+            }
+        }
+    }
+
+    coverage(
+        &mut d,
+        (0..a.nrows).map(|i| a.row_nnz(i).div_ceil(bs)),
+        |row, chunk| seen.contains(&(row as Idx, chunk as u32)),
+        "schedule",
+    );
+
+    if words_ok {
+        if s.a_words != a_words {
+            d.push(err(
+                codes::SCH_WORDS,
+                "schedule".into(),
+                format!("a_words = {} but the assignments account for {a_words}", s.a_words),
+            ));
+        }
+        if s.b_words != b_words {
+            d.push(err(
+                codes::SCH_WORDS,
+                "schedule".into(),
+                format!("b_words = {} but the wave B-streams account for {b_words}", s.b_words),
+            ));
+        }
+    }
+
+    trace_contract(&mut d, s.prep_cpu_s, &s.wave_cpu_s, s.waves.len());
+    d
+}
+
+/// Audit a multi-tenant batch schedule against its job list.
+pub fn audit_batch_schedule(jobs: &[(Csr, Csr)], s: &BatchSchedule) -> Vec<Diagnostic> {
+    let mut d = Vec::new();
+    if s.pipelines == 0 || s.bundle_size == 0 {
+        d.push(err(
+            codes::SCH_CONFIG,
+            "batch schedule".into(),
+            format!(
+                "unusable geometry: pipelines = {}, bundle_size = {}",
+                s.pipelines, s.bundle_size
+            ),
+        ));
+        return d;
+    }
+    if s.n_jobs != jobs.len() {
+        d.push(err(
+            codes::SCH_CONFIG,
+            "batch schedule".into(),
+            format!("schedule is for {} job(s) but {} were provided", s.n_jobs, jobs.len()),
+        ));
+        return d;
+    }
+    for (j, (a, b)) in jobs.iter().enumerate() {
+        if a.ncols != b.nrows {
+            d.push(err(
+                codes::SCH_CONFIG,
+                format!("job {j}"),
+                format!(
+                    "inner dimensions disagree: A is {}x{}, B is {}x{}",
+                    a.nrows, a.ncols, b.nrows, b.ncols
+                ),
+            ));
+            return d;
+        }
+    }
+
+    let bs = s.bundle_size;
+    let mut seen: HashSet<(u32, Idx, u32)> = HashSet::new();
+    let mut per_job: Vec<Vec<Assignment>> = vec![Vec::new(); s.n_jobs];
+    let mut a_words = 0usize;
+    let mut b_words = 0usize;
+    let mut words_ok = true;
+
+    for (wid, wave) in s.waves.iter().enumerate() {
+        if wave.assignments.is_empty() {
+            d.push(warn(
+                codes::SCH_WAVE_EMPTY,
+                format!("wave {wid}"),
+                "wave has no assignments (the scheduler never emits one)".into(),
+            ));
+        }
+        if wave.assignments.len() > s.pipelines {
+            d.push(err(
+                codes::SCH_WAVE_OVERFULL,
+                format!("wave {wid}"),
+                format!(
+                    "{} assignments exceed the design's {} pipelines",
+                    wave.assignments.len(),
+                    s.pipelines
+                ),
+            ));
+        }
+        // per-assignment checks; collect the wave's valid-tag runs
+        let mut runs: Vec<(u32, Vec<&Assignment>)> = Vec::new();
+        for (slot, (tag, asg)) in wave.assignments.iter().enumerate() {
+            let loc = format!("wave {wid}, slot {slot}");
+            if *tag as usize >= s.n_jobs {
+                d.push(err(
+                    codes::SCH_JOB_TAG,
+                    loc,
+                    format!("job tag {tag} out of range for {} job(s)", s.n_jobs),
+                ));
+                words_ok = false;
+                continue;
+            }
+            match runs.last_mut() {
+                Some((t, run)) if *t == *tag => run.push(asg),
+                _ => runs.push((*tag, vec![asg])),
+            }
+            let a = &jobs[*tag as usize].0;
+            if !check_chunk(a, bs, asg, &loc, &mut d) {
+                words_ok = false;
+                continue;
+            }
+            if !seen.insert((*tag, asg.a_row, asg.chunk)) {
+                d.push(err(
+                    codes::SCH_CHUNK_DUP,
+                    loc,
+                    format!(
+                        "job {} chunk ({}, {}) is already assigned",
+                        tag, asg.a_row, asg.chunk
+                    ),
+                ));
+            }
+            a_words += 2 + 2 * asg.len;
+            per_job[*tag as usize].push(*asg);
+        }
+        // assignments are job-major, so runs must be job-ascending —
+        // a job split across non-adjacent runs breaks decompose()
+        if runs.windows(2).any(|w| w[0].0 >= w[1].0) {
+            d.push(err(
+                codes::SCH_JOB_ORDER,
+                format!("wave {wid}"),
+                "job runs are not in ascending job-major order".into(),
+            ));
+        }
+        // segments mirror the run order exactly
+        if wave.segments.len() != runs.len() {
+            d.push(err(
+                codes::SCH_SEGMENT,
+                format!("wave {wid}"),
+                format!(
+                    "{} B-stream segment(s) for {} job run(s)",
+                    wave.segments.len(),
+                    runs.len()
+                ),
+            ));
+            words_ok = false;
+            continue;
+        }
+        for (sid, (seg, (tag, run))) in wave.segments.iter().zip(&runs).enumerate() {
+            let loc = format!("wave {wid}, segment {sid}");
+            if seg.job != *tag {
+                d.push(err(
+                    codes::SCH_SEGMENT,
+                    loc,
+                    format!("segment is for job {} but the run is job {tag}", seg.job),
+                ));
+                words_ok = false;
+                continue;
+            }
+            let (a, b) = &jobs[*tag as usize];
+            let mut union: Vec<Idx> = Vec::new();
+            for asg in run {
+                if asg.start + asg.len <= a.cols.len() {
+                    union.extend_from_slice(asg.a_cols(a));
+                }
+            }
+            union.sort_unstable();
+            union.dedup();
+            if seg.b_rows != union {
+                d.push(err(
+                    codes::SCH_B_ROWS,
+                    loc.clone(),
+                    format!(
+                        "segment b_rows is not the sorted deduped union of job {}'s \
+                         A columns this wave ({} stored vs {} expected entries)",
+                        tag,
+                        seg.b_rows.len(),
+                        union.len()
+                    ),
+                ));
+            }
+            for &r in &seg.b_rows {
+                if (r as usize) < b.nrows {
+                    b_words += row_stream_words(b.row_nnz(r as usize), bs);
+                } else {
+                    d.push(err(
+                        codes::SCH_B_ROWS,
+                        loc.clone(),
+                        format!("b_row {r} out of range for job {tag}'s B with {} rows", b.nrows),
+                    ));
+                    words_ok = false;
+                }
+            }
+        }
+    }
+
+    for (j, (a, _)) in jobs.iter().enumerate() {
+        coverage(
+            &mut d,
+            (0..a.nrows).map(|i| a.row_nnz(i).div_ceil(bs)),
+            |row, chunk| seen.contains(&(j as u32, row as Idx, chunk as u32)),
+            &format!("job {j}"),
+        );
+        // decompose() invariant: extracting the job's chunks in wave order
+        // must yield its canonical single-job chunk sequence; only check
+        // the order when the chunk multiset is right (coverage/duplication
+        // problems are already reported above)
+        let canonical = canonical_chunks(a, bs);
+        let got: Vec<(Idx, u32)> = per_job[j].iter().map(|c| (c.a_row, c.chunk)).collect();
+        if got != canonical {
+            let mut got_sorted = got.clone();
+            got_sorted.sort_unstable();
+            if got_sorted == canonical {
+                d.push(err(
+                    codes::SCH_JOB_ORDER,
+                    format!("job {j}"),
+                    "chunks extracted in wave order are not in the single-job \
+                     schedule order (decompose() would replay out of order)"
+                        .into(),
+                ));
+            }
+        }
+    }
+
+    if words_ok {
+        if s.a_words != a_words {
+            d.push(err(
+                codes::SCH_WORDS,
+                "batch schedule".into(),
+                format!("a_words = {} but the assignments account for {a_words}", s.a_words),
+            ));
+        }
+        if s.b_words != b_words {
+            d.push(err(
+                codes::SCH_WORDS,
+                "batch schedule".into(),
+                format!("b_words = {} but the wave segments account for {b_words}", s.b_words),
+            ));
+        }
+    }
+
+    trace_contract(&mut d, s.prep_cpu_s, &s.wave_cpu_s, s.waves.len());
+    d
+}
+
+/// Validate one assignment against its source CSR; returns true when the
+/// extent is canonical (safe to slice, price and union).
+fn check_chunk(
+    a: &Csr,
+    bs: usize,
+    asg: &Assignment,
+    loc: &str,
+    d: &mut Vec<Diagnostic>,
+) -> bool {
+    let row = asg.a_row as usize;
+    if row >= a.nrows {
+        d.push(err(
+            codes::SCH_CHUNK_RANGE,
+            loc.into(),
+            format!("a_row {} out of range for A with {} rows", asg.a_row, a.nrows),
+        ));
+        return false;
+    }
+    if asg.len == 0 || asg.len > bs {
+        d.push(err(
+            codes::SCH_CHUNK_LEN,
+            loc.into(),
+            format!("chunk len {} outside 1..={bs}", asg.len),
+        ));
+        return false;
+    }
+    let nnz = a.row_nnz(row);
+    let nchunks = nnz.div_ceil(bs);
+    let ci = asg.chunk as usize;
+    if ci >= nchunks {
+        d.push(err(
+            codes::SCH_CHUNK_RANGE,
+            loc.into(),
+            format!("row {row} has {nchunks} chunk(s) but the ordinal is {ci}"),
+        ));
+        return false;
+    }
+    let exp_start = a.row_ptr[row] + ci * bs;
+    let exp_len = ((ci + 1) * bs).min(nnz) - ci * bs;
+    if asg.start != exp_start || asg.len != exp_len {
+        d.push(err(
+            codes::SCH_CHUNK_RANGE,
+            loc.into(),
+            format!(
+                "extent (start {}, len {}) does not match the CSR's \
+                 (start {exp_start}, len {exp_len}) for (row {row}, chunk {ci})",
+                asg.start, asg.len
+            ),
+        ));
+        return false;
+    }
+    if asg.last_chunk != (ci + 1 == nchunks) {
+        d.push(err(
+            codes::SCH_LAST_CHUNK,
+            loc.into(),
+            format!(
+                "last_chunk = {} but chunk {ci} of {nchunks} {} the row's final chunk",
+                asg.last_chunk,
+                if ci + 1 == nchunks { "is" } else { "is not" }
+            ),
+        ));
+        // the extent itself is still canonical — keep it in the accounting
+    }
+    true
+}
+
+/// The canonical `(row, chunk)` enumeration of a CSR at a bundle size —
+/// exactly the scheduler's prologue order.
+fn canonical_chunks(a: &Csr, bs: usize) -> Vec<(Idx, u32)> {
+    let mut out = Vec::new();
+    for i in 0..a.nrows {
+        for ci in 0..a.row_nnz(i).div_ceil(bs) {
+            out.push((i as Idx, ci as u32));
+        }
+    }
+    out
+}
+
+/// Report uncovered `(row, chunk)` pairs as one summary diagnostic (a
+/// wholesale corruption would otherwise flood the report).
+fn coverage(
+    d: &mut Vec<Diagnostic>,
+    chunks_per_row: impl Iterator<Item = usize>,
+    covered: impl Fn(usize, usize) -> bool,
+    what: &str,
+) {
+    let mut missing = 0usize;
+    let mut first: Option<(usize, usize)> = None;
+    for (row, nchunks) in chunks_per_row.enumerate() {
+        for chunk in 0..nchunks {
+            if !covered(row, chunk) {
+                missing += 1;
+                first.get_or_insert((row, chunk));
+            }
+        }
+    }
+    if let Some((row, chunk)) = first {
+        d.push(err(
+            codes::SCH_COVERAGE,
+            what.into(),
+            format!(
+                "{missing} (row, chunk) pair(s) of A are assigned to no wave \
+                 (first missing: ({row}, {chunk}))"
+            ),
+        ));
+    }
+}
+
+/// The `overlap` contract: one finite non-negative CPU cost per wave.
+fn trace_contract(d: &mut Vec<Diagnostic>, prep_cpu_s: f64, wave_cpu_s: &[f64], n_waves: usize) {
+    if wave_cpu_s.len() != n_waves {
+        d.push(err(
+            codes::SCH_TRACE,
+            "cpu trace".into(),
+            format!("{} wave_cpu_s entries for {n_waves} wave(s)", wave_cpu_s.len()),
+        ));
+    }
+    if !prep_cpu_s.is_finite() || prep_cpu_s < 0.0 {
+        d.push(err(
+            codes::SCH_TRACE,
+            "cpu trace".into(),
+            format!("prep_cpu_s = {prep_cpu_s} is not a finite non-negative duration"),
+        ));
+    }
+    for (i, &t) in wave_cpu_s.iter().enumerate() {
+        if !t.is_finite() || t < 0.0 {
+            d.push(err(
+                codes::SCH_TRACE,
+                format!("cpu trace, wave {i}"),
+                format!("wave_cpu_s = {t} is not a finite non-negative duration"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rir::schedule::{schedule_spgemm, schedule_spgemm_batch};
+    use crate::sparse::gen;
+
+    fn mk(n: usize, nnz: usize, seed: u64) -> Csr {
+        gen::random_uniform(n, n, nnz, seed)
+    }
+
+    #[test]
+    fn clean_on_generated_schedules() {
+        for (family, n, nnz) in [
+            (gen::Family::RandomUniform, 60, 900),
+            (gen::Family::PowerLaw, 80, 1600),
+            (gen::Family::BandedFem, 50, 400),
+        ] {
+            let a = gen::generate(family, n, nnz, 3);
+            let b = gen::generate(family, n, nnz, 4);
+            for (p, bs) in [(1usize, 32usize), (8, 16), (64, 8)] {
+                let s = schedule_spgemm(&a, &b, p, bs);
+                let diags = audit_spgemm_schedule(&a, &b, &s);
+                assert!(diags.is_empty(), "{family:?} p={p} bs={bs}: {diags:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn clean_on_empty_and_rectangular_inputs() {
+        let a = Csr::new(10, 20);
+        let b = Csr::new(20, 5);
+        let s = schedule_spgemm(&a, &b, 4, 32);
+        assert!(audit_spgemm_schedule(&a, &b, &s).is_empty());
+        // one long row split across several chunks and waves
+        let a = gen::random_uniform(1, 300, 150, 9);
+        let b = mk(300, 900, 10);
+        let s = schedule_spgemm(&a, &b, 2, 32);
+        assert!(audit_spgemm_schedule(&a, &b, &s).is_empty());
+    }
+
+    #[test]
+    fn clean_on_batch_schedules_including_empty_jobs() {
+        let mut jobs: Vec<(Csr, Csr)> = (0..4)
+            .map(|j| (mk(30, 200, 20 + j), mk(30, 200, 30 + j)))
+            .collect();
+        jobs.push((Csr::new(5, 7), Csr::new(7, 3)));
+        for p in [4usize, 32, 128] {
+            let s = schedule_spgemm_batch(&jobs, p, 16);
+            let diags = audit_batch_schedule(&jobs, &s);
+            assert!(diags.is_empty(), "p={p}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn flags_schedule_against_wrong_matrix() {
+        // auditing job 0's schedule against job 1's matrices must light up:
+        // the chunk extents and unions cannot match a different CSR
+        let a0 = mk(40, 500, 1);
+        let b0 = mk(40, 500, 2);
+        let a1 = mk(40, 500, 5);
+        let s = schedule_spgemm(&a0, &b0, 8, 16);
+        let diags = audit_spgemm_schedule(&a1, &b0, &s);
+        assert!(!diags.is_empty(), "cross-matrix audit must not be clean");
+    }
+
+    #[test]
+    fn flags_zero_geometry() {
+        let a = mk(10, 40, 1);
+        let mut s = schedule_spgemm(&a, &a, 4, 16);
+        s.pipelines = 0;
+        let diags = audit_spgemm_schedule(&a, &a, &s);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, codes::SCH_CONFIG);
+    }
+
+    #[test]
+    fn flags_nonfinite_trace() {
+        let a = mk(10, 60, 2);
+        let mut s = schedule_spgemm(&a, &a, 4, 16);
+        s.wave_cpu_s[0] = f64::NAN;
+        let diags = audit_spgemm_schedule(&a, &a, &s);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, codes::SCH_TRACE);
+    }
+}

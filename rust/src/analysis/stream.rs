@@ -1,0 +1,293 @@
+//! StreamAudit — wire-level verification of serialized RIR words.
+//!
+//! Walks a stream with the same [`crate::rir::layout`] extent and section
+//! walkers the decoders use, but never decodes a value: it checks flag
+//! legality, CRC trailers, sectioned-payload word accounting against the
+//! canonical `encoded_*_words` formulas, in-bundle index order and
+//! end-of-stream marking. Mid-stream `END_OF_STREAM` flags are **legal**
+//! — the job encoder terminates every job segment with one — and a stream
+//! with no terminator at all is only a warning (wave-level row streams
+//! concatenate and deliberately carry none).
+//!
+//! Total over arbitrary input — this is the `lint_stream` fuzz target's
+//! entry point, so every path must return diagnostics, never panic.
+
+use crate::rir::layout::{
+    bitmap_index_words, bundle_extent, expand_sectioned_payload, fx_value_words, verify_bundle_crc,
+    BundleExtent,
+};
+
+use super::{codes, Diagnostic, Pass};
+
+fn err(code: &'static str, location: String, message: String) -> Diagnostic {
+    Diagnostic::error(Pass::Stream, code, location, message)
+}
+
+fn warn(code: &'static str, location: String, message: String) -> Diagnostic {
+    Diagnostic::warning(Pass::Stream, code, location, message)
+}
+
+/// Audit a serialized RIR stream (any encoder's output, or arbitrary
+/// words). Returns every violation found; an empty stream is clean.
+pub fn audit_stream(words: &[u32]) -> Vec<Diagnostic> {
+    let mut d = Vec::new();
+    let mut p = 0usize;
+    let mut bundle = 0usize;
+    let mut segment_terminators = 0usize;
+    let mut last_flags = None;
+    while p < words.len() {
+        let ext = match bundle_extent(words, p, bundle) {
+            Ok(e) => e,
+            Err(e) => {
+                // sizing failed — there is no way to resynchronize, so
+                // report the cut and stop
+                let loc = format!("bundle {bundle} (word {p})");
+                d.push(err(codes::STR_TRUNCATED, loc, e.to_string()));
+                return d;
+            }
+        };
+        let loc = format!("bundle {bundle}");
+        if let Err(e) = verify_bundle_crc(words, p, &ext, bundle) {
+            d.push(err(codes::STR_CRC, loc.clone(), e.to_string()));
+        }
+        check_flags(&mut d, &ext, &loc);
+        if !ext.flags.metadata_only() {
+            check_data_payload(&mut d, &words[p + 2..p + 2 + ext.payload_words], &ext, bundle);
+        }
+        p += ext.total_words;
+        bundle += 1;
+        if ext.flags.end_of_stream() && p < words.len() {
+            segment_terminators += 1; // legal: a job-segment boundary
+        }
+        last_flags = Some(ext.flags);
+    }
+    if let Some(f) = last_flags {
+        if !f.end_of_stream() {
+            if segment_terminators > 0 {
+                d.push(err(
+                    codes::STR_EOS,
+                    format!("bundle {}", bundle - 1),
+                    format!(
+                        "stream carries {segment_terminators} segment terminator(s) but its \
+                         final bundle is not END_OF_STREAM"
+                    ),
+                ));
+            } else {
+                d.push(warn(
+                    codes::STR_EOS,
+                    format!("bundle {}", bundle - 1),
+                    "no bundle carries END_OF_STREAM (legal only for wave-level row streams)"
+                        .into(),
+                ));
+            }
+        }
+    }
+    d
+}
+
+/// Flag-combination legality: schedule (metadata-only) bundles carry raw
+/// triples — compression or panel flags on them are corruption — and the
+/// compression flags are meaningless on an empty bundle (the encoder's
+/// negotiation never sets them there).
+fn check_flags(d: &mut Vec<Diagnostic>, ext: &BundleExtent, loc: &str) {
+    let f = ext.flags;
+    if f.metadata_only() && (f.bitmap() || f.fixed_point() || f.dense_panel()) {
+        d.push(err(
+            codes::STR_FLAGS,
+            loc.into(),
+            format!("metadata-only bundle carries data-bundle flags ({:#04x})", f.0),
+        ));
+    }
+    if !f.metadata_only() && ext.count == 0 && f.sectioned() {
+        d.push(err(
+            codes::STR_FLAGS,
+            loc.into(),
+            format!("compression flags ({:#04x}) on an empty bundle", f.0),
+        ));
+    }
+}
+
+/// Data-bundle payload checks: sectioned bundles must expand cleanly, the
+/// bitmap index section must match the canonical word accounting for the
+/// indices it encodes (and actually pay for itself), the fixed-point
+/// scale must be finite, and distinct indices should be ascending.
+fn check_data_payload(
+    d: &mut Vec<Diagnostic>,
+    payload: &[u32],
+    ext: &BundleExtent,
+    bundle: usize,
+) {
+    let f = ext.flags;
+    let count = ext.count;
+    let loc = format!("bundle {bundle}");
+    let cols: Vec<u32> = if f.sectioned() {
+        if count == 0 {
+            return; // already reported by check_flags
+        }
+        let pairs = match expand_sectioned_payload(payload, count, f, bundle) {
+            Ok(pairs) => pairs,
+            Err(e) => {
+                d.push(err(codes::STR_BITMAP, loc, e.to_string()));
+                return;
+            }
+        };
+        let cols: Vec<u32> = pairs.iter().step_by(2).copied().collect();
+        let val_words = if f.fixed_point() { fx_value_words(count) } else { count };
+        if f.bitmap() {
+            let idx_words = ext.payload_words - val_words;
+            // the decoded indices are ascending and non-empty, so the
+            // canonical accounting always exists for them
+            match bitmap_index_words(&cols) {
+                Some(canon) if canon == idx_words => {}
+                canon => d.push(err(
+                    codes::STR_SECTION_WORDS,
+                    loc.clone(),
+                    format!(
+                        "bitmap index section is {idx_words} word(s) but the canonical \
+                         accounting for its {count} indices is {canon:?}"
+                    ),
+                )),
+            }
+            if idx_words >= count {
+                d.push(warn(
+                    codes::STR_BITMAP_WASTE,
+                    loc.clone(),
+                    format!(
+                        "bitmap index section ({idx_words} word(s)) does not beat the \
+                         {count} raw index words it replaces — the encoder's negotiation \
+                         never picks it"
+                    ),
+                ));
+            }
+        }
+        if f.fixed_point() {
+            let scale = f32::from_bits(payload[ext.payload_words - val_words]);
+            if !scale.is_finite() {
+                d.push(err(
+                    codes::STR_FX_SCALE,
+                    loc.clone(),
+                    format!("fixed-point scale word decodes to {scale}"),
+                ));
+            }
+        }
+        cols
+    } else {
+        payload.iter().step_by(2).copied().collect()
+    };
+    if cols.windows(2).any(|w| w[0] >= w[1]) {
+        d.push(warn(
+            codes::STR_INDEX_ORDER,
+            format!("bundle {bundle}"),
+            "distinct indices are not strictly ascending within the bundle".into(),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rir::layout::{
+        serialize_stream, serialize_stream_checksummed, serialize_stream_encoded, StreamEncoding,
+    };
+    use crate::rir::{BundleFlags, BundleStream};
+    use crate::sparse::gen;
+
+    fn stream(seed: u64) -> BundleStream {
+        let a = gen::random_uniform(60, 60, 900, seed);
+        BundleStream::from_csr(&a, 32)
+    }
+
+    #[test]
+    fn clean_on_every_encoder_output() {
+        let s = stream(1);
+        for enc in [
+            StreamEncoding::Raw,
+            StreamEncoding::Bitmap,
+            StreamEncoding::Fx,
+            StreamEncoding::BitmapFx,
+        ] {
+            for checksummed in [false, true] {
+                let words = serialize_stream_encoded(&s, enc, checksummed);
+                let diags = audit_stream(&words);
+                assert!(diags.is_empty(), "{enc} checksummed={checksummed}: {diags:?}");
+            }
+        }
+        assert!(audit_stream(&serialize_stream(&s)).is_empty());
+        assert!(audit_stream(&serialize_stream_checksummed(&s)).is_empty());
+        assert!(audit_stream(&[]).is_empty(), "empty stream is clean");
+    }
+
+    #[test]
+    fn clean_on_banded_bitmap_wins() {
+        // banded rows are where the bitmap section actually engages
+        let a = gen::banded_fem(80, 1200, 3);
+        let s = BundleStream::from_csr(&a, 32);
+        let words = serialize_stream_encoded(&s, StreamEncoding::BitmapFx, true);
+        let diags = audit_stream(&words);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn clean_on_job_segmented_streams_with_mid_stream_eos() {
+        let a = gen::random_uniform(20, 20, 150, 5);
+        let b = gen::random_uniform(25, 25, 200, 6);
+        let mut s = BundleStream::new();
+        s.encode_csr_jobs(&[&a, &b], 16);
+        let words = serialize_stream(&s);
+        let diags = audit_stream(&words);
+        assert!(diags.is_empty(), "job segment terminators are legal: {diags:?}");
+    }
+
+    #[test]
+    fn wave_row_streams_warn_about_missing_terminator_only() {
+        let a = gen::random_uniform(30, 30, 250, 7);
+        let mut s = BundleStream::new();
+        s.encode_csr_rows(&a, &[0, 3, 7], 16);
+        let diags = audit_stream(&serialize_stream(&s));
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, codes::STR_EOS);
+        assert_eq!(diags[0].severity, crate::analysis::Severity::Warning);
+    }
+
+    #[test]
+    fn truncation_is_reported_and_stops_the_walk() {
+        let words = serialize_stream(&stream(2));
+        let cut = &words[..words.len() - 1];
+        let diags = audit_stream(cut);
+        assert!(diags.iter().any(|d| d.code == codes::STR_TRUNCATED), "{diags:?}");
+    }
+
+    #[test]
+    fn crc_flip_is_reported() {
+        let mut words = serialize_stream_checksummed(&stream(3));
+        words[2] ^= 1; // first payload word of bundle 0
+        let diags = audit_stream(&words);
+        assert!(diags.iter().any(|d| d.code == codes::STR_CRC), "{diags:?}");
+    }
+
+    #[test]
+    fn metadata_only_with_compression_flags_is_reported() {
+        // hand-built: count = 1, METADATA_ONLY|BITMAP|END_OF_STREAM, one
+        // raw triple as payload
+        let flags = BundleFlags::METADATA_ONLY | BundleFlags::BITMAP | BundleFlags::END_OF_STREAM;
+        let words = [(1u32 << 8) | flags as u32, 0, 7, 10, 20];
+        let diags = audit_stream(&words);
+        assert!(diags.iter().any(|d| d.code == codes::STR_FLAGS), "{diags:?}");
+    }
+
+    #[test]
+    fn arbitrary_words_never_panic() {
+        // a few shapes that historically trip walkers; the fuzz target
+        // explores much further
+        let cases: Vec<Vec<u32>> = vec![
+            vec![u32::MAX],
+            vec![u32::MAX; 8],
+            vec![(3 << 8) | 0x20, 0, 0, u32::MAX, 1, 2, 3],
+            vec![(2 << 8) | 0x60, 9, 5, 1, 0x8000_0001, 0xffff_ffff],
+            vec![0; 16],
+        ];
+        for words in cases {
+            let _ = audit_stream(&words);
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! WaveCostAudit — static hazards in a [`WaveCost`] sequence.
+//!
+//! The engine ([`crate::fpga::engine`]) prices whatever sequence it is
+//! handed; a malformed one either aborts it (over-capacity occupancy,
+//! word counts past the byte-accounting range) or silently prices
+//! nonsense (a RAW edge with no producer writeback, a `Load` smuggling
+//! compute). This pass rejects those shapes *before* execution, then —
+//! only on an error-free sequence — cross-checks the engine's own depth
+//! ledger (`cycles(d) + prefetch_hidden_cycles(d) == cycles(1)`, with
+//! depth-invariant traffic/flops/waves) by executing the sequence at
+//! depths 1 and 2. The ledger run never fires on shipped simulators; it
+//! exists so a future engine regression surfaces as a typed
+//! [`Diagnostic`] instead of a skewed benchmark.
+
+use crate::fpga::engine::{execute_waves_at_depth, Occupancy, WaveKind};
+use crate::fpga::{FpgaConfig, WaveCost};
+use crate::rir::layout::WORD_BYTES;
+
+use super::{codes, count_severity, Diagnostic, Pass, Severity};
+
+fn err(code: &'static str, location: String, message: String) -> Diagnostic {
+    Diagnostic::error(Pass::WaveCost, code, location, message)
+}
+
+fn warn(code: &'static str, location: String, message: String) -> Diagnostic {
+    Diagnostic::warning(Pass::WaveCost, code, location, message)
+}
+
+/// Largest per-item word count the engine can widen to bytes without
+/// leaving `u64`.
+const WORD_LIMIT: u64 = u64::MAX / WORD_BYTES as u64;
+
+/// Audit a wave-cost sequence against `cfg`. Returns every violation
+/// found; an empty sequence is clean.
+pub fn audit_wave_costs(costs: &[WaveCost], cfg: &FpgaConfig) -> Vec<Diagnostic> {
+    let mut d = Vec::new();
+    if let Err(e) = cfg.validate() {
+        d.push(err(codes::WAV_CONFIG, "config".into(), e.to_string()));
+        return d;
+    }
+    let p = cfg.pipelines as u64;
+    for (k, c) in costs.iter().enumerate() {
+        let loc = format!("item {k}");
+        if let Occupancy::ActivePipelines(active) = c.occupancy {
+            if active > p {
+                d.push(err(
+                    codes::WAV_OVERFULL,
+                    loc.clone(),
+                    format!("{active} active pipelines on a {p}-pipeline design"),
+                ));
+            }
+        }
+        if c.stream_words > WORD_LIMIT || c.writeback_words > WORD_LIMIT {
+            d.push(err(
+                codes::WAV_WORDS_OVERFLOW,
+                loc.clone(),
+                format!(
+                    "stream ({}) or writeback ({}) word count exceeds the engine's \
+                     byte-accounting range",
+                    c.stream_words, c.writeback_words
+                ),
+            ));
+        }
+        if c.setup_cycles.checked_add(c.compute_cycles).is_none() {
+            d.push(err(
+                codes::WAV_WORDS_OVERFLOW,
+                loc.clone(),
+                format!(
+                    "setup ({}) + compute ({}) cycles overflow the serial-cost sum",
+                    c.setup_cycles, c.compute_cycles
+                ),
+            ));
+        }
+        match c.kind {
+            WaveKind::Load => {
+                let busy = match c.occupancy {
+                    Occupancy::ActivePipelines(n) => n,
+                    Occupancy::Fixed { busy, .. } => busy,
+                };
+                if c.compute_cycles > 0 || c.flops > 0 || c.waves > 0 || busy > 0 {
+                    d.push(err(
+                        codes::WAV_LOAD,
+                        loc.clone(),
+                        format!(
+                            "pure Load carries compute ({} cycles, {} flops, {} waves, \
+                             {busy} busy pipelines)",
+                            c.compute_cycles, c.flops, c.waves
+                        ),
+                    ));
+                }
+            }
+            WaveKind::Compute => {
+                if c.waves == 0 {
+                    d.push(err(
+                        codes::WAV_ZERO_WAVES,
+                        loc.clone(),
+                        "compute item contributes zero scheduling waves".into(),
+                    ));
+                }
+                if c.compute_cycles > 0 && c.occupancy == Occupancy::ActivePipelines(0) {
+                    d.push(err(
+                        codes::WAV_ZERO_OCC,
+                        loc.clone(),
+                        format!(
+                            "{} compute cycles charged with zero active pipelines",
+                            c.compute_cycles
+                        ),
+                    ));
+                }
+            }
+        }
+        if c.dependent_stream && k > 0 && costs[k - 1].writeback_words == 0 {
+            d.push(err(
+                codes::WAV_DEP_NO_PRODUCER,
+                loc.clone(),
+                format!("dependent stream but item {} wrote nothing back to DRAM", k - 1),
+            ));
+        }
+        if cfg.dram_buffer_depth >= 2
+            && k > 0
+            && !c.dependent_stream
+            && c.stream_words > 0
+            && costs[k - 1].dependent_stream
+            && costs[k - 1].writeback_words > 0
+        {
+            d.push(warn(
+                codes::WAV_PREFETCH_RAW,
+                loc,
+                format!(
+                    "independent stream directly after dependent producer item {}: a depth-{} \
+                     channel prefetches it past the producer's writeback",
+                    k - 1,
+                    cfg.dram_buffer_depth
+                ),
+            ));
+        }
+    }
+    if count_severity(&d, Severity::Error) == 0 {
+        check_depth_ledger(costs, cfg, &mut d);
+    }
+    d
+}
+
+/// Re-execute the sequence at depths 1 and 2 and verify the engine's
+/// ledger law. Only called on an error-free sequence (the per-item checks
+/// above rule out every input the engine aborts on); aggregate-overflow
+/// shapes are rejected here first so the re-execution itself stays total.
+fn check_depth_ledger(costs: &[WaveCost], cfg: &FpgaConfig, d: &mut Vec<Diagnostic>) {
+    // aggregate guards: every counter the engine accumulates must fit u64
+    let totals = costs.iter().try_fold((0u64, 0u64, 0u64, 0u64, 0u64), |acc, c| {
+        let serial = acc.0.checked_add(c.serial_cycles(cfg))?;
+        let read = acc.1.checked_add(c.stream_words.checked_mul(WORD_BYTES as u64)?)?;
+        let written = acc.2.checked_add(c.writeback_words.checked_mul(WORD_BYTES as u64)?)?;
+        let flops = acc.3.checked_add(c.flops)?;
+        let waves = acc.4.checked_add(c.waves)?;
+        Some((serial, read, written, flops, waves))
+    });
+    let pipeline_cycles = totals.and_then(|t| (cfg.pipelines as u64).checked_mul(t.0));
+    if pipeline_cycles.is_none() {
+        d.push(err(
+            codes::WAV_WORDS_OVERFLOW,
+            "sequence".into(),
+            "aggregate cycle/traffic counters overflow u64 — the ledger cannot be checked".into(),
+        ));
+        return;
+    }
+    let d1 = execute_waves_at_depth(costs, cfg, 1);
+    let d2 = execute_waves_at_depth(costs, cfg, 2);
+    if d2.stats.cycles + d2.stats.prefetch_hidden_cycles != d1.stats.cycles {
+        d.push(err(
+            codes::WAV_LEDGER,
+            "sequence".into(),
+            format!(
+                "cycles(2) {} + hidden(2) {} != cycles(1) {}",
+                d2.stats.cycles, d2.stats.prefetch_hidden_cycles, d1.stats.cycles
+            ),
+        ));
+    }
+    if (d2.stats.bytes_read, d2.stats.bytes_written, d2.stats.flops, d2.stats.waves)
+        != (d1.stats.bytes_read, d1.stats.bytes_written, d1.stats.flops, d1.stats.waves)
+    {
+        d.push(err(
+            codes::WAV_LEDGER,
+            "sequence".into(),
+            "DRAM traffic, flops or waves vary with channel depth".into(),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::cholesky_sim::simulate_cholesky;
+    use crate::fpga::spgemm_sim::{simulate_spgemm, simulate_spgemm_batch, Style};
+    use crate::fpga::spmm_sim::simulate_spmm;
+    use crate::fpga::spmv_sim::simulate_spmv;
+    use crate::rir::schedule::{schedule_spgemm, schedule_spgemm_batch};
+    use crate::sparse::gen;
+    use crate::symbolic::CholeskySymbolic;
+
+    fn wave(compute: u64, active: u64) -> WaveCost {
+        WaveCost {
+            kind: WaveKind::Compute,
+            stream_words: 64,
+            setup_cycles: 2,
+            compute_cycles: compute,
+            writeback_words: 8,
+            dependent_stream: false,
+            occupancy: Occupancy::ActivePipelines(active),
+            flops: 10,
+            waves: 1,
+        }
+    }
+
+    #[test]
+    fn clean_on_every_simulator_cost_sequence() {
+        let a = gen::random_uniform(120, 120, 1600, 3);
+        let b = gen::random_uniform(120, 120, 1600, 4);
+        for cfg in [FpgaConfig::reap32_spgemm(), FpgaConfig::reap64_spgemm()] {
+            let s = schedule_spgemm(&a, &b, cfg.pipelines, cfg.bundle_size);
+            let gemm = simulate_spgemm(&a, &b, &s, &cfg, Style::HandCoded);
+            assert!(audit_wave_costs(&gemm.costs, &cfg).is_empty(), "{}: spgemm", cfg.name);
+            let spmv = simulate_spmv(&a, &s, &cfg, Style::HandCoded);
+            assert!(audit_wave_costs(&spmv.costs, &cfg).is_empty(), "{}: spmv", cfg.name);
+            let spmm = simulate_spmm(&a, &s, &cfg, Style::HandCoded, 8);
+            assert!(audit_wave_costs(&spmm.costs, &cfg).is_empty(), "{}: spmm", cfg.name);
+        }
+        let jobs = vec![
+            (gen::random_uniform(40, 40, 300, 5), gen::random_uniform(40, 40, 300, 6)),
+            (gen::random_uniform(70, 70, 800, 7), gen::random_uniform(70, 70, 800, 8)),
+        ];
+        let cfg = FpgaConfig::reap64_spgemm();
+        let bs = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+        let batch = simulate_spgemm_batch(&jobs, &bs, &cfg, Style::HandCoded);
+        assert!(audit_wave_costs(&batch.costs, &cfg).is_empty(), "batch");
+    }
+
+    #[test]
+    fn clean_on_cholesky_including_column_zero_dependence() {
+        // every Cholesky column carries dependent_stream — the audit must
+        // not demand a producer for column 0, and columns > 0 always have
+        // one (nk >= 1 puts at least two writeback words on each column)
+        let spd = gen::spd(gen::Family::BandedFem, 80, 700, 5);
+        let sym = CholeskySymbolic::analyze(&spd.lower_triangle(), 32);
+        for cfg in [FpgaConfig::reap32_cholesky(), FpgaConfig::reap64_cholesky()] {
+            for style in [Style::HandCoded, Style::HlsPreprocessed, Style::HlsRaw] {
+                let r = simulate_cholesky(&sym, &cfg, style);
+                assert!(r.costs[0].dependent_stream, "premise: columns are dependent");
+                let diags = audit_wave_costs(&r.costs, &cfg);
+                assert!(diags.is_empty(), "{}: {diags:?}", cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_sequence_is_clean() {
+        assert!(audit_wave_costs(&[], &FpgaConfig::reap32_spgemm()).is_empty());
+    }
+
+    #[test]
+    fn invalid_config_is_the_only_diagnostic() {
+        let cfg = FpgaConfig { pipelines: 0, ..FpgaConfig::reap32_spgemm() };
+        let diags = audit_wave_costs(&[wave(10, 4)], &cfg);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, codes::WAV_CONFIG);
+    }
+
+    #[test]
+    fn overfull_wave_is_rejected_before_the_engine_would_abort() {
+        let cfg = FpgaConfig::reap32_spgemm();
+        let diags = audit_wave_costs(&[wave(10, cfg.pipelines as u64 + 1)], &cfg);
+        assert!(diags.iter().any(|d| d.code == codes::WAV_OVERFULL), "{diags:?}");
+    }
+
+    #[test]
+    fn word_count_overflow_is_rejected_before_the_engine_would_abort() {
+        let cfg = FpgaConfig::reap32_spgemm();
+        let mut c = wave(10, 4);
+        c.stream_words = u64::MAX / 2;
+        let diags = audit_wave_costs(&[c], &cfg);
+        assert!(diags.iter().any(|d| d.code == codes::WAV_WORDS_OVERFLOW), "{diags:?}");
+    }
+
+    #[test]
+    fn dependent_stream_needs_a_producer_writeback() {
+        let cfg = FpgaConfig::reap32_spgemm();
+        let mut dep = wave(10, 4);
+        dep.dependent_stream = true;
+        // item 0 may be dependent (Cholesky column 0) — clean
+        assert!(audit_wave_costs(&[dep, wave(10, 4)], &cfg).is_empty());
+        // a producer that wrote nothing back breaks the RAW edge
+        let diags = audit_wave_costs(&[WaveCost::load(100), dep], &cfg);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, codes::WAV_DEP_NO_PRODUCER);
+    }
+
+    #[test]
+    fn prefetch_past_raw_warns_only_at_depth_two() {
+        let mut dep = wave(10, 4);
+        dep.dependent_stream = true;
+        let costs = [dep, wave(10, 4)];
+        let serial = FpgaConfig { dram_buffer_depth: 1, ..FpgaConfig::reap32_spgemm() };
+        assert!(audit_wave_costs(&costs, &serial).is_empty());
+        let buffered = FpgaConfig { dram_buffer_depth: 2, ..FpgaConfig::reap32_spgemm() };
+        let diags = audit_wave_costs(&costs, &buffered);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, codes::WAV_PREFETCH_RAW);
+        assert_eq!(diags[0].severity, Severity::Warning);
+    }
+
+    #[test]
+    fn load_smuggling_compute_is_rejected() {
+        let cfg = FpgaConfig::reap32_spgemm();
+        let mut load = WaveCost::load(500);
+        load.flops = 1;
+        let diags = audit_wave_costs(&[load], &cfg);
+        assert!(diags.iter().any(|d| d.code == codes::WAV_LOAD), "{diags:?}");
+    }
+
+    #[test]
+    fn zero_wave_and_zero_occupancy_anomalies_are_rejected() {
+        let cfg = FpgaConfig::reap32_spgemm();
+        let mut no_waves = wave(10, 4);
+        no_waves.waves = 0;
+        let diags = audit_wave_costs(&[no_waves], &cfg);
+        assert!(diags.iter().any(|d| d.code == codes::WAV_ZERO_WAVES), "{diags:?}");
+        let ghost = wave(10, 0); // computes on zero pipelines
+        let diags = audit_wave_costs(&[ghost], &cfg);
+        assert!(diags.iter().any(|d| d.code == codes::WAV_ZERO_OCC), "{diags:?}");
+        // an idle compute wave (engine's 1-cycle retire) is legal
+        let mut idle = wave(0, 0);
+        idle.stream_words = 0;
+        idle.writeback_words = 0;
+        assert!(audit_wave_costs(&[idle], &cfg).is_empty());
+    }
+}

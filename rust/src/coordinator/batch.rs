@@ -58,6 +58,10 @@ pub struct ReapBatch {
     /// Seed for the per-wave fault draw
     /// ([`crate::reliability::draw_wave_faults`]); irrelevant at rate 0.
     pub fault_seed: u64,
+    /// Run the static audits ([`crate::analysis`]) on this run's schedule
+    /// and wave costs even in release builds, failing with a typed
+    /// [`crate::analysis::AnalysisError`]. Debug builds always audit.
+    pub strict: bool,
 }
 
 /// Outcome of one batched REAP SpGEMM execution.
@@ -98,7 +102,18 @@ pub struct ReapBatchReport {
 
 impl ReapBatch {
     pub fn new(cfg: FpgaConfig) -> Self {
-        ReapBatch { cfg, wave_fault_rate: 0.0, fault_seed: 0 }
+        ReapBatch { cfg, wave_fault_rate: 0.0, fault_seed: 0, strict: false }
+    }
+
+    /// Enable (or disable) release-build static audits for this run.
+    pub fn strict(mut self, on: bool) -> Self {
+        self.strict = on;
+        self
+    }
+
+    /// True when this run audits its artifacts (always in debug builds).
+    fn audits(&self) -> bool {
+        cfg!(debug_assertions) || self.strict
     }
 
     /// Enable seed-deterministic stream-fault injection at `rate` per
@@ -120,6 +135,10 @@ impl ReapBatch {
         // ---- CPU pass: shared-wave schedule (measured per wave) ----
         let schedule =
             schedule_spgemm_batch(jobs, self.cfg.pipelines, self.cfg.bundle_size);
+        if self.audits() {
+            let diags = crate::analysis::audit_batch_schedule(jobs, &schedule);
+            crate::analysis::ensure_clean(diags)?;
+        }
         let cpu_preprocess_s = schedule.cpu_total_s();
 
         // ---- per-tenant A-stream byte accounting: each job's segment of
@@ -156,6 +175,10 @@ impl ReapBatch {
             Style::HandCoded,
             faults.as_deref(),
         );
+        if self.audits() {
+            let diags = crate::analysis::audit_wave_costs(&sim.costs, &self.cfg);
+            crate::analysis::ensure_clean(diags)?;
+        }
         let fpga_s = sim.stats.seconds(&self.cfg);
 
         // ---- per-wave pipelined overlap, identical to the single-job

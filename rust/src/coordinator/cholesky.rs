@@ -25,6 +25,12 @@ pub struct ReapCholesky<'rt> {
     pub cfg: FpgaConfig,
     pub mode: ExecMode,
     pub runtime: Option<&'rt XlaRuntime>,
+    /// Run the static wave-cost audit ([`crate::analysis`]) on this run
+    /// even in release builds, failing with a typed
+    /// [`crate::analysis::AnalysisError`]. Debug builds always audit.
+    /// (Cholesky has no chunk schedule — the symbolic pass owns the column
+    /// order — so only the wave-cost pass applies.)
+    pub strict: bool,
 }
 
 /// Outcome of one REAP Cholesky execution.
@@ -56,12 +62,23 @@ pub struct ReapCholeskyReport {
 impl<'rt> ReapCholesky<'rt> {
     /// Coordinator with the in-process numeric path.
     pub fn new(cfg: FpgaConfig) -> Self {
-        ReapCholesky { cfg, mode: ExecMode::Rust, runtime: None }
+        ReapCholesky { cfg, mode: ExecMode::Rust, runtime: None, strict: false }
     }
 
     /// Coordinator executing numerics through the XLA artifacts.
     pub fn with_runtime(cfg: FpgaConfig, rt: &'rt XlaRuntime) -> Self {
-        ReapCholesky { cfg, mode: ExecMode::Xla, runtime: Some(rt) }
+        ReapCholesky { cfg, mode: ExecMode::Xla, runtime: Some(rt), strict: false }
+    }
+
+    /// Enable (or disable) release-build static audits for this run.
+    pub fn strict(mut self, on: bool) -> Self {
+        self.strict = on;
+        self
+    }
+
+    /// True when this run audits its artifacts (always in debug builds).
+    fn audits(&self) -> bool {
+        cfg!(debug_assertions) || self.strict
     }
 
     /// Factorize the SPD matrix whose lower triangle is `a_lower`.
@@ -82,6 +99,10 @@ impl<'rt> ReapCholesky<'rt> {
 
         // ---- FPGA timing ----
         let sim = simulate_cholesky(&sym, &self.cfg, Style::HandCoded);
+        if self.audits() {
+            let diags = crate::analysis::audit_wave_costs(&sim.costs, &self.cfg);
+            crate::analysis::ensure_clean(diags)?;
+        }
         let fpga_s = sim.stats.seconds(&self.cfg);
 
         // ---- per-column pipelined overlap: the analysis serializes, then

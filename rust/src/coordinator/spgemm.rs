@@ -26,6 +26,10 @@ pub struct ReapSpgemm<'rt> {
     pub cfg: FpgaConfig,
     pub mode: ExecMode,
     pub runtime: Option<&'rt XlaRuntime>,
+    /// Run the static audits ([`crate::analysis`]) on this run's schedule
+    /// and wave costs even in release builds, failing with a typed
+    /// [`crate::analysis::AnalysisError`]. Debug builds always audit.
+    pub strict: bool,
 }
 
 /// Outcome of one REAP SpGEMM execution.
@@ -60,12 +64,23 @@ pub struct ReapSpgemmReport {
 impl<'rt> ReapSpgemm<'rt> {
     /// Coordinator with the in-process numeric path.
     pub fn new(cfg: FpgaConfig) -> Self {
-        ReapSpgemm { cfg, mode: ExecMode::Rust, runtime: None }
+        ReapSpgemm { cfg, mode: ExecMode::Rust, runtime: None, strict: false }
     }
 
     /// Coordinator executing numerics through the XLA artifacts.
     pub fn with_runtime(cfg: FpgaConfig, rt: &'rt XlaRuntime) -> Self {
-        ReapSpgemm { cfg, mode: ExecMode::Xla, runtime: Some(rt) }
+        ReapSpgemm { cfg, mode: ExecMode::Xla, runtime: Some(rt), strict: false }
+    }
+
+    /// Enable (or disable) release-build static audits for this run.
+    pub fn strict(mut self, on: bool) -> Self {
+        self.strict = on;
+        self
+    }
+
+    /// True when this run audits its artifacts (always in debug builds).
+    fn audits(&self) -> bool {
+        cfg!(debug_assertions) || self.strict
     }
 
     /// Run the full REAP flow for `C = A × B`.
@@ -73,6 +88,10 @@ impl<'rt> ReapSpgemm<'rt> {
         self.cfg.validate()?;
         // ---- CPU pass (measured, per-wave timestamps) ----
         let schedule = schedule_spgemm(a, b, self.cfg.pipelines, self.cfg.bundle_size);
+        if self.audits() {
+            let diags = crate::analysis::audit_spgemm_schedule(a, b, &schedule);
+            crate::analysis::ensure_clean(diags)?;
+        }
         let cpu_preprocess_s = schedule.cpu_total_s();
 
         // ---- numeric result via the scheduled bundle dataflow ----
@@ -86,6 +105,10 @@ impl<'rt> ReapSpgemm<'rt> {
 
         // ---- FPGA timing from the cycle model ----
         let sim = simulate_spgemm(a, b, &schedule, &self.cfg, Style::HandCoded);
+        if self.audits() {
+            let diags = crate::analysis::audit_wave_costs(&sim.costs, &self.cfg);
+            crate::analysis::ensure_clean(diags)?;
+        }
         let fpga_s = sim.stats.seconds(&self.cfg);
 
         // ---- per-wave pipelined overlap: the enumeration prologue is

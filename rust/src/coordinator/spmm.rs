@@ -46,6 +46,10 @@ use super::overlap::pipelined_total;
 /// ```
 pub struct ReapSpmm {
     pub cfg: FpgaConfig,
+    /// Run the static audits ([`crate::analysis`]) on this run's schedule
+    /// and wave costs even in release builds, failing with a typed
+    /// [`crate::analysis::AnalysisError`]. Debug builds always audit.
+    pub strict: bool,
 }
 
 /// Outcome of one REAP SpMM execution.
@@ -76,7 +80,18 @@ pub struct ReapSpmmReport {
 
 impl ReapSpmm {
     pub fn new(cfg: FpgaConfig) -> Self {
-        ReapSpmm { cfg }
+        ReapSpmm { cfg, strict: false }
+    }
+
+    /// Enable (or disable) release-build static audits for this run.
+    pub fn strict(mut self, on: bool) -> Self {
+        self.strict = on;
+        self
+    }
+
+    /// True when this run audits its artifacts (always in debug builds).
+    fn audits(&self) -> bool {
+        cfg!(debug_assertions) || self.strict
     }
 
     /// Run `C = A X` where `x` is row-major `a.ncols × k`.
@@ -89,11 +104,19 @@ impl ReapSpmm {
         // panel lives on-chip per block)
         let b_surrogate = Csr::new(a.ncols, a.ncols);
         let schedule = schedule_spgemm(a, &b_surrogate, self.cfg.pipelines, self.cfg.bundle_size);
+        if self.audits() {
+            let diags = crate::analysis::audit_spgemm_schedule(a, &b_surrogate, &schedule);
+            crate::analysis::ensure_clean(diags)?;
+        }
         let cpu_preprocess_s = schedule.cpu_total_s();
 
         let c = numeric_spmm(a, x, k, &schedule, preprocess_threads());
 
         let sim = simulate_spmm(a, &schedule, &self.cfg, Style::HandCoded, k);
+        if self.audits() {
+            let diags = crate::analysis::audit_wave_costs(&sim.costs, &self.cfg);
+            crate::analysis::ensure_clean(diags)?;
+        }
         let fpga_s = sim.stats.seconds(&self.cfg);
 
         // per-wave pipelining: the CPU produces each wave once (block 0);

@@ -21,6 +21,10 @@ pub struct ReapSpmv<'rt> {
     pub cfg: FpgaConfig,
     pub mode: ExecMode,
     pub runtime: Option<&'rt XlaRuntime>,
+    /// Run the static audits ([`crate::analysis`]) on this run's schedule
+    /// and wave costs even in release builds, failing with a typed
+    /// [`crate::analysis::AnalysisError`]. Debug builds always audit.
+    pub strict: bool,
 }
 
 /// Outcome of one REAP SpMV execution.
@@ -44,12 +48,23 @@ pub struct ReapSpmvReport {
 impl<'rt> ReapSpmv<'rt> {
     /// Coordinator with the in-process numeric path.
     pub fn new(cfg: FpgaConfig) -> Self {
-        ReapSpmv { cfg, mode: ExecMode::Rust, runtime: None }
+        ReapSpmv { cfg, mode: ExecMode::Rust, runtime: None, strict: false }
     }
 
     /// Coordinator executing numerics through the XLA artifacts.
     pub fn with_runtime(cfg: FpgaConfig, rt: &'rt XlaRuntime) -> Self {
-        ReapSpmv { cfg, mode: ExecMode::Xla, runtime: Some(rt) }
+        ReapSpmv { cfg, mode: ExecMode::Xla, runtime: Some(rt), strict: false }
+    }
+
+    /// Enable (or disable) release-build static audits for this run.
+    pub fn strict(mut self, on: bool) -> Self {
+        self.strict = on;
+        self
+    }
+
+    /// True when this run audits its artifacts (always in debug builds).
+    fn audits(&self) -> bool {
+        cfg!(debug_assertions) || self.strict
     }
 
     /// Run y = A x.
@@ -59,6 +74,10 @@ impl<'rt> ReapSpmv<'rt> {
         // structure, with an empty B surrogate — x lives on-chip)
         let b_surrogate = Csr::new(a.ncols, a.ncols);
         let schedule = schedule_spgemm(a, &b_surrogate, self.cfg.pipelines, self.cfg.bundle_size);
+        if self.audits() {
+            let diags = crate::analysis::audit_spgemm_schedule(a, &b_surrogate, &schedule);
+            crate::analysis::ensure_clean(diags)?;
+        }
         let cpu_preprocess_s = schedule.cpu_total_s();
 
         let y = match self.mode {
@@ -70,6 +89,10 @@ impl<'rt> ReapSpmv<'rt> {
         };
 
         let sim = simulate_spmv(a, &schedule, &self.cfg, Style::HandCoded);
+        if self.audits() {
+            let diags = crate::analysis::audit_wave_costs(&sim.costs, &self.cfg);
+            crate::analysis::ensure_clean(diags)?;
+        }
         let fpga_s = sim.stats.seconds(&self.cfg);
 
         // per-wave pipelining; the chunk-enumeration prologue and the

@@ -12,6 +12,9 @@ use std::fmt;
 pub enum ConfigError {
     /// `pipelines == 0`: no datapath to schedule waves onto.
     ZeroPipelines,
+    /// `bundle_size == 0`: rows could never be split into RIR chunks —
+    /// the schedulers' chunk enumeration would divide by zero.
+    ZeroBundleSize,
     /// `vector_lanes == 0`: the SpMM column-block width would be empty.
     ZeroVectorLanes,
     /// `dram_buffer_depth == 0`: the stream frontend needs at least the
@@ -27,6 +30,9 @@ impl fmt::Display for ConfigError {
         match self {
             ConfigError::ZeroPipelines => {
                 write!(f, "invalid FpgaConfig: pipelines must be >= 1")
+            }
+            ConfigError::ZeroBundleSize => {
+                write!(f, "invalid FpgaConfig: bundle_size must be >= 1")
             }
             ConfigError::ZeroVectorLanes => {
                 write!(f, "invalid FpgaConfig: vector_lanes must be >= 1")
@@ -200,6 +206,9 @@ impl FpgaConfig {
         if self.pipelines == 0 {
             return Err(ConfigError::ZeroPipelines);
         }
+        if self.bundle_size == 0 {
+            return Err(ConfigError::ZeroBundleSize);
+        }
         if self.vector_lanes == 0 {
             return Err(ConfigError::ZeroVectorLanes);
         }
@@ -322,6 +331,14 @@ mod tests {
     fn validate_rejects_zero_pipelines() {
         let cfg = FpgaConfig { pipelines: 0, ..FpgaConfig::reap32_spgemm() };
         assert_eq!(cfg.validate(), Err(ConfigError::ZeroPipelines));
+    }
+
+    #[test]
+    fn validate_rejects_zero_bundle_size() {
+        let cfg = FpgaConfig { bundle_size: 0, ..FpgaConfig::reap32_spgemm() };
+        assert_eq!(cfg.validate(), Err(ConfigError::ZeroBundleSize));
+        let msg = ConfigError::ZeroBundleSize.to_string();
+        assert!(msg.contains("bundle_size"), "{msg}");
     }
 
     #[test]

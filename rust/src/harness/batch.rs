@@ -82,7 +82,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<BatchRow>, Table) {
         cfg.design(FpgaConfig::reap64_spgemm()),
         cfg.design(FpgaConfig::reap128_spgemm()),
     ] {
-        let batch = ReapBatch::new(design.clone()).run(&jobs).expect("batch run");
+        let batch = ReapBatch::new(design.clone()).strict(true).run(&jobs).expect("batch run");
         let mut serial_busy = 0u64;
         let mut serial_slots = 0u64;
         let mut serial_cycles = 0u64;
@@ -91,7 +91,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<BatchRow>, Table) {
         let mut serial_cycles_serial = 0u64;
         let mut serial_cycles_db = 0u64;
         for (a, b) in &jobs {
-            let rep = ReapSpgemm::new(design.clone()).run(a, b).expect("serial run");
+            let rep = ReapSpgemm::new(design.clone()).strict(true).run(a, b).expect("serial run");
             serial_busy += rep.fpga_sim.busy_pipeline_cycles;
             serial_slots +=
                 rep.fpga_sim.busy_pipeline_cycles + rep.fpga_sim.idle_pipeline_cycles;

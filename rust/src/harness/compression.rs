@@ -124,7 +124,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<CompressionRow>, Table) {
                 .collect();
             for enc in encodings {
                 let dp = FpgaConfig { encoding: enc, ..design.clone() };
-                let rep = ReapSpmm::new(dp.clone()).run(&a, &x, K).expect("spmm run");
+                let rep = ReapSpmm::new(dp.clone()).strict(true).run(&a, &x, K).expect("spmm run");
                 let (max_abs_err, err_bound) = stream_roundtrip_err(&a, dp.bundle_size, enc);
                 rows.push(CompressionRow {
                     config: design.name.to_string(),

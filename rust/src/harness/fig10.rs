@@ -48,7 +48,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig10Row>, Table) {
 
         let id = spec.cholesky_id.unwrap().to_string();
         let mut speedup_of = |fcfg: FpgaConfig, config: &str| {
-            let rep = ReapCholesky::new(cfg.design(fcfg)).run(&lower).unwrap();
+            let rep = ReapCholesky::new(cfg.design(fcfg)).strict(true).run(&lower).unwrap();
             records.push(super::json::BenchRecord {
                 matrix: format!("{} {}", id, spec.name),
                 config: config.to_string(),

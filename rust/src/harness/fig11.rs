@@ -32,8 +32,10 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig11Row>, Table) {
     let mut records = Vec::new();
     for spec in cholesky_suite() {
         let lower = spec.instantiate_spd(cfg.max_rows, cfg.seed);
-        let rep =
-            ReapCholesky::new(cfg.design(FpgaConfig::reap32_cholesky())).run(&lower).unwrap();
+        let rep = ReapCholesky::new(cfg.design(FpgaConfig::reap32_cholesky()))
+            .strict(true)
+            .run(&lower)
+            .unwrap();
         let cpu_frac = overlap::cpu_fraction(rep.cpu_symbolic_s, rep.fpga_s);
         let id = spec.cholesky_id.unwrap().to_string();
         records.push(super::json::BenchRecord {

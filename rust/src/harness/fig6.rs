@@ -40,10 +40,18 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig6Row>, Table) {
         let cpu1 = measure_spgemm_cpu(cfg, &a, &a, 1).min_s;
         let cpu2 = measure_spgemm_cpu(cfg, &a, &a, 2).min_s;
         let cpu16 = measure_spgemm_cpu(cfg, &a, &a, 16).min_s;
-        let r32 = ReapSpgemm::new(cfg.design(FpgaConfig::reap32_spgemm())).run(&a, &a).unwrap();
-        let r64 = ReapSpgemm::new(cfg.design(FpgaConfig::reap64_spgemm())).run(&a, &a).unwrap();
-        let r128 =
-            ReapSpgemm::new(cfg.design(FpgaConfig::reap128_spgemm())).run(&a, &a).unwrap();
+        let r32 = ReapSpgemm::new(cfg.design(FpgaConfig::reap32_spgemm()))
+            .strict(true)
+            .run(&a, &a)
+            .unwrap();
+        let r64 = ReapSpgemm::new(cfg.design(FpgaConfig::reap64_spgemm()))
+            .strict(true)
+            .run(&a, &a)
+            .unwrap();
+        let r128 = ReapSpgemm::new(cfg.design(FpgaConfig::reap128_spgemm()))
+            .strict(true)
+            .run(&a, &a)
+            .unwrap();
         let id = spec.spgemm_id.unwrap().to_string();
         let matrix = format!("{} {}", id, spec.name);
         for (config, rep) in [("REAP-32", &r32), ("REAP-64", &r64), ("REAP-128", &r128)] {

@@ -36,7 +36,10 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig7Row>, Table) {
     let mut records = Vec::new();
     for spec in spgemm_suite() {
         let a = spec.instantiate(cfg.max_rows, cfg.seed);
-        let rep = ReapSpgemm::new(cfg.design(FpgaConfig::reap32_spgemm())).run(&a, &a).unwrap();
+        let rep = ReapSpgemm::new(cfg.design(FpgaConfig::reap32_spgemm()))
+            .strict(true)
+            .run(&a, &a)
+            .unwrap();
         let cpu_frac = overlap::cpu_fraction(rep.cpu_preprocess_s, rep.fpga_s);
         let id = spec.spgemm_id.unwrap().to_string();
         records.push(super::json::BenchRecord {

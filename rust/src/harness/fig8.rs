@@ -39,7 +39,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<GflopsSeries>, Table, Table) {
         let a = spec.instantiate(cfg.max_rows, cfg.seed);
         let flops = spgemm_flops(&a, &a) as f64;
         for (fcfg, series) in reap.iter_mut() {
-            let rep = ReapSpgemm::new(fcfg.clone()).run(&a, &a).unwrap();
+            let rep = ReapSpgemm::new(fcfg.clone()).strict(true).run(&a, &a).unwrap();
             series.push(flops / rep.fpga_s / 1e9 / fcfg.fp_units() as f64);
         }
         for (t, series) in cpu.iter_mut() {

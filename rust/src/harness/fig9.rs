@@ -44,7 +44,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig9Point>, Table) {
     for spec in spgemm_suite() {
         let a = spec.instantiate(cfg.max_rows, cfg.seed);
         let cpu1 = measure_spgemm_cpu(cfg, &a, &a, 1).min_s;
-        let rep = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &a).unwrap();
+        let rep = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).strict(true).run(&a, &a).unwrap();
         points.push(Fig9Point {
             label: spec.spgemm_id.unwrap().to_string(),
             density: a.density(),
@@ -60,7 +60,8 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig9Point>, Table) {
             cholesky_numeric(&lower, &pattern).expect("SPD")
         })
         .min_s;
-        let rep = ReapCholesky::new(FpgaConfig::reap32_cholesky()).run(&lower).unwrap();
+        let rep =
+            ReapCholesky::new(FpgaConfig::reap32_cholesky()).strict(true).run(&lower).unwrap();
         let density = 2.0 * lower.nnz() as f64 / (lower.nrows as f64 * lower.nrows as f64);
         points.push(Fig9Point {
             label: spec.cholesky_id.unwrap().to_string(),
@@ -75,7 +76,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig9Point>, Table) {
         let nnz = (((n * n) as f64 * d) as usize).clamp(5 * n, n * n);
         let a = gen::random_uniform(n, n, nnz, cfg.seed + 1000 + i as u64);
         let cpu1 = measure_spgemm_cpu(cfg, &a, &a, 1).min_s;
-        let rep = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).run(&a, &a).unwrap();
+        let rep = ReapSpgemm::new(FpgaConfig::reap32_spgemm()).strict(true).run(&a, &a).unwrap();
         points.push(Fig9Point {
             label: format!("sweep{i}"),
             density: a.density(),
@@ -89,7 +90,8 @@ pub fn run(cfg: &RunConfig) -> (Vec<Fig9Point>, Table) {
             cholesky_numeric(&lower, &pattern).expect("SPD")
         })
         .min_s;
-        let repc = ReapCholesky::new(FpgaConfig::reap32_cholesky()).run(&lower).unwrap();
+        let repc =
+            ReapCholesky::new(FpgaConfig::reap32_cholesky()).strict(true).run(&lower).unwrap();
         points.push(Fig9Point {
             label: format!("sweep{i}"),
             density: a.density(),

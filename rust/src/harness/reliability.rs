@@ -93,7 +93,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<ReliabilityRow>, Table) {
     let streams = detection_streams(cfg);
     let jobs = super::batch::small_job_suite(cfg);
     let design = cfg.design(FpgaConfig::reap64_spgemm());
-    let baseline = ReapBatch::new(design.clone()).run(&jobs).expect("baseline batch");
+    let baseline = ReapBatch::new(design.clone()).strict(true).run(&jobs).expect("baseline batch");
 
     let mut rows = Vec::new();
     for (ri, &rate) in FAULT_RATES.iter().enumerate() {
@@ -131,6 +131,7 @@ pub fn run(cfg: &RunConfig) -> (Vec<ReliabilityRow>, Table) {
             baseline.clone()
         } else {
             ReapBatch::new(design.clone())
+                .strict(true)
                 .with_faults(rate, cfg.seed ^ 0xFA17)
                 .run(&jobs)
                 .expect("faulty batch")

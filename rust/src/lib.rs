@@ -31,7 +31,15 @@
 //! every layer maintains — including the checksummed wire format and the
 //! fault/retry model exercised by [`reliability`]. See `EXPERIMENTS.md`
 //! for paper-vs-measured results and the per-figure methodology notes.
+//!
+//! The whole crate is written in safe Rust (`#![forbid(unsafe_code)]`,
+//! guarded in CI), and [`analysis`] — `reap lint` — statically audits
+//! every schedule, serialized RIR stream and wave-cost sequence the
+//! coordinators produce.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod coordinator;
 pub mod fpga;
 pub mod harness;

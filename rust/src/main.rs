@@ -10,6 +10,8 @@
 //!                SpMM, reliability and stream-compression studies
 //!                (`table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls
 //!                batch spmm reliability compression all`).
+//! * `lint`     — statically audit schedules, RIR streams and wave costs
+//!                ([`reap::analysis`]); exits non-zero on any diagnostic.
 //! * `gen-matrix` — write a synthetic matrix as Matrix-Market.
 //! * `info`     — platform, artifact and design-point status.
 //!
@@ -17,12 +19,22 @@
 
 use anyhow::{bail, Context, Result};
 
+use reap::analysis::{self, Diagnostic};
 use reap::coordinator::{verify, ReapCholesky, ReapSpgemm, ReapSpmm, ReapSpmv};
+use reap::fpga::cholesky_sim::simulate_cholesky;
+use reap::fpga::engine::Occupancy;
+use reap::fpga::spgemm_sim::{simulate_spgemm, simulate_spgemm_batch, Style};
+use reap::fpga::spmm_sim::simulate_spmm;
+use reap::fpga::spmv_sim::simulate_spmv;
 use reap::fpga::FpgaConfig;
 use reap::harness::{self, RunConfig};
+use reap::rir::layout::serialize_stream_encoded;
+use reap::rir::schedule::{schedule_spgemm, schedule_spgemm_batch};
+use reap::rir::BundleStream;
 use reap::runtime::{Manifest, XlaRuntime};
 use reap::sparse::gen::Family;
 use reap::sparse::{gen, mm, ops, Csr};
+use reap::symbolic::CholeskySymbolic;
 use reap::util::cli::{usage, Args, OptSpec};
 
 fn main() {
@@ -38,6 +50,7 @@ fn main() {
         "spmm" => cmd_spmm(argv),
         "cholesky" => cmd_cholesky(argv),
         "bench" => cmd_bench(argv),
+        "lint" => cmd_lint(argv),
         "gen-matrix" => cmd_gen_matrix(argv),
         "info" => cmd_info(argv),
         other => {
@@ -61,6 +74,7 @@ fn print_help() {
            spmm        run REAP SpMM (C = A X, k dense right-hand sides)\n  \
            cholesky    run REAP sparse Cholesky factorization\n  \
            bench       regenerate paper tables/figures\n  \
+           lint        statically audit schedules, RIR streams, wave costs\n  \
            gen-matrix  write a synthetic matrix (.mtx)\n  \
            info        platform / artifact status\n"
     );
@@ -174,9 +188,9 @@ fn cmd_spgemm(argv: Vec<String>) -> Result<()> {
     let coord = if args.flag("xla") {
         rt = XlaRuntime::load_default().context("loading artifacts (run `make artifacts`)")?;
         println!("numerics: XLA/PJRT ({})", rt.platform());
-        ReapSpgemm::with_runtime(cfg.clone(), &rt)
+        ReapSpgemm::with_runtime(cfg.clone(), &rt).strict(true)
     } else {
-        ReapSpgemm::new(cfg.clone())
+        ReapSpgemm::new(cfg.clone()).strict(true)
     };
     let rep = coord.run(&a, &a)?;
     println!(
@@ -244,9 +258,9 @@ fn cmd_spmv(argv: Vec<String>) -> Result<()> {
     let coord = if args.flag("xla") {
         rt = XlaRuntime::load_default().context("loading artifacts (run `make artifacts`)")?;
         println!("numerics: XLA/PJRT ({})", rt.platform());
-        ReapSpmv::with_runtime(cfg.clone(), &rt)
+        ReapSpmv::with_runtime(cfg.clone(), &rt).strict(true)
     } else {
-        ReapSpmv::new(cfg.clone())
+        ReapSpmv::new(cfg.clone()).strict(true)
     };
     let rep = coord.run(&a, &x)?;
     println!(
@@ -298,7 +312,7 @@ fn cmd_spmm(argv: Vec<String>) -> Result<()> {
     if !cfg.encoding.is_raw() {
         println!("stream encoding: {}", cfg.encoding);
     }
-    let rep = ReapSpmm::new(cfg.clone()).run(&a, &x, k)?;
+    let rep = ReapSpmm::new(cfg.clone()).strict(true).run(&a, &x, k)?;
     println!(
         "{}: cpu preprocess {:.3} ms (once) | fpga(sim) {:.3} ms ({} cycles, {} blocks) | total {:.3} ms | {:.2} sim-GFLOP/s",
         cfg.name,
@@ -366,9 +380,9 @@ fn cmd_cholesky(argv: Vec<String>) -> Result<()> {
     let coord = if args.flag("xla") {
         rt = XlaRuntime::load_default().context("loading artifacts (run `make artifacts`)")?;
         println!("numerics: XLA/PJRT ({})", rt.platform());
-        ReapCholesky::with_runtime(cfg.clone(), &rt)
+        ReapCholesky::with_runtime(cfg.clone(), &rt).strict(true)
     } else {
-        ReapCholesky::new(cfg.clone())
+        ReapCholesky::new(cfg.clone()).strict(true)
     };
     let rep = coord.run(&lower)?;
     println!(
@@ -556,6 +570,187 @@ fn run_bench_target(target: &str, cfg: &RunConfig) -> Result<()> {
             }
         }
         other => bail!("unknown bench target `{other}`"),
+    }
+    Ok(())
+}
+
+/// Which artifact `lint --seed-violation` deliberately corrupts before
+/// auditing (the tool's own negative fixture — lint must then fail).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Violation {
+    Schedule,
+    Stream,
+    Wave,
+}
+
+/// Prefix every diagnostic's location with the artifact it came from and
+/// append it to the report.
+fn collect(diags: &mut Vec<Diagnostic>, what: &str, found: Vec<Diagnostic>) {
+    for mut d in found {
+        d.location = format!("{what}: {}", d.location);
+        diags.push(d);
+    }
+}
+
+/// Audit the SpGEMM artifacts for `C = A * A`: the wave schedule, the
+/// serialized A-side RIR stream (plain and checksummed, in the negotiated
+/// encoding) and the simulated wave costs.
+fn lint_spgemm(
+    a: &Csr,
+    cfg: &FpgaConfig,
+    violation: Option<Violation>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let mut schedule = schedule_spgemm(a, a, cfg.pipelines, cfg.bundle_size);
+    if violation == Some(Violation::Schedule) {
+        // re-assign the first chunk a second time in the final wave
+        let dup = schedule.waves.first().and_then(|w| w.assignments.first()).copied();
+        if let (Some(asg), Some(last)) = (dup, schedule.waves.last_mut()) {
+            last.assignments.push(asg);
+        }
+    }
+    collect(diags, "spgemm schedule", analysis::audit_spgemm_schedule(a, a, &schedule));
+
+    let stream = BundleStream::from_csr(a, cfg.bundle_size);
+    for checksummed in [false, true] {
+        let mut words = serialize_stream_encoded(&stream, cfg.encoding, checksummed);
+        if checksummed && violation == Some(Violation::Stream) && words.len() > 2 {
+            words[2] ^= 1; // damage a word under the CRC
+        }
+        let what = if checksummed { "A stream (checksummed)" } else { "A stream" };
+        collect(diags, what, analysis::audit_stream(&words));
+    }
+
+    let mut costs = simulate_spgemm(a, a, &schedule, cfg, Style::HandCoded).costs;
+    if violation == Some(Violation::Wave) {
+        if let Some(c) = costs.first_mut() {
+            c.occupancy = Occupancy::ActivePipelines(cfg.pipelines as u64 + 1);
+        }
+    }
+    collect(diags, "spgemm waves", analysis::audit_wave_costs(&costs, cfg));
+}
+
+/// Audit the SpMV schedule (B surrogate, as the coordinator builds it)
+/// and its simulated wave costs.
+fn lint_spmv(a: &Csr, cfg: &FpgaConfig, diags: &mut Vec<Diagnostic>) {
+    let surrogate = Csr::new(a.ncols, a.ncols);
+    let schedule = schedule_spgemm(a, &surrogate, cfg.pipelines, cfg.bundle_size);
+    collect(diags, "spmv schedule", analysis::audit_spgemm_schedule(a, &surrogate, &schedule));
+    let sim = simulate_spmv(a, &schedule, cfg, Style::HandCoded);
+    collect(diags, "spmv waves", analysis::audit_wave_costs(&sim.costs, cfg));
+}
+
+/// Audit the SpMM schedule and its simulated wave costs (k = 8 panel).
+fn lint_spmm(a: &Csr, cfg: &FpgaConfig, diags: &mut Vec<Diagnostic>) {
+    let surrogate = Csr::new(a.ncols, a.ncols);
+    let schedule = schedule_spgemm(a, &surrogate, cfg.pipelines, cfg.bundle_size);
+    collect(diags, "spmm schedule", analysis::audit_spgemm_schedule(a, &surrogate, &schedule));
+    let sim = simulate_spmm(a, &schedule, cfg, Style::HandCoded, 8);
+    collect(diags, "spmm waves", analysis::audit_wave_costs(&sim.costs, cfg));
+}
+
+/// Audit a two-job batch built from the workload matrix: the shared-wave
+/// schedule, the job-segmented RIR stream (mid-stream EOS terminators)
+/// and the simulated wave costs.
+fn lint_batch(a: &Csr, cfg: &FpgaConfig, diags: &mut Vec<Diagnostic>) {
+    let jobs = vec![(a.clone(), a.clone()), (a.clone(), a.clone())];
+    let schedule = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+    collect(diags, "batch schedule", analysis::audit_batch_schedule(&jobs, &schedule));
+    let mut s = BundleStream::new();
+    s.encode_csr_jobs(&[a, a], cfg.bundle_size);
+    let words = serialize_stream_encoded(&s, cfg.encoding, true);
+    collect(diags, "batch job stream", analysis::audit_stream(&words));
+    let sim = simulate_spgemm_batch(&jobs, &schedule, cfg, Style::HandCoded);
+    collect(diags, "batch waves", analysis::audit_wave_costs(&sim.costs, cfg));
+}
+
+/// Audit the Cholesky wave costs (the symbolic pass owns the column
+/// order, so there is no chunk schedule to check) on the Cholesky design
+/// point nearest the requested variant, at the requested channel depth.
+fn lint_cholesky(a: &Csr, cfg: &FpgaConfig, diags: &mut Vec<Diagnostic>) {
+    let mut ccfg = if cfg.pipelines <= 32 {
+        FpgaConfig::reap32_cholesky()
+    } else {
+        FpgaConfig::reap64_cholesky()
+    };
+    ccfg.dram_buffer_depth = cfg.dram_buffer_depth;
+    let lower = ops::make_spd(a).lower_triangle();
+    let sym = CholeskySymbolic::analyze(&lower, ccfg.bundle_size);
+    let sim = simulate_cholesky(&sym, &ccfg, Style::HandCoded);
+    collect(diags, "cholesky waves", analysis::audit_wave_costs(&sim.costs, &ccfg));
+}
+
+fn cmd_lint(argv: Vec<String>) -> Result<()> {
+    let mut specs = matrix_opts();
+    specs.extend([
+        OptSpec { name: "variant", takes_value: true, help: "reap32|reap64|reap128" },
+        dram_depth_opt(),
+        encoding_opt(),
+        OptSpec {
+            name: "workload",
+            takes_value: true,
+            help: "spgemm|batch|spmv|spmm|cholesky|all (default all)",
+        },
+        OptSpec { name: "json", takes_value: false, help: "one machine-readable JSON object" },
+        OptSpec {
+            name: "seed-violation",
+            takes_value: true,
+            help: "corrupt the SpGEMM artifact before auditing: schedule|stream|wave",
+        },
+        OptSpec { name: "help", takes_value: false, help: "show usage" },
+    ]);
+    let args = Args::parse(argv, &specs)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage("lint", "statically audit schedules, RIR streams and wave costs", &specs)
+        );
+        return Ok(());
+    }
+    let a = load_matrix(&args)?;
+    let cfg = apply_encoding(
+        &args,
+        apply_dram_depth(&args, variant_spgemm(args.get("variant").unwrap_or("reap32"))?)?,
+    )?;
+    cfg.validate()?;
+    let violation = match args.get("seed-violation") {
+        None => None,
+        Some("schedule") => Some(Violation::Schedule),
+        Some("stream") => Some(Violation::Stream),
+        Some("wave") => Some(Violation::Wave),
+        Some(other) => bail!("unknown violation `{other}` (schedule|stream|wave)"),
+    };
+    // a seeded violation lives in the SpGEMM artifacts — lint only those
+    let workload = if violation.is_some() {
+        "spgemm"
+    } else {
+        args.get("workload").unwrap_or("all")
+    };
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    match workload {
+        "spgemm" => lint_spgemm(&a, &cfg, violation, &mut diags),
+        "spmv" => lint_spmv(&a, &cfg, &mut diags),
+        "spmm" => lint_spmm(&a, &cfg, &mut diags),
+        "batch" => lint_batch(&a, &cfg, &mut diags),
+        "cholesky" => lint_cholesky(&a, &cfg, &mut diags),
+        "all" => {
+            lint_spgemm(&a, &cfg, None, &mut diags);
+            lint_spmv(&a, &cfg, &mut diags);
+            lint_spmm(&a, &cfg, &mut diags);
+            lint_batch(&a, &cfg, &mut diags);
+            lint_cholesky(&a, &cfg, &mut diags);
+        }
+        other => bail!("unknown workload `{other}` (spgemm|batch|spmv|spmm|cholesky|all)"),
+    }
+
+    if args.flag("json") {
+        println!("{}", analysis::render_json(&diags));
+    } else {
+        print!("{}", analysis::render_human(&diags));
+    }
+    if !diags.is_empty() {
+        bail!("lint found {} diagnostic(s)", diags.len());
     }
     Ok(())
 }

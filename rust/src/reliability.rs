@@ -229,6 +229,13 @@ pub fn fuzz_decode_panel(data: &[u8]) {
     let _ = try_words_panel_to_dense(&words, lo, hi, nrows, k);
 }
 
+/// Fuzz driver for the static stream auditor: [`crate::analysis::audit_stream`]
+/// must return a diagnostic list, never panic, on any byte string. It walks
+/// the same wire layouts the decoders accept, so it shares their corpus.
+pub fn fuzz_lint_stream(data: &[u8]) {
+    let _ = crate::analysis::audit_stream(&words_from_bytes(data));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

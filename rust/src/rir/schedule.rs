@@ -23,6 +23,7 @@
 
 use std::time::Instant;
 
+use crate::fpga::ConfigError;
 use crate::sparse::{Csr, Idx, Val};
 use crate::util::preprocess_threads;
 
@@ -118,9 +119,23 @@ impl SpgemmSchedule {
 }
 
 /// Words to stream one bundle-chain of a row with `nnz` elements.
-fn row_stream_words(nnz: usize, bundle_size: usize) -> usize {
+pub(crate) fn row_stream_words(nnz: usize, bundle_size: usize) -> usize {
     let chunks = nnz.div_ceil(bundle_size).max(1);
     2 * chunks + 2 * nnz
+}
+
+/// Shared geometry gate for the schedulers. Zero-valued geometry is
+/// rejected with the same typed [`ConfigError`] that
+/// [`FpgaConfig::validate`](crate::fpga::FpgaConfig::validate) returns,
+/// so callers handle one error surface for configuration problems.
+fn scheduling_geometry(pipelines: usize, bundle_size: usize) -> Result<(), ConfigError> {
+    if pipelines == 0 {
+        return Err(ConfigError::ZeroPipelines);
+    }
+    if bundle_size == 0 {
+        return Err(ConfigError::ZeroBundleSize);
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -266,12 +281,25 @@ impl BatchSchedule {
 
 /// Build the shared-wave schedule for N independent jobs `C_j = A_j × B_j`
 /// with the default worker count.
+///
+/// Panics on zero-valued geometry; use [`try_schedule_spgemm_batch`] for
+/// the typed rejection.
 pub fn schedule_spgemm_batch(
     jobs: &[(Csr, Csr)],
     pipelines: usize,
     bundle_size: usize,
 ) -> BatchSchedule {
     schedule_spgemm_batch_with_threads(jobs, pipelines, bundle_size, preprocess_threads())
+}
+
+/// Fallible form of [`schedule_spgemm_batch`]: rejects `pipelines == 0` /
+/// `bundle_size == 0` with the typed [`ConfigError`] instead of panicking.
+pub fn try_schedule_spgemm_batch(
+    jobs: &[(Csr, Csr)],
+    pipelines: usize,
+    bundle_size: usize,
+) -> Result<BatchSchedule, ConfigError> {
+    try_schedule_spgemm_batch_with_threads(jobs, pipelines, bundle_size, preprocess_threads())
 }
 
 /// Build the shared-wave schedule for N independent jobs on `nthreads`
@@ -288,7 +316,21 @@ pub fn schedule_spgemm_batch_with_threads(
     bundle_size: usize,
     nthreads: usize,
 ) -> BatchSchedule {
-    assert!(pipelines > 0 && bundle_size > 0);
+    match try_schedule_spgemm_batch_with_threads(jobs, pipelines, bundle_size, nthreads) {
+        Ok(s) => s,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Fallible form of [`schedule_spgemm_batch_with_threads`] (see
+/// [`try_schedule_spgemm_batch`]).
+pub fn try_schedule_spgemm_batch_with_threads(
+    jobs: &[(Csr, Csr)],
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+) -> Result<BatchSchedule, ConfigError> {
+    scheduling_geometry(pipelines, bundle_size)?;
 
     // ---- prologue: enumerate chunks job-major, in row order ----
     let t_prep = Instant::now();
@@ -369,7 +411,7 @@ pub fn schedule_spgemm_batch_with_threads(
         }
     }
 
-    BatchSchedule {
+    Ok(BatchSchedule {
         pipelines,
         bundle_size,
         n_jobs: jobs.len(),
@@ -378,7 +420,7 @@ pub fn schedule_spgemm_batch_with_threads(
         b_words,
         prep_cpu_s,
         wave_cpu_s,
-    }
+    })
 }
 
 /// Build shared waves `[w_lo, w_hi)`: split each wave's chunk group into
@@ -448,6 +490,17 @@ pub fn schedule_spgemm(a: &Csr, b: &Csr, pipelines: usize, bundle_size: usize) -
     schedule_spgemm_with_threads(a, b, pipelines, bundle_size, preprocess_threads())
 }
 
+/// Fallible form of [`schedule_spgemm`]: rejects `pipelines == 0` /
+/// `bundle_size == 0` with the typed [`ConfigError`] instead of panicking.
+pub fn try_schedule_spgemm(
+    a: &Csr,
+    b: &Csr,
+    pipelines: usize,
+    bundle_size: usize,
+) -> Result<SpgemmSchedule, ConfigError> {
+    try_schedule_spgemm_with_threads(a, b, pipelines, bundle_size, preprocess_threads())
+}
+
 /// Build the wave schedule for `C = A × B` on `nthreads` workers.
 ///
 /// Rows of A are processed in order; each row is split into chunks of at
@@ -462,7 +515,22 @@ pub fn schedule_spgemm_with_threads(
     bundle_size: usize,
     nthreads: usize,
 ) -> SpgemmSchedule {
-    assert!(pipelines > 0 && bundle_size > 0);
+    match try_schedule_spgemm_with_threads(a, b, pipelines, bundle_size, nthreads) {
+        Ok(s) => s,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Fallible form of [`schedule_spgemm_with_threads`] (see
+/// [`try_schedule_spgemm`]).
+pub fn try_schedule_spgemm_with_threads(
+    a: &Csr,
+    b: &Csr,
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+) -> Result<SpgemmSchedule, ConfigError> {
+    scheduling_geometry(pipelines, bundle_size)?;
     assert_eq!(a.ncols, b.nrows, "inner dimensions disagree");
 
     // ---- prologue: enumerate chunks in row order (zero-copy extents) ----
@@ -542,7 +610,7 @@ pub fn schedule_spgemm_with_threads(
         }
     }
 
-    SpgemmSchedule {
+    Ok(SpgemmSchedule {
         pipelines,
         bundle_size,
         waves,
@@ -550,7 +618,7 @@ pub fn schedule_spgemm_with_threads(
         b_words,
         prep_cpu_s,
         wave_cpu_s,
-    }
+    })
 }
 
 /// Split `0..n_waves` into ≤ `nthreads` contiguous ranges with roughly
@@ -748,6 +816,37 @@ mod tests {
             assert_eq!(par.a_words, base.a_words, "threads={t}");
             assert_eq!(par.b_words, base.b_words, "threads={t}");
         }
+    }
+
+    #[test]
+    fn zero_geometry_rejected_with_typed_error() {
+        let a = mk(8, 30, 1);
+        let b = mk(8, 30, 2);
+        assert_eq!(try_schedule_spgemm(&a, &b, 0, 32).unwrap_err(), ConfigError::ZeroPipelines);
+        assert_eq!(try_schedule_spgemm(&a, &b, 8, 0).unwrap_err(), ConfigError::ZeroBundleSize);
+        let jobs = vec![(mk(8, 30, 3), mk(8, 30, 4))];
+        assert_eq!(
+            try_schedule_spgemm_batch(&jobs, 0, 32).unwrap_err(),
+            ConfigError::ZeroPipelines
+        );
+        assert_eq!(
+            try_schedule_spgemm_batch(&jobs, 8, 0).unwrap_err(),
+            ConfigError::ZeroBundleSize
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "bundle_size must be >= 1")]
+    fn infallible_schedule_panics_with_the_config_message() {
+        let a = mk(8, 30, 1);
+        let _ = schedule_spgemm(&a, &a, 8, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pipelines must be >= 1")]
+    fn infallible_batch_schedule_panics_with_the_config_message() {
+        let jobs = vec![(mk(8, 30, 3), mk(8, 30, 4))];
+        let _ = schedule_spgemm_batch(&jobs, 0, 32);
     }
 
     #[test]

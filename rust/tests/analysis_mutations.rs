@@ -1,0 +1,333 @@
+//! Mutation tests for `reap::analysis`: take a *valid* artifact from the
+//! real scheduler / encoder / simulator, corrupt it in one targeted way,
+//! and pin the diagnostic code the audit must produce. Each test first
+//! asserts the unmutated artifact is clean, so an audit pass that
+//! silently stopped checking anything cannot keep these green. Where the
+//! corruption is surgical the test pins *exactly one* diagnostic; where
+//! it legitimately cascades (a bad extent also breaks coverage) the test
+//! pins the primary code and, when it matters, the suppression contract.
+
+use reap::analysis::{
+    audit_batch_schedule, audit_spgemm_schedule, audit_stream, audit_wave_costs, codes,
+    Diagnostic, Severity,
+};
+use reap::fpga::engine::{Occupancy, WaveKind};
+use reap::fpga::spgemm_sim::{simulate_spgemm, Style};
+use reap::fpga::spmv_sim::simulate_spmv;
+use reap::fpga::FpgaConfig;
+use reap::rir::layout::{
+    bitmap_index_words, fx_value_words, serialize_stream, serialize_stream_checksummed,
+};
+use reap::rir::schedule::{schedule_spgemm, schedule_spgemm_batch, BatchSchedule, SpgemmSchedule};
+use reap::rir::{BundleFlags, BundleStream};
+use reap::sparse::{gen, Csr};
+
+fn assert_single(diags: &[Diagnostic], code: &str, severity: Severity) {
+    assert_eq!(diags.len(), 1, "expected exactly one diagnostic: {diags:?}");
+    assert_eq!(diags[0].code, code, "{diags:?}");
+    assert_eq!(diags[0].severity, severity, "{diags:?}");
+}
+
+fn assert_has(diags: &[Diagnostic], code: &str) {
+    assert!(diags.iter().any(|d| d.code == code), "missing {code}: {diags:?}");
+}
+
+// ---------------------------------------------------------------------------
+// ScheduleAudit — single-job
+// ---------------------------------------------------------------------------
+
+/// A clean single-job schedule plus its source matrix. 60 single-chunk
+/// rows on 8 pipelines at bundle 16: seven full waves and one spare-slot
+/// tail wave.
+fn spgemm_base() -> (Csr, SpgemmSchedule) {
+    let a = gen::random_uniform(60, 60, 900, 11);
+    let s = schedule_spgemm(&a, &a, 8, 16);
+    assert!(audit_spgemm_schedule(&a, &a, &s).is_empty(), "premise: base schedule is clean");
+    (a, s)
+}
+
+#[test]
+fn duplicated_chunk_is_pinned_to_chunk_dup() {
+    let (a, mut s) = spgemm_base();
+    let wid = s
+        .waves
+        .iter()
+        .position(|w| !w.assignments.is_empty() && w.assignments.len() < s.pipelines)
+        .expect("a wave with spare capacity");
+    let asg = s.waves[wid].assignments[0];
+    // same wave, so the B-row union is unchanged; repair the traffic
+    // accounting so duplication is the *only* violation left
+    s.waves[wid].assignments.push(asg);
+    s.a_words += 2 + 2 * asg.len;
+    assert_single(&audit_spgemm_schedule(&a, &a, &s), codes::SCH_CHUNK_DUP, Severity::Error);
+}
+
+#[test]
+fn capacity_cut_flags_every_overfull_wave() {
+    let (a, mut s) = spgemm_base();
+    s.pipelines = 4; // the scheduler packed waves for 8
+    let diags = audit_spgemm_schedule(&a, &a, &s);
+    assert!(!diags.is_empty(), "waves packed for 8 pipelines cannot fit 4");
+    assert!(diags.iter().all(|d| d.code == codes::SCH_WAVE_OVERFULL), "{diags:?}");
+}
+
+#[test]
+fn oversized_chunk_is_reported_and_suppresses_word_accounting() {
+    let (a, mut s) = spgemm_base();
+    s.waves[0].assignments[0].len = s.bundle_size + 1;
+    let diags = audit_spgemm_schedule(&a, &a, &s);
+    assert_has(&diags, codes::SCH_CHUNK_LEN);
+    // a bad extent makes the recomputed traffic meaningless — SCH-WORDS
+    // must stay quiet rather than pile a bogus mismatch on top
+    assert!(diags.iter().all(|d| d.code != codes::SCH_WORDS), "{diags:?}");
+}
+
+#[test]
+fn flipped_last_chunk_flag_is_pinned() {
+    let (a, mut s) = spgemm_base();
+    let asg = &mut s.waves[0].assignments[0];
+    asg.last_chunk = !asg.last_chunk;
+    assert_single(&audit_spgemm_schedule(&a, &a, &s), codes::SCH_LAST_CHUNK, Severity::Error);
+}
+
+#[test]
+fn dropped_chunk_breaks_coverage() {
+    let (a, mut s) = spgemm_base();
+    let wid = s.waves.len() - 1;
+    let asg = s.waves[wid].assignments.pop().expect("non-empty tail wave");
+    s.a_words -= 2 + 2 * asg.len; // keep the accounting honest
+    assert_has(&audit_spgemm_schedule(&a, &a, &s), codes::SCH_COVERAGE);
+}
+
+#[test]
+fn unsorted_b_rows_are_pinned() {
+    let (a, mut s) = spgemm_base();
+    let wid = s
+        .waves
+        .iter()
+        .position(|w| w.b_rows.len() >= 2)
+        .expect("a wave streaming at least two B rows");
+    s.waves[wid].b_rows.swap(0, 1); // same multiset, wrong order
+    assert_single(&audit_spgemm_schedule(&a, &a, &s), codes::SCH_B_ROWS, Severity::Error);
+}
+
+#[test]
+fn word_accounting_drift_is_pinned() {
+    let (a, mut s) = spgemm_base();
+    s.a_words += 2;
+    assert_single(&audit_spgemm_schedule(&a, &a, &s), codes::SCH_WORDS, Severity::Error);
+}
+
+#[test]
+fn truncated_cpu_trace_is_pinned() {
+    let (a, mut s) = spgemm_base();
+    s.wave_cpu_s.pop();
+    assert_single(&audit_spgemm_schedule(&a, &a, &s), codes::SCH_TRACE, Severity::Error);
+}
+
+// ---------------------------------------------------------------------------
+// ScheduleAudit — batch
+// ---------------------------------------------------------------------------
+
+/// Four 30-row jobs on 8 pipelines: 30 chunks per job, so waves straddle
+/// job boundaries and carry multiple segments.
+fn batch_base() -> (Vec<(Csr, Csr)>, BatchSchedule) {
+    let jobs: Vec<(Csr, Csr)> = (0..4u64)
+        .map(|j| {
+            (gen::random_uniform(30, 30, 200, 40 + j), gen::random_uniform(30, 30, 200, 50 + j))
+        })
+        .collect();
+    let s = schedule_spgemm_batch(&jobs, 8, 16);
+    assert!(audit_batch_schedule(&jobs, &s).is_empty(), "premise: base batch schedule is clean");
+    (jobs, s)
+}
+
+#[test]
+fn out_of_range_job_tag_is_reported() {
+    let (jobs, mut s) = batch_base();
+    let bad = s.n_jobs as u32;
+    s.waves[0].assignments[0].0 = bad;
+    assert_has(&audit_batch_schedule(&jobs, &s), codes::SCH_JOB_TAG);
+}
+
+#[test]
+fn swapped_segments_are_reported() {
+    let (jobs, mut s) = batch_base();
+    let wid = s
+        .waves
+        .iter()
+        .position(|w| w.segments.len() >= 2)
+        .expect("a wave straddling a job boundary");
+    s.waves[wid].segments.swap(0, 1);
+    assert_has(&audit_batch_schedule(&jobs, &s), codes::SCH_SEGMENT);
+}
+
+#[test]
+fn cross_job_slot_swap_breaks_job_major_order() {
+    let (jobs, mut s) = batch_base();
+    let wid = s
+        .waves
+        .iter()
+        .position(|w| w.assignments.first().map(|a| a.0) != w.assignments.last().map(|a| a.0))
+        .expect("a wave carrying two jobs");
+    let n = s.waves[wid].assignments.len();
+    s.waves[wid].assignments.swap(0, n - 1);
+    assert_has(&audit_batch_schedule(&jobs, &s), codes::SCH_JOB_ORDER);
+}
+
+// ---------------------------------------------------------------------------
+// StreamAudit
+// ---------------------------------------------------------------------------
+
+/// Header positions of a plain (non-checksummed) serialized stream.
+/// Metadata-only bundles carry 3-word entries, data bundles 2-word pairs.
+fn bundle_headers(words: &[u32]) -> Vec<usize> {
+    let md = u32::from(BundleFlags::METADATA_ONLY);
+    let mut headers = Vec::new();
+    let mut p = 0usize;
+    while p < words.len() {
+        headers.push(p);
+        let count = (words[p] >> 8) as usize;
+        let per = if words[p] & md != 0 { 3 } else { 2 };
+        p += 2 + per * count;
+    }
+    assert_eq!(p, words.len(), "premise: the walk stays bundle-aligned");
+    headers
+}
+
+#[test]
+fn cleared_final_eos_on_a_segmented_stream_is_an_error() {
+    let a = gen::random_uniform(20, 20, 150, 5);
+    let b = gen::random_uniform(25, 25, 200, 6);
+    let mut s = BundleStream::new();
+    s.encode_csr_jobs(&[&a, &b], 16);
+    let mut words = serialize_stream(&s);
+    assert!(audit_stream(&words).is_empty(), "premise: the job stream is clean");
+    let eos = u32::from(BundleFlags::END_OF_STREAM);
+    let headers = bundle_headers(&words);
+    let terminators = headers.iter().filter(|&&h| words[h] & eos != 0).count();
+    assert!(terminators >= 2, "premise: every job segment carries a terminator");
+    let last = *headers.last().unwrap();
+    words[last] &= !eos;
+    let diags = audit_stream(&words);
+    assert_single(&diags, codes::STR_EOS, Severity::Error);
+}
+
+#[test]
+fn truncation_is_reported() {
+    let a = gen::random_uniform(40, 40, 500, 7);
+    let mut words = serialize_stream(&BundleStream::from_csr(&a, 16));
+    assert!(audit_stream(&words).is_empty(), "premise: the stream is clean");
+    words.pop();
+    assert_has(&audit_stream(&words), codes::STR_TRUNCATED);
+}
+
+#[test]
+fn damage_under_a_crc_trailer_is_reported() {
+    let a = gen::random_uniform(40, 40, 500, 8);
+    let mut words = serialize_stream_checksummed(&BundleStream::from_csr(&a, 16));
+    assert!(audit_stream(&words).is_empty(), "premise: the stream is clean");
+    words[2] ^= 1; // first payload word of bundle 0, covered by its CRC
+    assert_has(&audit_stream(&words), codes::STR_CRC);
+}
+
+#[test]
+fn wasteful_bitmap_section_warns() {
+    // two far-apart indices: the canonical bitmap section (base, span,
+    // two L0 words, two L1 words) is 6 words — worse than the 2 raw index
+    // words it replaces, so the encoder's negotiation never emits this
+    let cols = [0u32, 2000];
+    let idx_words = bitmap_index_words(&cols).expect("ascending cols have a canonical form");
+    assert_eq!(idx_words, 6, "premise: section accounting");
+    let flags = BundleFlags::BITMAP | BundleFlags::END_OF_STREAM;
+    let mut words = vec![(2u32 << 8) | u32::from(flags), 0];
+    words.extend_from_slice(&[0, 2001, 1, 1 << 30, 1, 1 << 16]); // index section
+    words.extend_from_slice(&[1.5f32.to_bits(), 2.5f32.to_bits()]); // raw value section
+    let diags = audit_stream(&words);
+    assert_single(&diags, codes::STR_BITMAP_WASTE, Severity::Warning);
+}
+
+#[test]
+fn nonfinite_fx_scale_is_an_error() {
+    assert_eq!(fx_value_words(2), 2, "premise: scale word + one packed word");
+    let flags = BundleFlags::FIXED_POINT | BundleFlags::END_OF_STREAM;
+    let words = [
+        (2u32 << 8) | u32::from(flags),
+        0,
+        1, // raw index section
+        5,
+        f32::NAN.to_bits(), // scale word
+        0x4000_2000,        // packed Q1.15 pair
+    ];
+    let diags = audit_stream(&words);
+    assert_single(&diags, codes::STR_FX_SCALE, Severity::Error);
+}
+
+#[test]
+fn descending_raw_indices_warn() {
+    let flags = BundleFlags::END_OF_STREAM;
+    let words = [
+        (2u32 << 8) | u32::from(flags),
+        0,
+        9, // index 9 then index 3: not strictly ascending
+        1.0f32.to_bits(),
+        3,
+        2.0f32.to_bits(),
+    ];
+    let diags = audit_stream(&words);
+    assert_single(&diags, codes::STR_INDEX_ORDER, Severity::Warning);
+}
+
+// ---------------------------------------------------------------------------
+// WaveCostAudit
+// ---------------------------------------------------------------------------
+
+fn wave_base(seed: u64) -> (FpgaConfig, Vec<reap::fpga::WaveCost>) {
+    let a = gen::random_uniform(50, 50, 700, seed);
+    let cfg = FpgaConfig::reap32_spgemm();
+    let s = schedule_spgemm(&a, &a, cfg.pipelines, cfg.bundle_size);
+    let costs = simulate_spgemm(&a, &a, &s, &cfg, Style::HandCoded).costs;
+    assert!(audit_wave_costs(&costs, &cfg).is_empty(), "premise: simulated costs are clean");
+    (cfg, costs)
+}
+
+#[test]
+fn occupancy_bump_on_simulated_costs_is_pinned() {
+    let (cfg, mut costs) = wave_base(21);
+    let k = costs.iter().position(|c| c.kind == WaveKind::Compute).expect("a compute wave");
+    costs[k].occupancy = Occupancy::ActivePipelines(cfg.pipelines as u64 + 1);
+    assert_single(&audit_wave_costs(&costs, &cfg), codes::WAV_OVERFULL, Severity::Error);
+}
+
+#[test]
+fn zeroed_wave_contribution_is_pinned() {
+    let (cfg, mut costs) = wave_base(24);
+    let k = costs.iter().position(|c| c.kind == WaveKind::Compute).expect("a compute wave");
+    costs[k].waves = 0;
+    assert_single(&audit_wave_costs(&costs, &cfg), codes::WAV_ZERO_WAVES, Severity::Error);
+}
+
+#[test]
+fn dependent_stream_after_a_pure_load_is_pinned() {
+    let a = gen::random_uniform(50, 50, 700, 22);
+    let cfg = FpgaConfig::reap32_spgemm();
+    let s = schedule_spgemm(&a, &a, cfg.pipelines, cfg.bundle_size);
+    let mut costs = simulate_spmv(&a, &s, &cfg, Style::HandCoded).costs;
+    assert!(audit_wave_costs(&costs, &cfg).is_empty(), "premise: simulated costs are clean");
+    assert_eq!(costs[0].kind, WaveKind::Load, "premise: SpMV leads with an x-vector load");
+    assert_eq!(costs[0].writeback_words, 0, "premise: a pure load writes nothing back");
+    costs[1].dependent_stream = true;
+    assert_single(&audit_wave_costs(&costs, &cfg), codes::WAV_DEP_NO_PRODUCER, Severity::Error);
+}
+
+#[test]
+fn load_smuggling_flops_is_pinned() {
+    let a = gen::random_uniform(50, 50, 700, 23);
+    let cfg = FpgaConfig::reap32_spgemm();
+    let s = schedule_spgemm(&a, &a, cfg.pipelines, cfg.bundle_size);
+    let mut costs = simulate_spmv(&a, &s, &cfg, Style::HandCoded).costs;
+    assert!(audit_wave_costs(&costs, &cfg).is_empty(), "premise: simulated costs are clean");
+    assert_eq!(costs[0].kind, WaveKind::Load, "premise: SpMV leads with an x-vector load");
+    costs[0].flops = 7;
+    assert_single(&audit_wave_costs(&costs, &cfg), codes::WAV_LOAD, Severity::Error);
+}

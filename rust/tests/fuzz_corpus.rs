@@ -1,8 +1,9 @@
 //! Replays the checked-in libFuzzer seed corpus (`fuzz/corpus/<target>/`)
-//! through the same `reap::reliability::fuzz_decode_*` drivers the fuzz
-//! targets call — so the corpus is exercised on every stable-toolchain
-//! test run, not only when the nightly fuzz job fires. Each driver must
-//! simply return on every input; any panic fails the test.
+//! through the same `reap::reliability::fuzz_decode_*` /
+//! `fuzz_lint_stream` drivers the fuzz targets call — so the corpus is
+//! exercised on every stable-toolchain test run, not only when the
+//! nightly fuzz job fires. Each driver must simply return on every
+//! input; any panic fails the test.
 //!
 //! The corpus covers every wire layout: raw pairs, checksummed bundles,
 //! BITMAP index sections, FIXED_POINT value lanes, and the combined
@@ -58,6 +59,14 @@ fn corpus_decode_segment_never_panics() {
 #[test]
 fn corpus_decode_panel_never_panics() {
     replay("decode_panel", reap::reliability::fuzz_decode_panel);
+}
+
+/// The static stream auditor (`reap lint`'s RIR pass) shares the
+/// decoder corpus: it walks the same wire layouts without touching
+/// values, and must be total — diagnostics out, never a panic.
+#[test]
+fn corpus_lint_stream_never_panics() {
+    replay("lint_stream", reap::reliability::fuzz_lint_stream);
 }
 
 /// Little-endian u32 words of a corpus file (the drivers' framing).

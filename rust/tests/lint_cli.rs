@@ -1,0 +1,53 @@
+//! End-to-end tests of the `reap lint` subcommand: exit 0 with a clean
+//! report on every shipped workload/design/encoding combination, and a
+//! non-zero exit with machine-readable JSON naming the violated invariant
+//! when an artifact is corrupted via `--seed-violation`.
+
+use std::process::{Command, Output};
+
+fn reap(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_reap")).args(args).output().expect("run reap binary")
+}
+
+#[test]
+fn lint_is_clean_on_shipped_workloads() {
+    for v in ["reap32", "reap64"] {
+        for e in ["raw", "bitmap+fx32"] {
+            let args = ["lint", "--n", "100", "--nnz", "1200", "--variant", v, "--encoding", e];
+            let out = reap(&args);
+            let stdout = String::from_utf8_lossy(&out.stdout);
+            assert!(
+                out.status.success(),
+                "{v}/{e} must lint clean:\n{stdout}\n{}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+            assert!(stdout.contains("0 error(s), 0 warning(s)"), "{v}/{e}: {stdout}");
+        }
+    }
+}
+
+#[test]
+fn seeded_violations_fail_with_machine_readable_json() {
+    let cases = [("schedule", "SCH-CHUNK-DUP"), ("stream", "STR-CRC"), ("wave", "WAV-OVERFULL")];
+    for (kind, code) in cases {
+        let args = ["lint", "--n", "100", "--nnz", "1200", "--seed-violation", kind, "--json"];
+        let out = reap(&args);
+        assert!(!out.status.success(), "a seeded {kind} violation must fail the lint");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let json = stdout.trim();
+        assert!(json.starts_with('{') && json.ends_with('}'), "not one JSON object: {stdout}");
+        assert!(json.contains(code), "expected {code} in: {stdout}");
+        assert!(json.contains("\"errors\": "), "summary fields missing: {stdout}");
+    }
+}
+
+#[test]
+fn human_report_names_the_location() {
+    let args = ["lint", "--n", "100", "--nnz", "1200", "--seed-violation", "wave"];
+    let out = reap(&args);
+    assert!(!out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    // diagnostics carry the workload-qualified location prefix
+    assert!(stdout.contains("spgemm waves"), "{stdout}");
+    assert!(stdout.contains("error[WAV-OVERFULL]"), "{stdout}");
+}

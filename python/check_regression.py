@@ -8,8 +8,8 @@ are compared, so a PR that adds a new benchmark is not penalized for it;
 per-file breakdowns are printed for diagnosis.
 
 Records that carry the simulated-FPGA cycle fields (``cycles_serial`` and
-``cycles_db`` — the batch and compression benches) are additionally gated
-on those sums with their own, much tighter tolerance: the cycle model is
+``cycles_db`` — the batch, compression and serving benches) are
+additionally gated on those sums with their own, much tighter tolerance: the cycle model is
 deterministic, so any drift is a real modeling change, not runner noise.
 A small ``--cycles-tol`` (default 2%) leaves headroom for intentional
 model refinements while catching accidental pricing regressions — e.g. a

@@ -6,9 +6,10 @@
 //! [`WaveCost`](crate::fpga::WaveCost) sequences free of
 //! prefetch-past-RAW hazards. A violation of any of those invariants does
 //! not crash the simulator — it silently produces wrong cycles or wrong
-//! numerics. This module is the borrow-checker for that contract: three
+//! numerics. This module is the borrow-checker for that contract: four
 //! pure verification passes that audit an artifact *before* it is
-//! simulated, sharing one [`Diagnostic`] spine.
+//! simulated (or, for the serving pass, a run log after it drains),
+//! sharing one [`Diagnostic`] spine.
 //!
 //! * [`audit_spgemm_schedule`] / [`audit_batch_schedule`]
 //!   ([`schedule`]) — structural invariants of
@@ -26,6 +27,12 @@
 //!   occupancy, a `dependent_stream` whose producer emitted no writeback,
 //!   prefetch-past-RAW exposure at buffer depth ≥ 2, zero-occupancy /
 //!   zero-wave anomalies, and the engine's depth ledger law.
+//! * [`audit_serving`] ([`serving`]) — the serving runtime's admission
+//!   contract over a completed
+//!   [`ServingLog`](crate::serving::ServingLog): every admitted job met
+//!   its latency budget at admission time, batch/job timelines are
+//!   causal and monotone, and arrivals are conserved across
+//!   admitted/rejected/queued.
 //!
 //! Every coordinator runs the schedule and wave-cost audits on its own
 //! artifacts under `debug_assertions`; release builds opt in per run via
@@ -36,10 +43,12 @@
 //! ARCHITECTURE.md §8 catalogues the invariant set pass by pass.
 
 pub mod schedule;
+pub mod serving;
 pub mod stream;
 pub mod wave;
 
 pub use schedule::{audit_batch_schedule, audit_spgemm_schedule};
+pub use serving::audit_serving;
 pub use stream::audit_stream;
 pub use wave::audit_wave_costs;
 
@@ -54,6 +63,8 @@ pub enum Pass {
     Stream,
     /// Wave-cost sequences ([`audit_wave_costs`]).
     WaveCost,
+    /// Serving-runtime admission logs ([`audit_serving`]).
+    Serving,
 }
 
 impl Pass {
@@ -63,6 +74,7 @@ impl Pass {
             Pass::Schedule => "schedule",
             Pass::Stream => "stream",
             Pass::WaveCost => "wave-cost",
+            Pass::Serving => "serving",
         }
     }
 }
@@ -215,6 +227,21 @@ pub mod codes {
     /// The engine's depth ledger (`cycles(d) + hidden(d) == cycles(1)`,
     /// depth-invariant traffic/flops/waves) fails on this sequence.
     pub const WAV_LEDGER: &str = "WAV-LEDGER";
+
+    /// An admitted job whose age at its window close already exceeded the
+    /// latency budget — the controller must have shed it.
+    pub const SRV_BUDGET: &str = "SRV-BUDGET";
+    /// A batch or job timeline that is not causal (batch starts before its
+    /// window closes, a job completes before its batch starts, or window
+    /// closes go backwards).
+    pub const SRV_TIMELINE: &str = "SRV-TIMELINE";
+    /// Arrival conservation broken: `admitted + rejected + queued` does
+    /// not account for every arrival, or the batches do not carry exactly
+    /// the admitted jobs.
+    pub const SRV_CONSERVE: &str = "SRV-CONSERVE";
+    /// A batch record with no jobs — legal but the simulator never closes
+    /// an empty wave into a batch.
+    pub const SRV_EMPTY: &str = "SRV-EMPTY";
 }
 
 /// Typed failure carrying every diagnostic of a failed audit — the error

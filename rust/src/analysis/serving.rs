@@ -1,0 +1,238 @@
+//! Verification pass over a completed serving run — the admission
+//! contract, audited.
+//!
+//! The serving loop ([`crate::serving::run_serving`]) promises three
+//! things about the [`ServingLog`] it emits, and this pass re-checks all
+//! of them from the log alone (no access to the simulator state that
+//! produced it):
+//!
+//! * **Budget** ([`codes::SRV_BUDGET`]) — an admitted job's age at the
+//!   window close that admitted it never exceeds the latency budget. The
+//!   shed rule rejects any job whose age *plus* its service estimate
+//!   busts the budget, so age alone over budget means the controller
+//!   admitted a job it was required to shed.
+//! * **Timeline** ([`codes::SRV_TIMELINE`]) — causality: window closes
+//!   are non-decreasing across batches, a batch starts no earlier than
+//!   its window close, a job arrives no later than the close that admits
+//!   it and completes no earlier than its batch starts.
+//! * **Conservation** ([`codes::SRV_CONSERVE`]) — every arrival is
+//!   accounted for: `admitted + rejected + queued == arrived`, and the
+//!   batch records carry exactly `admitted` jobs in total.
+//!
+//! An empty batch record ([`codes::SRV_EMPTY`]) is a warning: harmless to
+//! replay, but the event loop never emits one, so its presence means the
+//! log was not produced by the loop.
+
+use super::{codes, Diagnostic, Pass};
+use crate::serving::ServingLog;
+
+/// Absolute slack for floating-point timeline/budget comparisons: the
+/// loop computes timestamps by summation, so exact equality is legitimate
+/// but representable-rounding noise must not trip the audit.
+const EPS_S: f64 = 1e-12;
+
+/// Audit a serving run's log against the admission contract. Pure and
+/// total; returns every violation found (empty means clean).
+pub fn audit_serving(log: &ServingLog) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let err = |code, location: String, message: String| {
+        Diagnostic::error(Pass::Serving, code, location, message)
+    };
+
+    let mut in_batches = 0usize;
+    let mut prev_close = f64::NEG_INFINITY;
+    for (bi, batch) in log.batches.iter().enumerate() {
+        let loc = || format!("batch {bi}");
+        if batch.jobs.is_empty() {
+            diags.push(Diagnostic::warning(
+                Pass::Serving,
+                codes::SRV_EMPTY,
+                loc(),
+                "batch record carries no jobs (the event loop never emits one)".into(),
+            ));
+        }
+        if batch.window_close_s < prev_close - EPS_S {
+            diags.push(err(
+                codes::SRV_TIMELINE,
+                loc(),
+                format!(
+                    "window close {:.3e}s precedes the previous batch's close {prev_close:.3e}s",
+                    batch.window_close_s
+                ),
+            ));
+        }
+        prev_close = prev_close.max(batch.window_close_s);
+        if batch.start_s < batch.window_close_s - EPS_S {
+            diags.push(err(
+                codes::SRV_TIMELINE,
+                loc(),
+                format!(
+                    "batch starts at {:.3e}s, before its window closed at {:.3e}s",
+                    batch.start_s, batch.window_close_s
+                ),
+            ));
+        }
+        for job in &batch.jobs {
+            in_batches += 1;
+            let jloc = || format!("batch {bi}, job {}", job.id);
+            let age = batch.window_close_s - job.arrival_s;
+            if age < -EPS_S {
+                diags.push(err(
+                    codes::SRV_TIMELINE,
+                    jloc(),
+                    format!(
+                        "admitted before arriving: arrival {:.3e}s is after the window \
+                         close {:.3e}s",
+                        job.arrival_s, batch.window_close_s
+                    ),
+                ));
+            }
+            if age > log.latency_budget_s + EPS_S {
+                diags.push(err(
+                    codes::SRV_BUDGET,
+                    jloc(),
+                    format!(
+                        "admitted with age {age:.3e}s over the {:.3e}s latency budget — \
+                         the controller must have shed it",
+                        log.latency_budget_s
+                    ),
+                ));
+            }
+            if job.complete_s < batch.start_s - EPS_S {
+                diags.push(err(
+                    codes::SRV_TIMELINE,
+                    jloc(),
+                    format!(
+                        "completes at {:.3e}s, before its batch started at {:.3e}s",
+                        job.complete_s, batch.start_s
+                    ),
+                ));
+            }
+        }
+    }
+
+    if in_batches != log.admitted {
+        diags.push(err(
+            codes::SRV_CONSERVE,
+            "log".into(),
+            format!(
+                "batches carry {in_batches} job(s) but the log claims {} admitted",
+                log.admitted
+            ),
+        ));
+    }
+    let accounted = log.admitted + log.rejected + log.queued;
+    if accounted != log.arrived {
+        diags.push(err(
+            codes::SRV_CONSERVE,
+            "log".into(),
+            format!(
+                "{} arrived but admitted {} + rejected {} + queued {} = {accounted}",
+                log.arrived, log.admitted, log.rejected, log.queued
+            ),
+        ));
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{count_severity, ensure_clean, Severity};
+    use crate::serving::{BatchRecord, JobRecord};
+
+    fn clean_log() -> ServingLog {
+        ServingLog {
+            latency_budget_s: 2e-3,
+            arrived: 3,
+            admitted: 2,
+            rejected: 1,
+            queued: 0,
+            batches: vec![BatchRecord {
+                window_close_s: 2e-4,
+                start_s: 2e-4,
+                cpu_s: 1e-5,
+                fpga_s: 2e-5,
+                jobs: vec![
+                    JobRecord { id: 0, arrival_s: 5e-5, complete_s: 2.6e-4, cached: false },
+                    JobRecord { id: 1, arrival_s: 1e-4, complete_s: 2.7e-4, cached: true },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn clean_log_passes() {
+        let diags = audit_serving(&clean_log());
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn budget_violation_is_flagged() {
+        let mut log = clean_log();
+        // age the first job past the budget at its window close
+        log.batches[0].jobs[0].arrival_s = -3e-3;
+        let diags = audit_serving(&log);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, codes::SRV_BUDGET);
+        assert!(ensure_clean(diags).is_err());
+    }
+
+    #[test]
+    fn timeline_violations_are_flagged() {
+        let mut log = clean_log();
+        log.batches[0].start_s = 1e-4; // before the window close
+        log.batches[0].jobs[1].complete_s = 5e-5; // before the batch start
+        let diags = audit_serving(&log);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().all(|d| d.code == codes::SRV_TIMELINE));
+
+        let mut log = clean_log();
+        log.batches[0].jobs[0].arrival_s = 3e-4; // admitted before arriving
+        let diags = audit_serving(&log);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, codes::SRV_TIMELINE);
+
+        let mut log = clean_log();
+        let mut earlier = log.batches[0].clone();
+        earlier.window_close_s = 1e-4;
+        earlier.start_s = 1e-4;
+        log.batches.push(earlier); // closes go backwards
+        log.arrived = 5;
+        log.admitted = 4;
+        let diags = audit_serving(&log);
+        assert!(diags.iter().any(|d| d.code == codes::SRV_TIMELINE), "{diags:?}");
+    }
+
+    #[test]
+    fn conservation_violations_are_flagged() {
+        let mut log = clean_log();
+        log.admitted = 3; // batches only carry 2
+        let diags = audit_serving(&log);
+        assert_eq!(diags.len(), 2, "{diags:?}"); // count mismatch + arrival sum
+        assert!(diags.iter().all(|d| d.code == codes::SRV_CONSERVE));
+
+        let mut log = clean_log();
+        log.queued = 7;
+        let diags = audit_serving(&log);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, codes::SRV_CONSERVE);
+    }
+
+    #[test]
+    fn empty_batch_is_a_warning_only() {
+        let mut log = clean_log();
+        log.batches.push(BatchRecord {
+            window_close_s: 4e-4,
+            start_s: 4e-4,
+            cpu_s: 0.0,
+            fpga_s: 0.0,
+            jobs: Vec::new(),
+        });
+        let diags = audit_serving(&log);
+        assert_eq!(count_severity(&diags, Severity::Error), 0, "{diags:?}");
+        assert_eq!(count_severity(&diags, Severity::Warning), 1);
+        assert_eq!(diags[0].code, codes::SRV_EMPTY);
+        assert!(ensure_clean(diags).is_ok(), "warnings alone pass the gate");
+    }
+}

@@ -80,8 +80,19 @@ pub struct ReapBatchReport {
     pub fpga_sim_serial: SimStats,
     /// The same run on the double-buffered depth-2 channel.
     pub fpga_sim_db: SimStats,
-    /// Per-job simulated attribution (cycles held, flops, traffic).
+    /// Per-job simulated attribution (cycles held, flops, traffic, plus
+    /// the enqueue/complete cycle stamps behind [`Self::job_enqueue_s`]).
     pub job_sim: Vec<JobSimStats>,
+    /// Per-job start-of-service seconds within the FPGA phase: when the
+    /// job's first shared wave begins, at the design clock. Indexed by
+    /// job id; `0.0` for a job riding no wave.
+    pub job_enqueue_s: Vec<f64>,
+    /// Per-job completion seconds within the FPGA phase: when the job's
+    /// last shared wave finishes. The serving layer
+    /// ([`crate::serving`]) adds these to its batch start time to get
+    /// per-job latency — no re-derivation from wave indices. The maximum
+    /// over jobs of a non-empty batch equals [`Self::fpga_s`].
+    pub job_complete_s: Vec<f64>,
     /// Bytes of each job's A-side RIR stream segment in the shared arena.
     pub a_stream_bytes: Vec<usize>,
     /// Simulated FPGA seconds at the design's clock.
@@ -209,6 +220,11 @@ impl ReapBatch {
             .filter_map(|(j, js)| js.failed.then_some(j))
             .collect();
 
+        let job_enqueue_s: Vec<f64> =
+            sim.job_stats.iter().map(|js| js.enqueue_cycle as f64 / hz).collect();
+        let job_complete_s: Vec<f64> =
+            sim.job_stats.iter().map(|js| js.complete_cycle as f64 / hz).collect();
+
         Ok(ReapBatchReport {
             outputs,
             cpu_preprocess_s,
@@ -216,6 +232,8 @@ impl ReapBatch {
             fpga_sim_serial,
             fpga_sim_db,
             job_sim: sim.job_stats,
+            job_enqueue_s,
+            job_complete_s,
             a_stream_bytes,
             fpga_s,
             total_s,
@@ -409,6 +427,23 @@ mod tests {
         assert!(rep.total_s >= rep.cpu_preprocess_s.max(rep.fpga_s) - 1e-9);
         // per-tenant stream accounting covers every job
         assert!(rep.a_stream_bytes.iter().all(|&bytes| bytes > 0));
+    }
+
+    #[test]
+    fn per_job_latency_stamps_cover_the_fpga_phase() {
+        let jobs = mk_jobs(6, 30, 220, 700);
+        let cfg = FpgaConfig::reap64_spgemm();
+        let rep = ReapBatch::new(cfg.clone()).run(&jobs).unwrap();
+        assert_eq!(rep.job_enqueue_s.len(), jobs.len());
+        assert_eq!(rep.job_complete_s.len(), jobs.len());
+        let hz = cfg.hz();
+        for j in 0..jobs.len() {
+            assert!(rep.job_enqueue_s[j] < rep.job_complete_s[j], "job {j}");
+            assert_eq!(rep.job_enqueue_s[j], rep.job_sim[j].enqueue_cycle as f64 / hz);
+            assert_eq!(rep.job_complete_s[j], rep.job_sim[j].complete_cycle as f64 / hz);
+        }
+        let last = rep.job_complete_s.iter().cloned().fold(0.0f64, f64::max);
+        assert_eq!(last, rep.fpga_s, "last completion is the FPGA phase end");
     }
 
     #[test]

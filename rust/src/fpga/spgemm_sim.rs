@@ -243,6 +243,17 @@ pub struct JobSimStats {
     /// coordinator reports it failed, without failing the rest of the
     /// batch. Always `false` on the fault-free path.
     pub failed: bool,
+    /// Cycle (within the batched execution, at the executed depth) at
+    /// which the job's first shared wave starts — the prefix sum of
+    /// [`BatchSimResult::wave_cycles`] before it. `0` for a job that
+    /// rides no wave (`waves == 0`).
+    pub enqueue_cycle: u64,
+    /// Cycle at which the job's last shared wave finishes. The serving
+    /// layer derives per-job completion latency from this instead of
+    /// re-walking wave indices. `0` for a job that rides no wave; the
+    /// maximum over jobs of a non-empty batch equals
+    /// [`SimStats::cycles`](crate::fpga::SimStats::cycles).
+    pub complete_cycle: u64,
 }
 
 /// Result of simulating one batched (multi-tenant) SpGEMM execution.
@@ -432,12 +443,21 @@ pub fn simulate_spgemm_batch_with_faults(
     }
 
     let engine = execute_waves_with_faults(&costs, cfg, cfg.dram_buffer_depth, faults);
+    // `item_cycles` sum to `stats.cycles` at every depth, so the running
+    // prefix is an exact enqueue/complete timestamp pair per job
+    let mut wave_start = 0u64;
     for (runs, &wave_cy) in wave_runs.iter().zip(&engine.item_cycles) {
+        let wave_end = wave_start + wave_cy;
         for &(job, n_asg) in runs {
             let js = &mut job_stats[job];
+            if js.waves == 0 {
+                js.enqueue_cycle = wave_start;
+            }
             js.waves += 1;
             js.busy_pipeline_cycles += n_asg * wave_cy;
+            js.complete_cycle = wave_end;
         }
+        wave_start = wave_end;
     }
     // graceful degradation: a dead wave kills only the tenants riding it
     for &w in &engine.failed_waves {
@@ -601,6 +621,38 @@ mod tests {
                 "job {j}"
             );
         }
+    }
+
+    #[test]
+    fn per_job_timestamps_are_wave_prefix_sums() {
+        let jobs = mk_jobs(6, 35, 250, 27);
+        let cfg = FpgaConfig::reap32_spgemm();
+        let s = schedule_spgemm_batch(&jobs, cfg.pipelines, cfg.bundle_size);
+        let r = simulate_spgemm_batch(&jobs, &s, &cfg, Style::HandCoded);
+        let mut ends = Vec::with_capacity(r.wave_cycles.len());
+        let mut acc = 0u64;
+        for &c in &r.wave_cycles {
+            acc += c;
+            ends.push(acc);
+        }
+        for (j, js) in r.job_stats.iter().enumerate() {
+            let riding: Vec<usize> = s
+                .waves
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.segments.iter().any(|seg| seg.job as usize == j))
+                .map(|(i, _)| i)
+                .collect();
+            assert!(!riding.is_empty(), "job {j} rides no wave");
+            let first = riding[0];
+            let last = *riding.last().unwrap();
+            let expect_enq = if first == 0 { 0 } else { ends[first - 1] };
+            assert_eq!(js.enqueue_cycle, expect_enq, "job {j} enqueue");
+            assert_eq!(js.complete_cycle, ends[last], "job {j} complete");
+            assert!(js.enqueue_cycle < js.complete_cycle, "job {j} window must be nonempty");
+        }
+        let max_complete = r.job_stats.iter().map(|js| js.complete_cycle).max().unwrap();
+        assert_eq!(max_complete, r.stats.cycles, "last completion is the batch end");
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! | [`spmm`] | SpMM multi-vector vs k serial SpMVs (no paper figure) |
 //! | [`reliability`] | checksummed-stream fault sweep (no paper figure) |
 //! | [`compression`] | encoded-stream pricing: bytes-per-nnz vs cycles (no paper figure) |
+//! | [`serving`] | online serving: admission, latency percentiles, schedule cache (no paper figure) |
 
 pub mod batch;
 pub mod compression;
@@ -31,6 +32,7 @@ pub mod hls_cmp;
 pub mod json;
 pub mod reliability;
 pub mod report;
+pub mod serving;
 pub mod spmm;
 pub mod suite;
 pub mod tables;

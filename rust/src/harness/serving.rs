@@ -1,0 +1,247 @@
+//! Online serving sweep: latency percentiles, sustained throughput and
+//! schedule-cache hit rate per design point (the production north-star's
+//! online scenario — no paper figure corresponds; EXPERIMENTS.md §Serving
+//! documents the methodology).
+//!
+//! For each design point and repeat ratio the harness generates one
+//! Poisson tenant workload and runs it twice through
+//! [`run_serving`] — cold (every job pays the CPU scheduling pass) and
+//! cached (repeat sparsity patterns hit the fingerprint-keyed
+//! [`ScheduleCache`](crate::serving::ScheduleCache)) — and reports
+//! p50/p95/p99 latency, jobs/sec, queue depth and hit rate. The headline
+//! CI asserts: the cached run replays **bit-identical** schedules (equal
+//! digests, equal cycles) while its latency is strictly lower on the wide
+//! designs at a high repeat ratio.
+
+use crate::fpga::FpgaConfig;
+use crate::serving::{generate_workload, run_serving, ServingConfig, WorkloadSpec};
+use crate::util::table::Table;
+
+use super::report::RunConfig;
+
+/// Jobs per workload trace (shared by every design point and mode).
+const N_JOBS: usize = 60;
+/// Poisson arrival rate, jobs per second.
+const RATE_HZ: f64 = 30_000.0;
+/// Repeat-ratio sweep: fraction of jobs resubmitting a pool pattern.
+const RATIOS: [f64; 3] = [0.0, 0.5, 0.9];
+
+/// One (design point × repeat ratio × cache mode) serving run.
+#[derive(Clone, Debug)]
+pub struct ServingRow {
+    pub config: String,
+    pub repeat_ratio: f64,
+    /// `true` = schedule cache on; `false` = cold baseline.
+    pub cached: bool,
+    pub arrived: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub queued: usize,
+    /// Nearest-rank latency percentiles over admitted jobs, seconds.
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    pub jobs_per_s: f64,
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub hit_rate: f64,
+    /// Modeled CPU scheduling seconds summed over batches.
+    pub cpu_s: f64,
+    /// Simulated FPGA seconds summed over batches.
+    pub fpga_s: f64,
+    /// Cycle totals at the configured depth / depth 1 / depth 2.
+    pub cycles: u64,
+    pub cycles_serial: u64,
+    pub cycles_db: u64,
+    pub prefetch_hidden: u64,
+    pub waves: u64,
+    /// Structure digest of every composed batch schedule, in order —
+    /// cached and cold runs of the same workload must agree exactly.
+    pub schedule_digest: u64,
+}
+
+/// Run the sweep; returns rows plus the rendered table, and writes
+/// `BENCH_serving.json` when output is enabled.
+pub fn run(cfg: &RunConfig) -> (Vec<ServingRow>, Table) {
+    let mut rows = Vec::new();
+    for design in [
+        cfg.design(FpgaConfig::reap32_spgemm()),
+        cfg.design(FpgaConfig::reap64_spgemm()),
+        cfg.design(FpgaConfig::reap128_spgemm()),
+    ] {
+        for (ri, &ratio) in RATIOS.iter().enumerate() {
+            let seed = cfg.seed ^ (0x5E87_1000 + ri as u64);
+            let jobs = generate_workload(&WorkloadSpec::poisson(seed, N_JOBS, RATE_HZ, ratio));
+            for cached in [false, true] {
+                let mut scfg = ServingConfig::new(design.clone());
+                scfg.use_cache = cached;
+                scfg.strict = true;
+                let rep = run_serving(&scfg, &jobs).expect("serving run");
+                let cpu_s: f64 = rep.log.batches.iter().map(|b| b.cpu_s).sum();
+                let fpga_s: f64 = rep.log.batches.iter().map(|b| b.fpga_s).sum();
+                rows.push(ServingRow {
+                    config: design.name.to_string(),
+                    repeat_ratio: ratio,
+                    cached,
+                    arrived: rep.log.arrived,
+                    admitted: rep.log.admitted,
+                    rejected: rep.log.rejected,
+                    queued: rep.log.queued,
+                    p50_s: rep.p50_s,
+                    p95_s: rep.p95_s,
+                    p99_s: rep.p99_s,
+                    mean_s: rep.mean_s,
+                    jobs_per_s: rep.jobs_per_s,
+                    queue_depth_mean: rep.queue_depth_mean,
+                    queue_depth_max: rep.queue_depth_max,
+                    hits: rep.hits,
+                    misses: rep.misses,
+                    hit_rate: rep.hit_rate,
+                    cpu_s,
+                    fpga_s,
+                    cycles: rep.cycles,
+                    cycles_serial: rep.cycles_serial,
+                    cycles_db: rep.cycles_db,
+                    prefetch_hidden: rep.prefetch_hidden_cycles,
+                    waves: rep.waves,
+                    schedule_digest: rep.schedule_digest,
+                });
+            }
+        }
+    }
+    write_bench_json(cfg, &rows);
+
+    let mut table = Table::new(
+        "Serving — arrivals, admission, schedule cache (per design × repeat ratio)",
+        &[
+            "config", "ratio", "mode", "adm", "rej", "p50(us)", "p95(us)", "p99(us)",
+            "mean(us)", "jobs/s", "hit%",
+        ],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.config.clone(),
+            format!("{:.1}", r.repeat_ratio),
+            if r.cached { "cached" } else { "cold" }.to_string(),
+            r.admitted.to_string(),
+            r.rejected.to_string(),
+            format!("{:.1}", r.p50_s * 1e6),
+            format!("{:.1}", r.p95_s * 1e6),
+            format!("{:.1}", r.p99_s * 1e6),
+            format!("{:.1}", r.mean_s * 1e6),
+            format!("{:.0}", r.jobs_per_s),
+            format!("{:.0}%", r.hit_rate * 100.0),
+        ]);
+    }
+    (rows, table)
+}
+
+/// The serving headline: at the high repeat ratio on the wide designs,
+/// the cached run must replay bit-identical schedules (equal digests and
+/// cycles — caching changes *when*, never *what*) with a nonzero hit rate
+/// and strictly lower mean latency than the cold baseline.
+pub fn headline_holds(rows: &[ServingRow]) -> bool {
+    ["REAP-64", "REAP-128"].iter().all(|&config| {
+        let at = |cached: bool| {
+            rows.iter().find(|r| {
+                r.config == config && r.repeat_ratio == RATIOS[2] && r.cached == cached
+            })
+        };
+        match (at(false), at(true)) {
+            (Some(cold), Some(hot)) => {
+                hot.schedule_digest == cold.schedule_digest
+                    && hot.cycles == cold.cycles
+                    && hot.hit_rate > 0.0
+                    && hot.mean_s < cold.mean_s
+            }
+            _ => false,
+        }
+    })
+}
+
+use super::json::{escape, num};
+
+/// Write `BENCH_serving.json`: one record per (design × ratio × mode) so
+/// the online path's latency and cycle trajectory is diffable across PRs
+/// alongside the other `BENCH_*.json` files.
+fn write_bench_json(cfg: &RunConfig, rows: &[ServingRow]) {
+    let Some(dir) = &cfg.csv_dir else {
+        return;
+    };
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"workload\": \"poisson-{}-r{:.1}\", \"config\": \"{}\", \"mode\": \"{}\", \
+             \"cpu_s\": {}, \"fpga_s\": {}, \"p50_s\": {}, \"p95_s\": {}, \"p99_s\": {}, \
+             \"mean_s\": {}, \"jobs_per_s\": {}, \"hit_rate\": {:.6}, \"admitted\": {}, \
+             \"rejected\": {}, \"queued\": {}, \"waves\": {}, \"cycles_serial\": {}, \
+             \"cycles_db\": {}, \"prefetch_hidden_cycles\": {}}}{}\n",
+            N_JOBS,
+            r.repeat_ratio,
+            escape(&r.config),
+            if r.cached { "cached" } else { "cold" },
+            num(r.cpu_s),
+            num(r.fpga_s),
+            num(r.p50_s),
+            num(r.p95_s),
+            num(r.p99_s),
+            num(r.mean_s),
+            num(r.jobs_per_s),
+            r.hit_rate,
+            r.admitted,
+            r.rejected,
+            r.queued,
+            r.waves,
+            r.cycles_serial,
+            r.cycles_db,
+            r.prefetch_hidden,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    if let Err(e) = std::fs::create_dir_all(dir)
+        .and_then(|()| std::fs::write(dir.join("BENCH_serving.json"), out))
+    {
+        eprintln!("warning: could not write BENCH_serving.json: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn cache_wins_latency_with_bit_identical_replay() {
+        let mut cfg = RunConfig::quick();
+        let dir = std::env::temp_dir().join(format!("reap-serving-{}", std::process::id()));
+        cfg.csv_dir = Some(dir.clone());
+        let (rows, table) = run(&cfg);
+        assert_eq!(rows.len(), 18); // 3 designs × 3 ratios × 2 modes
+        assert_eq!(table.len(), 18);
+        assert!(headline_holds(&rows), "cached replay must win the wide designs: {rows:?}");
+        // cached and cold runs of one workload agree on everything but time
+        for pair in rows.chunks(2) {
+            let (cold, hot) = (&pair[0], &pair[1]);
+            assert!(!cold.cached && hot.cached);
+            assert_eq!(cold.schedule_digest, hot.schedule_digest, "{}", cold.config);
+            assert_eq!(cold.cycles, hot.cycles, "{}", cold.config);
+            assert_eq!(cold.admitted, hot.admitted, "{}", cold.config);
+            assert!(cold.p50_s <= cold.p95_s && cold.p95_s <= cold.p99_s);
+            if cold.repeat_ratio == 0.0 {
+                assert_eq!(hot.hits, 0, "fresh-only traffic can never hit");
+            }
+        }
+        let text = std::fs::read_to_string(dir.join("BENCH_serving.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 18);
+        assert!(arr[0].get("p99_s").unwrap().as_f64().is_some());
+        assert!(arr[0].get("cycles_serial").unwrap().as_usize().is_some());
+        assert!(arr[0].get("hit_rate").unwrap().as_f64().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -23,7 +23,10 @@
 //! The headline entry points are [`rir::schedule::schedule_spgemm`] (the
 //! CPU scheduling pass), [`coordinator::ReapBatch`] (multi-tenant shared
 //! waves) and [`coordinator::ReapSpmm`] (multi-vector) — each carries a
-//! runnable doctest.
+//! runnable doctest. The [`serving`] module drives the same stack online:
+//! a deterministic event loop with latency-budgeted admission control and
+//! a fingerprint-keyed schedule cache that lets repeat sparsity patterns
+//! skip the CPU pass.
 //!
 //! **`ARCHITECTURE.md`** (repo root) is the written spec: the dataflow,
 //! the module map, the RIR wire format byte-for-byte, and the invariants
@@ -47,6 +50,7 @@ pub mod kernels;
 pub mod reliability;
 pub mod rir;
 pub mod runtime;
+pub mod serving;
 pub mod sparse;
 pub mod symbolic;
 pub mod testing;

@@ -7,9 +7,9 @@
 //!                scale-up likewise.
 //! * `cholesky` — run REAP sparse Cholesky likewise.
 //! * `bench`    — regenerate the paper's tables/figures plus the batch,
-//!                SpMM, reliability and stream-compression studies
-//!                (`table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls
-//!                batch spmm reliability compression all`).
+//!                SpMM, reliability, stream-compression and online-serving
+//!                studies (`table1 table2 fig6 fig7 fig8 fig9 fig10 fig11
+//!                hls batch spmm reliability compression serving all`).
 //! * `lint`     — statically audit schedules, RIR streams and wave costs
 //!                ([`reap::analysis`]); exits non-zero on any diagnostic.
 //! * `gen-matrix` — write a synthetic matrix as Matrix-Market.
@@ -423,7 +423,7 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") || args.positionals().is_empty() {
         print!(
-            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch spmm reliability compression all\n",
+            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch spmm reliability compression serving all\n",
             usage("bench <target>", "regenerate a paper table/figure", &specs)
         );
         return Ok(());
@@ -560,10 +560,19 @@ fn run_bench_target(target: &str, cfg: &RunConfig) -> Result<()> {
             );
             cfg.dump_csv("compression", &t)?;
         }
+        "serving" => {
+            let (rows, t) = harness::serving::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "online serving: cache replays bit-identical, strictly faster on 64/128 -> headline {}",
+                if harness::serving::headline_holds(&rows) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("serving", &t)?;
+        }
         "all" => {
             for t in [
                 "table1", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "hls",
-                "batch", "spmm", "reliability", "compression",
+                "batch", "spmm", "reliability", "compression", "serving",
             ] {
                 run_bench_target(t, cfg)?;
                 println!();

@@ -470,6 +470,75 @@ fn build_batch_wave_band(
     (waves, times, b_words)
 }
 
+/// Compose a [`BatchSchedule`] from per-job single-job schedules by
+/// packing whole single-job waves side by side into shared waves.
+///
+/// This is the cache-replay path of the serving runtime
+/// ([`crate::serving`]): a cached [`SpgemmSchedule`] joins a shared wave
+/// without re-running the CPU pass, because whole waves carry their
+/// `b_rows` (and therefore their B-stream pricing) with them. Packing is
+/// first-fit in job order with two ordering guarantees that keep the
+/// result [`audit_batch_schedule`](crate::analysis::audit_batch_schedule)
+/// clean: job *j*'s k-th wave lands at a strictly larger shared-wave
+/// index than its (k−1)-th (per-job chunk order is preserved
+/// wave-for-wave), and runs inside a shared wave are job-ascending
+/// (jobs are packed in ascending order, so runs append in job order).
+///
+/// Every schedule in `singles` must match `pipelines`/`bundle_size`
+/// (asserted — a cached schedule built for one design must not be
+/// replayed on another). Timing fields are zeroed: the CPU cost of the
+/// pass was either spent once when the single-job schedule was built, or
+/// skipped entirely on a cache hit.
+pub fn compose_batch(
+    singles: &[SpgemmSchedule],
+    pipelines: usize,
+    bundle_size: usize,
+) -> BatchSchedule {
+    assert!(pipelines > 0 && bundle_size > 0, "zero-valued compose geometry");
+    let mut waves: Vec<BatchWave> = Vec::new();
+    let mut fill: Vec<usize> = Vec::new();
+    let mut a_words = 0usize;
+    let mut b_words = 0usize;
+    for (j, s) in singles.iter().enumerate() {
+        assert_eq!(s.pipelines, pipelines, "job {j}: pipeline count differs from compose target");
+        assert_eq!(s.bundle_size, bundle_size, "job {j}: bundle size differs from compose target");
+        let job = u32::try_from(j).expect("job count exceeds u32 tag space");
+        a_words += s.a_words;
+        b_words += s.b_words;
+        // First shared wave this job may still use: strictly after the
+        // one holding its previous wave, so wave order (= chunk order)
+        // survives composition.
+        let mut floor = 0usize;
+        for w in &s.waves {
+            let need = w.assignments.len();
+            debug_assert!(need <= pipelines, "single-job wave wider than the design");
+            let slot = match (floor..waves.len()).find(|&i| fill[i] + need <= pipelines) {
+                Some(i) => i,
+                None => {
+                    waves.push(BatchWave::default());
+                    fill.push(0);
+                    waves.len() - 1
+                }
+            };
+            fill[slot] += need;
+            waves[slot].assignments.extend(w.assignments.iter().map(|&asg| (job, asg)));
+            waves[slot].segments.push(BatchSegment { job, b_rows: w.b_rows.clone() });
+            floor = slot + 1;
+        }
+    }
+    let n_waves = waves.len();
+    BatchSchedule {
+        pipelines,
+        bundle_size,
+        n_jobs: singles.len(),
+        waves,
+        a_words,
+        b_words,
+        prep_cpu_s: 0.0,
+        wave_cpu_s: vec![0.0; n_waves],
+    }
+}
+
 /// Build the wave schedule for `C = A × B` with the default worker count
 /// (`REAP_CPU_THREADS` or the host parallelism, capped at 16).
 ///
@@ -960,6 +1029,59 @@ mod tests {
         assert_eq!(s.input_bytes(), 0);
         assert_eq!(s.slot_occupancy(), 0.0);
         assert!(s.decompose(&jobs).iter().all(|sch| sch.waves.is_empty()));
+    }
+
+    #[test]
+    fn composed_batch_is_audit_clean_and_decomposes_to_its_inputs() {
+        let jobs = mk_jobs(5, 35, 180, 90);
+        for pipelines in [8usize, 64] {
+            let singles: Vec<SpgemmSchedule> =
+                jobs.iter().map(|(a, b)| schedule_spgemm(a, b, pipelines, 16)).collect();
+            let batch = compose_batch(&singles, pipelines, 16);
+            assert_eq!(batch.n_jobs, jobs.len());
+            let diags = crate::analysis::audit_batch_schedule(&jobs, &batch);
+            assert!(diags.is_empty(), "composed schedule must audit clean: {diags:?}");
+            for (j, (single, back)) in singles.iter().zip(batch.decompose(&jobs)).enumerate() {
+                assert_eq!(back.waves, single.waves, "job {j} p {pipelines}");
+            }
+            let a_words: usize = singles.iter().map(|s| s.a_words).sum();
+            let b_words: usize = singles.iter().map(|s| s.b_words).sum();
+            assert_eq!(batch.a_words, a_words);
+            assert_eq!(batch.b_words, b_words);
+            assert_eq!(batch.wave_cpu_s.len(), batch.n_waves());
+        }
+    }
+
+    #[test]
+    fn compose_respects_capacity_and_per_job_wave_order() {
+        let jobs = mk_jobs(7, 40, 220, 110);
+        let singles: Vec<SpgemmSchedule> =
+            jobs.iter().map(|(a, b)| schedule_spgemm(a, b, 16, 16)).collect();
+        let batch = compose_batch(&singles, 16, 16);
+        let mut last_wave: Vec<Option<usize>> = vec![None; jobs.len()];
+        for (wid, w) in batch.waves.iter().enumerate() {
+            assert!(w.assignments.len() <= 16, "wave {wid} overfull");
+            let mut run_jobs: Vec<u32> = w.assignments.iter().map(|&(j, _)| j).collect();
+            run_jobs.dedup();
+            assert!(run_jobs.windows(2).all(|p| p[0] < p[1]), "wave {wid} run order");
+            for &j in &run_jobs {
+                let j = j as usize;
+                assert!(last_wave[j].map_or(true, |prev| prev < wid), "job {j} wave order");
+                last_wave[j] = Some(wid);
+            }
+        }
+        // every single-job wave landed somewhere
+        let packed: usize = batch.waves.iter().map(|w| w.segments.len()).sum();
+        let expect: usize = singles.iter().map(SpgemmSchedule::n_waves).sum();
+        assert_eq!(packed, expect);
+    }
+
+    #[test]
+    fn compose_of_no_jobs_is_empty() {
+        let batch = compose_batch(&[], 8, 32);
+        assert_eq!(batch.n_waves(), 0);
+        assert_eq!(batch.n_jobs, 0);
+        assert_eq!(batch.input_bytes(), 0);
     }
 
     #[test]

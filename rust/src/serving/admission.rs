@@ -1,0 +1,140 @@
+//! Latency-budgeted admission control and priority packing.
+//!
+//! The controller closes a batching window every
+//! [`AdmissionConfig::window_s`] seconds. At each close it walks the
+//! queue oldest-first (the priority packer's rule: age is priority, ties
+//! broken by id — both deterministic) and, per job:
+//!
+//! 1. **Shed**: if the job's age plus its modeled service estimate
+//!    already exceeds [`AdmissionConfig::latency_budget_s`], it cannot
+//!    possibly meet its budget — reject it now rather than burn FPGA
+//!    waves on a dead deadline.
+//! 2. **Admit**: otherwise pack it into this window's batch, up to
+//!    [`AdmissionConfig::max_batch_jobs`] jobs.
+//! 3. **Defer**: jobs past the capacity cut stay queued for the next
+//!    window (they age, which raises their priority).
+//!
+//! The admission contract (ARCHITECTURE.md §9): decisions depend only on
+//! the clock, the queue and per-job *structural* estimates — never on
+//! accelerator backlog or measured wall-clock times. That makes batch
+//! membership a pure function of the arrival trace, so runs with the
+//! schedule cache on and off compose identical batches (the bit-identical
+//! replay the acceptance headline asserts) and every thread count sees
+//! the same decisions.
+
+use crate::sparse::Csr;
+
+/// Admission-controller tuning for one serving run.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Batching-window cadence (seconds between window closes).
+    pub window_s: f64,
+    /// End-to-end latency budget each admitted job must plausibly meet.
+    pub latency_budget_s: f64,
+    /// Capacity cut of the priority packer, per window.
+    pub max_batch_jobs: usize,
+    /// Modeled service estimate: `est_base_s + est_per_nnz_s · nnz(A)+nnz(B)`.
+    pub est_base_s: f64,
+    pub est_per_nnz_s: f64,
+}
+
+impl Default for AdmissionConfig {
+    /// Defaults sized for the harness workloads (tens-of-µs jobs): 200 µs
+    /// windows, a 2 ms budget and 16-job batches.
+    fn default() -> Self {
+        AdmissionConfig {
+            window_s: 200e-6,
+            latency_budget_s: 2e-3,
+            max_batch_jobs: 16,
+            est_base_s: 2e-6,
+            est_per_nnz_s: 2e-9,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// The deterministic per-job service estimate the shed rule uses —
+    /// a structural affine model, independent of backlog and wall clock.
+    pub fn estimated_service_s(&self, a: &Csr, b: &Csr) -> f64 {
+        self.est_base_s + self.est_per_nnz_s * (a.nnz() + b.nnz()) as f64
+    }
+}
+
+/// The queue view the controller decides over: id, arrival and the
+/// precomputed structural estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct QueuedJob {
+    pub id: usize,
+    pub arrival_s: f64,
+    pub est_service_s: f64,
+}
+
+/// Outcome of one window close: job ids to run now and job ids shed.
+/// Everything else stays queued.
+#[derive(Clone, Debug, Default)]
+pub struct WindowDecision {
+    pub admitted: Vec<usize>,
+    pub rejected: Vec<usize>,
+}
+
+/// Close one window at `now_s` over `queue` (must be sorted oldest
+/// first; the caller maintains arrival order, which is also id order).
+pub fn close_window(cfg: &AdmissionConfig, now_s: f64, queue: &[QueuedJob]) -> WindowDecision {
+    debug_assert!(
+        queue.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s),
+        "queue must be oldest-first"
+    );
+    let mut decision = WindowDecision::default();
+    for q in queue {
+        let age = now_s - q.arrival_s;
+        if age + q.est_service_s > cfg.latency_budget_s {
+            decision.rejected.push(q.id);
+        } else if decision.admitted.len() < cfg.max_batch_jobs {
+            decision.admitted.push(q.id);
+        }
+    }
+    decision
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: usize, arrival_s: f64, est: f64) -> QueuedJob {
+        QueuedJob { id, arrival_s, est_service_s: est }
+    }
+
+    #[test]
+    fn packs_oldest_first_up_to_capacity() {
+        let cfg = AdmissionConfig { max_batch_jobs: 2, ..AdmissionConfig::default() };
+        let queue = [q(0, 0.0, 1e-6), q(1, 1e-5, 1e-6), q(2, 2e-5, 1e-6)];
+        let d = close_window(&cfg, 1e-4, &queue);
+        assert_eq!(d.admitted, vec![0, 1], "capacity cut keeps the oldest");
+        assert!(d.rejected.is_empty(), "job 2 stays queued, not shed");
+    }
+
+    #[test]
+    fn sheds_jobs_that_cannot_meet_the_budget() {
+        let cfg = AdmissionConfig { latency_budget_s: 1e-3, ..AdmissionConfig::default() };
+        let queue = [
+            q(0, 0.0, 1e-6),     // age 2 ms alone busts the 1 ms budget
+            q(1, 1.95e-3, 2e-4), // age 50 µs + est 200 µs fits
+            q(2, 1.99e-3, 2e-3), // estimate alone busts the budget
+        ];
+        let d = close_window(&cfg, 2e-3, &queue);
+        assert_eq!(d.rejected, vec![0, 2]);
+        assert_eq!(d.admitted, vec![1]);
+    }
+
+    #[test]
+    fn estimate_is_structural_and_monotone_in_nnz() {
+        use crate::sparse::gen;
+        let cfg = AdmissionConfig::default();
+        let small = gen::random_uniform(20, 20, 60, 1);
+        let big = gen::random_uniform(40, 40, 400, 2);
+        let e_small = cfg.estimated_service_s(&small, &small);
+        let e_big = cfg.estimated_service_s(&big, &big);
+        assert!(e_big > e_small);
+        assert!(e_small > cfg.est_base_s);
+    }
+}

@@ -1,0 +1,239 @@
+//! Seed-deterministic tenant workloads for the serving simulation.
+//!
+//! A workload is a finite trace of [`ServingJob`]s: arrival timestamps
+//! drawn from a configurable [`ArrivalProcess`] plus, per job, the tenant
+//! and its operand matrices. Tenants own small *pattern pools* — the
+//! production shape this module models is solvers and recommenders
+//! resubmitting the same sparsity structure continuously — and
+//! [`WorkloadSpec::repeat_ratio`] sets the probability that a job reuses
+//! a pool pattern (a schedule-cache hit candidate) instead of presenting
+//! a fresh, never-seen structure.
+//!
+//! Everything is a pure function of the spec: matrices regenerate from
+//! seeds derived only from `(seed, tenant, pool index)` or
+//! `(seed, job id)`, and every random draw comes from the crate's own
+//! [`Pcg64`], so the same spec yields the same trace on every host,
+//! thread count and run (pinned in `tests/integration_serving.rs`).
+
+use crate::sparse::gen::{self, Family};
+use crate::sparse::Csr;
+use crate::util::rng::Pcg64;
+
+/// Inter-arrival model for the workload trace.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate_hz` jobs/sec (exponential gaps).
+    Poisson { rate_hz: f64 },
+    /// On/off bursts: `burst` jobs back-to-back at `rate_hz`, then an
+    /// `idle_s` silence before the next burst.
+    BurstyOnOff { rate_hz: f64, burst: usize, idle_s: f64 },
+    /// Replay recorded inter-arrival gaps (cycled when the trace is
+    /// shorter than the workload).
+    Trace { inter_arrival_s: Vec<f64> },
+}
+
+/// What a tenant submits: a full SpGEMM (`C = A × B`) or an SpMV
+/// (`y = A x`, modeled as SpGEMM against an n×1 operand so the whole
+/// schedule/simulate/replay path is shared).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    Spgemm,
+    Spmv,
+}
+
+/// One submitted job of the serving trace.
+#[derive(Clone, Debug)]
+pub struct ServingJob {
+    /// Position in the trace (stable across runs; ids are arrival-ordered).
+    pub id: usize,
+    pub tenant: u32,
+    pub kind: JobKind,
+    /// Arrival timestamp, seconds from simulation start (non-decreasing).
+    pub arrival_s: f64,
+    pub a: Csr,
+    pub b: Csr,
+}
+
+/// Deterministic description of a serving workload.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub seed: u64,
+    pub n_jobs: usize,
+    /// Number of tenants; even-numbered tenants submit SpGEMM, odd ones
+    /// SpMV (a fixed rule keeps the trace a pure function of the spec).
+    pub tenants: u32,
+    /// Patterns in each tenant's pool (≥ 1).
+    pub pool_per_tenant: usize,
+    /// Probability in `[0, 1]` that a job resubmits a pool pattern.
+    pub repeat_ratio: f64,
+    /// Base matrix dimension; pool patterns span `dim .. 2·dim` rows.
+    pub dim: usize,
+    pub process: ArrivalProcess,
+}
+
+impl WorkloadSpec {
+    /// A small Poisson workload with the crate's default seed layout —
+    /// the starting point the harness and tests perturb.
+    pub fn poisson(seed: u64, n_jobs: usize, rate_hz: f64, repeat_ratio: f64) -> Self {
+        WorkloadSpec {
+            seed,
+            n_jobs,
+            tenants: 3,
+            pool_per_tenant: 4,
+            repeat_ratio,
+            dim: 30,
+            process: ArrivalProcess::Poisson { rate_hz },
+        }
+    }
+}
+
+/// Generate the full arrival trace for `spec`. Arrival times are
+/// non-decreasing and jobs are id-ordered; the result is bit-identical
+/// across runs and thread counts.
+pub fn generate_workload(spec: &WorkloadSpec) -> Vec<ServingJob> {
+    assert!(spec.tenants > 0, "workload needs at least one tenant");
+    assert!(spec.pool_per_tenant > 0, "pattern pools must be non-empty");
+    assert!(
+        (0.0..=1.0).contains(&spec.repeat_ratio),
+        "repeat_ratio must be a probability, got {}",
+        spec.repeat_ratio
+    );
+    let mut rng = Pcg64::new(spec.seed);
+    let mut t = 0.0f64;
+    let mut burst_pos = 0usize;
+    (0..spec.n_jobs)
+        .map(|id| {
+            t += match &spec.process {
+                ArrivalProcess::Poisson { rate_hz } => exp_gap(&mut rng, *rate_hz),
+                ArrivalProcess::BurstyOnOff { rate_hz, burst, idle_s } => {
+                    let gap = if burst_pos == 0 && id > 0 {
+                        *idle_s + exp_gap(&mut rng, *rate_hz)
+                    } else {
+                        exp_gap(&mut rng, *rate_hz)
+                    };
+                    burst_pos = (burst_pos + 1) % (*burst).max(1);
+                    gap
+                }
+                ArrivalProcess::Trace { inter_arrival_s } => {
+                    assert!(!inter_arrival_s.is_empty(), "trace replay needs at least one gap");
+                    inter_arrival_s[id % inter_arrival_s.len()].max(0.0)
+                }
+            };
+            let tenant = rng.next_below(u64::from(spec.tenants)) as u32;
+            let kind = if tenant % 2 == 0 { JobKind::Spgemm } else { JobKind::Spmv };
+            let repeat = rng.chance(spec.repeat_ratio);
+            let (a, b) = if repeat {
+                let k = rng.next_below(spec.pool_per_tenant as u64) as usize;
+                pool_matrices(spec, tenant, k, kind)
+            } else {
+                fresh_matrices(spec, tenant, id, kind)
+            };
+            ServingJob { id, tenant, kind, arrival_s: t, a, b }
+        })
+        .collect()
+}
+
+fn exp_gap(rng: &mut Pcg64, rate_hz: f64) -> f64 {
+    assert!(rate_hz > 0.0, "arrival rate must be positive");
+    // inverse-CDF exponential; next_f64 < 1.0 so the log argument is > 0
+    -(1.0 - rng.next_f64()).ln() / rate_hz
+}
+
+/// Pattern `k` of tenant `t`'s pool — a pure function of the spec, so a
+/// repeat submission regenerates the *same* matrices (same structure,
+/// same values) and fingerprints identically to its first appearance.
+fn pool_matrices(spec: &WorkloadSpec, tenant: u32, k: usize, kind: JobKind) -> (Csr, Csr) {
+    let n = spec.dim + (tenant as usize * 13 + k * 29) % spec.dim.max(1);
+    let nnz = n * (3 + k % 4);
+    let seed = spec.seed ^ (0x5EED_0000 + (u64::from(tenant) << 8) + k as u64);
+    operands(n, nnz, seed, (tenant as usize + k) % 3, kind)
+}
+
+/// A never-seen structure: the seed and dimension mix in the job id, so
+/// fresh jobs fingerprint uniquely and always miss the schedule cache.
+fn fresh_matrices(spec: &WorkloadSpec, tenant: u32, id: usize, kind: JobKind) -> (Csr, Csr) {
+    let n = spec.dim + (id * 17 + 5) % spec.dim.max(1);
+    let nnz = n * (3 + id % 4);
+    let seed = spec.seed ^ 0x0F5E_7000_0000 ^ ((id as u64) << 8) ^ u64::from(tenant);
+    operands(n, nnz, seed, id % 3, kind)
+}
+
+fn operands(n: usize, nnz: usize, seed: u64, family_ix: usize, kind: JobKind) -> (Csr, Csr) {
+    let family = match family_ix {
+        0 => Family::RandomUniform,
+        1 => Family::PowerLaw,
+        _ => Family::BandedFem,
+    };
+    let a = gen::generate(family, n, nnz, seed);
+    let b = match kind {
+        JobKind::Spgemm => gen::random_uniform(n, n, nnz, seed ^ 1),
+        // SpMV: a dense-ish n×1 operand (one column), same streamed path
+        JobKind::Spmv => gen::random_uniform(n, 1, n, seed ^ 2),
+    };
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let spec = WorkloadSpec::poisson(0x5EA9, 40, 50_000.0, 0.7);
+        let w1 = generate_workload(&spec);
+        let w2 = generate_workload(&spec);
+        assert_eq!(w1.len(), 40);
+        for (j1, j2) in w1.iter().zip(&w2) {
+            assert_eq!(j1.id, j2.id);
+            assert_eq!(j1.tenant, j2.tenant);
+            assert_eq!(j1.arrival_s, j2.arrival_s);
+            assert_eq!(j1.a, j2.a);
+            assert_eq!(j1.b, j2.b);
+        }
+        assert!(w1.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s));
+        assert!(w1[0].arrival_s > 0.0);
+        // different seeds give different traces
+        let other = generate_workload(&WorkloadSpec { seed: 7, ..spec });
+        assert!(w1.iter().zip(&other).any(|(x, y)| x.arrival_s != y.arrival_s));
+    }
+
+    #[test]
+    fn repeat_ratio_extremes() {
+        let all = generate_workload(&WorkloadSpec::poisson(3, 60, 10_000.0, 1.0));
+        // with a full repeat ratio every job draws from a pool of at most
+        // tenants × pool_per_tenant distinct structures
+        let mut dims: Vec<usize> = all.iter().map(|j| j.a.nrows).collect();
+        dims.sort_unstable();
+        dims.dedup();
+        assert!(dims.len() <= 12, "pool reuse must bound distinct shapes: {dims:?}");
+        // odd tenants are SpMV: their B is a single column
+        for j in &all {
+            match j.kind {
+                JobKind::Spgemm => assert_eq!(j.b.ncols, j.a.nrows),
+                JobKind::Spmv => assert_eq!(j.b.ncols, 1),
+            }
+            assert_eq!(j.a.ncols, j.b.nrows, "operands must chain");
+        }
+    }
+
+    #[test]
+    fn bursty_and_trace_processes_advance_time() {
+        let bursty = generate_workload(&WorkloadSpec {
+            process: ArrivalProcess::BurstyOnOff { rate_hz: 100_000.0, burst: 5, idle_s: 1e-3 },
+            ..WorkloadSpec::poisson(9, 20, 0.0, 0.5)
+        });
+        assert!(bursty.windows(2).all(|p| p[0].arrival_s < p[1].arrival_s));
+        // idle gaps dominate the horizon: 3 gaps of 1 ms
+        assert!(bursty.last().unwrap().arrival_s > 3e-3);
+
+        let replay = generate_workload(&WorkloadSpec {
+            process: ArrivalProcess::Trace { inter_arrival_s: vec![1e-4, 2e-4] },
+            ..WorkloadSpec::poisson(9, 10, 0.0, 0.5)
+        });
+        let gaps: Vec<f64> = replay.windows(2).map(|p| p[1].arrival_s - p[0].arrival_s).collect();
+        for (i, g) in gaps.iter().enumerate() {
+            let expect = if i % 2 == 0 { 2e-4 } else { 1e-4 };
+            assert!((g - expect).abs() < 1e-12, "gap {i}: {g} vs {expect}");
+        }
+    }
+}

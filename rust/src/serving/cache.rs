@@ -1,0 +1,287 @@
+//! Fingerprint-keyed schedule cache: repeat sparsity patterns skip the
+//! CPU scheduling pass.
+//!
+//! REAP's economics rest on the one-time CPU pass being amortized over
+//! repeated FPGA executions; production serving traffic re-submits the
+//! same matrices (same mesh, same graph snapshot) continuously. The cache
+//! keys a single-job [`SpgemmSchedule`] by a 64-bit FNV-1a fingerprint of
+//! the *structure* of both operands — `row_ptr`/`cols` of A and B plus
+//! the design geometry — never the numeric values, which the replay reads
+//! from the live matrices. A fingerprint match alone is not trusted:
+//! every bucket entry stores the full pattern key and lookups compare it
+//! exactly, so a hash collision between structurally different matrices
+//! is detected and rejected (counted in [`ScheduleCache::collisions`]),
+//! never served. [`ScheduleCache::with_mask`] narrows the fingerprint to
+//! force collisions in tests.
+//!
+//! Cached schedules are stored (and cold schedules returned) with their
+//! measured timing fields zeroed, so a hit replays **bit-identically** to
+//! a cold schedule: same waves, same `b_rows`, same word pricing —
+//! property-tested in `tests/prop_serving.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::rir::schedule::{schedule_spgemm_with_threads, SpgemmSchedule};
+use crate::sparse::{Csr, Idx};
+
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one word into an FNV-1a accumulator (shared by the fingerprint
+/// and the serving report's schedule/output digests).
+pub(crate) fn fnv_mix(h: u64, word: u64) -> u64 {
+    (h ^ word).wrapping_mul(FNV_PRIME)
+}
+
+fn fnv_usizes(mut h: u64, words: &[usize]) -> u64 {
+    h = fnv_mix(h, words.len() as u64);
+    for &w in words {
+        h = fnv_mix(h, w as u64);
+    }
+    h
+}
+
+fn fnv_idxs(mut h: u64, words: &[Idx]) -> u64 {
+    h = fnv_mix(h, words.len() as u64);
+    for &w in words {
+        h = fnv_mix(h, u64::from(w));
+    }
+    h
+}
+
+/// The sparsity-pattern fingerprint: FNV-1a 64 over the dimensions,
+/// `row_ptr` and `cols` arrays of both operands, then the design geometry
+/// (`pipelines`, `bundle_size` — a schedule built for one design must
+/// never hit on another). Values are deliberately excluded: two matrices
+/// that differ only numerically share a schedule.
+///
+/// ARCHITECTURE.md §9 walks a worked example of this exact fold.
+pub fn pattern_fingerprint(a: &Csr, b: &Csr, pipelines: usize, bundle_size: usize) -> u64 {
+    let mut h = FNV_OFFSET;
+    for dim in [a.nrows, a.ncols, b.nrows, b.ncols] {
+        h = fnv_mix(h, dim as u64);
+    }
+    h = fnv_usizes(h, &a.row_ptr);
+    h = fnv_idxs(h, &a.cols);
+    h = fnv_usizes(h, &b.row_ptr);
+    h = fnv_idxs(h, &b.cols);
+    h = fnv_mix(h, pipelines as u64);
+    h = fnv_mix(h, bundle_size as u64);
+    h
+}
+
+/// The exact structure a fingerprint stands for; compared verbatim on
+/// every lookup so collisions cannot alias two patterns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct PatternKey {
+    a_dims: (usize, usize),
+    b_dims: (usize, usize),
+    a_row_ptr: Vec<usize>,
+    a_cols: Vec<Idx>,
+    b_row_ptr: Vec<usize>,
+    b_cols: Vec<Idx>,
+}
+
+impl PatternKey {
+    fn of(a: &Csr, b: &Csr) -> Self {
+        PatternKey {
+            a_dims: (a.nrows, a.ncols),
+            b_dims: (b.nrows, b.ncols),
+            a_row_ptr: a.row_ptr.clone(),
+            a_cols: a.cols.clone(),
+            b_row_ptr: b.row_ptr.clone(),
+            b_cols: b.cols.clone(),
+        }
+    }
+}
+
+struct Entry {
+    key: PatternKey,
+    schedule: SpgemmSchedule,
+}
+
+/// Schedule cache for one design point (`pipelines` × `bundle_size`).
+///
+/// Iteration-order free by construction: buckets live in a [`BTreeMap`]
+/// and lookups scan one bucket in insertion order, so behavior never
+/// depends on a randomly seeded hasher.
+pub struct ScheduleCache {
+    pipelines: usize,
+    bundle_size: usize,
+    mask: u64,
+    buckets: BTreeMap<u64, Vec<Entry>>,
+    hits: u64,
+    misses: u64,
+    collisions: u64,
+}
+
+impl ScheduleCache {
+    /// Cache with the full 64-bit fingerprint.
+    pub fn new(pipelines: usize, bundle_size: usize) -> Self {
+        Self::with_mask(pipelines, bundle_size, u64::MAX)
+    }
+
+    /// Cache whose fingerprints are masked down to `mask` — `0` maps every
+    /// pattern to one bucket, making collision rejection testable.
+    pub fn with_mask(pipelines: usize, bundle_size: usize, mask: u64) -> Self {
+        assert!(pipelines > 0 && bundle_size > 0, "zero-valued cache geometry");
+        ScheduleCache {
+            pipelines,
+            bundle_size,
+            mask,
+            buckets: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+            collisions: 0,
+        }
+    }
+
+    /// Look the pattern up; on a hit return the cached schedule (timing
+    /// fields zeroed), on a miss run the cold CPU pass on `nthreads`
+    /// workers, cache it and return it. The `bool` is `true` on a hit.
+    ///
+    /// Both paths return timing-stripped schedules, so hit and cold
+    /// results are bit-identical whenever the structures match.
+    pub fn get_or_schedule(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        nthreads: usize,
+    ) -> (SpgemmSchedule, bool) {
+        let fp = pattern_fingerprint(a, b, self.pipelines, self.bundle_size) & self.mask;
+        let key = PatternKey::of(a, b);
+        if let Some(bucket) = self.buckets.get(&fp) {
+            if let Some(e) = bucket.iter().find(|e| e.key == key) {
+                self.hits += 1;
+                return (e.schedule.clone(), true);
+            }
+            // same (masked) fingerprint, different structure: a collision
+            // is rejected, never served
+            self.collisions += 1;
+        }
+        self.misses += 1;
+        let cold = strip_timing(schedule_spgemm_with_threads(
+            a,
+            b,
+            self.pipelines,
+            self.bundle_size,
+            nthreads,
+        ));
+        self.buckets.entry(fp).or_default().push(Entry { key, schedule: cold.clone() });
+        (cold, false)
+    }
+
+    /// Lookups that returned a cached schedule.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that fell through to the cold CPU pass.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Lookups whose fingerprint matched an entry with a *different*
+    /// structure (always rejected; nonzero only under a narrowed mask or
+    /// an astronomically unlikely 64-bit collision).
+    pub fn collisions(&self) -> u64 {
+        self.collisions
+    }
+
+    /// Hits over total lookups (`0.0` before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Number of cached patterns.
+    pub fn len(&self) -> usize {
+        self.buckets.values().map(Vec::len).sum()
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Zero the measured timing fields: a cached schedule's CPU cost was paid
+/// once, at insertion; the serving simulation charges its own
+/// deterministic cost model instead of stale wall-clock samples.
+fn strip_timing(mut s: SpgemmSchedule) -> SpgemmSchedule {
+    s.prep_cpu_s = 0.0;
+    s.wave_cpu_s = vec![0.0; s.wave_cpu_s.len()];
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn mats(seed: u64) -> (Csr, Csr) {
+        (gen::random_uniform(30, 30, 150, seed), gen::random_uniform(30, 30, 150, seed + 1))
+    }
+
+    #[test]
+    fn second_lookup_hits_and_replays_bitwise() {
+        let (a, b) = mats(1);
+        let mut cache = ScheduleCache::new(8, 16);
+        let (cold, hit0) = cache.get_or_schedule(&a, &b, 1);
+        assert!(!hit0);
+        let (warm, hit1) = cache.get_or_schedule(&a, &b, 1);
+        assert!(hit1);
+        assert_eq!(warm.waves, cold.waves);
+        assert_eq!(warm.a_words, cold.a_words);
+        assert_eq!(warm.b_words, cold.b_words);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_sees_structure_not_values() {
+        let (a, b) = mats(2);
+        let mut a2 = a.clone();
+        for v in &mut a2.vals {
+            *v *= 3.0;
+        }
+        assert_eq!(pattern_fingerprint(&a, &b, 8, 16), pattern_fingerprint(&a2, &b, 8, 16));
+        let mut a3 = a.clone();
+        a3.cols[0] = a3.cols[0].wrapping_add(1);
+        assert_ne!(pattern_fingerprint(&a, &b, 8, 16), pattern_fingerprint(&a3, &b, 8, 16));
+        // design geometry is part of the key
+        assert_ne!(pattern_fingerprint(&a, &b, 8, 16), pattern_fingerprint(&a, &b, 64, 16));
+    }
+
+    /// Pins the worked fingerprint fold in ARCHITECTURE.md §9.3 — if the
+    /// fold order or constants change, the doc must change with it.
+    #[test]
+    fn architecture_md_fingerprint_worked_example() {
+        let a = Csr::from_parts(2, 2, vec![0, 1, 2], vec![1, 0], vec![1.0, 1.0]).unwrap();
+        let b = Csr::from_parts(2, 2, vec![0, 2, 3], vec![0, 1, 1], vec![0.5, -2.0, 4.0]).unwrap();
+        assert_eq!(pattern_fingerprint(&a, &b, 8, 16), 0x0e0f_cedb_1cd2_bd89);
+    }
+
+    #[test]
+    fn masked_collisions_are_rejected() {
+        let (a1, b1) = mats(3);
+        let (a2, b2) = (gen::power_law(24, 120, 9), gen::random_uniform(24, 24, 120, 10));
+        let mut cache = ScheduleCache::with_mask(8, 16, 0);
+        let (_, h1) = cache.get_or_schedule(&a1, &b1, 1);
+        let (s2, h2) = cache.get_or_schedule(&a2, &b2, 1);
+        assert!(!h1 && !h2, "different structures must never hit");
+        assert_eq!(cache.collisions(), 1, "mask 0 forces a fingerprint collision");
+        // the colliding pattern still got its own correct schedule
+        let solo = schedule_spgemm_with_threads(&a2, &b2, 8, 16, 1);
+        assert_eq!(s2.waves, solo.waves);
+        // and both patterns now hit independently
+        assert!(cache.get_or_schedule(&a1, &b1, 1).1);
+        assert!(cache.get_or_schedule(&a2, &b2, 1).1);
+    }
+}

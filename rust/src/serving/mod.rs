@@ -1,0 +1,37 @@
+//! Online serving runtime: arrivals, admission control, and a
+//! fingerprint-keyed schedule cache over the wave engine.
+//!
+//! REAP's offline story amortizes one CPU scheduling pass over many FPGA
+//! executions of the same matrix. This module is the *online* version of
+//! that bargain: multi-tenant SpGEMM/SpMV jobs arrive continuously under
+//! a configurable process ([`arrival`]), a latency-budgeted admission
+//! controller closes batching windows and packs shared-wave batches
+//! ([`admission`]), and a sparsity-pattern fingerprint cache lets repeat
+//! structures skip the scheduling pass entirely ([`cache`]) — with the
+//! hard guarantee that a cache hit replays **bit-identically** to cold
+//! scheduling, so caching changes *when* answers arrive, never *what*
+//! they are.
+//!
+//! The event loop ([`sim`]) is a seed-deterministic discrete-event
+//! simulation: every latency percentile, queue depth and cycle total it
+//! reports is a pure function of the workload spec and the design point —
+//! no wall clock, no thread-count sensitivity. Admitted batches pass
+//! [`crate::analysis::audit_serving`] (plus the schedule and wave-cost
+//! audits) before anything is priced.
+//!
+//! `reap bench serving` sweeps design points and repeat ratios and writes
+//! `results/BENCH_serving.json`; ARCHITECTURE.md §9 specifies the event
+//! loop, the admission contract and the cache-key definition.
+
+pub mod admission;
+pub mod arrival;
+pub mod cache;
+pub mod sim;
+
+pub use admission::{close_window, AdmissionConfig, QueuedJob, WindowDecision};
+pub use arrival::{generate_workload, ArrivalProcess, JobKind, ServingJob, WorkloadSpec};
+pub use cache::{pattern_fingerprint, ScheduleCache};
+pub use sim::{
+    modeled_cold_cpu_s, percentile, run_serving, BatchRecord, JobRecord, ServingConfig, ServingLog,
+    ServingReport, COLD_PASS_BASE_S, COLD_PASS_WORD_S, HIT_LOOKUP_S,
+};

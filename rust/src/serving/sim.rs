@@ -1,0 +1,512 @@
+//! The serving event loop: a seed-deterministic discrete-event simulation
+//! of online tenants over the wave engine.
+//!
+//! Time advances in fixed batching windows
+//! ([`AdmissionConfig::window_s`]). At each window close the loop pulls
+//! every job that has arrived, lets the admission controller
+//! ([`super::admission`]) shed dead-deadline jobs and pack a batch, then
+//! services the batch: per-job schedules come from the fingerprint-keyed
+//! [`ScheduleCache`] (or the cold CPU pass when caching is off), are
+//! composed into one shared-wave [`BatchSchedule`] via
+//! [`compose_batch`], audited, and priced by the cycle-exact batch
+//! simulator. Per-job completion uses the simulator's enqueue/complete
+//! stamps — the serving layer never re-derives latency from wave indices.
+//!
+//! Two modeling rules keep every number a pure function of the workload
+//! spec (the determinism the test suite pins):
+//!
+//! * **No wall clock.** Cold scheduling is charged by
+//!   [`modeled_cold_cpu_s`] — an affine model over the schedule's own
+//!   word/chunk counts — and cache hits by [`HIT_LOOKUP_S`]; measured
+//!   `prep_cpu_s`/`wave_cpu_s` samples are stripped and ignored.
+//! * **Admission ignores backlog.** Batch membership depends only on the
+//!   arrival trace and matrix structure, so cache on/off and any thread
+//!   count compose identical batches; only *when* they finish differs.
+
+use anyhow::Result;
+
+use crate::coordinator::batch::numeric_batch;
+use crate::fpga::spgemm_sim::{simulate_spgemm_batch, Style};
+use crate::fpga::{execute_waves_at_depth, FpgaConfig};
+use crate::rir::schedule::{
+    compose_batch, schedule_spgemm_with_threads, BatchSchedule, SpgemmSchedule,
+};
+use crate::sparse::Csr;
+use crate::util::preprocess_threads;
+
+use super::admission::{close_window, AdmissionConfig, QueuedJob};
+use super::arrival::ServingJob;
+use super::cache::{fnv_mix, ScheduleCache, FNV_OFFSET};
+
+/// Fixed base cost of one cold CPU scheduling pass (thread spawn,
+/// prologue) in the deterministic service model.
+pub const COLD_PASS_BASE_S: f64 = 2e-6;
+/// Modeled cost per word/chunk unit of the cold pass.
+pub const COLD_PASS_WORD_S: f64 = 1.25e-9;
+/// Modeled cost of a cache hit: one fingerprint + key compare.
+pub const HIT_LOOKUP_S: f64 = 150e-9;
+
+/// The deterministic model of what a cold CPU scheduling pass costs —
+/// an affine function of the schedule's own structure (streamed words,
+/// chunks, waves), never of measured wall-clock time.
+pub fn modeled_cold_cpu_s(s: &SpgemmSchedule) -> f64 {
+    let units = s.a_words + s.b_words + 16 * s.n_chunks() + 8 * s.n_waves();
+    COLD_PASS_BASE_S + units as f64 * COLD_PASS_WORD_S
+}
+
+/// Configuration of one serving run.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    pub fpga: FpgaConfig,
+    pub admission: AdmissionConfig,
+    /// Serve repeat patterns from the schedule cache. Off, every job pays
+    /// the cold pass — the baseline the speedup sweep compares against.
+    pub use_cache: bool,
+    /// Fingerprint mask handed to [`ScheduleCache::with_mask`]
+    /// (`u64::MAX` in production; narrowed in collision tests).
+    pub cache_mask: u64,
+    /// CPU workers for scheduling/numeric replay; `0` means the crate
+    /// default ([`preprocess_threads`]). Results are identical for every
+    /// value — pinned by `tests/integration_serving.rs`.
+    pub threads: usize,
+    /// Audit schedules, wave costs and the admission log even in release
+    /// builds (debug builds always audit).
+    pub strict: bool,
+    /// Run the numeric replay per batch and fold the outputs into
+    /// [`ServingReport::output_digest`] (tests; off in benches).
+    pub verify_numerics: bool,
+    /// Stop after this many windows even if jobs remain queued (they are
+    /// reported in [`ServingLog::queued`]). `None` runs until drained.
+    pub max_windows: Option<usize>,
+}
+
+impl ServingConfig {
+    pub fn new(fpga: FpgaConfig) -> Self {
+        ServingConfig {
+            fpga,
+            admission: AdmissionConfig::default(),
+            use_cache: true,
+            cache_mask: u64::MAX,
+            threads: 0,
+            strict: false,
+            verify_numerics: false,
+            max_windows: None,
+        }
+    }
+}
+
+/// One admitted job's timeline entry in the serving log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRecord {
+    pub id: usize,
+    pub arrival_s: f64,
+    /// Completion time: batch start + modeled CPU phase + the job's
+    /// simulated `complete_cycle` at the design clock.
+    pub complete_s: f64,
+    /// The job's schedule came from the cache.
+    pub cached: bool,
+}
+
+/// One executed batch in the serving log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchRecord {
+    /// The window close that admitted this batch.
+    pub window_close_s: f64,
+    /// Service start: the window close or the device becoming free,
+    /// whichever is later.
+    pub start_s: f64,
+    /// Modeled CPU phase (cold passes + hit lookups).
+    pub cpu_s: f64,
+    /// Simulated FPGA seconds at the configured channel depth.
+    pub fpga_s: f64,
+    pub jobs: Vec<JobRecord>,
+}
+
+/// The complete, auditable record of a serving run — what
+/// [`crate::analysis::audit_serving`] checks.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServingLog {
+    pub latency_budget_s: f64,
+    /// Jobs whose arrival fell inside the simulated horizon.
+    pub arrived: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    /// Jobs still waiting when the run stopped (nonzero only under
+    /// [`ServingConfig::max_windows`]).
+    pub queued: usize,
+    pub batches: Vec<BatchRecord>,
+}
+
+/// Everything `reap bench serving` reports per design point.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    pub log: ServingLog,
+    /// Nearest-rank latency percentiles over admitted jobs (seconds).
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    /// Admitted jobs over the span from first arrival to last completion.
+    pub jobs_per_s: f64,
+    /// Queue depth sampled after each window close.
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub collisions: u64,
+    pub hit_rate: f64,
+    /// Deterministic cycle totals summed over batches (configured depth,
+    /// depth 1, depth 2) — the perf-gate currency of `BENCH_serving.json`.
+    pub cycles: u64,
+    pub cycles_serial: u64,
+    pub cycles_db: u64,
+    pub prefetch_hidden_cycles: u64,
+    pub waves: u64,
+    /// FNV digest of every composed [`BatchSchedule`]'s structure, in
+    /// batch order. Equal digests ⇔ bit-identical schedule replay (the
+    /// cache-on vs cold acceptance headline).
+    pub schedule_digest: u64,
+    /// FNV digest of the numeric outputs (`0` unless
+    /// [`ServingConfig::verify_numerics`]).
+    pub output_digest: u64,
+    /// `(job id, latency)` per admitted job, in completion (batch, run)
+    /// order — the exact values the determinism tests compare.
+    pub latencies_s: Vec<(usize, f64)>,
+}
+
+/// Run the serving simulation over a workload trace (jobs must be
+/// arrival-ordered, as [`generate_workload`](super::generate_workload)
+/// produces them).
+pub fn run_serving(cfg: &ServingConfig, jobs: &[ServingJob]) -> Result<ServingReport> {
+    cfg.fpga.validate()?;
+    assert!(
+        jobs.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s),
+        "serving jobs must be arrival-ordered"
+    );
+    assert!(
+        jobs.iter().enumerate().all(|(i, j)| j.id == i),
+        "serving job ids must be their trace positions"
+    );
+    let nthreads = if cfg.threads == 0 { preprocess_threads() } else { cfg.threads };
+    let audits = cfg!(debug_assertions) || cfg.strict;
+    let (pipelines, bundle_size) = (cfg.fpga.pipelines, cfg.fpga.bundle_size);
+    let hz = cfg.fpga.hz();
+    let mut cache = if cfg.use_cache {
+        Some(ScheduleCache::with_mask(pipelines, bundle_size, cfg.cache_mask))
+    } else {
+        None
+    };
+
+    let mut log = ServingLog {
+        latency_budget_s: cfg.admission.latency_budget_s,
+        ..ServingLog::default()
+    };
+    let mut queue: Vec<usize> = Vec::new();
+    let mut next_arrival = 0usize;
+    let mut device_free_s = 0.0f64;
+    let mut depth_samples: Vec<usize> = Vec::new();
+    let (mut cycles, mut cycles_serial, mut cycles_db) = (0u64, 0u64, 0u64);
+    let (mut prefetch_hidden, mut waves) = (0u64, 0u64);
+    let mut schedule_digest = FNV_OFFSET;
+    let mut output_digest = FNV_OFFSET;
+    let mut latencies: Vec<(usize, f64)> = Vec::new();
+
+    let mut window = 1usize;
+    loop {
+        let now = window as f64 * cfg.admission.window_s;
+        while next_arrival < jobs.len() && jobs[next_arrival].arrival_s <= now {
+            queue.push(next_arrival);
+            next_arrival += 1;
+        }
+
+        let view: Vec<QueuedJob> = queue
+            .iter()
+            .map(|&ix| QueuedJob {
+                id: jobs[ix].id,
+                arrival_s: jobs[ix].arrival_s,
+                est_service_s: cfg.admission.estimated_service_s(&jobs[ix].a, &jobs[ix].b),
+            })
+            .collect();
+        let decision = close_window(&cfg.admission, now, &view);
+        log.rejected += decision.rejected.len();
+        queue.retain(|&ix| {
+            !decision.admitted.contains(&jobs[ix].id) && !decision.rejected.contains(&jobs[ix].id)
+        });
+
+        if !decision.admitted.is_empty() {
+            let admitted: Vec<&ServingJob> =
+                decision.admitted.iter().map(|&id| &jobs[id]).collect();
+            let mut singles = Vec::with_capacity(admitted.len());
+            let mut cached_flags = Vec::with_capacity(admitted.len());
+            let mut cpu_s = 0.0f64;
+            for job in &admitted {
+                let (single, hit) = match cache.as_mut() {
+                    Some(c) => c.get_or_schedule(&job.a, &job.b, nthreads),
+                    None => {
+                        let mut s = schedule_spgemm_with_threads(
+                            &job.a,
+                            &job.b,
+                            pipelines,
+                            bundle_size,
+                            nthreads,
+                        );
+                        s.prep_cpu_s = 0.0;
+                        s.wave_cpu_s = vec![0.0; s.wave_cpu_s.len()];
+                        (s, false)
+                    }
+                };
+                cpu_s += if hit { HIT_LOOKUP_S } else { modeled_cold_cpu_s(&single) };
+                cached_flags.push(hit);
+                singles.push(single);
+            }
+            let schedule = compose_batch(&singles, pipelines, bundle_size);
+            let pairs: Vec<(Csr, Csr)> =
+                admitted.iter().map(|j| (j.a.clone(), j.b.clone())).collect();
+            if audits {
+                let diags = crate::analysis::audit_batch_schedule(&pairs, &schedule);
+                crate::analysis::ensure_clean(diags)?;
+            }
+            let sim = simulate_spgemm_batch(&pairs, &schedule, &cfg.fpga, Style::HandCoded);
+            if audits {
+                let diags = crate::analysis::audit_wave_costs(&sim.costs, &cfg.fpga);
+                crate::analysis::ensure_clean(diags)?;
+            }
+            let fpga_s = sim.stats.seconds(&cfg.fpga);
+            cycles += sim.stats.cycles;
+            waves += sim.stats.waves;
+            let at_depth = |d: usize| {
+                if cfg.fpga.dram_buffer_depth == d {
+                    sim.stats.clone()
+                } else {
+                    execute_waves_at_depth(&sim.costs, &cfg.fpga, d).stats
+                }
+            };
+            cycles_serial += at_depth(1).cycles;
+            let db = at_depth(2);
+            cycles_db += db.cycles;
+            prefetch_hidden += db.prefetch_hidden_cycles;
+            schedule_digest = digest_batch_schedule(schedule_digest, &schedule);
+
+            if cfg.verify_numerics {
+                for out in numeric_batch(&pairs, &schedule, nthreads) {
+                    output_digest = digest_csr(output_digest, &out);
+                }
+            }
+
+            let start_s = now.max(device_free_s);
+            let records: Vec<JobRecord> = admitted
+                .iter()
+                .zip(&sim.job_stats)
+                .zip(&cached_flags)
+                .map(|((job, js), &cached)| {
+                    let complete_s = start_s + cpu_s + js.complete_cycle as f64 / hz;
+                    latencies.push((job.id, complete_s - job.arrival_s));
+                    JobRecord { id: job.id, arrival_s: job.arrival_s, complete_s, cached }
+                })
+                .collect();
+            device_free_s = start_s + cpu_s + fpga_s;
+            log.admitted += records.len();
+            log.batches.push(BatchRecord {
+                window_close_s: now,
+                start_s,
+                cpu_s,
+                fpga_s,
+                jobs: records,
+            });
+        }
+
+        depth_samples.push(queue.len());
+        if next_arrival == jobs.len() && queue.is_empty() {
+            break;
+        }
+        if cfg.max_windows.is_some_and(|m| window >= m) {
+            break;
+        }
+        window += 1;
+    }
+
+    log.arrived = next_arrival;
+    log.queued = queue.len();
+    if audits {
+        let diags = crate::analysis::audit_serving(&log);
+        crate::analysis::ensure_clean(diags)?;
+    }
+
+    let mut sorted: Vec<f64> = latencies.iter().map(|&(_, l)| l).collect();
+    sorted.sort_by(f64::total_cmp);
+    let mean_s =
+        if sorted.is_empty() { 0.0 } else { sorted.iter().sum::<f64>() / sorted.len() as f64 };
+    let span = {
+        let first = jobs.first().map(|j| j.arrival_s).unwrap_or(0.0);
+        let last = log
+            .batches
+            .iter()
+            .flat_map(|b| b.jobs.iter().map(|j| j.complete_s))
+            .fold(first, f64::max);
+        last - first
+    };
+    let (hits, misses, collisions, hit_rate) = match &cache {
+        Some(c) => (c.hits(), c.misses(), c.collisions(), c.hit_rate()),
+        None => (0, log.admitted as u64, 0, 0.0),
+    };
+    Ok(ServingReport {
+        p50_s: percentile(&sorted, 50.0),
+        p95_s: percentile(&sorted, 95.0),
+        p99_s: percentile(&sorted, 99.0),
+        mean_s,
+        jobs_per_s: if span > 0.0 { log.admitted as f64 / span } else { 0.0 },
+        queue_depth_mean: if depth_samples.is_empty() {
+            0.0
+        } else {
+            depth_samples.iter().sum::<usize>() as f64 / depth_samples.len() as f64
+        },
+        queue_depth_max: depth_samples.iter().copied().max().unwrap_or(0),
+        hits,
+        misses,
+        collisions,
+        hit_rate,
+        cycles,
+        cycles_serial,
+        cycles_db,
+        prefetch_hidden_cycles: prefetch_hidden,
+        waves,
+        schedule_digest,
+        output_digest: if cfg.verify_numerics { output_digest } else { 0 },
+        latencies_s: latencies,
+        log,
+    })
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (`0.0` when
+/// empty). Nearest-rank picks actual samples, so
+/// `p50 ≤ p95 ≤ p99` holds by construction.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Fold a composed schedule's full structure into an FNV digest: equal
+/// digests mean wave-for-wave, word-for-word identical schedules.
+fn digest_batch_schedule(mut h: u64, s: &BatchSchedule) -> u64 {
+    h = fnv_mix(h, s.pipelines as u64);
+    h = fnv_mix(h, s.bundle_size as u64);
+    h = fnv_mix(h, s.n_jobs as u64);
+    h = fnv_mix(h, s.waves.len() as u64);
+    for w in &s.waves {
+        h = fnv_mix(h, w.assignments.len() as u64);
+        for &(job, asg) in &w.assignments {
+            h = fnv_mix(h, u64::from(job));
+            h = fnv_mix(h, u64::from(asg.a_row));
+            h = fnv_mix(h, u64::from(asg.chunk));
+            h = fnv_mix(h, u64::from(asg.last_chunk));
+            h = fnv_mix(h, asg.start as u64);
+            h = fnv_mix(h, asg.len as u64);
+        }
+        for seg in &w.segments {
+            h = fnv_mix(h, u64::from(seg.job));
+            h = fnv_mix(h, seg.b_rows.len() as u64);
+            for &r in &seg.b_rows {
+                h = fnv_mix(h, u64::from(r));
+            }
+        }
+    }
+    h = fnv_mix(h, s.a_words as u64);
+    fnv_mix(h, s.b_words as u64)
+}
+
+/// Fold a CSR's exact contents (values as IEEE bit patterns) into an FNV
+/// digest — bitwise output identity, not approximate equality.
+fn digest_csr(mut h: u64, c: &Csr) -> u64 {
+    h = fnv_mix(h, c.nrows as u64);
+    h = fnv_mix(h, c.ncols as u64);
+    for &p in &c.row_ptr {
+        h = fnv_mix(h, p as u64);
+    }
+    for &j in &c.cols {
+        h = fnv_mix(h, u64::from(j));
+    }
+    for &v in &c.vals {
+        h = fnv_mix(h, u64::from(v.to_bits()));
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::arrival::{generate_workload, WorkloadSpec};
+
+    fn quick_cfg() -> ServingConfig {
+        ServingConfig::new(FpgaConfig::reap64_spgemm())
+    }
+
+    #[test]
+    fn drains_and_conserves() {
+        let jobs = generate_workload(&WorkloadSpec::poisson(0x5EA9, 30, 30_000.0, 0.6));
+        let rep = run_serving(&quick_cfg(), &jobs).unwrap();
+        assert_eq!(rep.log.arrived, 30);
+        assert_eq!(rep.log.admitted + rep.log.rejected + rep.log.queued, rep.log.arrived);
+        assert_eq!(rep.log.queued, 0, "an unbounded run must drain");
+        assert_eq!(rep.latencies_s.len(), rep.log.admitted);
+        assert!(rep.p50_s <= rep.p95_s && rep.p95_s <= rep.p99_s);
+        assert!(rep.log.admitted > 0, "a mild workload must admit jobs");
+        assert!(rep.jobs_per_s > 0.0);
+    }
+
+    #[test]
+    fn horizon_cutoff_reports_queued_jobs() {
+        let mut cfg = quick_cfg();
+        cfg.max_windows = Some(1);
+        let jobs = generate_workload(&WorkloadSpec::poisson(11, 40, 1_000_000.0, 0.5));
+        let rep = run_serving(&cfg, &jobs).unwrap();
+        assert_eq!(rep.log.admitted + rep.log.rejected + rep.log.queued, rep.log.arrived);
+        assert!(rep.log.queued > 0, "a 1-window horizon must strand arrivals");
+    }
+
+    #[test]
+    fn tiny_budget_rejects_everything() {
+        let mut cfg = quick_cfg();
+        cfg.admission.latency_budget_s = 1e-9;
+        let jobs = generate_workload(&WorkloadSpec::poisson(13, 12, 30_000.0, 0.5));
+        let rep = run_serving(&cfg, &jobs).unwrap();
+        assert_eq!(rep.log.admitted, 0);
+        assert_eq!(rep.log.rejected, 12);
+        assert_eq!(rep.p50_s, 0.0);
+        assert!(rep.log.batches.is_empty());
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 95.0), 4.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+    }
+
+    #[test]
+    fn cache_changes_time_never_schedules() {
+        let jobs = generate_workload(&WorkloadSpec::poisson(0x5EA9, 40, 30_000.0, 0.9));
+        let mut on = quick_cfg();
+        on.verify_numerics = true;
+        let mut off = on.clone();
+        off.use_cache = false;
+        let r_on = run_serving(&on, &jobs).unwrap();
+        let r_off = run_serving(&off, &jobs).unwrap();
+        assert_eq!(r_on.schedule_digest, r_off.schedule_digest, "replay must be bit-identical");
+        assert_eq!(r_on.output_digest, r_off.output_digest, "numerics must be bit-identical");
+        assert_eq!(r_on.cycles, r_off.cycles);
+        assert_eq!(r_on.log.admitted, r_off.log.admitted);
+        assert!(r_on.hits > 0, "a 0.9 repeat ratio must hit");
+        assert!(
+            r_on.mean_s < r_off.mean_s,
+            "hits must strictly lower mean latency: {} vs {}",
+            r_on.mean_s,
+            r_off.mean_s
+        );
+    }
+}

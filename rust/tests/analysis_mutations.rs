@@ -8,8 +8,8 @@
 //! pins the primary code and, when it matters, the suppression contract.
 
 use reap::analysis::{
-    audit_batch_schedule, audit_spgemm_schedule, audit_stream, audit_wave_costs, codes,
-    Diagnostic, Severity,
+    audit_batch_schedule, audit_serving, audit_spgemm_schedule, audit_stream, audit_wave_costs,
+    codes, Diagnostic, Severity,
 };
 use reap::fpga::engine::{Occupancy, WaveKind};
 use reap::fpga::spgemm_sim::{simulate_spgemm, Style};
@@ -20,6 +20,7 @@ use reap::rir::layout::{
 };
 use reap::rir::schedule::{schedule_spgemm, schedule_spgemm_batch, BatchSchedule, SpgemmSchedule};
 use reap::rir::{BundleFlags, BundleStream};
+use reap::serving::{generate_workload, run_serving, ServingConfig, ServingLog, WorkloadSpec};
 use reap::sparse::{gen, Csr};
 
 fn assert_single(diags: &[Diagnostic], code: &str, severity: Severity) {
@@ -330,4 +331,42 @@ fn load_smuggling_flops_is_pinned() {
     assert_eq!(costs[0].kind, WaveKind::Load, "premise: SpMV leads with an x-vector load");
     costs[0].flops = 7;
     assert_single(&audit_wave_costs(&costs, &cfg), codes::WAV_LOAD, Severity::Error);
+}
+
+// ---------------------------------------------------------------------------
+// ServingAudit
+// ---------------------------------------------------------------------------
+
+/// A clean serving log straight from the event loop (which audits it
+/// itself in debug builds — the mutations below corrupt a copy).
+fn serving_base() -> ServingLog {
+    let jobs = generate_workload(&WorkloadSpec::poisson(21, 24, 30_000.0, 0.5));
+    let cfg = ServingConfig::new(FpgaConfig::reap64_spgemm());
+    let log = run_serving(&cfg, &jobs).expect("serving run").log;
+    assert!(audit_serving(&log).is_empty(), "premise: live log is clean");
+    assert!(!log.batches.is_empty(), "premise: the workload admits batches");
+    log
+}
+
+#[test]
+fn budget_violating_admitted_job_is_pinned() {
+    let mut log = serving_base();
+    // age one admitted job past the latency budget at its window close:
+    // the shed rule says the controller was required to reject it
+    log.batches[0].jobs[0].arrival_s -= log.latency_budget_s + 1e-3;
+    assert_single(&audit_serving(&log), codes::SRV_BUDGET, Severity::Error);
+}
+
+#[test]
+fn batch_starting_before_its_window_close_is_pinned() {
+    let mut log = serving_base();
+    log.batches[0].start_s = log.batches[0].window_close_s - 1e-4;
+    assert_single(&audit_serving(&log), codes::SRV_TIMELINE, Severity::Error);
+}
+
+#[test]
+fn conservation_drift_is_pinned() {
+    let mut log = serving_base();
+    log.queued += 1; // claims a stranded job the batches/arrivals disprove
+    assert_single(&audit_serving(&log), codes::SRV_CONSERVE, Severity::Error);
 }

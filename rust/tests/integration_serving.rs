@@ -1,0 +1,140 @@
+//! Determinism suite for the serving runtime: fixed seeds pin the
+//! arrival trace, the admission decisions and the latency percentiles
+//! *exactly* — two runs of one spec are bitwise identical, every thread
+//! count produces the same report, and turning the schedule cache on
+//! changes timing only (schedules and numerics replay bit-identically).
+
+use reap::fpga::FpgaConfig;
+use reap::serving::{
+    generate_workload, run_serving, ArrivalProcess, ServingConfig, ServingReport, WorkloadSpec,
+};
+
+fn spec(seed: u64, n_jobs: usize, repeat_ratio: f64) -> WorkloadSpec {
+    WorkloadSpec::poisson(seed, n_jobs, 30_000.0, repeat_ratio)
+}
+
+fn run(cfg: &ServingConfig, spec: &WorkloadSpec) -> ServingReport {
+    run_serving(cfg, &generate_workload(spec)).expect("serving run")
+}
+
+/// Bitwise equality of everything a report pins: per-job latencies in
+/// order, both digests, cycle totals and the full admission log.
+fn assert_reports_identical(a: &ServingReport, b: &ServingReport) {
+    assert_eq!(a.latencies_s, b.latencies_s, "per-job latencies must be bit-identical");
+    assert_eq!(a.schedule_digest, b.schedule_digest);
+    assert_eq!(a.output_digest, b.output_digest);
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.cycles_serial, b.cycles_serial);
+    assert_eq!(a.cycles_db, b.cycles_db);
+    assert_eq!(a.log, b.log, "admission log must be bit-identical");
+    assert_eq!(a.p50_s, b.p50_s);
+    assert_eq!(a.p95_s, b.p95_s);
+    assert_eq!(a.p99_s, b.p99_s);
+}
+
+#[test]
+fn fixed_seed_pins_the_arrival_trace() {
+    let s = spec(0x5EA9_0001, 50, 0.6);
+    let w1 = generate_workload(&s);
+    let w2 = generate_workload(&s);
+    assert_eq!(w1.len(), w2.len());
+    for (a, b) in w1.iter().zip(&w2) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tenant, b.tenant);
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits(), "job {}", a.id);
+        assert_eq!(a.a, b.a, "job {}: operand A must regenerate exactly", a.id);
+        assert_eq!(a.b, b.b, "job {}: operand B must regenerate exactly", a.id);
+    }
+}
+
+#[test]
+fn two_identical_runs_are_bitwise_identical() {
+    let s = spec(0x5EA9_0002, 40, 0.7);
+    let mut cfg = ServingConfig::new(FpgaConfig::reap64_spgemm());
+    cfg.verify_numerics = true;
+    assert_reports_identical(&run(&cfg, &s), &run(&cfg, &s));
+}
+
+#[test]
+fn reports_are_invariant_across_thread_counts() {
+    let s = spec(0x5EA9_0003, 36, 0.5);
+    let mut base = ServingConfig::new(FpgaConfig::reap64_spgemm());
+    base.verify_numerics = true;
+    base.threads = 1;
+    let reference = run(&base, &s);
+    assert!(reference.log.admitted > 0, "premise: the workload admits jobs");
+    for threads in [2, 4, 8] {
+        let mut cfg = base.clone();
+        cfg.threads = threads;
+        let rep = run(&cfg, &s);
+        assert_reports_identical(&reference, &rep);
+    }
+}
+
+#[test]
+fn cache_replays_bit_identically_and_strictly_faster_on_wide_designs() {
+    let s = spec(0x5EA9_0004, 48, 0.9);
+    for fpga in [FpgaConfig::reap64_spgemm(), FpgaConfig::reap128_spgemm()] {
+        let name = fpga.name;
+        let mut on = ServingConfig::new(fpga);
+        on.verify_numerics = true;
+        let mut off = on.clone();
+        off.use_cache = false;
+        let r_on = run(&on, &s);
+        let r_off = run(&off, &s);
+        assert_eq!(r_on.schedule_digest, r_off.schedule_digest, "{name}: schedules must match");
+        assert_eq!(r_on.output_digest, r_off.output_digest, "{name}: numerics must match");
+        assert_eq!(r_on.cycles, r_off.cycles, "{name}: cache must not change FPGA work");
+        assert_eq!(r_on.log.admitted, r_off.log.admitted, "{name}: admission is cache-blind");
+        assert!(r_on.hits > 0, "{name}: a 0.9 repeat ratio must produce hits");
+        assert!(
+            r_on.mean_s < r_off.mean_s,
+            "{name}: hit-path latency must be strictly lower ({} vs {})",
+            r_on.mean_s,
+            r_off.mean_s
+        );
+        assert!(r_on.p50_s <= r_off.p50_s, "{name}: p50 must not regress under caching");
+    }
+}
+
+#[test]
+fn admission_decisions_are_pinned_by_the_budget() {
+    let s = spec(0x5EA9_0005, 20, 0.5);
+    // a budget no job can meet: everything is shed, nothing executes
+    let mut strangled = ServingConfig::new(FpgaConfig::reap64_spgemm());
+    strangled.admission.latency_budget_s = 1e-9;
+    let rep = run(&strangled, &s);
+    assert_eq!(rep.log.admitted, 0);
+    assert_eq!(rep.log.rejected, 20);
+    assert!(rep.log.batches.is_empty());
+
+    // a generous budget: everything is admitted, nothing is shed
+    let mut generous = ServingConfig::new(FpgaConfig::reap64_spgemm());
+    generous.admission.latency_budget_s = 10.0;
+    let rep = run(&generous, &s);
+    assert_eq!(rep.log.admitted, 20);
+    assert_eq!(rep.log.rejected, 0);
+    assert_eq!(rep.log.queued, 0);
+    assert_eq!(rep.latencies_s.len(), 20);
+    assert!(rep.latencies_s.iter().all(|&(_, l)| l > 0.0), "latency is always positive");
+}
+
+#[test]
+fn bursty_and_replayed_traces_run_deterministically() {
+    for process in [
+        ArrivalProcess::BurstyOnOff { rate_hz: 50_000.0, burst: 6, idle_s: 5e-4 },
+        ArrivalProcess::Trace { inter_arrival_s: vec![3e-5, 8e-5, 2e-4] },
+    ] {
+        let s = WorkloadSpec { process, ..spec(0x5EA9_0006, 30, 0.6) };
+        let cfg = ServingConfig::new(FpgaConfig::reap64_spgemm());
+        let r1 = run(&cfg, &s);
+        let r2 = run(&cfg, &s);
+        assert_reports_identical(&r1, &r2);
+        assert_eq!(
+            r1.log.admitted + r1.log.rejected + r1.log.queued,
+            r1.log.arrived,
+            "conservation"
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! Property tests for the serving runtime: randomized workloads and
+//! cache traffic, with the invariants that hold for *every* draw —
+//! cache hits replay bit-identically to cold scheduling (schedules and
+//! numeric outputs), fingerprint collisions between structurally
+//! different matrices are rejected, percentiles are monotone, and
+//! arrivals are conserved across admitted/rejected/queued.
+
+use reap::coordinator::batch::numeric_batch;
+use reap::fpga::FpgaConfig;
+use reap::rir::schedule::{compose_batch, schedule_spgemm_with_threads};
+use reap::serving::{
+    generate_workload, run_serving, ArrivalProcess, ScheduleCache, ServingConfig, WorkloadSpec,
+};
+use reap::sparse::{gen, Csr};
+use reap::util::rng::Pcg64;
+
+const PIPELINES: usize = 8;
+const BUNDLE: usize = 16;
+
+fn random_pair(rng: &mut Pcg64) -> (Csr, Csr) {
+    let n = 20 + rng.next_below(30) as usize;
+    let nnz = n * (3 + rng.next_below(4) as usize);
+    let seed = rng.next_u64();
+    (gen::random_uniform(n, n, nnz, seed), gen::random_uniform(n, n, nnz, seed ^ 0xABCD))
+}
+
+#[test]
+fn cache_hits_replay_bit_identically_to_cold_scheduling() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg64::new(0xCAC4E ^ seed);
+        let pairs: Vec<(Csr, Csr)> = (0..3).map(|_| random_pair(&mut rng)).collect();
+        let mut cache = ScheduleCache::new(PIPELINES, BUNDLE);
+        // prime the cache, then look every pattern up again
+        for (a, b) in &pairs {
+            let (_, hit) = cache.get_or_schedule(a, b, 1);
+            assert!(!hit, "seed {seed}: first sight must miss");
+        }
+        let mut warm = Vec::new();
+        let mut cold = Vec::new();
+        for (a, b) in &pairs {
+            let (s, hit) = cache.get_or_schedule(a, b, 1);
+            assert!(hit, "seed {seed}: second sight must hit");
+            warm.push(s);
+            let direct = schedule_spgemm_with_threads(a, b, PIPELINES, BUNDLE, 1);
+            cold.push(direct);
+        }
+        for ((w, c), (a, _)) in warm.iter().zip(&cold).zip(&pairs) {
+            assert_eq!(w.waves, c.waves, "seed {seed}, {} rows: wave-identical replay", a.nrows);
+            assert_eq!(w.a_words, c.a_words, "seed {seed}");
+            assert_eq!(w.b_words, c.b_words, "seed {seed}");
+            assert_eq!(w.prep_cpu_s, 0.0, "seed {seed}: cached timing is stripped");
+            assert!(w.wave_cpu_s.iter().all(|&t| t == 0.0), "seed {seed}");
+        }
+        // the composed batches — and their numerics — are bit-identical too
+        let batch_warm = compose_batch(&warm, PIPELINES, BUNDLE);
+        let batch_cold = compose_batch(&cold, PIPELINES, BUNDLE);
+        assert_eq!(batch_warm.waves, batch_cold.waves, "seed {seed}");
+        let out_warm = numeric_batch(&pairs, &batch_warm, 1);
+        let out_cold = numeric_batch(&pairs, &batch_cold, 1);
+        assert_eq!(out_warm, out_cold, "seed {seed}: numeric outputs must be bit-identical");
+    }
+}
+
+#[test]
+fn masked_fingerprint_collisions_are_always_rejected() {
+    for seed in 0..6u64 {
+        // mask 0 maps every pattern to one bucket: all-pairs collisions
+        let mut cache = ScheduleCache::with_mask(PIPELINES, BUNDLE, 0);
+        // strictly growing dimension guarantees distinct structures
+        let pairs: Vec<(Csr, Csr)> = (0..5u64)
+            .map(|i| {
+                let n = 20 + i as usize;
+                let s = 0xC011 ^ (seed << 8) ^ i;
+                (gen::random_uniform(n, n, n * 4, s), gen::random_uniform(n, n, n * 4, s ^ 1))
+            })
+            .collect();
+        for (i, (a, b)) in pairs.iter().enumerate() {
+            let (schedule, hit) = cache.get_or_schedule(a, b, 1);
+            assert!(!hit, "seed {seed}: structurally new pattern {i} must never hit");
+            let direct = schedule_spgemm_with_threads(a, b, PIPELINES, BUNDLE, 1);
+            assert_eq!(schedule.waves, direct.waves, "seed {seed}: collision must not alias");
+        }
+        assert_eq!(cache.collisions(), pairs.len() as u64 - 1, "one collision per re-probe");
+        assert_eq!(cache.len(), pairs.len(), "every pattern is cached despite colliding");
+        for (a, b) in &pairs {
+            assert!(cache.get_or_schedule(a, b, 1).1, "seed {seed}: exact key still hits");
+        }
+    }
+}
+
+#[test]
+fn percentiles_monotone_and_arrivals_conserved_under_random_traffic() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg64::new(0x7AFF1C ^ seed);
+        let process = match rng.next_below(3) {
+            0 => ArrivalProcess::Poisson { rate_hz: 10_000.0 + rng.next_f64() * 90_000.0 },
+            1 => ArrivalProcess::BurstyOnOff {
+                rate_hz: 20_000.0 + rng.next_f64() * 80_000.0,
+                burst: 2 + rng.next_below(6) as usize,
+                idle_s: 1e-4 + rng.next_f64() * 1e-3,
+            },
+            _ => ArrivalProcess::Trace {
+                inter_arrival_s: (0..4).map(|_| rng.next_f64() * 2e-4).collect(),
+            },
+        };
+        let spec = WorkloadSpec {
+            seed: rng.next_u64(),
+            n_jobs: 20 + rng.next_below(20) as usize,
+            tenants: 1 + rng.next_below(4) as u32,
+            pool_per_tenant: 1 + rng.next_below(5) as usize,
+            repeat_ratio: rng.next_f64(),
+            dim: 20 + rng.next_below(20) as usize,
+            process,
+        };
+        let mut cfg = ServingConfig::new(FpgaConfig::reap64_spgemm());
+        cfg.use_cache = rng.chance(0.5);
+        cfg.admission.latency_budget_s = [2e-4, 1e-3, 5e-3][rng.next_below(3) as usize];
+        if rng.chance(0.3) {
+            cfg.max_windows = Some(1 + rng.next_below(5) as usize);
+        }
+        let rep = run_serving(&cfg, &generate_workload(&spec)).expect("serving run");
+        assert!(
+            rep.p50_s <= rep.p95_s && rep.p95_s <= rep.p99_s,
+            "seed {seed}: percentiles must be monotone ({}, {}, {})",
+            rep.p50_s,
+            rep.p95_s,
+            rep.p99_s
+        );
+        assert_eq!(
+            rep.log.admitted + rep.log.rejected + rep.log.queued,
+            rep.log.arrived,
+            "seed {seed}: conservation"
+        );
+        if cfg.max_windows.is_none() {
+            assert_eq!(rep.log.arrived, spec.n_jobs, "seed {seed}: an unbounded run drains");
+            assert_eq!(rep.log.queued, 0, "seed {seed}");
+        }
+        assert_eq!(rep.latencies_s.len(), rep.log.admitted, "seed {seed}");
+        assert!((0.0..=1.0).contains(&rep.hit_rate), "seed {seed}");
+        assert!(rep.latencies_s.iter().all(|&(_, l)| l >= 0.0), "seed {seed}");
+    }
+}

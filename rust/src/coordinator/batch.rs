@@ -250,9 +250,61 @@ impl ReapBatch {
 /// the single-job scheduled path ([`super::spgemm::numeric_scheduled`])
 /// in exactly the same order — batching only interleaves *which* job a
 /// pipeline serves per wave — so the outputs are bit-identical to N
-/// independent runs for every thread count (jobs are data-independent;
-/// workers own whole jobs).
+/// independent runs for every thread count and grain size (jobs are
+/// data-independent; grains of whole jobs are claimed through the
+/// work-stealing executor, [`crate::util::grains`]).
 pub fn numeric_batch(
+    jobs: &[(Csr, Csr)],
+    schedule: &BatchSchedule,
+    nthreads: usize,
+) -> Vec<Csr> {
+    let nthreads = nthreads.max(1);
+    // one job per grain: job costs are the coarsest (and most skewed)
+    // unit this pass has, so stealing wants them individually claimable
+    numeric_batch_with_grain(jobs, schedule, nthreads, 1)
+}
+
+/// [`numeric_batch`] with an explicit job-grain size (the grain-size
+/// invariance knob for the property suite).
+pub fn numeric_batch_with_grain(
+    jobs: &[(Csr, Csr)],
+    schedule: &BatchSchedule,
+    nthreads: usize,
+    grain: usize,
+) -> Vec<Csr> {
+    assert_eq!(jobs.len(), schedule.n_jobs, "job list does not match schedule");
+    let per_job = schedule.per_job_assignments();
+
+    let nthreads = nthreads.clamp(1, jobs.len().max(1));
+    if nthreads <= 1 || jobs.len() < 2 {
+        let mut scratch = SpaScratch::new();
+        return jobs
+            .iter()
+            .zip(&per_job)
+            .map(|((a, b), asgs)| numeric_one(a, b, asgs, &mut scratch))
+            .collect();
+    }
+
+    let per_job = &per_job;
+    let grain_outputs: Vec<Vec<Csr>> = crate::util::grains::run_grains_with(
+        jobs.len(),
+        grain,
+        nthreads,
+        SpaScratch::new,
+        |scratch, _g, lo, hi| {
+            (lo..hi)
+                .map(|j| numeric_one(&jobs[j].0, &jobs[j].1, &per_job[j], scratch))
+                .collect::<Vec<Csr>>()
+        },
+    );
+    grain_outputs.into_iter().flatten().collect()
+}
+
+/// Static job-banded predecessor of [`numeric_batch`]: contiguous job
+/// ranges balanced by estimated flops, one per worker, no stealing. Kept
+/// callable for the `reap bench scaling` side-by-side; bit-identical
+/// output.
+pub fn numeric_batch_static_bands(
     jobs: &[(Csr, Csr)],
     schedule: &BatchSchedule,
     nthreads: usize,
@@ -412,6 +464,14 @@ mod tests {
         let base = numeric_batch(&jobs, &s, 1);
         for t in [2usize, 4, 8, 16] {
             assert_eq!(numeric_batch(&jobs, &s, t), base, "threads={t}");
+            assert_eq!(numeric_batch_static_bands(&jobs, &s, t), base, "static threads={t}");
+            for grain in [1usize, 4, 1 << 20] {
+                assert_eq!(
+                    numeric_batch_with_grain(&jobs, &s, t, grain),
+                    base,
+                    "threads={t} grain={grain}"
+                );
+            }
         }
         for (j, (a, b)) in jobs.iter().enumerate() {
             assert_eq!(base[j], spgemm(a, b), "job {j}");

@@ -16,7 +16,7 @@ use crate::kernels::spgemm_parallel::{flop_balanced_ranges, stitch_bands, Band, 
 use crate::rir::schedule::{schedule_spgemm, SpgemmSchedule};
 use crate::runtime::{SpgemmWaveIo, XlaRuntime};
 use crate::sparse::{Csr, Idx, Val};
-use crate::util::preprocess_threads;
+use crate::util::{grains, preprocess_threads};
 
 use super::overlap::pipelined_total;
 use super::ExecMode;
@@ -147,12 +147,27 @@ impl<'rt> ReapSpgemm<'rt> {
 /// In-process numeric path: identical wave/chunk/stream ordering to the
 /// hardware dataflow (and to the XLA path), accumulated with stamped SPAs.
 ///
-/// Parallelized over flop-balanced A-row bands: a row's chunks appear in
-/// schedule order within its band, so each band performs exactly the
-/// serial path's FP operations for its rows, and the deterministic band
-/// stitch makes the output **bit-identical** to the serial path for every
-/// thread count (property-tested in `tests/prop_invariants.rs`).
+/// Parallelized over A-row grains claimed through the deterministic
+/// work-stealing executor ([`crate::util::grains`]): a row's chunks
+/// appear in schedule order within its grain, so each grain performs
+/// exactly the serial path's FP operations for its rows, and the
+/// grain-ordered band stitch makes the output **bit-identical** to the
+/// serial path for every thread count and grain size (property-tested in
+/// `tests/prop_invariants.rs`).
 pub fn numeric_scheduled(a: &Csr, b: &Csr, schedule: &SpgemmSchedule, nthreads: usize) -> Csr {
+    let nthreads = nthreads.max(1);
+    numeric_scheduled_with_grain(a, b, schedule, nthreads, grains::default_grain(a.nrows, nthreads))
+}
+
+/// [`numeric_scheduled`] with an explicit row-grain size (the grain-size
+/// invariance knob for the property suite).
+pub fn numeric_scheduled_with_grain(
+    a: &Csr,
+    b: &Csr,
+    schedule: &SpgemmSchedule,
+    nthreads: usize,
+    grain: usize,
+) -> Csr {
     let nthreads = nthreads.max(1);
     if nthreads == 1 || a.nrows < 2 * nthreads {
         let mut scratch = SpaScratch::new();
@@ -166,6 +181,37 @@ pub fn numeric_scheduled(a: &Csr, b: &Csr, schedule: &SpgemmSchedule, nthreads: 
             cols: band.cols,
             vals: band.vals,
         };
+    }
+
+    let n_grains = grains::grain_count(a.nrows, grain);
+    let bands: Vec<Band> = grains::run_grains_with(
+        a.nrows,
+        grain,
+        nthreads,
+        || {
+            let mut s = SpaScratch::new();
+            s.ensure(b.ncols);
+            s
+        },
+        |scratch, _g, lo, hi| numeric_band(a, b, schedule, lo, hi, scratch),
+    );
+    let bounds: Vec<usize> =
+        (0..=n_grains).map(|g| (g * grain).min(a.nrows)).collect();
+    stitch_bands(a.nrows, b.ncols, &bounds, bands)
+}
+
+/// Static flop-balanced predecessor of [`numeric_scheduled`]: one
+/// contiguous row band per worker, no stealing. Kept callable for the
+/// `reap bench scaling` side-by-side; output is bit-identical.
+pub fn numeric_scheduled_static_bands(
+    a: &Csr,
+    b: &Csr,
+    schedule: &SpgemmSchedule,
+    nthreads: usize,
+) -> Csr {
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || a.nrows < 2 * nthreads {
+        return numeric_scheduled_with_grain(a, b, schedule, 1, a.nrows.max(1));
     }
 
     let bounds = flop_balanced_ranges(a, b, nthreads);
@@ -460,6 +506,18 @@ mod tests {
             let serial = numeric_scheduled(&a, &b, &s, 1);
             for t in [2usize, 4, 8] {
                 assert_eq!(numeric_scheduled(&a, &b, &s, t), serial, "threads={t}");
+                assert_eq!(
+                    numeric_scheduled_static_bands(&a, &b, &s, t),
+                    serial,
+                    "static threads={t}"
+                );
+                for grain in [1usize, 4, 1 << 20] {
+                    assert_eq!(
+                        numeric_scheduled_with_grain(&a, &b, &s, t, grain),
+                        serial,
+                        "threads={t} grain={grain}"
+                    );
+                }
             }
             assert_eq!(serial, spgemm(&a, &b), "seed {seed}");
         }

@@ -164,15 +164,36 @@ impl ReapSpmm {
 /// column is bit-identical to an independent SpMV for every thread count
 /// and block width.
 ///
-/// Workers own whole column blocks (columns are data-independent); the
-/// block width is [`FpgaConfig::vector_lanes`]-agnostic here — any width
-/// yields the same bits.
+/// Column blocks are the work items: grains of whole blocks are claimed
+/// through the deterministic work-stealing executor
+/// ([`crate::util::grains`]); each worker fills block-major buffers it
+/// owns, and the (cheap, deterministic) scatter into the row-major
+/// result happens after the join in grain order — blocks write disjoint
+/// column ranges, so the result is identical to the serial path for
+/// every thread count and grain size. The block width is
+/// [`FpgaConfig::vector_lanes`]-agnostic here — any width yields the
+/// same bits.
 pub fn numeric_spmm(
     a: &Csr,
     x: &[Val],
     k: usize,
     schedule: &SpgemmSchedule,
     nthreads: usize,
+) -> Vec<Val> {
+    // one column block per grain: blocks are few and uniform enough that
+    // finer grains would only add claim traffic
+    numeric_spmm_with_grain(a, x, k, schedule, nthreads, 1)
+}
+
+/// [`numeric_spmm`] with an explicit block-grain size (the grain-size
+/// invariance knob for the property suite).
+pub fn numeric_spmm_with_grain(
+    a: &Csr,
+    x: &[Val],
+    k: usize,
+    schedule: &SpgemmSchedule,
+    nthreads: usize,
+    grain: usize,
 ) -> Vec<Val> {
     assert_eq!(x.len(), a.ncols * k, "X panel shape mismatch");
     if k == 0 {
@@ -194,35 +215,23 @@ pub fn numeric_spmm(
         return c;
     }
 
-    // contiguous block bands per worker; each worker fills block-major
-    // buffers it owns, and the (cheap, deterministic) scatter into the
-    // row-major result happens after the join — the blocks write disjoint
-    // column ranges, so the result is identical to the serial path
-    let blocks_per = n_blocks.div_ceil(nthreads);
-    let bands: Vec<Vec<(usize, usize, Vec<Val>)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..nthreads)
-            .map(|w| {
-                let b_lo = w * blocks_per;
-                let b_hi = ((w + 1) * blocks_per).min(n_blocks);
-                scope.spawn(move || {
-                    let mut outs = Vec::with_capacity(b_hi.saturating_sub(b_lo));
-                    for blk in b_lo..b_hi {
-                        let j0 = blk * block;
-                        let j1 = (j0 + block).min(k);
-                        let mut buf = vec![0 as Val; a.nrows * block];
-                        numeric_block(a, x, k, schedule, j0, j1, &mut buf);
-                        outs.push((j0, j1, buf));
-                    }
-                    outs
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("spmm numeric worker panicked"))
-            .collect()
-    });
-    for (j0, j1, buf) in bands.into_iter().flatten() {
+    let grain_outs: Vec<Vec<(usize, usize, Vec<Val>)>> = crate::util::grains::run_grains(
+        n_blocks,
+        grain,
+        nthreads,
+        |_g, b_lo, b_hi| {
+            let mut outs = Vec::with_capacity(b_hi - b_lo);
+            for blk in b_lo..b_hi {
+                let j0 = blk * block;
+                let j1 = (j0 + block).min(k);
+                let mut buf = vec![0 as Val; a.nrows * block];
+                numeric_block(a, x, k, schedule, j0, j1, &mut buf);
+                outs.push((j0, j1, buf));
+            }
+            outs
+        },
+    );
+    for (j0, j1, buf) in grain_outs.into_iter().flatten() {
         scatter_block(&buf, k, j0, j1, &mut c);
     }
     c
@@ -319,6 +328,13 @@ mod tests {
         let base = numeric_spmm(&a, &x, k, &s, 1);
         for t in [2usize, 4, 8] {
             assert_eq!(numeric_spmm(&a, &x, k, &s, t), base, "threads {t}");
+            for grain in [1usize, 4, 1 << 20] {
+                assert_eq!(
+                    numeric_spmm_with_grain(&a, &x, k, &s, t, grain),
+                    base,
+                    "threads {t} grain {grain}"
+                );
+            }
         }
         assert_eq!(base, spmm(&a, &x, k));
     }

@@ -19,6 +19,7 @@
 //! | [`reliability`] | checksummed-stream fault sweep (no paper figure) |
 //! | [`compression`] | encoded-stream pricing: bytes-per-nnz vs cycles (no paper figure) |
 //! | [`serving`] | online serving: admission, latency percentiles, schedule cache (no paper figure) |
+//! | [`scaling`] | CPU-pass thread scaling: static bands vs work-stealing grains (no paper figure) |
 
 pub mod batch;
 pub mod compression;
@@ -32,6 +33,7 @@ pub mod hls_cmp;
 pub mod json;
 pub mod reliability;
 pub mod report;
+pub mod scaling;
 pub mod serving;
 pub mod spmm;
 pub mod suite;

@@ -7,9 +7,10 @@
 //!                scale-up likewise.
 //! * `cholesky` — run REAP sparse Cholesky likewise.
 //! * `bench`    — regenerate the paper's tables/figures plus the batch,
-//!                SpMM, reliability, stream-compression and online-serving
-//!                studies (`table1 table2 fig6 fig7 fig8 fig9 fig10 fig11
-//!                hls batch spmm reliability compression serving all`).
+//!                SpMM, reliability, stream-compression, online-serving
+//!                and CPU-scaling studies (`table1 table2 fig6 fig7 fig8
+//!                fig9 fig10 fig11 hls batch spmm reliability compression
+//!                serving scaling all`).
 //! * `lint`     — statically audit schedules, RIR streams and wave costs
 //!                ([`reap::analysis`]); exits non-zero on any diagnostic.
 //! * `gen-matrix` — write a synthetic matrix as Matrix-Market.
@@ -423,7 +424,7 @@ fn cmd_bench(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv, &specs)?;
     if args.flag("help") || args.positionals().is_empty() {
         print!(
-            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch spmm reliability compression serving all\n",
+            "{}\ntargets: table1 table2 fig6 fig7 fig8 fig9 fig10 fig11 hls batch spmm reliability compression serving scaling all\n",
             usage("bench <target>", "regenerate a paper table/figure", &specs)
         );
         return Ok(());
@@ -569,10 +570,19 @@ fn run_bench_target(target: &str, cfg: &RunConfig) -> Result<()> {
             );
             cfg.dump_csv("serving", &t)?;
         }
+        "scaling" => {
+            let (rows, t) = harness::scaling::run(cfg);
+            print!("{}", t.render());
+            println!(
+                "work-stealing >= static on uniform, strictly faster on skew at 4+ workers -> headline {}",
+                if harness::scaling::headline_holds(&rows) { "HOLDS" } else { "DIFFERS" }
+            );
+            cfg.dump_csv("scaling", &t)?;
+        }
         "all" => {
             for t in [
                 "table1", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "hls",
-                "batch", "spmm", "reliability", "compression", "serving",
+                "batch", "spmm", "reliability", "compression", "serving", "scaling",
             ] {
                 run_bench_target(t, cfg)?;
                 println!();

@@ -16,7 +16,7 @@
 //! produced from the arena via [`BundleStream::to_bundles`].
 
 use crate::sparse::{Csc, Csr, Idx, Val};
-use crate::util::preprocess_threads;
+use crate::util::{grains, preprocess_threads};
 
 use super::bundle::{Bundle, BundleFlags};
 
@@ -289,10 +289,33 @@ impl BundleStream {
         Self::from_csr_with_threads(m, bundle_size, preprocess_threads())
     }
 
-    /// Fresh stream from a CSR matrix, encoded by `nthreads` workers over
-    /// contiguous row bands into pre-split output slices. Bit-identical to
-    /// the serial encode for every thread count.
+    /// Fresh stream from a CSR matrix, encoded in parallel over row
+    /// grains claimed through the deterministic work-stealing executor
+    /// ([`crate::util::grains`]). Bit-identical to the serial encode for
+    /// every thread count.
     pub fn from_csr_with_threads(m: &Csr, bundle_size: usize, nthreads: usize) -> Self {
+        let nthreads = nthreads.max(1);
+        Self::from_csr_with_grain(
+            m,
+            bundle_size,
+            nthreads,
+            grains::default_grain(m.nrows, nthreads),
+        )
+    }
+
+    /// [`Self::from_csr_with_threads`] with an explicit row-grain size
+    /// (the grain-size invariance knob for the property suite).
+    ///
+    /// Each grain encodes into its pre-split slice of the output arrays
+    /// (bundle and element extents are computed up front from `row_ptr`),
+    /// so the merged stream is a pure function of the grain order — no
+    /// post-join copy, no ordering race.
+    pub fn from_csr_with_grain(
+        m: &Csr,
+        bundle_size: usize,
+        nthreads: usize,
+        grain: usize,
+    ) -> Self {
         assert!(bundle_size > 0, "bundle_size must be positive");
         let nthreads = nthreads.clamp(1, m.nrows.max(1));
         if nthreads <= 1 || m.nrows < 2 * nthreads {
@@ -301,17 +324,16 @@ impl BundleStream {
             return s;
         }
 
-        // band boundaries balanced by nnz; per-band bundle counts
-        let bounds = nnz_balanced_row_bands(m, nthreads);
-        let band_bundles: Vec<usize> = bounds
-            .windows(2)
-            .map(|w| {
-                (w[0]..w[1])
+        let n_grains = grains::grain_count(m.nrows, grain);
+        let grain_bundles: Vec<usize> = (0..n_grains)
+            .map(|g| {
+                let (lo, hi) = grains::grain_span(g, grain, m.nrows);
+                (lo..hi)
                     .map(|i| m.row_nnz(i).div_ceil(bundle_size).max(1))
                     .sum()
             })
             .collect();
-        let nb: usize = band_bundles.iter().sum();
+        let nb: usize = grain_bundles.iter().sum();
         let nnz = m.nnz();
 
         let mut shared = vec![0 as Idx; nb];
@@ -320,31 +342,59 @@ impl BundleStream {
         let mut cols = vec![0 as Idx; nnz];
         let mut vals = vec![0 as Val; nnz];
 
-        std::thread::scope(|scope| {
+        {
+            // pre-split each output array into per-grain slots; a worker
+            // takes grain g's slot when it claims grain g. Every slot is
+            // taken exactly once, so the per-slot lock is never contended
+            // — it exists only to hand the mutable slices across threads.
+            let mut slots: Vec<std::sync::Mutex<Option<GrainOut<'_>>>> =
+                Vec::with_capacity(n_grains);
             let mut sh_rest = shared.as_mut_slice();
             let mut fl_rest = flags.as_mut_slice();
             let mut off_rest = &mut off[1..]; // off[0] stays 0
             let mut cols_rest = cols.as_mut_slice();
             let mut vals_rest = vals.as_mut_slice();
-            for (w, win) in bounds.windows(2).enumerate() {
-                let (r_lo, r_hi) = (win[0], win[1]);
-                let nb_band = band_bundles[w];
-                let ne_band = m.row_ptr[r_hi] - m.row_ptr[r_lo];
-                let (sh, sh_r) = std::mem::take(&mut sh_rest).split_at_mut(nb_band);
-                let (fl, fl_r) = std::mem::take(&mut fl_rest).split_at_mut(nb_band);
-                let (of, of_r) = std::mem::take(&mut off_rest).split_at_mut(nb_band);
-                let (co, co_r) = std::mem::take(&mut cols_rest).split_at_mut(ne_band);
-                let (va, va_r) = std::mem::take(&mut vals_rest).split_at_mut(ne_band);
+            for (g, &nb_g) in grain_bundles.iter().enumerate() {
+                let (r_lo, r_hi) = grains::grain_span(g, grain, m.nrows);
+                let ne_g = m.row_ptr[r_hi] - m.row_ptr[r_lo];
+                let (sh, sh_r) = std::mem::take(&mut sh_rest).split_at_mut(nb_g);
+                let (fl, fl_r) = std::mem::take(&mut fl_rest).split_at_mut(nb_g);
+                let (of, of_r) = std::mem::take(&mut off_rest).split_at_mut(nb_g);
+                let (co, co_r) = std::mem::take(&mut cols_rest).split_at_mut(ne_g);
+                let (va, va_r) = std::mem::take(&mut vals_rest).split_at_mut(ne_g);
                 sh_rest = sh_r;
                 fl_rest = fl_r;
                 off_rest = of_r;
                 cols_rest = co_r;
                 vals_rest = va_r;
-                scope.spawn(move || {
-                    encode_band(m, bundle_size, r_lo, r_hi, sh, fl, of, co, va);
-                });
+                slots.push(std::sync::Mutex::new(Some(GrainOut {
+                    shared: sh,
+                    flags: fl,
+                    off: of,
+                    cols: co,
+                    vals: va,
+                })));
             }
-        });
+            let slots = &slots;
+            grains::run_grains(m.nrows, grain, nthreads, |g, r_lo, r_hi| {
+                let out = slots[g]
+                    .lock()
+                    .expect("grain slot lock poisoned")
+                    .take()
+                    .expect("grain slot taken exactly once");
+                encode_band(
+                    m,
+                    bundle_size,
+                    r_lo,
+                    r_hi,
+                    out.shared,
+                    out.flags,
+                    out.off,
+                    out.cols,
+                    out.vals,
+                );
+            });
+        }
 
         let mut s = BundleStream { shared, flags, off, cols, vals };
         s.mark_end_of_stream();
@@ -375,23 +425,14 @@ pub(crate) fn chain_bundle_count_csr(m: &Csr, bundle_size: usize) -> usize {
         .sum()
 }
 
-/// Contiguous row bands of roughly equal nnz. Returns boundaries
-/// (first 0, last `m.nrows`, strictly ascending).
-fn nnz_balanced_row_bands(m: &Csr, nthreads: usize) -> Vec<usize> {
-    let total = m.nnz();
-    let mut bounds = vec![0usize];
-    let mut row = 0usize;
-    for k in 1..nthreads {
-        let target = total * k / nthreads;
-        while row < m.nrows && m.row_ptr[row] < target {
-            row += 1;
-        }
-        if row > *bounds.last().unwrap() && row < m.nrows {
-            bounds.push(row);
-        }
-    }
-    bounds.push(m.nrows);
-    bounds
+/// One grain's pre-split slices of the parallel encode's output arrays
+/// (see [`BundleStream::from_csr_with_grain`]).
+struct GrainOut<'a> {
+    shared: &'a mut [Idx],
+    flags: &'a mut [BundleFlags],
+    off: &'a mut [usize],
+    cols: &'a mut [Idx],
+    vals: &'a mut [Val],
 }
 
 /// Encode rows `[r_lo, r_hi)` into pre-split output slices. `off` holds the
@@ -621,6 +662,13 @@ mod tests {
         let base = BundleStream::from_csr_with_threads(&m, 16, 1);
         for t in [2usize, 3, 4, 8] {
             assert_eq!(BundleStream::from_csr_with_threads(&m, 16, t), base, "t={t}");
+            for grain in [1usize, 4, 1 << 20] {
+                assert_eq!(
+                    BundleStream::from_csr_with_grain(&m, 16, t, grain),
+                    base,
+                    "t={t} grain={grain}"
+                );
+            }
         }
     }
 

@@ -11,21 +11,27 @@
 //! column indices of the wave's A elements, deduplicated and sorted so the
 //! FPGA sees a monotone DRAM address pattern.
 //!
-//! The pass is sharded across a scoped-thread worker pool: chunk
-//! enumeration is a cheap serial prologue, then contiguous *wave bands*
-//! (balanced by element count) are handed to workers, each reusing its own
-//! `mark` scratch across its waves. Because a wave's B-stream depends only
-//! on its own assignments, the banded result is bit-identical to the
-//! serial one for every thread count (property-tested in
-//! `tests/prop_invariants.rs`). Each wave also records its measured CPU
-//! cost, which drives the per-wave CPU/FPGA pipelining model in
-//! [`crate::coordinator::overlap`] (see EXPERIMENTS.md §Perf).
+//! The pass is sharded across the deterministic work-stealing executor
+//! ([`crate::util::grains`], ARCHITECTURE.md §10): chunk enumeration is a
+//! cheap serial prologue, then workers claim fixed-size *wave-range
+//! grains* from a shared cursor (stealing from other runs once their own
+//! drains), each reusing its own `mark` scratch across the waves it
+//! claims. Because a wave's B-stream depends only on its own assignments
+//! and grain results merge in grain order, the result is bit-identical to
+//! the serial one for every thread count *and* grain size
+//! (property-tested in `tests/prop_invariants.rs`). The static
+//! element-balanced banding this replaces is kept callable
+//! ([`schedule_spgemm_static_bands`]) for the `reap bench scaling`
+//! side-by-side and for diff tests against the pinned banding behavior.
+//! Each wave also records its measured CPU cost, which drives the
+//! per-wave CPU/FPGA pipelining model in [`crate::coordinator::overlap`]
+//! (see EXPERIMENTS.md §Perf).
 
 use std::time::Instant;
 
 use crate::fpga::ConfigError;
 use crate::sparse::{Csr, Idx, Val};
-use crate::util::preprocess_threads;
+use crate::util::{grains, preprocess_threads};
 
 use super::layout::WORD_BYTES;
 
@@ -136,6 +142,19 @@ fn scheduling_geometry(pipelines: usize, bundle_size: usize) -> Result<(), Confi
         return Err(ConfigError::ZeroBundleSize);
     }
     Ok(())
+}
+
+/// How the wave-building phase distributes waves across workers. Both
+/// modes produce bit-identical schedules; they differ only in how badly
+/// a skewed wave-cost distribution can serialize the pass.
+#[derive(Clone, Copy, Debug)]
+enum WaveExec {
+    /// Deterministic work-stealing over fixed-size wave-range grains
+    /// (`None` picks [`grains::default_grain`]). The default.
+    Steal(Option<usize>),
+    /// The retired static element-balanced banding
+    /// ([`band_bounds_by_elems`]), kept for the scaling comparison.
+    StaticBands,
 }
 
 // ---------------------------------------------------------------------------
@@ -330,6 +349,53 @@ pub fn try_schedule_spgemm_batch_with_threads(
     bundle_size: usize,
     nthreads: usize,
 ) -> Result<BatchSchedule, ConfigError> {
+    schedule_batch_core(jobs, pipelines, bundle_size, nthreads, WaveExec::Steal(None))
+}
+
+/// [`schedule_spgemm_batch_with_threads`] with an explicit grain size for
+/// the work-stealing executor. Output is grain-size-invariant
+/// (property-tested); the knob exists for those tests and for tuning
+/// experiments.
+///
+/// Panics on zero-valued geometry or `grain == 0`.
+pub fn schedule_spgemm_batch_with_grain(
+    jobs: &[(Csr, Csr)],
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+    grain: usize,
+) -> BatchSchedule {
+    match schedule_batch_core(jobs, pipelines, bundle_size, nthreads, WaveExec::Steal(Some(grain)))
+    {
+        Ok(s) => s,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Static-banded predecessor of [`schedule_spgemm_batch_with_threads`],
+/// kept callable for the `reap bench scaling` comparison. Bit-identical
+/// output, different (skew-sensitive) load balance.
+///
+/// Panics on zero-valued geometry.
+pub fn schedule_spgemm_batch_static_bands(
+    jobs: &[(Csr, Csr)],
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+) -> BatchSchedule {
+    match schedule_batch_core(jobs, pipelines, bundle_size, nthreads, WaveExec::StaticBands) {
+        Ok(s) => s,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+fn schedule_batch_core(
+    jobs: &[(Csr, Csr)],
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+    exec: WaveExec,
+) -> Result<BatchSchedule, ConfigError> {
     scheduling_geometry(pipelines, bundle_size)?;
 
     // ---- prologue: enumerate chunks job-major, in row order ----
@@ -366,31 +432,46 @@ pub fn try_schedule_spgemm_batch_with_threads(
     let n_waves = chunks.len().div_ceil(pipelines);
     let prep_cpu_s = t_prep.elapsed().as_secs_f64();
 
-    // ---- shared-wave bands, balanced by element count ----
+    // ---- shared waves: grain-claimed (or static bands, for the
+    // scaling comparison); either way the merge is wave-range order ----
     let t_waves = Instant::now();
     let nthreads = nthreads.clamp(1, n_waves.max(1));
-    let bounds =
-        band_bounds_by_elems(chunks.len(), |i| chunks[i].1.len, pipelines, n_waves, nthreads);
-
-    let bands: Vec<(Vec<BatchWave>, Vec<f64>, usize)> = if bounds.len() <= 2 {
-        vec![build_batch_wave_band(jobs, &chunks, pipelines, bundle_size, 0, n_waves)]
-    } else {
-        std::thread::scope(|scope| {
-            let chunks = &chunks;
-            let handles: Vec<_> = bounds
-                .windows(2)
-                .map(|w| {
-                    let (lo, hi) = (w[0], w[1]);
-                    scope.spawn(move || {
-                        build_batch_wave_band(jobs, chunks, pipelines, bundle_size, lo, hi)
-                    })
+    let chunks_ref = &chunks;
+    let build = |w_lo: usize, w_hi: usize| {
+        build_batch_wave_band(jobs, chunks_ref, pipelines, bundle_size, w_lo, w_hi)
+    };
+    let bands: Vec<(Vec<BatchWave>, Vec<f64>, usize)> = match exec {
+        WaveExec::Steal(grain) => {
+            let grain = grain.unwrap_or_else(|| grains::default_grain(n_waves, nthreads));
+            grains::run_grains(n_waves, grain, nthreads, |_g, w_lo, w_hi| build(w_lo, w_hi))
+        }
+        WaveExec::StaticBands => {
+            let bounds = band_bounds_by_elems(
+                chunks.len(),
+                |i| chunks[i].1.len,
+                pipelines,
+                n_waves,
+                nthreads,
+            );
+            if bounds.len() <= 2 {
+                vec![build(0, n_waves)]
+            } else {
+                let build = &build;
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = bounds
+                        .windows(2)
+                        .map(|w| {
+                            let (lo, hi) = (w[0], w[1]);
+                            scope.spawn(move || build(lo, hi))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("batch schedule worker panicked"))
+                        .collect()
                 })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("batch schedule worker panicked"))
-                .collect()
-        })
+            }
+        }
     };
 
     // ---- deterministic merge + wall-clock normalization ----
@@ -599,6 +680,57 @@ pub fn try_schedule_spgemm_with_threads(
     bundle_size: usize,
     nthreads: usize,
 ) -> Result<SpgemmSchedule, ConfigError> {
+    schedule_core(a, b, pipelines, bundle_size, nthreads, WaveExec::Steal(None))
+}
+
+/// [`schedule_spgemm_with_threads`] with an explicit grain size for the
+/// work-stealing executor. Output is grain-size-invariant
+/// (property-tested); the knob exists for those tests and for tuning
+/// experiments.
+///
+/// Panics on zero-valued geometry or `grain == 0`.
+pub fn schedule_spgemm_with_grain(
+    a: &Csr,
+    b: &Csr,
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+    grain: usize,
+) -> SpgemmSchedule {
+    match schedule_core(a, b, pipelines, bundle_size, nthreads, WaveExec::Steal(Some(grain))) {
+        Ok(s) => s,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Static-banded predecessor of [`schedule_spgemm_with_threads`], kept
+/// callable for the `reap bench scaling` side-by-side: contiguous wave
+/// bands balanced by A-element count, one per worker, no stealing. Output
+/// is bit-identical to the work-stealing path; only the load balance
+/// (and therefore the wall clock on skewed inputs) differs.
+///
+/// Panics on zero-valued geometry.
+pub fn schedule_spgemm_static_bands(
+    a: &Csr,
+    b: &Csr,
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+) -> SpgemmSchedule {
+    match schedule_core(a, b, pipelines, bundle_size, nthreads, WaveExec::StaticBands) {
+        Ok(s) => s,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+fn schedule_core(
+    a: &Csr,
+    b: &Csr,
+    pipelines: usize,
+    bundle_size: usize,
+    nthreads: usize,
+    exec: WaveExec,
+) -> Result<SpgemmSchedule, ConfigError> {
     scheduling_geometry(pipelines, bundle_size)?;
     assert_eq!(a.ncols, b.nrows, "inner dimensions disagree");
 
@@ -632,30 +764,46 @@ pub fn try_schedule_spgemm_with_threads(
     let n_waves = chunks.len().div_ceil(pipelines);
     let prep_cpu_s = t_prep.elapsed().as_secs_f64();
 
-    // ---- wave bands: contiguous wave ranges, balanced by element count ----
+    // ---- wave building: grain-claimed with stealing (or static bands,
+    // for the scaling comparison); merged in wave-range order ----
     let t_waves = Instant::now();
     let nthreads = nthreads.clamp(1, n_waves.max(1));
-    let bounds = wave_band_bounds(&chunks, pipelines, n_waves, nthreads);
-
-    let bands: Vec<(Vec<Wave>, Vec<f64>, usize)> = if bounds.len() <= 2 {
-        vec![build_wave_band(a, b, &chunks, pipelines, bundle_size, 0, n_waves)]
-    } else {
-        std::thread::scope(|scope| {
-            let chunks = &chunks;
-            let handles: Vec<_> = bounds
-                .windows(2)
-                .map(|w| {
-                    let (lo, hi) = (w[0], w[1]);
-                    scope.spawn(move || {
-                        build_wave_band(a, b, chunks, pipelines, bundle_size, lo, hi)
-                    })
+    let chunks_ref = &chunks;
+    let build = |scratch: &mut WaveScratch, w_lo: usize, w_hi: usize| {
+        build_wave_band(a, b, chunks_ref, pipelines, bundle_size, w_lo, w_hi, scratch)
+    };
+    let bands: Vec<(Vec<Wave>, Vec<f64>, usize)> = match exec {
+        WaveExec::Steal(grain) => {
+            let grain = grain.unwrap_or_else(|| grains::default_grain(n_waves, nthreads));
+            grains::run_grains_with(
+                n_waves,
+                grain,
+                nthreads,
+                || WaveScratch::new(b.nrows),
+                |scratch, _g, w_lo, w_hi| build(scratch, w_lo, w_hi),
+            )
+        }
+        WaveExec::StaticBands => {
+            let bounds = wave_band_bounds(&chunks, pipelines, n_waves, nthreads);
+            if bounds.len() <= 2 {
+                vec![build(&mut WaveScratch::new(b.nrows), 0, n_waves)]
+            } else {
+                let build = &build;
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = bounds
+                        .windows(2)
+                        .map(|w| {
+                            let (lo, hi) = (w[0], w[1]);
+                            scope.spawn(move || build(&mut WaveScratch::new(b.nrows), lo, hi))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("schedule worker panicked"))
+                        .collect()
                 })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("schedule worker panicked"))
-                .collect()
-        })
+            }
+        }
     };
 
     // ---- deterministic merge: bands are contiguous wave ranges ----
@@ -739,8 +887,25 @@ fn band_bounds_by_elems(
     bounds
 }
 
-/// Build waves `[w_lo, w_hi)` with one reusable `mark` scratch; returns the
-/// waves, their raw per-wave durations, and the band's B-word total.
+/// Per-worker scratch for [`build_wave_band`]: the wave-stamped `mark`
+/// array plus a high-water B-row capacity hint. Reusing one scratch
+/// across *every* wave a worker claims — including stolen, out-of-order
+/// waves — is safe because each wave is processed exactly once globally
+/// and stamps with its globally unique wave id.
+struct WaveScratch {
+    /// Wave id when a B-row was last added (dedup stamp).
+    mark: Vec<u32>,
+    b_rows_cap: usize,
+}
+
+impl WaveScratch {
+    fn new(b_nrows: usize) -> Self {
+        WaveScratch { mark: vec![u32::MAX; b_nrows], b_rows_cap: 0 }
+    }
+}
+
+/// Build waves `[w_lo, w_hi)` reusing the worker's scratch; returns the
+/// waves, their raw per-wave durations, and the range's B-word total.
 fn build_wave_band(
     a: &Csr,
     b: &Csr,
@@ -749,12 +914,12 @@ fn build_wave_band(
     bundle_size: usize,
     w_lo: usize,
     w_hi: usize,
+    scratch: &mut WaveScratch,
 ) -> (Vec<Wave>, Vec<f64>, usize) {
     let mut waves = Vec::with_capacity(w_hi - w_lo);
     let mut times = Vec::with_capacity(w_hi - w_lo);
     let mut b_words = 0usize;
-    let mut mark = vec![u32::MAX; b.nrows]; // wave id when row last added
-    let mut b_rows_cap = 0usize;
+    let mark = &mut scratch.mark;
     for wid in w_lo..w_hi {
         let t0 = Instant::now();
         // checked: a wave count past u32::MAX would silently alias marks
@@ -762,7 +927,7 @@ fn build_wave_band(
         let lo = wid * pipelines;
         let hi = ((wid + 1) * pipelines).min(chunks.len());
         let group = &chunks[lo..hi];
-        let mut b_rows: Vec<Idx> = Vec::with_capacity(b_rows_cap);
+        let mut b_rows: Vec<Idx> = Vec::with_capacity(scratch.b_rows_cap);
         for asg in group {
             for &c in asg.a_cols(a) {
                 let r = c as usize;
@@ -776,7 +941,7 @@ fn build_wave_band(
         for &r in &b_rows {
             b_words += row_stream_words(b.row_nnz(r as usize), bundle_size);
         }
-        b_rows_cap = b_rows_cap.max(b_rows.len());
+        scratch.b_rows_cap = scratch.b_rows_cap.max(b_rows.len());
         waves.push(Wave { assignments: group.to_vec(), b_rows });
         times.push(t0.elapsed().as_secs_f64());
     }
@@ -1096,5 +1261,80 @@ mod tests {
         assert_eq!(*bounds.last().unwrap(), s.n_waves());
         assert!(bounds.windows(2).all(|w| w[0] < w[1]));
         assert!(bounds.len() <= 6);
+    }
+
+    // ---- pinned static-banding edge cases (the behavior the stealing
+    // executor replaced; kept so the two paths stay diffable) ----
+
+    #[test]
+    fn band_bounds_more_threads_than_waves() {
+        // 4 waves of one chunk each, 9 requested threads: boundaries must
+        // still strictly ascend and partition 0..4 — at most 4 bands; the
+        // surplus threads simply get no band
+        let lens = [3usize, 5, 2, 7];
+        let bounds = band_bounds_by_elems(4, |i| lens[i], 1, 4, 9);
+        assert_eq!(bounds, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn band_bounds_empty_schedule() {
+        // no waves: the degenerate [0, 0] partition, same as 1 thread
+        assert_eq!(band_bounds_by_elems(0, |_| 0, 4, 0, 8), vec![0, 0]);
+        assert_eq!(band_bounds_by_elems(7, |_| 3, 4, 2, 1), vec![0, 2]);
+    }
+
+    #[test]
+    fn band_bounds_single_giant_wave_starves_bands() {
+        // one giant wave among tiny ones: the prefix walk hands the giant
+        // to band 0 and collapses the rest into one band — 2 bands for 4
+        // threads. This is the skew pathology that motivates stealing
+        // (grains keep all workers claimable until the pool drains).
+        let lens = [100usize, 1, 1, 1];
+        let bounds = band_bounds_by_elems(4, |i| lens[i], 1, 4, 4);
+        assert_eq!(bounds, vec![0, 1, 4]);
+        // a single wave is atomic: nothing to split regardless of threads
+        let bounds = band_bounds_by_elems(4, |i| lens[i], 4, 1, 8);
+        assert_eq!(bounds, vec![0, 1]);
+    }
+
+    // ---- work-stealing vs static banding vs grain size ----
+
+    #[test]
+    fn static_bands_match_stealing_bitwise() {
+        let a = gen::power_law(100, 2200, 21);
+        let b = mk(100, 1500, 22);
+        let steal = schedule_spgemm_with_threads(&a, &b, 8, 16, 4);
+        for t in [1usize, 2, 4, 8] {
+            let stat = schedule_spgemm_static_bands(&a, &b, 8, 16, t);
+            assert_eq!(stat.waves, steal.waves, "threads={t}");
+            assert_eq!(stat.a_words, steal.a_words, "threads={t}");
+            assert_eq!(stat.b_words, steal.b_words, "threads={t}");
+        }
+        let jobs = mk_jobs(4, 40, 300, 23);
+        let steal_b = schedule_spgemm_batch_with_threads(&jobs, 8, 16, 4);
+        for t in [1usize, 2, 4, 8] {
+            let stat_b = schedule_spgemm_batch_static_bands(&jobs, 8, 16, t);
+            assert_eq!(stat_b.waves, steal_b.waves, "threads={t}");
+            assert_eq!(stat_b.b_words, steal_b.b_words, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn grain_size_never_changes_the_schedule() {
+        let a = gen::power_law(90, 2000, 24);
+        let b = mk(90, 1400, 25);
+        let base = schedule_spgemm_with_threads(&a, &b, 4, 16, 1);
+        let jobs = mk_jobs(3, 35, 250, 26);
+        let base_b = schedule_spgemm_batch_with_threads(&jobs, 4, 16, 1);
+        for grain in [1usize, 4, 1 << 20] {
+            for t in [2usize, 4, 8] {
+                let s = schedule_spgemm_with_grain(&a, &b, 4, 16, t, grain);
+                assert_eq!(s.waves, base.waves, "grain={grain} t={t}");
+                assert_eq!(s.b_words, base.b_words, "grain={grain} t={t}");
+                let sb = schedule_spgemm_batch_with_grain(&jobs, 4, 16, t, grain);
+                assert_eq!(sb.waves, base_b.waves, "grain={grain} t={t}");
+                assert_eq!(sb.b_words, base_b.b_words, "grain={grain} t={t}");
+            }
+        }
     }
 }

@@ -15,6 +15,11 @@
 //!   skew stresses REAP's big-row splitting.
 //! * [`block_random`] — clustered blocks (supernodal-ish patterns of
 //!   `pdb1HYs`, `rma10`).
+//! * [`zipf_adversarial`] — deliberately hostile Zipf row lengths (steeper
+//!   exponent than [`power_law`], giant head rows scattered at random
+//!   positions). Built for the `reap bench scaling` harness: static
+//!   contiguous band partitions assign whole giant rows to one worker,
+//!   which is exactly the imbalance work-stealing grains erase.
 //!
 //! All generators are seeded ([`Pcg64`]) and allocate exact-size CSR
 //! directly where possible; they are used by tests, examples, and the
@@ -32,6 +37,7 @@ pub enum Family {
     BandedFem,
     PowerLaw,
     BlockRandom,
+    ZipfAdversarial,
 }
 
 impl std::fmt::Display for Family {
@@ -41,6 +47,7 @@ impl std::fmt::Display for Family {
             Family::BandedFem => "banded-fem",
             Family::PowerLaw => "power-law",
             Family::BlockRandom => "block-random",
+            Family::ZipfAdversarial => "zipf-adversarial",
         };
         write!(f, "{s}")
     }
@@ -53,6 +60,7 @@ pub fn generate(family: Family, n: usize, target_nnz: usize, seed: u64) -> Csr {
         Family::BandedFem => banded_fem(n, target_nnz, seed),
         Family::PowerLaw => power_law(n, target_nnz, seed),
         Family::BlockRandom => block_random(n, target_nnz, seed),
+        Family::ZipfAdversarial => zipf_adversarial(n, target_nnz, 1.6, seed),
     }
 }
 
@@ -146,6 +154,41 @@ pub fn power_law(n: usize, target_nnz: usize, seed: u64) -> Csr {
     Csr { nrows: n, ncols: n, row_ptr, cols, vals }
 }
 
+/// Adversarial Zipf row lengths: `len(rank) ∝ rank^(-alpha)` with a steep
+/// exponent, heavy ranks scattered to random row positions. With
+/// `alpha = 1.6` the head row alone carries a double-digit percentage of
+/// all nonzeros, so any contiguous static partition of rows (or of the
+/// waves built from them) hands one worker several times the mean load —
+/// the scaling bench uses this family to expose that cliff. Fully
+/// seed-deterministic (dedicated Pcg64 stream `0x5eed_0005`).
+pub fn zipf_adversarial(n: usize, target_nnz: usize, alpha: f64, seed: u64) -> Csr {
+    assert!(alpha > 0.0, "zipf exponent must be positive");
+    let mut rng = Pcg64::with_stream(seed, 0x5eed_0005);
+    let weights: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-alpha)).collect();
+    let wsum: f64 = weights.iter().sum();
+    // scatter the heavy ranks: rank r's length lands on a random row, so
+    // consecutive giant rows don't end up adjacent (adjacency would let a
+    // contiguous partition get "lucky" and keep them in one band anyway).
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let mut degrees = vec![0usize; n];
+    for (rank, &row) in perm.iter().enumerate() {
+        let d = (weights[rank] / wsum * target_nnz as f64).round() as usize;
+        degrees[row] = d.clamp(1, n);
+    }
+    let mut row_ptr = vec![0usize; n + 1];
+    let mut cols: Vec<Idx> = Vec::new();
+    let mut vals: Vec<Val> = Vec::new();
+    for i in 0..n {
+        for c in rng.sample_distinct(n, degrees[i]) {
+            cols.push(c as Idx);
+            vals.push(rng.signed_unit_f32());
+        }
+        row_ptr[i + 1] = cols.len();
+    }
+    Csr { nrows: n, ncols: n, row_ptr, cols, vals }
+}
+
 /// Clustered blocks: dense-ish square blocks along the diagonal plus random
 /// inter-block couplings (protein / multi-body patterns).
 pub fn block_random(n: usize, target_nnz: usize, seed: u64) -> Csr {
@@ -201,10 +244,17 @@ mod tests {
         m.validate().unwrap();
     }
 
+    const ALL_FAMILIES: [Family; 5] = [
+        Family::RandomUniform,
+        Family::BandedFem,
+        Family::PowerLaw,
+        Family::BlockRandom,
+        Family::ZipfAdversarial,
+    ];
+
     #[test]
     fn generators_are_deterministic() {
-        for fam in [Family::RandomUniform, Family::BandedFem, Family::PowerLaw, Family::BlockRandom]
-        {
+        for fam in ALL_FAMILIES {
             let a = generate(fam, 80, 400, 7);
             let b = generate(fam, 80, 400, 7);
             assert_eq!(a, b, "{fam} not deterministic");
@@ -215,8 +265,7 @@ mod tests {
 
     #[test]
     fn nnz_within_tolerance_of_target() {
-        for fam in [Family::RandomUniform, Family::BandedFem, Family::PowerLaw, Family::BlockRandom]
-        {
+        for fam in ALL_FAMILIES {
             let target = 2000;
             let m = generate(fam, 200, target, 3);
             m.validate().unwrap();
@@ -247,6 +296,34 @@ mod tests {
         let max = *lens.last().unwrap();
         let med = lens[lens.len() / 2];
         assert!(max >= med * 5, "expected heavy tail: max={max} med={med}");
+    }
+
+    #[test]
+    fn zipf_adversarial_is_more_skewed_than_power_law() {
+        let n = 300;
+        let nnz = 6000;
+        let head_share = |m: &Csr| {
+            let max = (0..m.nrows).map(|i| m.row_nnz(i)).max().unwrap();
+            max as f64 / m.nnz() as f64
+        };
+        let zipf = zipf_adversarial(n, nnz, 1.6, 11);
+        zipf.validate().unwrap();
+        let pl = power_law(n, nnz, 11);
+        assert!(
+            head_share(&zipf) > head_share(&pl),
+            "zipf head {:.3} should beat power-law head {:.3}",
+            head_share(&zipf),
+            head_share(&pl)
+        );
+        // the head row carries a macroscopic fraction of all nonzeros
+        assert!(head_share(&zipf) > 0.05, "head share {:.3}", head_share(&zipf));
+    }
+
+    #[test]
+    fn zipf_adversarial_every_row_nonempty() {
+        let m = zipf_adversarial(120, 1500, 1.6, 3);
+        m.validate().unwrap();
+        assert!((0..m.nrows).all(|i| m.row_nnz(i) >= 1));
     }
 
     #[test]

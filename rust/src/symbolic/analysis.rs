@@ -67,7 +67,10 @@ pub struct CholeskySymbolic {
     pub rl_col_words: Vec<u32>,
     /// Measured seconds of the global analysis phase (etree + pattern +
     /// storage map) — produces the schedule, so it cannot overlap the
-    /// FPGA's numeric phase.
+    /// FPGA's numeric phase. The pattern pass runs on the work-stealing
+    /// preprocessing pool, so this wall-clock figure (and everything
+    /// downstream: `cpu_symbolic_s`, fig10/fig11 totals) reflects the
+    /// parallel symbolic prologue.
     pub analysis_s: f64,
     /// Measured seconds of the per-column RA/RL stream encoding — the part
     /// the coordinator pipelines against the FPGA's column processing

@@ -13,6 +13,7 @@
 
 use super::etree::depths;
 use super::pattern::LPattern;
+use crate::util::{grains, preprocess_threads};
 
 /// Level schedule: columns grouped by elimination-tree height (leaves
 /// first — a column's level is 1 + max level of its children; columns in
@@ -24,14 +25,29 @@ pub struct LevelSchedule {
 }
 
 impl LevelSchedule {
-    /// Build from the symbolic pattern.
+    /// Build from the symbolic pattern. The level-bucket fill runs on the
+    /// work-stealing preprocessing pool; the result is bit-identical to the
+    /// serial construction for every thread count (ARCHITECTURE.md §10).
     pub fn build(pattern: &LPattern) -> Self {
+        Self::build_with_threads(pattern, preprocess_threads())
+    }
+
+    /// [`LevelSchedule::build`] with an explicit worker count (1 = serial).
+    pub fn build_with_threads(pattern: &LPattern, nthreads: usize) -> Self {
+        let grain = grains::default_grain(pattern.n, nthreads);
+        Self::build_with_grain(pattern, nthreads, grain)
+    }
+
+    /// [`LevelSchedule::build`] with explicit worker count and grain size —
+    /// exposed so the property suite can pin grain-size invariance.
+    pub fn build_with_grain(pattern: &LPattern, nthreads: usize, grain: usize) -> Self {
         let n = pattern.n;
         // height above the leaves = depth measured from each subtree's
         // deepest leaf; compute as max-over-children + 1 via reverse pass.
+        // Children have smaller indices than parents in an etree, so this
+        // pass is inherently sequential — and O(n), too cheap to matter.
         let mut height = vec![0u32; n];
         for j in 0..n {
-            // children have smaller indices than parents in an etree
             if let Some(p) = pattern.parent[j] {
                 let h = height[j] + 1;
                 if height[p] < h {
@@ -40,9 +56,32 @@ impl LevelSchedule {
             }
         }
         let max_h = height.iter().copied().max().unwrap_or(0) as usize;
+        let nthreads = nthreads.clamp(1, n.max(1));
+        if nthreads <= 1 || n < 2 * nthreads {
+            let mut levels = vec![Vec::new(); max_h + 1];
+            for j in 0..n {
+                levels[height[j] as usize].push(j as u32);
+            }
+            return LevelSchedule { levels };
+        }
+        // Parallel bucket fill over column grains: each grain buckets its
+        // own ascending column range locally; concatenating the local
+        // buckets in grain order preserves ascending column order within
+        // every level, so the result matches the serial fill exactly.
+        let height_ref = &height;
+        let grain_buckets: Vec<Vec<Vec<u32>>> =
+            grains::run_grains(n, grain, nthreads, |_g, j_lo, j_hi| {
+                let mut local = vec![Vec::new(); max_h + 1];
+                for j in j_lo..j_hi {
+                    local[height_ref[j] as usize].push(j as u32);
+                }
+                local
+            });
         let mut levels = vec![Vec::new(); max_h + 1];
-        for j in 0..n {
-            levels[height[j] as usize].push(j as u32);
+        for local in grain_buckets {
+            for (l, cols) in local.into_iter().enumerate() {
+                levels[l].extend(cols);
+            }
         }
         LevelSchedule { levels }
     }
@@ -121,6 +160,23 @@ mod tests {
         let total: usize = ls.levels.iter().map(|l| l.len()).sum();
         assert_eq!(total, lp.n);
         assert!(validate(&ls, &lp));
+    }
+
+    #[test]
+    fn parallel_levels_bit_identical_to_serial() {
+        let spd = ops::make_spd(&gen::power_law(90, 900, 5));
+        let lp = symbolic_factor(&spd.lower_triangle());
+        let base = LevelSchedule::build_with_threads(&lp, 1);
+        for t in [2usize, 4, 8] {
+            assert_eq!(LevelSchedule::build_with_threads(&lp, t).levels, base.levels, "t={t}");
+            for grain in [1usize, 4, 1 << 20] {
+                assert_eq!(
+                    LevelSchedule::build_with_grain(&lp, t, grain).levels,
+                    base.levels,
+                    "t={t} grain={grain}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -10,6 +10,11 @@
 //! * [`pattern`] — per-row reach (`ereach`) and the full pattern of L.
 //! * [`analysis`] — packaging: per-column RL metadata bundles (Fig 4(c))
 //!   plus the L storage map the FPGA uses.
+//!
+//! The etree stays serial (near-linear, cheap); the expensive row-pattern
+//! and level-set construction run on the deterministic work-stealing pool
+//! ([`crate::util::grains`]), so the symbolic prologue scales with CPU
+//! threads while producing bit-identical output at any worker count.
 
 pub mod analysis;
 pub mod etree;
@@ -19,4 +24,6 @@ pub mod pattern;
 pub use analysis::{CholeskySymbolic, LStorageMap};
 pub use levels::LevelSchedule;
 pub use etree::{elimination_tree, elimination_tree_from_upper};
-pub use pattern::{ereach, symbolic_factor, LPattern};
+pub use pattern::{
+    ereach, symbolic_factor, symbolic_factor_with_grain, symbolic_factor_with_threads, LPattern,
+};

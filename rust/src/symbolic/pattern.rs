@@ -6,8 +6,17 @@
 //! nodes (Davis, *Direct Methods for Sparse Linear Systems*, §4).
 //! [`symbolic_factor`] assembles the full column-wise pattern of L that the
 //! CPU ships to the FPGA as metadata.
+//!
+//! The per-column reach computations are independent once the elimination
+//! tree is fixed, so [`symbolic_factor`] keeps Liu's etree pass serial
+//! (it is O(nnz·α) and cheap) and fans the `ereach` loop out over
+//! deterministic work-stealing column grains ([`crate::util::grains`],
+//! ARCHITECTURE.md §10): every grain's reach vectors are merged back in
+//! column order, so the pattern is bit-identical for any thread count and
+//! grain size.
 
 use crate::sparse::{Csc, Idx};
+use crate::util::{grains, preprocess_threads};
 
 use super::etree::elimination_tree_from_upper;
 
@@ -83,29 +92,85 @@ pub fn ereach(
 /// matrix whose **lower triangle** is `a_lower`.
 ///
 /// Complexity O(nnz(L)) plus the etree cost — same approach as
-/// CHOLMOD's simplicial symbolic phase (which the paper's CPU runs).
+/// CHOLMOD's simplicial symbolic phase (which the paper's CPU runs). The
+/// row-reach loop runs on the work-stealing preprocessing pool
+/// ([`preprocess_threads`] workers); output is identical to the serial
+/// result bit for bit.
 pub fn symbolic_factor(a_lower: &Csc) -> LPattern {
+    symbolic_factor_with_threads(a_lower, preprocess_threads())
+}
+
+/// [`symbolic_factor`] with an explicit worker count (1 = serial).
+pub fn symbolic_factor_with_threads(a_lower: &Csc, nthreads: usize) -> LPattern {
+    let grain = grains::default_grain(a_lower.ncols, nthreads);
+    symbolic_factor_with_grain(a_lower, nthreads, grain)
+}
+
+/// [`symbolic_factor`] with an explicit worker count and wave-range grain
+/// size — exposed so the property suite can pin grain-size invariance.
+pub fn symbolic_factor_with_grain(a_lower: &Csc, nthreads: usize, grain: usize) -> LPattern {
     let n = a_lower.ncols;
     // strictly-upper CSC = transpose of strictly-lower part; built once and
     // shared with the etree construction (profiling showed the transpose
     // and per-row reach vectors dominating symbolic time on low-density
     // inputs — EXPERIMENTS.md §Perf iteration 2).
     let a_upper = strict_upper_from_lower(a_lower);
+    // Liu's etree pass is near-linear and stays serial; it fixes the tree
+    // every parallel reach below walks.
     let parent = elimination_tree_from_upper(&a_upper);
 
-    // Single pass: row reaches into one flat arena (no per-row Vec).
-    let mut marked = vec![u32::MAX; n];
     let mut reach_flat: Vec<Idx> = Vec::with_capacity(a_lower.nnz() * 2);
     let mut reach_ptr = vec![0usize; n + 1];
     let mut col_counts = vec![1usize; n]; // diagonal
-    let mut scratch: Vec<Idx> = Vec::new();
-    for k in 0..n {
-        ereach(&a_upper, k, &parent, &mut marked, k as u32, &mut scratch);
-        for &j in &scratch {
-            col_counts[j as usize] += 1;
+    let nthreads = nthreads.clamp(1, n.max(1));
+    if nthreads <= 1 || n < 2 * nthreads {
+        // Serial: row reaches into one flat arena (no per-row Vec).
+        let mut marked = vec![u32::MAX; n];
+        let mut scratch: Vec<Idx> = Vec::new();
+        for k in 0..n {
+            ereach(&a_upper, k, &parent, &mut marked, k as u32, &mut scratch);
+            for &j in &scratch {
+                col_counts[j as usize] += 1;
+            }
+            reach_flat.extend_from_slice(&scratch);
+            reach_ptr[k + 1] = reach_flat.len();
         }
-        reach_flat.extend_from_slice(&scratch);
-        reach_ptr[k + 1] = reach_flat.len();
+    } else {
+        // Work-stealing column grains. The stamp for column k is k itself —
+        // globally unique — so a worker's `marked` scratch is reusable
+        // across whichever (possibly stolen, out-of-order) columns it
+        // processes. Grain results merge in column order: bit-identical to
+        // the serial arena for every thread count and grain size.
+        let a_upper_ref = &a_upper;
+        let parent_ref = &parent;
+        let grain_outs: Vec<(Vec<Idx>, Vec<usize>)> = grains::run_grains_with(
+            n,
+            grain,
+            nthreads,
+            || (vec![u32::MAX; n], Vec::<Idx>::new()),
+            |(marked, scratch), _g, k_lo, k_hi| {
+                let mut flat: Vec<Idx> = Vec::new();
+                let mut lens: Vec<usize> = Vec::with_capacity(k_hi - k_lo);
+                for k in k_lo..k_hi {
+                    ereach(a_upper_ref, k, parent_ref, marked, k as u32, scratch);
+                    flat.extend_from_slice(scratch);
+                    lens.push(scratch.len());
+                }
+                (flat, lens)
+            },
+        );
+        let mut k = 0usize;
+        for (flat, lens) in grain_outs {
+            for len in lens {
+                reach_ptr[k + 1] = reach_ptr[k] + len;
+                k += 1;
+            }
+            for &j in &flat {
+                col_counts[j as usize] += 1;
+            }
+            reach_flat.extend_from_slice(&flat);
+        }
+        debug_assert_eq!(k, n);
     }
 
     let mut col_ptr = vec![0usize; n + 1];
@@ -216,6 +281,25 @@ mod tests {
             let rows = lp.col_rows(j);
             assert_eq!(rows[0] as usize, j);
             assert!(rows.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn parallel_symbolic_bit_identical_to_serial() {
+        for seed in 0..3u64 {
+            let spd = ops::make_spd(&gen::power_law(80, 800, seed));
+            let lower = spd.lower_triangle();
+            let base = symbolic_factor_with_threads(&lower, 1);
+            for t in [2usize, 4, 8] {
+                assert_eq!(symbolic_factor_with_threads(&lower, t), base, "seed {seed} t={t}");
+                for grain in [1usize, 4, 1 << 20] {
+                    assert_eq!(
+                        symbolic_factor_with_grain(&lower, t, grain),
+                        base,
+                        "seed {seed} t={t} grain={grain}"
+                    );
+                }
+            }
         }
     }
 

@@ -1,0 +1,236 @@
+//! Deterministic work-stealing executor for the CPU preprocessing passes.
+//!
+//! Every parallel CPU pass in REAP (wave scheduling, scheduled numerics,
+//! batch numerics, SpMM column blocks, bundle encoding, Cholesky symbolic
+//! rows) shares one execution shape: a list of `n_items` independent work
+//! items is cut into fixed-size **grains** (contiguous index ranges), and
+//! workers claim grains until none remain. Each worker starts on its own
+//! contiguous *run* of grains (claimed through the run's atomic cursor)
+//! and, once its run is drained, **steals** grains from the other runs in
+//! a fixed victim order. Static banding — the scheme this module replaces
+//! — pre-committed each thread to one contiguous band; a single
+//! pathological band (one giant power-law row, one dense wave) then
+//! serialized the whole pass. Stealing keeps every worker busy until the
+//! global pool is empty.
+//!
+//! # Determinism contract
+//!
+//! Scheduling order is racy by design — *which worker* computes a grain
+//! depends on timing. Output order is not: every grain's result is placed
+//! into a slot indexed by its grain id, and [`run_grains`] returns the
+//! slots in ascending grain order. The merged result is therefore a pure
+//! function of `(n_items, grain)` and the work function — bit-identical
+//! across thread counts. Call sites that are additionally invariant to
+//! the grain *size* (true whenever per-item results do not depend on how
+//! items are grouped — the case for all REAP passes) get full
+//! thread-count **and** grain-size bit-identity, which the
+//! `prop_invariants` suite pins.
+//!
+//! Work functions must not carry state across grains that affects
+//! results: per-worker scratch (via [`run_grains_with`]) is for
+//! *allocation reuse* only (stamped marker arrays, SPA accumulators),
+//! never for value accumulation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One worker's initial claim: a contiguous range of grain ids. `next`
+/// is the claim cursor; claims at or past `end` mean the run is drained.
+struct Run {
+    next: AtomicUsize,
+    end: usize,
+}
+
+/// Number of grains covering `n_items` items at `grain` items per grain.
+///
+/// Zero items means zero grains; `grain` must be at least 1.
+#[must_use]
+pub fn grain_count(n_items: usize, grain: usize) -> usize {
+    assert!(grain > 0, "grain size must be >= 1");
+    n_items.div_ceil(grain)
+}
+
+/// Half-open item range `[lo, hi)` covered by grain `g`.
+#[must_use]
+pub fn grain_span(g: usize, grain: usize, n_items: usize) -> (usize, usize) {
+    let lo = (g * grain).min(n_items);
+    let hi = ((g + 1) * grain).min(n_items);
+    (lo, hi)
+}
+
+/// Default grain size: about eight grains per worker, so stealing has
+/// enough slack to rebalance a skewed tail without paying per-item
+/// claim overhead. The choice only affects speed, never output — see
+/// the determinism contract above.
+#[must_use]
+pub fn default_grain(n_items: usize, nthreads: usize) -> usize {
+    n_items.div_ceil(nthreads.max(1).saturating_mul(8)).max(1)
+}
+
+/// Run `work` over every grain and return the per-grain results in
+/// ascending grain order. `work` receives `(grain_id, lo, hi)` where
+/// `[lo, hi)` is the grain's item range.
+pub fn run_grains<T, F>(n_items: usize, grain: usize, nthreads: usize, work: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> T + Sync,
+{
+    run_grains_with(n_items, grain, nthreads, || (), |(), g, lo, hi| work(g, lo, hi))
+}
+
+/// [`run_grains`] with per-worker scratch state: `init` runs once per
+/// worker (and once on the serial path) and the resulting state is passed
+/// mutably to every grain that worker claims. Scratch is for allocation
+/// reuse only; results must not depend on which grains shared a state.
+pub fn run_grains_with<S, T, I, F>(
+    n_items: usize,
+    grain: usize,
+    nthreads: usize,
+    init: I,
+    work: F,
+) -> Vec<T>
+where
+    S: Send,
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, usize, usize) -> T + Sync,
+{
+    let n_grains = grain_count(n_items, grain);
+    if n_grains == 0 {
+        return Vec::new();
+    }
+    let nthreads = nthreads.clamp(1, n_grains);
+    if nthreads <= 1 {
+        let mut state = init();
+        return (0..n_grains)
+            .map(|g| {
+                let (lo, hi) = grain_span(g, grain, n_items);
+                work(&mut state, g, lo, hi)
+            })
+            .collect();
+    }
+
+    // Contiguous runs of grains, one per worker; the last run absorbs
+    // the remainder. A worker claims from its own run first (cache-warm,
+    // contention-free), then steals from the runs after it in cyclic
+    // order — victim order only shapes timing, never output.
+    let per = n_grains.div_ceil(nthreads);
+    let runs: Vec<Run> = (0..nthreads)
+        .map(|w| Run {
+            next: AtomicUsize::new((w * per).min(n_grains)),
+            end: ((w + 1) * per).min(n_grains),
+        })
+        .collect();
+    let runs = &runs;
+    let work = &work;
+    let init = &init;
+
+    let mut parts: Vec<Vec<(usize, T)>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nthreads)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut state = init();
+                    let mut out: Vec<(usize, T)> = Vec::new();
+                    for v in (w..w + nthreads).map(|i| i % nthreads) {
+                        loop {
+                            let g = runs[v].next.fetch_add(1, Ordering::Relaxed);
+                            if g >= runs[v].end {
+                                break;
+                            }
+                            let (lo, hi) = grain_span(g, grain, n_items);
+                            out.push((g, work(&mut state, g, lo, hi)));
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        parts = handles.into_iter().map(|h| h.join().expect("grain worker panicked")).collect();
+    });
+
+    // Grain-indexed slot merge: the only step that touches ordering.
+    let mut slots: Vec<Option<T>> = (0..n_grains).map(|_| None).collect();
+    for (g, t) in parts.into_iter().flatten() {
+        debug_assert!(slots[g].is_none(), "grain {g} claimed twice");
+        slots[g] = Some(t);
+    }
+    slots.into_iter().map(|s| s.expect("every grain claimed exactly once")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_tile_the_item_range() {
+        for n_items in [0usize, 1, 7, 8, 9, 100] {
+            for grain in [1usize, 3, 8, 1000] {
+                let n = grain_count(n_items, grain);
+                let mut next = 0;
+                for g in 0..n {
+                    let (lo, hi) = grain_span(g, grain, n_items);
+                    assert_eq!(lo, next, "n_items {n_items} grain {grain} g {g}");
+                    assert!(hi > lo);
+                    next = hi;
+                }
+                assert_eq!(next, n_items);
+            }
+        }
+    }
+
+    #[test]
+    fn results_in_grain_order_for_every_thread_count_and_grain() {
+        let n_items = 97usize;
+        let expect: Vec<(usize, usize)> = run_grains(n_items, 5, 1, |g, lo, hi| {
+            assert!(lo < hi && g == lo / 5);
+            (lo, hi)
+        });
+        for grain in [1usize, 4, 5, 17, 1000] {
+            for nthreads in [1usize, 2, 3, 4, 8, 64] {
+                let got = run_grains(n_items, grain, nthreads, |_g, lo, hi| (lo, hi));
+                // flatten to item coverage: identical regardless of grain
+                let cover: Vec<usize> = got.iter().flat_map(|&(lo, hi)| lo..hi).collect();
+                assert_eq!(cover, (0..n_items).collect::<Vec<_>>(), "grain {grain} t {nthreads}");
+                if grain == 5 && nthreads > 1 {
+                    assert_eq!(got, expect);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_state_is_reused_not_observable() {
+        // per-worker scratch may be dirty from a previous grain; results
+        // must come out identical as long as the work function re-stamps
+        let per_grain = |scratch: &mut Vec<usize>, g: usize, lo: usize, hi: usize| {
+            scratch.clear(); // correct use: reset before use
+            scratch.extend(lo..hi);
+            (g, scratch.iter().sum::<usize>())
+        };
+        let serial = run_grains_with(1000, 7, 1, Vec::new, per_grain);
+        for nthreads in [2usize, 4, 8] {
+            let par = run_grains_with(1000, 7, nthreads, Vec::new, per_grain);
+            assert_eq!(par, serial, "t {nthreads}");
+        }
+    }
+
+    #[test]
+    fn zero_items_yield_no_grains() {
+        assert_eq!(grain_count(0, 4), 0);
+        let got: Vec<usize> = run_grains(0, 4, 8, |g, _, _| g);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "grain size must be >= 1")]
+    fn zero_grain_size_panics() {
+        grain_count(10, 0);
+    }
+
+    #[test]
+    fn thread_count_clamped_to_grain_count() {
+        // more workers than grains: extra workers find empty runs and exit
+        let got = run_grains(3, 1, 64, |g, lo, hi| (g, lo, hi));
+        assert_eq!(got, vec![(0, 0, 1), (1, 1, 2), (2, 2, 3)]);
+    }
+}

@@ -4,10 +4,12 @@
 //! closure, so the conveniences that would normally come from `rand`,
 //! `clap` or `criterion` live here instead: a deterministic PRNG
 //! ([`rng::Pcg64`]), summary statistics ([`stats`]), a wall-clock
-//! measurement helper ([`timer`]), a tiny CLI argument parser ([`cli`]) and
-//! an ASCII/CSV table renderer ([`table`]).
+//! measurement helper ([`timer`]), a tiny CLI argument parser ([`cli`]),
+//! an ASCII/CSV table renderer ([`table`]) and the deterministic
+//! work-stealing executor behind every parallel CPU pass ([`grains`]).
 
 pub mod cli;
+pub mod grains;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -16,11 +16,22 @@ use reap::testing::{check, Config, Size};
 use reap::util::Pcg64;
 
 fn random_family(rng: &mut Pcg64) -> Family {
-    match rng.next_below(4) {
+    match rng.next_below(5) {
         0 => Family::RandomUniform,
         1 => Family::BandedFem,
         2 => Family::PowerLaw,
-        _ => Family::BlockRandom,
+        3 => Family::BlockRandom,
+        _ => Family::ZipfAdversarial,
+    }
+}
+
+/// A skew-heavy family — the inputs where static band partitions are most
+/// wrong, hence where work-stealing determinism needs the hardest pinning.
+fn skewed_family(rng: &mut Pcg64) -> Family {
+    if rng.range(0, 2) == 0 {
+        Family::PowerLaw
+    } else {
+        Family::ZipfAdversarial
     }
 }
 
@@ -598,6 +609,134 @@ fn prop_rl_stream_addresses_valid() {
         }
         for k in 0..n {
             assert_eq!(per_col[k], sym.pattern.col_nnz(k), "column {k} triple count");
+        }
+    });
+}
+
+/// The deterministic work-stealing contract (ARCHITECTURE.md §10), pinned
+/// on the adversarial inputs: every grain-claimed pass — SpGEMM schedule,
+/// batch schedule, all three numerics, bundle encode and the parallel
+/// Cholesky symbolic phase — is bit-identical across thread counts
+/// 1/2/4/8 AND grain sizes (1, 4, effectively-one-grain) on power-law and
+/// Zipf-adversarial matrices, and the retired static-band partitioners
+/// still agree with the stealing executor bit for bit.
+#[test]
+fn prop_workstealing_bit_identity_on_skewed_inputs() {
+    use reap::coordinator::batch::{
+        numeric_batch, numeric_batch_static_bands, numeric_batch_with_grain,
+    };
+    use reap::coordinator::spgemm::{numeric_scheduled_static_bands, numeric_scheduled_with_grain};
+    use reap::coordinator::spmm::{numeric_spmm, numeric_spmm_with_grain};
+    use reap::symbolic::{symbolic_factor_with_grain, symbolic_factor_with_threads, LevelSchedule};
+    const THREADS: [usize; 3] = [2, 4, 8];
+    const GRAINS: [usize; 3] = [1, 4, 1 << 20];
+    check("work-stealing determinism", Config { cases: 8, ..Config::default() }, |rng, size| {
+        let fam = skewed_family(rng);
+        let n = 8 + rng.range(0, 4 * size.0 + 8);
+        let a = gen::generate(fam, n, (n * 6).max(4), rng.next_u64());
+        let b = gen::generate(skewed_family(rng), n, (n * 4).max(2), rng.next_u64());
+        let pipelines = 1 + rng.range(0, 32);
+        let bundle = 1 + rng.range(0, 40);
+
+        // --- SpGEMM wave schedule ---
+        let s0 = schedule::schedule_spgemm_with_threads(&a, &b, pipelines, bundle, 1);
+        for t in THREADS {
+            let st = schedule::schedule_spgemm_with_threads(&a, &b, pipelines, bundle, t);
+            assert_eq!(st.waves, s0.waves, "schedule t={t}");
+            let stat = schedule::schedule_spgemm_static_bands(&a, &b, pipelines, bundle, t);
+            assert_eq!(stat.waves, s0.waves, "static schedule t={t}");
+            for g in GRAINS {
+                let sg = schedule::schedule_spgemm_with_grain(&a, &b, pipelines, bundle, t, g);
+                assert_eq!(sg.waves, s0.waves, "schedule t={t} grain={g}");
+                assert_eq!(sg.a_words, s0.a_words, "schedule t={t} grain={g}");
+                assert_eq!(sg.b_words, s0.b_words, "schedule t={t} grain={g}");
+            }
+        }
+
+        // --- batch wave schedule ---
+        let jobs = vec![(a.clone(), b.clone()), (b.clone(), a.clone())];
+        let bs0 = schedule::schedule_spgemm_batch_with_threads(&jobs, pipelines, bundle, 1);
+        for t in THREADS {
+            let bt = schedule::schedule_spgemm_batch_with_threads(&jobs, pipelines, bundle, t);
+            assert_eq!(bt.waves, bs0.waves, "batch schedule t={t}");
+            let bstat = schedule::schedule_spgemm_batch_static_bands(&jobs, pipelines, bundle, t);
+            assert_eq!(bstat.waves, bs0.waves, "static batch schedule t={t}");
+            for g in GRAINS {
+                let bg = schedule::schedule_spgemm_batch_with_grain(&jobs, pipelines, bundle, t, g);
+                assert_eq!(bg.waves, bs0.waves, "batch schedule t={t} grain={g}");
+            }
+        }
+
+        // --- scheduled numeric, batch numeric, SpMM numeric ---
+        let c0 = numeric_scheduled(&a, &b, &s0, 1);
+        assert_eq!(c0, spgemm(&a, &b));
+        let outs0 = numeric_batch(&jobs, &bs0, 1);
+        let k = 1 + rng.range(0, 6);
+        let x: Vec<f32> = (0..a.ncols * k)
+            .map(|i| ((i * 5 + 1) % 13) as f32 - 6.0)
+            .collect();
+        let y0 = numeric_spmm(&a, &x, k, &s0, 1);
+        for t in THREADS {
+            assert_eq!(numeric_scheduled(&a, &b, &s0, t), c0, "numeric t={t}");
+            assert_eq!(numeric_scheduled_static_bands(&a, &b, &s0, t), c0, "static numeric t={t}");
+            assert_eq!(numeric_batch(&jobs, &bs0, t), outs0, "batch numeric t={t}");
+            assert_eq!(
+                numeric_batch_static_bands(&jobs, &bs0, t),
+                outs0,
+                "static batch numeric t={t}"
+            );
+            assert_eq!(numeric_spmm(&a, &x, k, &s0, t), y0, "spmm t={t}");
+            for g in GRAINS {
+                assert_eq!(
+                    numeric_scheduled_with_grain(&a, &b, &s0, t, g),
+                    c0,
+                    "numeric t={t} grain={g}"
+                );
+                assert_eq!(
+                    numeric_batch_with_grain(&jobs, &bs0, t, g),
+                    outs0,
+                    "batch numeric t={t} grain={g}"
+                );
+                assert_eq!(
+                    numeric_spmm_with_grain(&a, &x, k, &s0, t, g),
+                    y0,
+                    "spmm t={t} grain={g}"
+                );
+            }
+        }
+
+        // --- bundle encode ---
+        let e0 = encode::BundleStream::from_csr_with_threads(&a, bundle, 1);
+        for t in THREADS {
+            assert_eq!(encode::BundleStream::from_csr_with_threads(&a, bundle, t), e0, "enc t={t}");
+            for g in GRAINS {
+                assert_eq!(
+                    encode::BundleStream::from_csr_with_grain(&a, bundle, t, g),
+                    e0,
+                    "enc t={t} grain={g}"
+                );
+            }
+        }
+
+        // --- parallel Cholesky symbolic + level sets ---
+        let lower = reap::sparse::ops::make_spd(&a).lower_triangle();
+        let lp0 = symbolic_factor_with_threads(&lower, 1);
+        let lv0 = LevelSchedule::build_with_threads(&lp0, 1);
+        for t in THREADS {
+            assert_eq!(symbolic_factor_with_threads(&lower, t), lp0, "symbolic t={t}");
+            assert_eq!(LevelSchedule::build_with_threads(&lp0, t).levels, lv0.levels, "lv t={t}");
+            for g in GRAINS {
+                assert_eq!(
+                    symbolic_factor_with_grain(&lower, t, g),
+                    lp0,
+                    "symbolic t={t} grain={g}"
+                );
+                assert_eq!(
+                    LevelSchedule::build_with_grain(&lp0, t, g).levels,
+                    lv0.levels,
+                    "lv t={t} grain={g}"
+                );
+            }
         }
     });
 }
